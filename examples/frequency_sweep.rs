@@ -1,0 +1,60 @@
+//! Frequency sweep for one GPU/precision: the measurement campaign of
+//! section 4 in miniature — sweep the clock table, find per-length optima,
+//! the mean optimal clock (Table 3), and write the Fig 9-16 CSVs.
+//!
+//! Run:  cargo run --release --example frequency_sweep -- [--gpu v100] [--precision fp32]
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use fftsweep::analysis::figures;
+use fftsweep::analysis::{mean_optimal_mhz, optima};
+use fftsweep::harness::sweep::{sweep_gpu, SweepConfig};
+use fftsweep::sim::gpu::gpu_by_name;
+use fftsweep::types::Precision;
+use fftsweep::util::cliargs::Args;
+use fftsweep::util::table::fnum;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let gpu = gpu_by_name(args.str_or("gpu", "v100")).context("unknown gpu")?;
+    let precision = Precision::parse(args.str_or("precision", "fp32")).context("bad precision")?;
+    let out = PathBuf::from(args.str_or("out", "results/example_sweep"));
+
+    let mut cfg = SweepConfig::default();
+    cfg.freq_stride = args.usize_or("freq-stride", 8);
+    if args.has("quick") {
+        cfg = SweepConfig::quick();
+    }
+
+    println!("sweeping {} {} over {} lengths…", gpu.name, precision, cfg.lengths.len());
+    let sweep = sweep_gpu(&gpu, precision, &cfg);
+    let pts = optima(&gpu, &sweep);
+    let mean_opt = mean_optimal_mhz(&gpu, &pts);
+
+    println!("\nper-length optima:");
+    for p in &pts {
+        println!(
+            "  N={:>8}: f_opt {:>7} MHz ({:>5}% of boost), Ief(boost) {:>6}, dT {:>6}%{}",
+            p.n,
+            fnum(p.f_opt_mhz, 0),
+            fnum(p.frac_of_boost * 100.0, 1),
+            fnum(p.eff_increase_vs_boost, 3),
+            fnum(p.time_increase * 100.0, 2),
+            if p.bluestein { "  [bluestein]" } else { "" }
+        );
+    }
+    println!("\nmean optimal clock: {} MHz", fnum(mean_opt, 1));
+
+    std::fs::create_dir_all(&out)?;
+    figures::figure9_to_14(&gpu, &sweep).write_csv(&out.join("fig9_14.csv"))?;
+    let (_, f15) = figures::figure15_16(&gpu, &sweep);
+    f15.write_csv(&out.join("fig15_16.csv"))?;
+    figures::figure17_18(&gpu, &sweep).write_csv(&out.join("fig17_18.csv"))?;
+    figures::figure3(&gpu, &sweep).write_csv(&out.join("fig3.csv"))?;
+    figures::figure6(&gpu, &sweep).write_csv(&out.join("fig6.csv"))?;
+    figures::figure8(&gpu, &sweep).write_csv(&out.join("fig8.csv"))?;
+    println!("CSVs written under {out:?}");
+    Ok(())
+}

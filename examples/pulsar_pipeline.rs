@@ -1,0 +1,110 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): the paper's
+//! section-5.3 pulsar-search pipeline, running REAL compute through all
+//! three layers — synthetic pulsar time series (rust) → AOT Pallas/JAX
+//! pipeline artifacts (FFT → power spectrum → mean/std → harmonic sum)
+//! executed by the PJRT runtime — while the simulated V100 + NVML
+//! controller account the DVFS energy story (Table 4 + Fig 19).
+//!
+//! Run:  make artifacts && cargo run --release --example pulsar_pipeline
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use fftsweep::dsp;
+use fftsweep::pipeline::{run_pipeline, table4};
+use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::rng::Rng;
+use fftsweep::util::table::fnum;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&Manifest::default_dir())?;
+    let gpu = tesla_v100();
+    let mut rng = Rng::new(0xBEEF);
+
+    println!("=== end-to-end pulsar search (real compute via PJRT) ===");
+    let n = 16384usize;
+    let params = dsp::PulsarParams {
+        fundamental_bin: 321,
+        harmonics: 8,
+        amplitude: 0.30,
+    };
+    let mut detections = 0;
+    let mut wall_us_total = 0u128;
+    for h in [2u64, 4, 8, 16, 32] {
+        let module = rt.load(&format!("pipeline_n16384_h{h}"))?;
+        let batch = module.meta.batch as usize;
+        let mut re = Vec::with_capacity(batch * n);
+        let mut im = Vec::with_capacity(batch * n);
+        for _ in 0..batch {
+            let x = dsp::pulsar_time_series(n, &params, &mut rng);
+            for c in &x {
+                re.push(c.re as f32);
+                im.push(c.im as f32);
+            }
+        }
+        let t0 = Instant::now();
+        let out = module.run_f32(&[&re, &im])?;
+        let wall = t0.elapsed();
+        wall_us_total += wall.as_micros();
+        let n_out = n / h as usize;
+        let mut found = 0;
+        let mut best_snr: f64 = 0.0;
+        for b in 0..batch {
+            if let Some(det) = dsp::detect_peak(&out[0][b * n_out..(b + 1) * n_out], 8) {
+                if det.bin == params.fundamental_bin {
+                    found += 1;
+                    best_snr = best_snr.max(det.snr);
+                }
+            }
+        }
+        detections += found;
+        println!(
+            "h={h:>2}: {found}/{batch} pulsars recovered at bin {} (best S/N {:.1}), {} per {batch}-row batch",
+            params.fundamental_bin,
+            best_snr,
+            format!("{:.2} ms", wall.as_secs_f64() * 1e3),
+        );
+    }
+    println!(
+        "total PJRT wall time {:.1} ms; detections {detections}/20",
+        wall_us_total as f64 / 1e3
+    );
+    // Harmonic summing is the point: with only h=2 of the 8 injected
+    // harmonics collected, recovery is marginal; at h=8 it is certain, and
+    // beyond the pulsar's harmonic content S/N falls again (noise-only
+    // bins enter the sum) — exactly the paper's motivation for tuning H.
+    assert!(detections >= 14, "pipeline lost the pulsar ({detections}/20)");
+
+    println!("\n=== Table 4 reproduction (simulated V100, N=5e5, FFT @ 945 MHz via NVML) ===");
+    println!("{:>9} | {:>12} | {:>12} | paper", "harmonics", "FFT time [%]", "eff increase");
+    let paper = [(2u64, 60.85, 1.291), (4, 58.56, 1.290), (8, 55.92, 1.267), (16, 53.73, 1.260), (32, 51.34, 1.240)];
+    for (row, (ph, pfft, peff)) in table4(&gpu, 500_000, 945.0).iter().zip(paper) {
+        assert_eq!(row.harmonics, ph);
+        println!(
+            "{:>9} | {:>12} | {:>12} | {:>5}% / {}",
+            row.harmonics,
+            fnum(row.fft_time_pct, 2),
+            fnum(row.eff_increase, 3),
+            fnum(pfft, 2),
+            fnum(peff, 3),
+        );
+    }
+
+    println!("\n=== Fig 19: pipeline power/clock trace (simulated) ===");
+    let run = run_pipeline(&gpu, 500_000, 8, Some(945.0));
+    let mut t = 0.0;
+    for s in &run.stages {
+        println!(
+            "  t={:>8} ms  {:<14} clock={:>6} MHz  P={:>6} W",
+            fnum(t * 1e3, 2),
+            s.name,
+            fnum(s.clock_mhz, 0),
+            fnum(s.energy_j / s.time_s.max(1e-12), 1)
+        );
+        t += s.time_s;
+    }
+    println!("pulsar_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load an AOT-compiled Pallas FFT artifact, execute it through
+//! the PJRT runtime, validate the numerics, and estimate the DVFS energy
+//! saving the paper's result predicts for this batch.
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use fftsweep::dsp;
+use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::sim::run_batch;
+use fftsweep::types::{FftWorkload, Precision};
+use fftsweep::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Bring up the runtime against the artifacts directory.
+    let rt = Runtime::new(&Manifest::default_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. Load the batched 1024-point FFT artifact (compiled once, cached).
+    let module = rt.load("fft_f32_n1024_b64")?;
+    let (batch, n) = (module.meta.batch as usize, module.meta.n as usize);
+    println!("artifact: {} ({batch} x {n})", module.meta.name);
+
+    // 3. Run it on random complex data.
+    let mut rng = Rng::new(2024);
+    let re: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+    let im: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+    let out = module.run_f32(&[&re, &im])?;
+
+    // 4. Validate against the pure-rust Stockham oracle.
+    let x: Vec<dsp::C64> = (0..n)
+        .map(|i| dsp::C64::new(re[i] as f64, im[i] as f64))
+        .collect();
+    let want = dsp::fft(&x);
+    let max_err = (0..n)
+        .map(|i| {
+            (out[0][i] as f64 - want[i].re)
+                .abs()
+                .max((out[1][i] as f64 - want[i].im).abs())
+        })
+        .fold(0.0, f64::max);
+    println!("max abs error vs oracle: {max_err:.2e}");
+    assert!(max_err < 1e-2);
+
+    // 5. What would this workload cost on a V100, and what does the paper's
+    //    mean-optimal clock save?
+    let gpu = tesla_v100();
+    let w = FftWorkload::new(n as u64, Precision::Fp32, gpu.working_set_bytes);
+    let boost = run_batch(&gpu, &w, gpu.boost_clock_mhz);
+    let tuned = run_batch(&gpu, &w, 945.0);
+    println!(
+        "simulated V100, 2 GiB of N={n} FFTs per batch:\n  boost {:.0} MHz: {:.2} J/batch, {:.2} ms\n  tuned  945 MHz: {:.2} J/batch, {:.2} ms\n  energy saving {:.0}% for a {:+.1}% time change",
+        gpu.boost_clock_mhz,
+        boost.energy_j,
+        boost.timing.total_s * 1e3,
+        tuned.energy_j,
+        tuned.timing.total_s * 1e3,
+        (1.0 - tuned.energy_j / boost.energy_j) * 100.0,
+        (tuned.timing.total_s / boost.timing.total_s - 1.0) * 100.0,
+    );
+    println!("quickstart OK");
+    Ok(())
+}

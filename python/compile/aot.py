@@ -1,0 +1,111 @@
+"""AOT lowering: trace every catalogue entry once, emit HLO *text* + manifest.
+
+HLO text (NOT `lowered.compile()`/`.serialize()`) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 the rust `xla` crate links against rejects
+(`proto.id() <= INT_MAX`).  The text parser on the rust side reassigns ids,
+so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the rust
+    side always unwraps a tuple, whatever the output arity).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides big
+    dense constants as `constant({...})`, which the rust-side HLO text
+    parser silently materializes as zeros — the four-step FFT's twiddle
+    table would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constants in HLO text"
+    return text
+
+
+def lower_entry(name, fn, specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def _dtype_tag(spec) -> str:
+    return {"float32": "f32", "float64": "f64", "float16": "f16"}[str(spec.dtype)]
+
+
+def emit(out_dir: str, only: str | None = None, verbose: bool = True) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    written = []
+    for name, fn, specs, n_outputs, meta in model.artifact_catalogue():
+        if only and only not in name:
+            continue
+        lowered = lower_entry(name, fn, specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        inputs = ";".join(
+            f"{_dtype_tag(s)}:{'x'.join(str(d) for d in s.shape)}" for s in specs
+        )
+        manifest_rows.append(
+            "\t".join([
+                name,
+                f"{name}.hlo.txt",
+                meta["kind"],
+                str(meta["n"]),
+                str(meta["batch"]),
+                meta["dtype"],
+                str(meta.get("harmonics", 0)),
+                inputs,
+                str(n_outputs),
+                digest,
+            ])
+        )
+        written.append(path)
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}", file=sys.stderr)
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    header = "\t".join([
+        "name", "file", "kind", "n", "batch", "dtype", "harmonics",
+        "inputs", "n_outputs", "sha256_16",
+    ])
+    with open(manifest, "w") as f:
+        f.write(header + "\n")
+        for row in manifest_rows:
+            f.write(row + "\n")
+    if verbose:
+        print(f"  manifest: {len(manifest_rows)} artifacts -> {manifest}",
+              file=sys.stderr)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    emit(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""L1 Pallas kernels: batched complex-to-complex Stockham FFT.
+
+The paper studies cuFFT, whose single-kernel regime keeps an FFT of length
+N <= ~2^13 (fp32) resident in shared memory: one device-memory read, all
+log2(N) butterfly stages on-chip, one write back.  The TPU-thinking analogue
+implemented here is a Pallas kernel whose BlockSpec moves a (TILE_B, N) tile
+of the batch HBM->VMEM once, runs every Stockham stage on the VMEM-resident
+tile, and writes back once.  Complex data travels as separate re/im planes
+(VPU-friendly; avoids complex-dtype layout pitfalls in the AOT path).
+
+`interpret=True` everywhere: the kernel lowers to plain HLO so the rust PJRT
+CPU client can execute it; real-TPU lowering would emit a Mosaic custom call
+the CPU plugin cannot run.  Correctness is pinned against `kernels.ref`
+(pure jnp) by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Maximum FFT length handled by a single VMEM-resident kernel, per dtype.
+# Mirrors the cuFFT shared-memory single-kernel capacity modelled by the
+# rust `cufft::plan` module (fp32: 2^13, fp64: 2^12, fp16: 2^14).
+MAX_SINGLE_KERNEL = {
+    jnp.dtype("float32"): 1 << 13,
+    jnp.dtype("float64"): 1 << 12,
+    jnp.dtype("float16"): 1 << 14,
+}
+
+# Perf (EXPERIMENTS.md §Perf): on the CPU PJRT path the whole batch in one
+# grid step (tile = batch) is uniformly fastest — the per-stage concatenate
+# amortizes best in a single fused loop (256x256: 3.4 ms @ tile 16 ->
+# 2.6 ms @ full batch). `None` means "full batch". On real TPUs the tile is
+# bounded by VMEM instead — see analysis::roofline::max_tile_b.
+DEFAULT_TILE_B = None
+
+
+def _check_pow2(n: int) -> int:
+    if n < 2 or (n & (n - 1)) != 0:
+        raise ValueError(f"stockham kernel requires power-of-two length, got {n}")
+    return int(math.log2(n))
+
+
+def _stockham_stages(re, im, n: int, sign: float, dtype):
+    """Run all log2(n) radix-2 Stockham (DIF, autosort) stages on a tile.
+
+    State is kept as (..., cur, s) with cur * s == n; cur halves and s
+    doubles each stage.  No bit-reversal pass is needed.
+    """
+    stages = _check_pow2(n)
+    batch = re.shape[:-1]
+    re = re.reshape(batch + (n, 1))
+    im = im.reshape(batch + (n, 1))
+    cur, s = n, 1
+    for _ in range(stages):
+        m = cur // 2
+        ar, ai = re[..., :m, :], im[..., :m, :]
+        br, bi = re[..., m:, :], im[..., m:, :]
+        # Twiddles for this stage: w_p = exp(sign * 2*pi*i * p / cur).
+        # Generated *inside* the kernel via iota (pallas forbids captured
+        # traced constants). Perf (EXPERIMENTS.md §Perf): computing them in
+        # the data dtype instead of f64+cast is -36% on the fp32 path; the
+        # extra twiddle rounding stays ~1e-6 relative over 13 stages, well
+        # inside the fp32 test tolerances. fp64 (and fp16, which needs the
+        # f32 headroom) keep wide twiddles.
+        tw_dtype = {
+            jnp.dtype("float64"): jnp.float64 if jax.config.jax_enable_x64 else jnp.float32,
+            jnp.dtype("float32"): jnp.float32,
+            jnp.dtype("float16"): jnp.float32,
+        }[jnp.dtype(dtype)]
+        p = jax.lax.broadcasted_iota(tw_dtype, (m, 1), 0)
+        theta = p * (sign * 2.0 * np.pi / cur)
+        wr = jnp.cos(theta).astype(dtype)
+        wi = jnp.sin(theta).astype(dtype)
+        sum_r, sum_i = ar + br, ai + bi
+        dif_r, dif_i = ar - br, ai - bi
+        tw_r = dif_r * wr - dif_i * wi
+        tw_i = dif_r * wi + dif_i * wr
+        # y[..., p, 0, q] = a+b ; y[..., p, 1, q] = (a-b) * w_p
+        yr = jnp.stack([sum_r, tw_r], axis=-2)
+        yi = jnp.stack([sum_i, tw_i], axis=-2)
+        cur, s = m, s * 2
+        re = yr.reshape(batch + (cur, s))
+        im = yi.reshape(batch + (cur, s))
+    return re.reshape(batch + (n,)), im.reshape(batch + (n,))
+
+
+def _fft_kernel(re_ref, im_ref, or_ref, oi_ref, *, n: int, sign: float, scale: float):
+    re = re_ref[...]
+    im = im_ref[...]
+    rr, ri = _stockham_stages(re, im, n, sign, re.dtype)
+    if scale != 1.0:
+        rr = rr * jnp.asarray(scale, dtype=rr.dtype)
+        ri = ri * jnp.asarray(scale, dtype=ri.dtype)
+    or_ref[...] = rr
+    oi_ref[...] = ri
+
+
+def _pick_tile(batch: int, tile_b: int | None) -> int:
+    tile = tile_b if tile_b is not None else (DEFAULT_TILE_B or batch)
+    tile = min(tile, batch)
+    while batch % tile != 0:
+        tile -= 1
+    return max(tile, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("inverse", "tile_b", "interpret", "normalize")
+)
+def fft_c2c(re, im, *, inverse: bool = False, tile_b: int | None = None,
+            interpret: bool = True, normalize: bool = True):
+    """Batched power-of-two C2C FFT of a (B, N) re/im pair via one Pallas call.
+
+    Forward: X_l = sum_n x_n exp(-2*pi*i*n*l/N)      (paper eq. 1)
+    Inverse: x_n = (1/N) sum_l X_l exp(+2*pi*i*n*l/N) (scaled iff normalize)
+    """
+    if re.shape != im.shape or re.ndim != 2:
+        raise ValueError(f"expected matching (B, N) planes, got {re.shape}/{im.shape}")
+    batch, n = re.shape
+    sign = 1.0 if inverse else -1.0
+    scale = (1.0 / n) if (inverse and normalize) else 1.0
+    tile = _pick_tile(batch, tile_b)
+    grid = (batch // tile,)
+    spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    kernel = functools.partial(_fft_kernel, n=n, sign=sign, scale=scale)
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, n), re.dtype),
+        jax.ShapeDtypeStruct((batch, n), im.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=[spec, spec],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(re, im)
+    )
+
+
+def _twiddle_kernel(re_ref, im_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    re, im = re_ref[...], im_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    or_ref[...] = re * wr - im * wi
+    oi_ref[...] = re * wi + im * wr
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def twiddle_mul(re, im, wr, wi, *, interpret: bool = True):
+    """Pointwise complex multiply of a (B, R, C) tile by a (R, C) twiddle grid.
+
+    This is the inter-pass twiddle of the four-step (multi-kernel) plan —
+    the analogue of the separate twiddle kernels NVVP shows between cuFFT
+    passes for large N.
+    """
+    b, r, c = re.shape
+    spec = pl.BlockSpec((1, r, c), lambda i: (i, 0, 0))
+    wspec = pl.BlockSpec((r, c), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct(re.shape, re.dtype),
+        jax.ShapeDtypeStruct(im.shape, im.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _twiddle_kernel,
+            grid=(b,),
+            in_specs=[spec, spec, wspec, wspec],
+            out_specs=[spec, spec],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(re, im, wr, wi)
+    )
+
+
+def split_four_step(n: int, dtype=jnp.float32) -> tuple[int, int]:
+    """Factor N = N1 * N2 for the four-step plan with both factors within the
+    single-kernel capacity.  Prefers a balanced split (N1 >= N2)."""
+    cap = MAX_SINGLE_KERNEL[jnp.dtype(dtype)]
+    log_n = _check_pow2(n)
+    n1 = 1 << ((log_n + 1) // 2)
+    n2 = n // n1
+    if n1 > cap or n2 > cap:
+        raise ValueError(
+            f"N={n} does not split into two single-kernel passes (cap={cap})"
+        )
+    return n1, n2
+
+
+def fft_c2c_four_step(re, im, *, inverse: bool = False, interpret: bool = True,
+                      tile_b: int | None = None, normalize: bool = True):
+    """Large-N C2C FFT via the four-step decomposition N = N1*N2.
+
+    Mirrors cuFFT's multi-kernel plan: column FFT pass, twiddle kernel,
+    row FFT pass, transposed write-out — each pass a full HBM round trip,
+    which is exactly what the rust `cufft::plan` traffic model charges.
+    """
+    batch, n = re.shape
+    n1, n2 = split_four_step(n, re.dtype)
+    sign = 1.0 if inverse else -1.0
+
+    # Pass 1: FFT of length n1 down the columns (n1-major layout).
+    xr = re.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch * n2, n1)
+    xi = im.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch * n2, n1)
+    xr, xi = fft_c2c(xr, xi, inverse=inverse, tile_b=tile_b,
+                     interpret=interpret, normalize=False)
+
+    # Twiddle: w[k1, n2] = exp(sign * 2*pi*i * k1 * n2 / N).
+    k1 = np.arange(n1, dtype=np.float64)[:, None]
+    j2 = np.arange(n2, dtype=np.float64)[None, :]
+    theta = sign * 2.0 * np.pi * k1 * j2 / n
+    wr = jnp.asarray(np.cos(theta), dtype=re.dtype)
+    wi = jnp.asarray(np.sin(theta), dtype=re.dtype)
+    xr = xr.reshape(batch, n2, n1).transpose(0, 2, 1)  # (B, k1, n2)
+    xi = xi.reshape(batch, n2, n1).transpose(0, 2, 1)
+    xr, xi = twiddle_mul(xr, xi, wr, wi, interpret=interpret)
+
+    # Pass 2: FFT of length n2 along the rows.
+    xr, xi = fft_c2c(xr.reshape(batch * n1, n2), xi.reshape(batch * n1, n2),
+                     inverse=inverse, tile_b=tile_b, interpret=interpret,
+                     normalize=False)
+
+    # Write-out transpose: X[k1 + N1*k2] lives at out[k2, k1].
+    xr = xr.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch, n)
+    xi = xi.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch, n)
+    if inverse and normalize:
+        xr = xr / n
+        xi = xi / n
+    return xr, xi
+
+
+def fft_c2c_auto(re, im, *, inverse: bool = False, interpret: bool = True,
+                 tile_b: int | None = None):
+    """Dispatch to the single-kernel or four-step plan by length, as the
+    cuFFT planner would."""
+    n = re.shape[-1]
+    cap = MAX_SINGLE_KERNEL[jnp.dtype(re.dtype)]
+    if n <= cap:
+        return fft_c2c(re, im, inverse=inverse, tile_b=tile_b, interpret=interpret)
+    return fft_c2c_four_step(re, im, inverse=inverse, tile_b=tile_b,
+                             interpret=interpret)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These never go through Pallas; pytest/hypothesis pin the kernels against
+them, and the rust `dsp` module re-implements the same math as a second,
+independent oracle on the runtime side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fft_c2c_ref(re, im, *, inverse: bool = False, normalize: bool = True):
+    """Reference C2C FFT on re/im planes via jnp.fft (complex128 internally)."""
+    x = re.astype(jnp.complex128) + 1j * im.astype(jnp.complex128)
+    if inverse:
+        y = jnp.fft.ifft(x, axis=-1)
+        if not normalize:
+            y = y * x.shape[-1]
+    else:
+        y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(re.dtype), jnp.imag(y).astype(im.dtype)
+
+
+def power_spectrum_ref(re, im):
+    return (re.astype(jnp.float64) ** 2 + im.astype(jnp.float64) ** 2).astype(re.dtype)
+
+
+def normalize_spectrum_ref(p):
+    p64 = p.astype(jnp.float64)
+    mean = jnp.mean(p64, axis=-1, keepdims=True)
+    centred = p64 - mean
+    std = jnp.sqrt(jnp.mean(centred * centred, axis=-1, keepdims=True))
+    safe = jnp.where(std > 0, std, jnp.ones_like(std))
+    out = (centred / safe).astype(p.dtype)
+    return out, mean[..., 0].astype(p.dtype), std[..., 0].astype(p.dtype)
+
+
+def harmonic_sum_ref(p, *, harmonics: int):
+    n = p.shape[-1]
+    n_out = n // harmonics
+    k = jnp.arange(n_out)
+    acc = jnp.zeros(p.shape[:-1] + (n_out,), dtype=jnp.float64)
+    for h in range(1, harmonics + 1):
+        acc = acc + jnp.take(p.astype(jnp.float64), k * h, axis=-1)
+    return acc.astype(p.dtype)
+
+
+def pipeline_ref(re, im, *, harmonics: int):
+    """Full pulsar-pipeline oracle: FFT -> power -> normalize -> harmonic sum."""
+    fr, fi = fft_c2c_ref(re, im)
+    p = power_spectrum_ref(fr, fi)
+    norm, mean, std = normalize_spectrum_ref(p)
+    hs = harmonic_sum_ref(norm, harmonics=harmonics)
+    return hs, mean, std

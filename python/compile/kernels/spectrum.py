@@ -1,0 +1,82 @@
+"""L1 Pallas kernels: power spectrum and spectral normalization.
+
+These are the non-FFT stages of the paper's pulsar-search pipeline
+(section 5.3): power-spectrum calculation and mean/std normalization of the
+spectrum before harmonic summing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_kernel(re_ref, im_ref, out_ref):
+    re = re_ref[...]
+    im = im_ref[...]
+    out_ref[...] = re * re + im * im
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def power_spectrum(re, im, *, tile_b: int = 64, interpret: bool = True):
+    """P[b, k] = |X[b, k]|^2 for a batch of complex spectra (re/im planes)."""
+    if re.shape != im.shape or re.ndim != 2:
+        raise ValueError(f"expected matching (B, N) planes, got {re.shape}/{im.shape}")
+    batch, n = re.shape
+    tile = min(tile_b, batch)
+    while batch % tile != 0:
+        tile -= 1
+    spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _power_kernel,
+        grid=(batch // tile,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n), re.dtype),
+        interpret=interpret,
+    )(re, im)
+
+
+def _normalize_kernel(p_ref, out_ref, mean_ref, std_ref, *, n: int):
+    p = p_ref[...]
+    mean = jnp.mean(p, axis=-1, keepdims=True)
+    centred = p - mean
+    var = jnp.mean(centred * centred, axis=-1, keepdims=True)
+    std = jnp.sqrt(var)
+    safe = jnp.where(std > 0, std, jnp.ones_like(std))
+    out_ref[...] = centred / safe
+    mean_ref[...] = mean[..., 0]
+    std_ref[...] = std[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def normalize_spectrum(p, *, tile_b: int = 64, interpret: bool = True):
+    """Zero-mean / unit-std normalization of each spectrum row.
+
+    Returns (normalized, mean, std); mean/std are the per-row moments the
+    paper's pipeline computes as its "mean and standard deviation" stage.
+    """
+    if p.ndim != 2:
+        raise ValueError(f"expected (B, N), got {p.shape}")
+    batch, n = p.shape
+    tile = min(tile_b, batch)
+    while batch % tile != 0:
+        tile -= 1
+    spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    out, mean, std = pl.pallas_call(
+        functools.partial(_normalize_kernel, n=n),
+        grid=(batch // tile,),
+        in_specs=[spec],
+        out_specs=[spec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), p.dtype),
+            jax.ShapeDtypeStruct((batch,), p.dtype),
+            jax.ShapeDtypeStruct((batch,), p.dtype),
+        ],
+        interpret=interpret,
+    )(p)
+    return out, mean, std

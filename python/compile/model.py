@@ -1,0 +1,185 @@
+"""L2: the JAX compute graphs that AOT-lower into the rust-served artifacts.
+
+Everything here composes the L1 Pallas kernels (`kernels.fft`,
+`kernels.spectrum`, `kernels.harmonic`) into the computations the paper
+measures:
+
+  * batched C2C FFT (single-kernel and four-step multi-kernel plans),
+  * Bluestein FFT for non-power-of-two lengths,
+  * the pulsar-search pipeline of section 5.3
+    (FFT -> power spectrum -> mean/std normalize -> harmonic sum).
+
+These functions are traced exactly once per artifact by `aot.py`; python is
+never on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fft as kfft
+from .kernels import harmonic as kharmonic
+from .kernels import spectrum as kspectrum
+
+
+def fft_batch(re, im, *, inverse: bool = False, interpret: bool = True):
+    """Batched C2C FFT with automatic plan selection (the cuFFT analogue)."""
+    return kfft.fft_c2c_auto(re, im, inverse=inverse, interpret=interpret)
+
+
+def _next_pow2(n: int) -> int:
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+def bluestein_fft(re, im, *, inverse: bool = False, interpret: bool = True):
+    """C2C FFT of arbitrary length via Bluestein's chirp-z algorithm.
+
+    cuFFT falls back to Bluestein when N has prime factors > 127; the rust
+    plan model charges the same structure modelled here: two forward FFTs,
+    a pointwise multiply, and an inverse FFT, all of length M = next power
+    of two >= 2N - 1.
+    """
+    batch, n = re.shape
+    if n & (n - 1) == 0:
+        return kfft.fft_c2c_auto(re, im, inverse=inverse, interpret=interpret)
+    m = _next_pow2(2 * n - 1)
+    sign = 1.0 if inverse else -1.0
+
+    # Chirp c_n = exp(sign * i * pi * n^2 / N). Computed in float64 numpy at
+    # trace time, so it becomes a constant in the artifact.
+    idx = np.arange(n, dtype=np.float64)
+    phase = sign * np.pi * ((idx * idx) % (2 * n)) / n
+    cr = np.cos(phase)
+    ci = np.sin(phase)
+
+    # a = x * c, zero-padded to M.
+    ar = re * jnp.asarray(cr, re.dtype) - im * jnp.asarray(ci, re.dtype)
+    ai = re * jnp.asarray(ci, re.dtype) + im * jnp.asarray(cr, re.dtype)
+    ar = jnp.pad(ar, ((0, 0), (0, m - n)))
+    ai = jnp.pad(ai, ((0, 0), (0, m - n)))
+
+    # b = conj(chirp), wrapped: b_k = conj(c)_{|k|} for k in (-N, N).
+    br = np.zeros(m)
+    bi = np.zeros(m)
+    br[:n] = cr
+    bi[:n] = -ci
+    br[m - n + 1:] = cr[1:][::-1]
+    bi[m - n + 1:] = -ci[1:][::-1]
+
+    # Circular convolution through the power-of-two Pallas FFT.
+    far, fai = kfft.fft_c2c_auto(ar, ai, interpret=interpret)
+    fbr, fbi = kfft.fft_c2c_auto(
+        jnp.asarray(br, re.dtype)[None, :], jnp.asarray(bi, re.dtype)[None, :],
+        interpret=interpret)
+    pr = far * fbr - fai * fbi
+    pi = far * fbi + fai * fbr
+    yr, yi = kfft.fft_c2c_auto(pr, pi, inverse=True, interpret=interpret)
+
+    # Multiply by the chirp again and truncate to N.
+    outr = yr[:, :n] * jnp.asarray(cr, re.dtype) - yi[:, :n] * jnp.asarray(ci, re.dtype)
+    outi = yr[:, :n] * jnp.asarray(ci, re.dtype) + yi[:, :n] * jnp.asarray(cr, re.dtype)
+    if inverse:
+        outr = outr / n
+        outi = outi / n
+    return outr, outi
+
+
+def fft2d(re, im, *, inverse: bool = False, interpret: bool = True):
+    """2D C2C FFT of a (B, R, C) batch via row/column 1D passes.
+
+    The paper (section 2.1) notes cuFFT computes higher-dimensional
+    transforms exactly this way — two sets of batched 1D FFTs — which is
+    why its 1D energy study covers the 2D/3D cases too. Both passes reuse
+    the same Pallas Stockham kernel.
+    """
+    b, r, c = re.shape
+    # rows: batch the R dimension
+    xr, xi = kfft.fft_c2c_auto(re.reshape(b * r, c), im.reshape(b * r, c),
+                               inverse=inverse, interpret=interpret)
+    xr = xr.reshape(b, r, c).transpose(0, 2, 1)
+    xi = xi.reshape(b, r, c).transpose(0, 2, 1)
+    # columns: batch the C dimension
+    yr, yi = kfft.fft_c2c_auto(xr.reshape(b * c, r), xi.reshape(b * c, r),
+                               inverse=inverse, interpret=interpret)
+    yr = yr.reshape(b, c, r).transpose(0, 2, 1)
+    yi = yi.reshape(b, c, r).transpose(0, 2, 1)
+    return yr, yi
+
+
+def pulsar_pipeline(re, im, *, harmonics: int, interpret: bool = True):
+    """The section 5.3 pipeline on a batch of complex time series.
+
+    Returns (harmonic_sums, spectrum_mean, spectrum_std).  The harmonic sum
+    is taken over the normalized power spectrum, so a pulsar at bin k shows
+    up as a large positive S/N value at k.
+    """
+    fr, fi = fft_batch(re, im, interpret=interpret)
+    p = kspectrum.power_spectrum(fr, fi, interpret=interpret)
+    norm, mean, std = kspectrum.normalize_spectrum(p, interpret=interpret)
+    hs = kharmonic.harmonic_sum(norm, harmonics=harmonics, interpret=interpret)
+    return hs, mean, std
+
+
+def spectrum_only(re, im, *, interpret: bool = True):
+    """FFT + power spectrum (the pipeline's first two stages)."""
+    fr, fi = fft_batch(re, im, interpret=interpret)
+    return kspectrum.power_spectrum(fr, fi, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue: every HLO module the rust runtime can load.
+# ---------------------------------------------------------------------------
+
+def make_fft_fn(inverse: bool = False):
+    return functools.partial(fft_batch, inverse=inverse)
+
+
+def make_pipeline_fn(harmonics: int):
+    return functools.partial(pulsar_pipeline, harmonics=harmonics)
+
+
+def artifact_catalogue():
+    """(name, fn, [input ShapeDtypeStructs], output arity, metadata) tuples.
+
+    Batch sizes keep each artifact's element count at 2^16 (fp32) so the CPU
+    runtime stays fast; the GPU simulator scales the *modelled* batch to the
+    paper's fixed 2 GB working set independently of what the CPU executes.
+    """
+    f32 = jnp.float32
+    f64 = jnp.float64
+    entries = []
+
+    def fft_entry(n, batch, dtype, tag):
+        spec = jax.ShapeDtypeStruct((batch, n), dtype)
+        entries.append((
+            f"fft_{tag}_n{n}_b{batch}", make_fft_fn(), [spec, spec], 2,
+            {"kind": "fft", "n": n, "batch": batch, "dtype": tag},
+        ))
+
+    fft_entry(256, 256, f32, "f32")
+    fft_entry(1024, 64, f32, "f32")
+    fft_entry(4096, 16, f32, "f32")
+    fft_entry(16384, 4, f32, "f32")      # four-step multi-kernel plan
+    fft_entry(1024, 64, f64, "f64")
+
+    spec = jax.ShapeDtypeStruct((16, 4096), f32)
+    entries.append((
+        "spectrum_f32_n4096_b16", spectrum_only, [spec, spec], 1,
+        {"kind": "spectrum", "n": 4096, "batch": 16, "dtype": "f32"},
+    ))
+
+    for h in (2, 4, 8, 16, 32):
+        spec = jax.ShapeDtypeStruct((4, 16384), f32)
+        entries.append((
+            f"pipeline_n16384_h{h}", make_pipeline_fn(h), [spec, spec], 3,
+            {"kind": "pipeline", "n": 16384, "batch": 4, "dtype": "f32",
+             "harmonics": h},
+        ))
+    return entries

@@ -1,0 +1,72 @@
+"""AOT path: HLO text emission, manifest shape, determinism."""
+
+import os
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    paths = aot.emit(str(out), only="fft_f32_n256", verbose=False)
+    return out, paths
+
+
+def test_emit_writes_hlo_text(emitted):
+    out, paths = emitted
+    assert len(paths) == 1
+    text = open(paths[0]).read()
+    # HLO text module, not a serialized proto
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # two input planes (re, im)
+    assert "parameter(0)" in text and "parameter(1)" in text
+    # output is a tuple (return_tuple=True contract with the rust loader)
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_manifest_row_per_artifact(emitted):
+    out, _ = emitted
+    lines = open(os.path.join(out, "manifest.tsv")).read().strip().splitlines()
+    header, rows = lines[0], lines[1:]
+    assert header.split("\t")[0] == "name"
+    assert len(rows) == 1
+    cols = rows[0].split("\t")
+    assert cols[0] == "fft_f32_n256_b256"
+    assert cols[2] == "fft"
+    assert cols[3] == "256" and cols[4] == "256"
+    assert cols[7] == "f32:256x256;f32:256x256"
+    assert cols[8] == "2"
+
+
+def test_emission_is_deterministic(tmp_path):
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    aot.emit(str(a), only="fft_f32_n1024", verbose=False)
+    aot.emit(str(b), only="fft_f32_n1024", verbose=False)
+    ta = open(a / "fft_f32_n1024_b64.hlo.txt").read()
+    tb = open(b / "fft_f32_n1024_b64.hlo.txt").read()
+    assert ta == tb
+
+
+def test_catalogue_covers_paper_table4_pipeline_configs():
+    kinds = {}
+    for name, _, _, _, meta in model.artifact_catalogue():
+        kinds.setdefault(meta["kind"], []).append(name)
+    assert len(kinds["pipeline"]) == 5  # h in {2,4,8,16,32} — Table 4 rows
+    assert len(kinds["fft"]) >= 4
+
+
+def test_no_serialized_proto_output(emitted):
+    """Guard against regressing to .serialize() (xla_extension 0.5.1 rejects
+    jax>=0.5 64-bit-id protos; text is the only safe interchange)."""
+    out, paths = emitted
+    for p in paths:
+        with open(p, "rb") as f:
+            head = f.read(9)
+        assert head == b"HloModule"

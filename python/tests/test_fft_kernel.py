@@ -1,0 +1,217 @@
+"""L1 correctness: Pallas Stockham FFT vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed parametrizations pin the exact
+artifact configurations the rust runtime loads.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import fft as kfft
+from compile.kernels.ref import fft_c2c_ref
+
+RTOL = {jnp.float32: 2e-4, jnp.float64: 1e-10, jnp.float16: 2e-2}
+ATOL = {jnp.float32: 2e-4, jnp.float64: 1e-10, jnp.float16: 5e-2}
+
+
+def _rand_planes(rng, b, n, dtype):
+    re = jnp.asarray(rng.standard_normal((b, n)), dtype)
+    im = jnp.asarray(rng.standard_normal((b, n)), dtype)
+    return re, im
+
+
+def _assert_close(a, b, dtype, scale=1.0):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b),
+        rtol=RTOL[dtype] * scale, atol=ATOL[dtype] * scale,
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_forward_matches_ref(n, dtype):
+    rng = np.random.default_rng(n)
+    re, im = _rand_planes(rng, 4, n, dtype)
+    kr, ki = kfft.fft_c2c(re, im)
+    rr, ri = fft_c2c_ref(re, im)
+    scale = math.sqrt(n)
+    _assert_close(kr, rr, dtype, scale)
+    _assert_close(ki, ri, dtype, scale)
+
+
+@pytest.mark.parametrize("n", [8, 64, 1024])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_inverse_roundtrip(n, dtype):
+    rng = np.random.default_rng(n + 1)
+    re, im = _rand_planes(rng, 8, n, dtype)
+    fr, fi = kfft.fft_c2c(re, im)
+    br, bi = kfft.fft_c2c(fr, fi, inverse=True)
+    _assert_close(br, re, dtype, math.sqrt(n))
+    _assert_close(bi, im, dtype, math.sqrt(n))
+
+
+def test_inverse_unnormalized_scales_by_n():
+    rng = np.random.default_rng(7)
+    re, im = _rand_planes(rng, 4, 64, jnp.float32)
+    fr, fi = kfft.fft_c2c(re, im)
+    ur, ui = kfft.fft_c2c(fr, fi, inverse=True, normalize=False)
+    _assert_close(ur, re * 64, jnp.float32, 64.0)
+    _assert_close(ui, im * 64, jnp.float32, 64.0)
+
+
+def test_impulse_gives_flat_spectrum():
+    n = 256
+    re = jnp.zeros((1, n), jnp.float32).at[0, 0].set(1.0)
+    im = jnp.zeros((1, n), jnp.float32)
+    fr, fi = kfft.fft_c2c(re, im)
+    np.testing.assert_allclose(np.asarray(fr), np.ones((1, n)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fi), np.zeros((1, n)), atol=1e-5)
+
+
+def test_single_tone_lands_on_its_bin():
+    n, k = 512, 37
+    t = np.arange(n)
+    re = jnp.asarray(np.cos(2 * np.pi * k * t / n)[None, :], jnp.float32)
+    im = jnp.asarray(np.sin(2 * np.pi * k * t / n)[None, :], jnp.float32)
+    fr, fi = kfft.fft_c2c(re, im)
+    mag = np.hypot(np.asarray(fr), np.asarray(fi))[0]
+    assert int(np.argmax(mag)) == k
+    assert mag[k] == pytest.approx(n, rel=1e-4)
+    mag[k] = 0.0
+    assert np.max(mag) < 1e-2
+
+
+def test_linearity():
+    rng = np.random.default_rng(11)
+    n = 128
+    a_re, a_im = _rand_planes(rng, 2, n, jnp.float32)
+    b_re, b_im = _rand_planes(rng, 2, n, jnp.float32)
+    fa = kfft.fft_c2c(a_re, a_im)
+    fb = kfft.fft_c2c(b_re, b_im)
+    fsum = kfft.fft_c2c(a_re + 2.0 * b_re, a_im + 2.0 * b_im)
+    _assert_close(fsum[0], fa[0] + 2.0 * fb[0], jnp.float32, math.sqrt(n) * 3)
+    _assert_close(fsum[1], fa[1] + 2.0 * fb[1], jnp.float32, math.sqrt(n) * 3)
+
+
+def test_parseval():
+    rng = np.random.default_rng(13)
+    n = 1024
+    re, im = _rand_planes(rng, 4, n, jnp.float64)
+    fr, fi = kfft.fft_c2c(re, im)
+    time_e = np.sum(np.asarray(re) ** 2 + np.asarray(im) ** 2, axis=-1)
+    freq_e = np.sum(np.asarray(fr) ** 2 + np.asarray(fi) ** 2, axis=-1) / n
+    np.testing.assert_allclose(time_e, freq_e, rtol=1e-9)
+
+
+@pytest.mark.parametrize("tile_b", [1, 2, 3, 4, 8, 16, 32])
+def test_tile_size_does_not_change_result(tile_b):
+    rng = np.random.default_rng(17)
+    re, im = _rand_planes(rng, 12, 64, jnp.float32)
+    base = kfft.fft_c2c(re, im, tile_b=1)
+    out = kfft.fft_c2c(re, im, tile_b=tile_b)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(base[0]), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(base[1]), rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [16384, 32768])
+def test_four_step_matches_ref(n):
+    rng = np.random.default_rng(n)
+    re, im = _rand_planes(rng, 2, n, jnp.float32)
+    kr, ki = kfft.fft_c2c_four_step(re, im)
+    rr, ri = fft_c2c_ref(re, im)
+    scale = float(np.max(np.abs(np.asarray(rr))))
+    assert float(np.max(np.abs(np.asarray(kr - rr)))) / scale < 1e-5
+    assert float(np.max(np.abs(np.asarray(ki - ri)))) / scale < 1e-5
+
+
+def test_four_step_inverse_roundtrip():
+    rng = np.random.default_rng(23)
+    re, im = _rand_planes(rng, 2, 16384, jnp.float32)
+    fr, fi = kfft.fft_c2c_four_step(re, im)
+    br, bi = kfft.fft_c2c_four_step(fr, fi, inverse=True)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(re), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(bi), np.asarray(im), atol=2e-4)
+
+
+def test_auto_dispatch_matches_both_plans():
+    rng = np.random.default_rng(29)
+    small = _rand_planes(rng, 4, 2048, jnp.float32)
+    large = _rand_planes(rng, 2, 16384, jnp.float32)
+    s_auto = kfft.fft_c2c_auto(*small)
+    s_single = kfft.fft_c2c(*small)
+    np.testing.assert_array_equal(np.asarray(s_auto[0]), np.asarray(s_single[0]))
+    l_auto = kfft.fft_c2c_auto(*large)
+    l_four = kfft.fft_c2c_four_step(*large)
+    np.testing.assert_array_equal(np.asarray(l_auto[0]), np.asarray(l_four[0]))
+
+
+def test_split_four_step_respects_capacity():
+    n1, n2 = kfft.split_four_step(1 << 20, jnp.float32)
+    assert n1 * n2 == 1 << 20
+    cap = kfft.MAX_SINGLE_KERNEL[jnp.dtype(jnp.float32)]
+    assert n1 <= cap and n2 <= cap
+    with pytest.raises(ValueError):
+        kfft.split_four_step(1 << 27, jnp.float64)
+
+
+def test_non_pow2_rejected():
+    re = jnp.zeros((2, 12), jnp.float32)
+    with pytest.raises(ValueError, match="power-of-two"):
+        kfft.fft_c2c(re, re)
+
+
+def test_shape_mismatch_rejected():
+    re = jnp.zeros((2, 16), jnp.float32)
+    im = jnp.zeros((2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="matching"):
+        kfft.fft_c2c(re, im)
+
+
+def test_fp16_small_sizes():
+    rng = np.random.default_rng(31)
+    re, im = _rand_planes(rng, 4, 64, jnp.float16)
+    kr, ki = kfft.fft_c2c(re, im)
+    rr, ri = fft_c2c_ref(re.astype(jnp.float64), im.astype(jnp.float64))
+    np.testing.assert_allclose(np.asarray(kr, np.float64), np.asarray(rr), atol=0.5)
+    np.testing.assert_allclose(np.asarray(ki, np.float64), np.asarray(ri), atol=0.5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=11),
+    batch=st.integers(min_value=1, max_value=17),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    inverse=st.booleans(),
+)
+def test_hypothesis_fft_matches_ref(log_n, batch, seed, dtype, inverse):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    re, im = _rand_planes(rng, batch, n, dtype)
+    kr, ki = kfft.fft_c2c(re, im, inverse=inverse)
+    rr, ri = fft_c2c_ref(re, im, inverse=inverse)
+    scale = math.sqrt(n) * (1.0 if not inverse else 1.0 / math.sqrt(n))
+    _assert_close(kr, rr, dtype, max(scale, 1.0))
+    _assert_close(ki, ri, dtype, max(scale, 1.0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(min_value=1, max_value=8),
+    tile_b=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_hypothesis_tiling_invariance(batch, tile_b, seed):
+    rng = np.random.default_rng(seed)
+    re, im = _rand_planes(rng, batch, 32, jnp.float32)
+    a = kfft.fft_c2c(re, im, tile_b=tile_b)
+    b = kfft.fft_c2c(re, im, tile_b=1)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), rtol=1e-6, atol=1e-5)

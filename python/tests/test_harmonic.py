@@ -1,0 +1,78 @@
+"""L1 correctness: harmonic-sum kernel vs oracle + S/N boosting property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import harmonic as kharm
+from compile.kernels.ref import harmonic_sum_ref
+
+
+def _rand(rng, b, n):
+    return jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+
+
+@pytest.mark.parametrize("h", [1, 2, 3, 4, 8, 16, 32])
+def test_matches_ref(h):
+    rng = np.random.default_rng(h)
+    p = _rand(rng, 4, 1024)
+    out = kharm.harmonic_sum(p, harmonics=h)
+    ref = harmonic_sum_ref(p, harmonics=h)
+    assert out.shape == (4, 1024 // h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_h1_truncates_only():
+    rng = np.random.default_rng(0)
+    p = _rand(rng, 2, 64)
+    out = kharm.harmonic_sum(p, harmonics=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(p))
+
+
+def test_collects_harmonics_of_injected_tone():
+    # A comb at bins k0, 2*k0, 4*k0, ... should pile up at k0 after summing.
+    n, k0, h = 4096, 100, 8
+    p = np.zeros((1, n), np.float32)
+    for m in range(1, h + 1):
+        p[0, k0 * m] = 1.0
+    out = np.asarray(kharm.harmonic_sum(jnp.asarray(p), harmonics=h))[0]
+    assert int(np.argmax(out)) == k0
+    assert out[k0] == pytest.approx(h)
+
+
+def test_dc_bin_sums_h_copies():
+    p = jnp.ones((1, 128), jnp.float32)
+    out = np.asarray(kharm.harmonic_sum(p, harmonics=4))
+    np.testing.assert_allclose(out, 4.0)
+
+
+def test_rejects_bad_args():
+    p = jnp.zeros((2, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        kharm.harmonic_sum(p, harmonics=0)
+    with pytest.raises(ValueError):
+        kharm.harmonic_sum(p, harmonics=32)  # n_out would be 0
+    with pytest.raises(ValueError):
+        kharm.harmonic_sum(jnp.zeros((2, 2, 2), jnp.float32), harmonics=2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=9),
+    log_n=st.integers(min_value=4, max_value=11),
+    h=st.sampled_from([1, 2, 3, 4, 5, 8, 16]),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_hypothesis_matches_ref(b, log_n, h, seed):
+    n = 1 << log_n
+    if n // h < 1:
+        return
+    rng = np.random.default_rng(seed)
+    p = _rand(rng, b, n)
+    out = kharm.harmonic_sum(p, harmonics=h)
+    ref = harmonic_sum_ref(p, harmonics=h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,96 @@
+"""L1 correctness: power-spectrum and normalization kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import spectrum as kspec
+from compile.kernels.ref import normalize_spectrum_ref, power_spectrum_ref
+
+
+def _rand(rng, b, n, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal((b, n)), dtype)
+
+
+@pytest.mark.parametrize("b,n", [(1, 8), (4, 256), (16, 1024), (5, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_power_spectrum_matches_ref(b, n, dtype):
+    rng = np.random.default_rng(b * n)
+    re, im = _rand(rng, b, n, dtype), _rand(rng, b, n, dtype)
+    out = kspec.power_spectrum(re, im)
+    ref = power_spectrum_ref(re, im)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_power_spectrum_nonnegative():
+    rng = np.random.default_rng(3)
+    re, im = _rand(rng, 8, 128), _rand(rng, 8, 128)
+    out = np.asarray(kspec.power_spectrum(re, im))
+    assert (out >= 0).all()
+
+
+def test_power_spectrum_zero_input():
+    z = jnp.zeros((4, 32), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kspec.power_spectrum(z, z)), 0.0)
+
+
+@pytest.mark.parametrize("b,n", [(1, 16), (4, 512), (16, 4096)])
+def test_normalize_matches_ref(b, n):
+    rng = np.random.default_rng(b + n)
+    p = jnp.abs(_rand(rng, b, n)) + 0.1
+    out, mean, std = kspec.normalize_spectrum(p)
+    rout, rmean, rstd = normalize_spectrum_ref(p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(rmean), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(std), np.asarray(rstd), rtol=1e-4)
+
+
+def test_normalize_output_moments():
+    rng = np.random.default_rng(5)
+    p = jnp.abs(_rand(rng, 8, 2048)) * 3.0 + 1.0
+    out, _, _ = kspec.normalize_spectrum(p)
+    out = np.asarray(out, np.float64)
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, rtol=1e-3)
+
+
+def test_normalize_constant_row_is_safe():
+    p = jnp.full((2, 64), 7.5, jnp.float32)
+    out, mean, std = kspec.normalize_spectrum(p)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mean), 7.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(std), 0.0, atol=1e-6)
+
+
+def test_rejects_bad_rank():
+    p = jnp.zeros((2, 3, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        kspec.normalize_spectrum(p)
+    with pytest.raises(ValueError):
+        kspec.power_spectrum(p, p)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=13),
+    log_n=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_hypothesis_power_and_normalize(b, log_n, seed):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    re, im = _rand(rng, b, n), _rand(rng, b, n)
+    p = kspec.power_spectrum(re, im)
+    np.testing.assert_allclose(
+        np.asarray(p), np.asarray(power_spectrum_ref(re, im)), rtol=1e-5
+    )
+    out, mean, std = kspec.normalize_spectrum(p)
+    rout, rmean, rstd = normalize_spectrum_ref(p)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(rmean), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(std), np.asarray(rstd), rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), rtol=1e-3, atol=1e-3)

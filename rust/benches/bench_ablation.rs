@@ -1,0 +1,29 @@
+//! Bench: ablations over the simulator's design choices (DESIGN.md §Perf)
+//! — which mechanisms are load-bearing for the paper's phenomenon.
+
+mod common;
+
+use fftsweep::analysis::ablation::{ablation_table, run_ablation, Ablation};
+use fftsweep::sim::gpu::{jetson_nano, tesla_v100};
+use fftsweep::util::bench::{black_box, Bench};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("ablation").with_iters(1, 10);
+
+    for gpu in [tesla_v100(), jetson_nano()] {
+        let tag = gpu.name.to_lowercase().replace(' ', "_");
+        let mut t = None;
+        b.run(&format!("ablation_table_{tag}"), || {
+            t = Some(ablation_table(&gpu, 16384));
+        });
+        let t = t.unwrap();
+        t.write_csv(&out.join(format!("ablation_{tag}.csv"))).unwrap();
+        println!("\n{}", t.to_ascii());
+    }
+
+    b.run("single_ablation_point", || {
+        black_box(run_ablation(&tesla_v100(), 16384, Ablation::NoVoltageScaling));
+    });
+    println!("{}", b.summary());
+}

@@ -1,0 +1,49 @@
+//! Bench: Figs 10-16 — GFLOPS/W, execution-time cost, GFLOPS, and the
+//! efficiency-increase series at the per-length optimal and mean-optimal
+//! clocks vs both boost and base reference clocks.
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::analysis::report::{headline, headline_table};
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::gpu::{all_gpus, jetson_nano, tesla_v100};
+use fftsweep::types::Precision;
+use fftsweep::util::bench::Bench;
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig10_16").with_iters(0, 1);
+
+    let cfg = common::bench_cfg();
+    for gpu in [tesla_v100(), jetson_nano()] {
+        let tag = gpu.name.to_lowercase().replace(' ', "_");
+        b.run(&format!("figs9_16_{tag}"), || {
+            let sweep = sweep_gpu(&gpu, Precision::Fp32, &cfg);
+            figures::figure9_to_14(&gpu, &sweep)
+                .write_csv(&out.join(format!("fig10_14_{tag}.csv")))
+                .unwrap();
+            let (mean_opt, t) = figures::figure15_16(&gpu, &sweep);
+            t.write_csv(&out.join(format!("fig15_16_{tag}.csv"))).unwrap();
+            println!("  {} mean optimal: {mean_opt:.0} MHz", gpu.name);
+        });
+    }
+
+    // Headline summary across every (gpu, precision): the abstract's
+    // "60% / 50% with <10% time" claims.
+    let mut headlines = Vec::new();
+    b.run("headlines_all_gpus", || {
+        headlines.clear();
+        for gpu in all_gpus() {
+            for p in Precision::ALL {
+                if gpu.supports(p) {
+                    headlines.push(headline(&gpu, p, &common::quick_cfg()));
+                }
+            }
+        }
+    });
+    let t = headline_table(&headlines);
+    t.write_csv(&out.join("headlines.csv")).unwrap();
+    println!("\n{}", t.to_ascii());
+    println!("{}", b.summary());
+}

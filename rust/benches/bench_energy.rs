@@ -1,0 +1,41 @@
+//! Bench: Figs 7/8 — energy-per-batch and averaged-power curves vs clock,
+//! plus the sensor-sampling + energy-integration hot path.
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::harness::measure::{measure_point, Protocol};
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::gpu::{all_gpus, jetson_nano, tesla_v100};
+use fftsweep::types::{FftWorkload, Precision};
+use fftsweep::util::bench::{black_box, Bench};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig7_8").with_iters(1, 8);
+
+    let cfg = common::bench_cfg();
+    let mut fig7 = None;
+    b.run("fig7_energy_n16384_5gpus", || {
+        fig7 = Some(figures::figure7(&all_gpus(), &cfg));
+    });
+    fig7.unwrap().write_csv(&out.join("fig7.csv")).unwrap();
+
+    for gpu in [tesla_v100(), jetson_nano()] {
+        let sweep = sweep_gpu(&gpu, Precision::Fp32, &cfg);
+        let tag = gpu.name.to_lowercase().replace(' ', "_");
+        figures::figure8(&gpu, &sweep)
+            .write_csv(&out.join(format!("fig8_{tag}.csv")))
+            .unwrap();
+    }
+
+    // Micro: one full measured point (timeline + sensor + merge + eq. 3).
+    let g = tesla_v100();
+    let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+    let proto = Protocol::default();
+    b.run("measure_point_n16384", || {
+        black_box(measure_point(&g, &w, 945.0, &proto));
+    });
+
+    println!("\n{}", b.summary());
+}

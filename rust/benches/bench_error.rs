@@ -1,0 +1,49 @@
+//! Bench: Figs 2/3 — the measurement-log excerpt with kernel localization
+//! (V100 + Titan V, including the driver-cap detection) and the
+//! measurement-error surface.
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::gpu::{jetson_nano, tesla_v100, titan_v};
+use fftsweep::types::Precision;
+use fftsweep::util::bench::Bench;
+use fftsweep::util::stats;
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig2_3").with_iters(1, 10);
+
+    // Fig 2: V100 @ 1020 MHz and Titan V @ 1912 MHz (capped to 1335).
+    let mut logs = None;
+    b.run("fig2_logs", || {
+        let v = figures::figure2(&tesla_v100(), 16384, 1020.0, 0xF16);
+        let t = figures::figure2(&titan_v(), 16384, 1912.0, 0xF16);
+        logs = Some((v, t));
+    });
+    let ((v_table, _), (t_table, _)) = logs.unwrap();
+    v_table.write_csv(&out.join("fig2_v100.csv")).unwrap();
+    t_table.write_csv(&out.join("fig2_titanv.csv")).unwrap();
+    // Titan V log must report the capped clock, not the requested one.
+    assert!(t_table.rows.iter().all(|r| r[2] == "1335"));
+
+    // Fig 3: error surfaces for V100 + Jetson.
+    let cfg = common::bench_cfg();
+    for gpu in [tesla_v100(), jetson_nano()] {
+        let tag = gpu.name.to_lowercase().replace(' ', "_");
+        let sweep = sweep_gpu(&gpu, Precision::Fp32, &cfg);
+        let t = figures::figure3(&gpu, &sweep);
+        // paper: errors ~5% on discrete cards, <=15% on the Nano
+        let errs: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let med = stats::median(&errs);
+        println!("  {}: median measurement error {med:.2}%", gpu.name);
+        if gpu.name == "Jetson Nano" {
+            assert!(med > 3.0 && med < 20.0, "nano median {med}");
+        } else {
+            assert!(med > 0.5 && med < 10.0, "v100 median {med}");
+        }
+        t.write_csv(&out.join(format!("fig3_{tag}.csv"))).unwrap();
+    }
+    println!("\n{}", b.summary());
+}

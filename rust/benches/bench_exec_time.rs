@@ -1,0 +1,57 @@
+//! Bench: Figs 4/5/6 — the t_fix staircase per GPU/precision and the
+//! t_f/t_d frequency-ratio curves, plus timing of the underlying exec
+//! model (the analytic hot path of every sweep).
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::cufft::plan::plan;
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::exec_model::time_plan;
+use fftsweep::sim::gpu::{all_gpus, jetson_nano, tesla_v100};
+use fftsweep::types::{FftWorkload, Precision};
+use fftsweep::util::bench::{black_box, Bench};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig4_5_6").with_iters(2, 15);
+
+    // Regenerate Fig 4 (FP32 staircase, all GPUs).
+    let lengths: Vec<u64> = (5..=21).map(|k| 1u64 << k).collect();
+    let gpus = all_gpus();
+    let mut fig4 = None;
+    b.run("fig4_tfix_fp32_all_gpus", || {
+        fig4 = Some(figures::figure4_5(&gpus, Precision::Fp32, &lengths));
+    });
+    fig4.unwrap().write_csv(&out.join("fig4.csv")).unwrap();
+
+    // Fig 5: FP64 + FP16.
+    let mut fig5a = None;
+    b.run("fig5_tfix_fp64_fp16", || {
+        let a = figures::figure4_5(&gpus, Precision::Fp64, &lengths);
+        let c = figures::figure4_5(&gpus, Precision::Fp16, &lengths);
+        fig5a = Some((a, c));
+    });
+    let (a, c) = fig5a.unwrap();
+    a.write_csv(&out.join("fig5_fp64.csv")).unwrap();
+    c.write_csv(&out.join("fig5_fp16.csv")).unwrap();
+
+    // Fig 6: t_f/t_d for V100 + Jetson.
+    let cfg = common::bench_cfg();
+    for gpu in [tesla_v100(), jetson_nano()] {
+        let sweep = sweep_gpu(&gpu, Precision::Fp32, &cfg);
+        let t = figures::figure6(&gpu, &sweep);
+        let tag = gpu.name.to_lowercase().replace(' ', "_");
+        t.write_csv(&out.join(format!("fig6_{tag}.csv"))).unwrap();
+    }
+
+    // Micro: the exec-model evaluation itself (called ~10^4 times per report).
+    let g = tesla_v100();
+    let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+    let p = plan(w.n, w.precision);
+    b.run_with_elements("exec_model_time_plan", Some(1), &mut || {
+        black_box(time_plan(&g, &w, &p, 945.0));
+    });
+
+    println!("\n{}", b.summary());
+}

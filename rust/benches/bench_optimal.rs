@@ -1,0 +1,62 @@
+//! Bench: Fig 9 + Table 3 — per-length optimal clocks and the mean-optimal
+//! frequency per (GPU, precision), compared against the paper's values.
+
+mod common;
+
+use fftsweep::analysis::tables::table3_paper_mhz;
+use fftsweep::analysis::{mean_optimal_mhz, optima};
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::gpu::all_gpus;
+use fftsweep::types::Precision;
+use fftsweep::util::bench::Bench;
+use fftsweep::util::table::{fnum, Table};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("table3_fig9").with_iters(0, 1);
+
+    let cfg = common::bench_cfg();
+    let mut t3 = Table::new(
+        "Table 3: mean optimal clocks, measured vs paper [MHz]",
+        &["gpu", "precision", "measured", "paper", "dev_pct"],
+    );
+    let mut fig9 = Table::new(
+        "Fig 9: optimal clock as % of boost",
+        &["gpu", "precision", "n", "pct_of_boost"],
+    );
+    for gpu in all_gpus() {
+        for p in Precision::ALL {
+            if !gpu.supports(p) {
+                continue;
+            }
+            let label = format!("{}_{}", gpu.name.replace(' ', "_"), p.label());
+            b.run(&label, || {
+                let sweep = sweep_gpu(&gpu, p, &cfg);
+                let pts = optima(&gpu, &sweep);
+                let mean = mean_optimal_mhz(&gpu, &pts);
+                let paper = table3_paper_mhz(gpu.name, p);
+                t3.push_row(vec![
+                    gpu.name.to_string(),
+                    p.to_string(),
+                    fnum(mean, 0),
+                    paper.map(|x| fnum(x, 0)).unwrap_or_else(|| "-".into()),
+                    paper
+                        .map(|x| fnum((mean / x - 1.0) * 100.0, 1))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+                for pt in &pts {
+                    fig9.push_row(vec![
+                        gpu.name.to_string(),
+                        p.to_string(),
+                        pt.n.to_string(),
+                        fnum(pt.frac_of_boost * 100.0, 1),
+                    ]);
+                }
+            });
+        }
+    }
+    t3.write_csv(&out.join("table3.csv")).unwrap();
+    fig9.write_csv(&out.join("fig9.csv")).unwrap();
+    println!("\n{}", t3.to_ascii());
+    println!("{}", b.summary());
+}

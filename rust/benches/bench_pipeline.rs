@@ -1,0 +1,67 @@
+//! Bench: Table 4 + Fig 19 — the pulsar-pipeline energy-efficiency
+//! increase per harmonic configuration with NVML clock bracketing.
+
+mod common;
+
+use fftsweep::pipeline::{run_pipeline, table4};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::bench::{black_box, Bench};
+use fftsweep::util::table::{fnum, Table};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("table4_fig19").with_iters(1, 10);
+    let gpu = tesla_v100();
+
+    let mut rows = None;
+    b.run("table4_v100_n5e5", || {
+        rows = Some(table4(&gpu, 500_000, 945.0));
+    });
+    let rows = rows.unwrap();
+
+    let paper = [
+        (2u64, 60.85, 1.291),
+        (4, 58.56, 1.290),
+        (8, 55.92, 1.267),
+        (16, 53.73, 1.260),
+        (32, 51.34, 1.240),
+    ];
+    let mut t = Table::new(
+        "Table 4: pipeline efficiency increase (measured vs paper)",
+        &["harmonics", "fft_time_pct", "paper_pct", "eff_increase", "paper_increase"],
+    );
+    for (r, (h, pf, pe)) in rows.iter().zip(paper) {
+        assert_eq!(r.harmonics, h);
+        t.push_row(vec![
+            r.harmonics.to_string(),
+            fnum(r.fft_time_pct, 2),
+            fnum(pf, 2),
+            fnum(r.eff_increase, 3),
+            fnum(pe, 3),
+        ]);
+    }
+    t.write_csv(&out.join("table4.csv")).unwrap();
+    println!("\n{}", t.to_ascii());
+
+    // Fig 19 trace generation speed (per pipeline run).
+    b.run("fig19_pipeline_run", || {
+        black_box(run_pipeline(&gpu, 500_000, 8, Some(945.0)));
+    });
+    let run = run_pipeline(&gpu, 500_000, 8, Some(945.0));
+    let mut fig19 = Table::new(
+        "Fig 19: pipeline power/clock trace",
+        &["t_ms", "stage", "clock_mhz", "power_w"],
+    );
+    let mut tt = 0.0;
+    for s in &run.stages {
+        fig19.push_row(vec![
+            fnum(tt * 1e3, 3),
+            s.name.to_string(),
+            fnum(s.clock_mhz, 0),
+            fnum(s.energy_j / s.time_s.max(1e-12), 1),
+        ]);
+        tt += s.time_s;
+    }
+    fig19.write_csv(&out.join("fig19.csv")).unwrap();
+    println!("{}", b.summary());
+}

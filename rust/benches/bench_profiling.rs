@@ -1,0 +1,53 @@
+//! Bench: Fig 20 — NVVP-style kernel utilization profiles for the three
+//! representative lengths (8192 / 16k / 2M) across the clock range.
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::cufft::plan::plan;
+use fftsweep::cufft::profile::{fig20_lengths, profile_plan};
+use fftsweep::sim::freq_table::freq_table;
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::types::{FftWorkload, Precision};
+use fftsweep::util::bench::{black_box, Bench};
+use fftsweep::util::table::{fnum, Table};
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig20").with_iters(2, 20);
+    let gpu = tesla_v100();
+
+    let mut t = None;
+    b.run("fig20_boost_profiles", || {
+        t = Some(figures::figure20(&gpu, gpu.boost_clock_mhz));
+    });
+    let t = t.unwrap();
+    t.write_csv(&out.join("fig20.csv")).unwrap();
+    println!("\n{}", t.to_ascii());
+
+    // Profile across the clock range: issue-slot saturation at low clocks.
+    let mut sweep_table = Table::new(
+        "Fig 20 (extended): utilization vs clock, N=8192",
+        &["f_mhz", "compute_pct", "issue_pct", "mbu_pct"],
+    );
+    let w = FftWorkload::new(8192, Precision::Fp32, gpu.working_set_bytes);
+    let p = plan(w.n, w.precision);
+    for f in freq_table(&gpu).stride(16) {
+        let prof = profile_plan(&gpu, &w, &p, f);
+        let k = &prof.kernels[0];
+        sweep_table.push_row(vec![
+            fnum(f, 0),
+            fnum(k.compute_util * 100.0, 1),
+            fnum(k.issue_slot_util * 100.0, 1),
+            fnum(k.device_mbu * 100.0, 1),
+        ]);
+    }
+    sweep_table.write_csv(&out.join("fig20_vs_clock.csv")).unwrap();
+
+    b.run_with_elements("profile_plan_2M", Some(1), &mut || {
+        let w = FftWorkload::new(fig20_lengths()[2], Precision::Fp32, gpu.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        black_box(profile_plan(&gpu, &w, &p, 945.0));
+    });
+    println!("{}", b.summary());
+}

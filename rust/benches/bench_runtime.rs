@@ -1,0 +1,86 @@
+//! Bench: the L3 hot path — PJRT execute latency per artifact, literal
+//! construction, end-to-end coordinator throughput (jobs/s), and batcher
+//! packing. These are the paper-independent serving numbers EXPERIMENTS.md
+//! §Perf tracks. Skips gracefully when artifacts are absent.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fftsweep::coordinator::{Engine, EngineConfig};
+use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::bench::{black_box, Bench};
+use fftsweep::util::rng::Rng;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("bench_runtime: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    let mut b = Bench::new("runtime").with_iters(3, 30);
+
+    // Compile cost (first load) vs cache hit.
+    let t0 = std::time::Instant::now();
+    let m1024 = rt.load("fft_f32_n1024_b64").expect("load");
+    println!("cold compile fft_f32_n1024_b64: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    b.run("load_cached", || {
+        black_box(rt.load("fft_f32_n1024_b64").unwrap());
+    });
+
+    // Literal construction + execute, per artifact size.
+    let mut rng = Rng::new(1);
+    for name in ["fft_f32_n256_b256", "fft_f32_n1024_b64", "fft_f32_n4096_b16", "fft_f32_n16384_b4"] {
+        let module = rt.load(name).expect("load");
+        let total = (module.meta.batch * module.meta.n) as usize;
+        let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        b.run_with_elements(&format!("literals_{name}"), Some(total as u64), &mut || {
+            black_box(module.literals_f32(&[&re, &im]).unwrap());
+        });
+        b.run_with_elements(&format!("execute_{name}"), Some(total as u64), &mut || {
+            black_box(module.run_f32(&[&re, &im]).unwrap());
+        });
+    }
+
+    // Pipeline artifact end to end.
+    let pipe = rt.load("pipeline_n16384_h8").expect("load");
+    let total = (pipe.meta.batch * pipe.meta.n) as usize;
+    let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+    let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+    b.run_with_elements("execute_pipeline_h8", Some(total as u64), &mut || {
+        black_box(pipe.run_f32(&[&re, &im]).unwrap());
+    });
+    drop((m1024, pipe));
+
+    // Coordinator throughput: 256 jobs of N=1024 through the batcher.
+    let engine = Engine::start(rt.clone(), tesla_v100(), EngineConfig::default()).expect("engine");
+    let n = 1024usize;
+    let payloads: Vec<(Vec<f32>, Vec<f32>)> = (0..256)
+        .map(|_| {
+            (
+                (0..n).map(|_| rng.gauss() as f32).collect(),
+                (0..n).map(|_| rng.gauss() as f32).collect(),
+            )
+        })
+        .collect();
+    let mut coord = Bench::new("coordinator").with_iters(1, 5);
+    coord.run_with_elements("serve_256_jobs_n1024", Some(256 * n as u64), &mut || {
+        let rxs: Vec<_> = payloads
+            .iter()
+            .map(|(re, im)| engine.submit(re.clone(), im.clone()).unwrap())
+            .collect();
+        engine.drain(Duration::from_secs(60));
+        for rx in rxs {
+            black_box(rx.recv().unwrap().unwrap());
+        }
+    });
+    println!("engine metrics: {}", engine.metrics.summary());
+    engine.shutdown();
+
+    println!("\n{}", b.summary());
+    println!("{}", coord.summary());
+}

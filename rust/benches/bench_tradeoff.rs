@@ -1,0 +1,33 @@
+//! Bench: Figs 17/18 — the efficiency-increase vs time-increase trade-off
+//! heatmaps for the V100 and the Jetson Nano.
+
+mod common;
+
+use fftsweep::analysis::figures;
+use fftsweep::harness::sweep::sweep_gpu;
+use fftsweep::sim::gpu::{jetson_nano, tesla_v100};
+use fftsweep::types::Precision;
+use fftsweep::util::bench::Bench;
+
+fn main() {
+    let out = common::out_dir();
+    let mut b = Bench::new("fig17_18").with_iters(0, 1);
+    let cfg = common::bench_cfg();
+
+    for (gpu, fig) in [(tesla_v100(), 17), (jetson_nano(), 18)] {
+        b.run(&format!("fig{fig}_{}", gpu.name.to_lowercase().replace(' ', "_")), || {
+            let sweep = sweep_gpu(&gpu, Precision::Fp32, &cfg);
+            let t = figures::figure17_18(&gpu, &sweep);
+            t.write_csv(&out.join(format!("fig{fig}.csv"))).unwrap();
+            // sanity: the non-linear trade-off the paper highlights —
+            // some cell gains >20% efficiency for <10% time cost
+            let good = t.rows.iter().any(|r| {
+                let eff: f64 = r[2].parse().unwrap_or(0.0);
+                let dt: f64 = r[3].parse().unwrap_or(100.0);
+                eff > 20.0 && dt < 10.0
+            });
+            assert!(good, "{}: no cheap-efficiency cell found", gpu.name);
+        });
+    }
+    println!("\n{}", b.summary());
+}

@@ -1,0 +1,37 @@
+//! Shared helpers for the bench binaries (criterion substitute — see
+//! DESIGN.md §1): a standard output directory and the sweep configs the
+//! figure regenerations use.
+
+use std::path::PathBuf;
+
+use fftsweep::harness::sweep::SweepConfig;
+use fftsweep::harness::Protocol;
+
+pub fn out_dir() -> PathBuf {
+    let p = PathBuf::from("results/bench");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Sweep config used by the bench regenerations: the full frequency grid
+/// subsampled 8x, a representative length set, the default protocol.
+pub fn bench_cfg() -> SweepConfig {
+    SweepConfig {
+        lengths: vec![256, 1024, 8192, 16384, 262144, 1 << 21, 19321],
+        freq_stride: 8,
+        protocol: Protocol::default(),
+    }
+}
+
+/// Faster config for per-iteration timing loops.
+pub fn quick_cfg() -> SweepConfig {
+    SweepConfig {
+        lengths: vec![1024, 16384],
+        freq_stride: 24,
+        protocol: Protocol {
+            reps_per_run: 4,
+            runs: 3,
+            seed: 0xbe,
+        },
+    }
+}

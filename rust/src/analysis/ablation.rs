@@ -1,0 +1,184 @@
+//! Ablations over the simulator's design choices (DESIGN.md §Perf calls
+//! these out): what happens to the reproduced results when a model
+//! component is disabled. Each ablation answers "is this mechanism load-
+//! bearing for the paper's phenomenon?".
+
+use crate::cufft::plan::plan;
+use crate::sim::exec_model::time_plan;
+use crate::sim::freq_table::freq_table;
+use crate::sim::power::kernel_power_w;
+use crate::sim::GpuSpec;
+use crate::types::{FftWorkload, Precision};
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+
+/// Which mechanism to knock out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ablation {
+    /// Full model.
+    None,
+    /// Voltage fixed at Vmax (no DVFS voltage scaling — power ∝ f only).
+    NoVoltageScaling,
+    /// No latency-hiding loss (bandwidth independent of clock).
+    NoHidingLoss,
+    /// No shared-memory roofline (case (c) disabled).
+    NoSharedRoofline,
+    /// No P-state cliff.
+    NoPstateCliff,
+}
+
+impl Ablation {
+    pub const ALL: [Ablation; 5] = [
+        Ablation::None,
+        Ablation::NoVoltageScaling,
+        Ablation::NoHidingLoss,
+        Ablation::NoSharedRoofline,
+        Ablation::NoPstateCliff,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Ablation::None => "full model",
+            Ablation::NoVoltageScaling => "no voltage scaling",
+            Ablation::NoHidingLoss => "no latency-hiding loss",
+            Ablation::NoSharedRoofline => "no shared-mem roofline",
+            Ablation::NoPstateCliff => "no P-state cliff",
+        }
+    }
+
+    /// Apply the knockout to a GpuSpec (the model reads everything from
+    /// the spec, so ablations are spec surgery).
+    pub fn apply(self, gpu: &GpuSpec) -> GpuSpec {
+        let mut g = gpu.clone();
+        match self {
+            Ablation::None => {}
+            Ablation::NoVoltageScaling => {
+                g.v_min_frac = 1.0;
+            }
+            Ablation::NoHidingLoss => {
+                g.mem_sat_frac = 1e-9;
+            }
+            Ablation::NoSharedRoofline => {
+                g.shared_bw_gbs = 1e15;
+            }
+            Ablation::NoPstateCliff => {
+                g.pstate_floor_mhz = 0.0;
+                g.pstate_penalty = 1.0;
+            }
+        }
+        g
+    }
+}
+
+/// Ground-truth optimal frequency + saving under an ablation (no sensor
+/// noise — this isolates the model, not the measurement).
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub ablation: Ablation,
+    pub f_opt_mhz: f64,
+    pub energy_saving_vs_boost: f64,
+    pub time_increase: f64,
+}
+
+pub fn run_ablation(gpu: &GpuSpec, n: u64, ablation: Ablation) -> AblationResult {
+    let g = ablation.apply(gpu);
+    let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+    let p = plan(n, Precision::Fp32);
+    let freqs = freq_table(&g).stride(2);
+    let mut energies = Vec::new();
+    let mut times = Vec::new();
+    for &f in &freqs {
+        let t = time_plan(&g, &w, &p, f);
+        let e: f64 = t
+            .per_kernel
+            .iter()
+            .map(|k| kernel_power_w(&g, k, f) * k.t_total)
+            .sum();
+        energies.push(e);
+        times.push(t.total_s);
+    }
+    let imin = stats::argmin(&energies).unwrap();
+    let iboost = freqs
+        .iter()
+        .position(|&f| (f - g.boost_clock_mhz).abs() < 20.0)
+        .unwrap_or(0);
+    AblationResult {
+        ablation,
+        f_opt_mhz: freqs[imin],
+        energy_saving_vs_boost: 1.0 - energies[imin] / energies[iboost],
+        time_increase: times[imin] / times[iboost] - 1.0,
+    }
+}
+
+/// The full ablation table for one GPU.
+pub fn ablation_table(gpu: &GpuSpec, n: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Ablations: {} N={n} FP32 (ground truth, no sensor)", gpu.name),
+        &["ablation", "f_opt_mhz", "energy_saving_pct", "time_increase_pct"],
+    );
+    for a in Ablation::ALL {
+        let r = run_ablation(gpu, n, a);
+        t.push_row(vec![
+            r.ablation.label().to_string(),
+            fnum(r.f_opt_mhz, 0),
+            fnum(r.energy_saving_vs_boost * 100.0, 1),
+            fnum(r.time_increase * 100.0, 2),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+
+    #[test]
+    fn full_model_baseline() {
+        let r = run_ablation(&tesla_v100(), 16384, Ablation::None);
+        assert!(r.energy_saving_vs_boost > 0.2);
+        assert!(r.f_opt_mhz < 1100.0);
+    }
+
+    #[test]
+    fn no_voltage_scaling_kills_most_of_the_saving() {
+        // The headline claim depends on the V(f) curve: without it the
+        // energy saving collapses (power ∝ f cancels against t ∝ 1/f).
+        let full = run_ablation(&tesla_v100(), 16384, Ablation::None);
+        let abl = run_ablation(&tesla_v100(), 16384, Ablation::NoVoltageScaling);
+        assert!(
+            abl.energy_saving_vs_boost < 0.75 * full.energy_saving_vs_boost,
+            "full {} vs ablated {}",
+            full.energy_saving_vs_boost,
+            abl.energy_saving_vs_boost
+        );
+    }
+
+    #[test]
+    fn no_hiding_loss_pushes_optimum_lower() {
+        // Without the latency-hiding penalty, time stays flat to much lower
+        // clocks, so the energy optimum slides down.
+        let full = run_ablation(&tesla_v100(), 16384, Ablation::None);
+        let abl = run_ablation(&tesla_v100(), 16384, Ablation::NoHidingLoss);
+        assert!(
+            abl.f_opt_mhz < full.f_opt_mhz,
+            "full {} vs ablated {}",
+            full.f_opt_mhz,
+            abl.f_opt_mhz
+        );
+    }
+
+    #[test]
+    fn no_pstate_cliff_extends_the_curve() {
+        // Without the cliff, very low clocks stay usable — optimum at or
+        // below the full model's.
+        let full = run_ablation(&tesla_v100(), 16384, Ablation::NoPstateCliff);
+        assert!(full.f_opt_mhz <= 1000.0);
+    }
+
+    #[test]
+    fn table_renders_all_ablations() {
+        let t = ablation_table(&tesla_v100(), 16384);
+        assert_eq!(t.rows.len(), Ablation::ALL.len());
+    }
+}

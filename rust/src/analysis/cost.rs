@@ -1,0 +1,198 @@
+//! Operational cost and emissions model — the paper's closing motivation
+//! ("These savings, when considered over years of operation, can yield
+//! significant financial savings, but can also lead to a significant
+//! reduction of greenhouse gas emissions").
+//!
+//! Converts a measured per-batch energy saving into fleet-level annual
+//! kWh, currency and CO₂e numbers for an SKA-style continuously-running
+//! deployment, including the cooling overhead (PUE) the paper's §6.1
+//! operational-cost discussion mentions.
+
+use crate::sim::{run_batch, GpuSpec};
+use crate::types::FftWorkload;
+use crate::util::table::{fnum, Table};
+
+/// Deployment assumptions.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    /// Number of GPUs running the FFT workload.
+    pub gpus: u64,
+    /// Fraction of wall-clock time the cards spend in the FFT kernels
+    /// (duty cycle; an SKA real-time pipeline is near-continuous).
+    pub duty_cycle: f64,
+    /// Power usage effectiveness of the facility (cooling etc.).
+    pub pue: f64,
+    /// Electricity price, currency per kWh.
+    pub price_per_kwh: f64,
+    /// Grid carbon intensity, kg CO2e per kWh.
+    pub co2_kg_per_kwh: f64,
+}
+
+impl Default for Deployment {
+    fn default() -> Self {
+        // A modest SKA-SDP-like slice: 500 accelerators, 80% duty,
+        // PUE 1.4, 0.15/kWh, ~0.4 kg CO2e/kWh grid mix.
+        Self {
+            gpus: 500,
+            duty_cycle: 0.8,
+            pue: 1.4,
+            price_per_kwh: 0.15,
+            co2_kg_per_kwh: 0.4,
+        }
+    }
+}
+
+/// Annualized consumption of one clock policy.
+#[derive(Debug, Clone)]
+pub struct AnnualCost {
+    pub avg_power_w: f64,
+    pub mwh_per_year: f64,
+    pub cost_per_year: f64,
+    pub co2_tonnes_per_year: f64,
+}
+
+/// Savings from running the fleet's FFTs at `tuned_mhz` instead of boost.
+#[derive(Debug, Clone)]
+pub struct Savings {
+    pub boost: AnnualCost,
+    pub tuned: AnnualCost,
+    pub mwh_saved: f64,
+    pub cost_saved: f64,
+    pub co2_tonnes_saved: f64,
+    /// Throughput cost: extra time per batch at the tuned clock.
+    pub time_increase: f64,
+}
+
+const HOURS_PER_YEAR: f64 = 8766.0;
+
+fn annualize(dep: &Deployment, avg_power_w: f64) -> AnnualCost {
+    let fleet_kw = avg_power_w * dep.gpus as f64 * dep.duty_cycle * dep.pue / 1e3;
+    let kwh = fleet_kw * HOURS_PER_YEAR;
+    AnnualCost {
+        avg_power_w,
+        mwh_per_year: kwh / 1e3,
+        cost_per_year: kwh * dep.price_per_kwh,
+        co2_tonnes_per_year: kwh * dep.co2_kg_per_kwh / 1e3,
+    }
+}
+
+/// Evaluate the deployment on one workload with boost vs tuned clocks.
+/// Energy-per-work at each clock converts to average power at a fixed
+/// real-time work rate (the fleet must process the same data either way,
+/// so the comparison holds work — not wall time — constant).
+pub fn savings(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    tuned_mhz: f64,
+    dep: &Deployment,
+) -> Savings {
+    let boost_run = run_batch(gpu, workload, gpu.boost_clock_mhz);
+    let tuned_run = run_batch(gpu, workload, tuned_mhz);
+    // Work rate is set by real time at boost: batches/s = duty / t_boost.
+    // Average power of a policy = energy_per_batch * batch_rate.
+    let batch_rate = 1.0 / boost_run.timing.total_s;
+    let boost = annualize(dep, boost_run.energy_j * batch_rate);
+    let tuned = annualize(dep, tuned_run.energy_j * batch_rate);
+    Savings {
+        mwh_saved: boost.mwh_per_year - tuned.mwh_per_year,
+        cost_saved: boost.cost_per_year - tuned.cost_per_year,
+        co2_tonnes_saved: boost.co2_tonnes_per_year - tuned.co2_tonnes_per_year,
+        time_increase: tuned_run.timing.total_s / boost_run.timing.total_s - 1.0,
+        boost,
+        tuned,
+    }
+}
+
+/// Render the deployment comparison as a table.
+pub fn cost_table(gpu: &GpuSpec, workload: &FftWorkload, tuned_mhz: f64, dep: &Deployment) -> Table {
+    let s = savings(gpu, workload, tuned_mhz, dep);
+    let mut t = Table::new(
+        &format!(
+            "Annual fleet cost: {} × {}, N={}, FFT duty {:.0}%, PUE {}",
+            dep.gpus, gpu.name, workload.n, dep.duty_cycle * 100.0, dep.pue
+        ),
+        &["policy", "avg W/gpu", "MWh/yr", "cost/yr", "tCO2e/yr"],
+    );
+    for (name, c) in [("boost", &s.boost), (&format!("{} MHz", fnum(tuned_mhz, 0)), &s.tuned)] {
+        t.push_row(vec![
+            name.to_string(),
+            fnum(c.avg_power_w, 1),
+            fnum(c.mwh_per_year, 1),
+            fnum(c.cost_per_year, 0),
+            fnum(c.co2_tonnes_per_year, 1),
+        ]);
+    }
+    t.push_row(vec![
+        "SAVED".into(),
+        fnum(s.boost.avg_power_w - s.tuned.avg_power_w, 1),
+        fnum(s.mwh_saved, 1),
+        fnum(s.cost_saved, 0),
+        fnum(s.co2_tonnes_saved, 1),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    fn setup() -> (GpuSpec, FftWorkload) {
+        let g = tesla_v100();
+        let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+        (g, w)
+    }
+
+    #[test]
+    fn tuned_policy_saves_money_and_carbon() {
+        let (g, w) = setup();
+        let s = savings(&g, &w, 945.0, &Deployment::default());
+        assert!(s.mwh_saved > 0.0);
+        assert!(s.cost_saved > 0.0);
+        assert!(s.co2_tonnes_saved > 0.0);
+        // the saving fraction matches the per-batch energy saving
+        let frac = 1.0 - s.tuned.mwh_per_year / s.boost.mwh_per_year;
+        assert!((0.2..0.5).contains(&frac), "saving frac {frac}");
+    }
+
+    #[test]
+    fn fleet_scale_magnitude_is_significant() {
+        // The paper's "significant financial savings" claim: a 500-GPU
+        // fleet at V100-like power should save O(100k)/yr at 0.15/kWh.
+        let (g, w) = setup();
+        let s = savings(&g, &w, 945.0, &Deployment::default());
+        assert!(
+            s.cost_saved > 50_000.0,
+            "annual saving {} too small to be 'significant'",
+            s.cost_saved
+        );
+        assert!(s.co2_tonnes_saved > 100.0, "tCO2e {}", s.co2_tonnes_saved);
+    }
+
+    #[test]
+    fn linear_in_fleet_size_and_price() {
+        let (g, w) = setup();
+        let base = savings(&g, &w, 945.0, &Deployment::default());
+        let mut big = Deployment::default();
+        big.gpus *= 2;
+        let doubled = savings(&g, &w, 945.0, &big);
+        assert!((doubled.cost_saved / base.cost_saved - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boost_policy_is_identity() {
+        let (g, w) = setup();
+        let s = savings(&g, &w, g.boost_clock_mhz, &Deployment::default());
+        assert!(s.mwh_saved.abs() < 1e-9);
+        assert_eq!(s.time_increase, 0.0);
+    }
+
+    #[test]
+    fn table_renders_three_rows() {
+        let (g, w) = setup();
+        let t = cost_table(&g, &w, 945.0, &Deployment::default());
+        assert_eq!(t.rows.len(), 3);
+        assert!(t.to_ascii().contains("SAVED"));
+    }
+}

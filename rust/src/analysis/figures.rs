@@ -1,0 +1,361 @@
+//! Regeneration of the paper's figures (F2-F20) as CSV series + ASCII
+//! summaries. Each function returns one or more [`Table`]s whose rows are
+//! the plotted series; the CLI and benches write them under `results/`.
+
+use crate::analysis::optimal::{at_fixed_clock, mean_optimal_mhz, optima};
+use crate::cufft::plan::plan;
+use crate::cufft::profile::{fig20_lengths, profile_plan};
+use crate::harness::logs::{merge, render_smi_log, KernelEvent};
+use crate::harness::sweep::{sweep_gpu, GpuSweep, SweepConfig};
+use crate::sim::sensor::{sample_timeline, SensorConfig};
+use crate::sim::{batch_timeline, GpuSpec};
+use crate::types::{FftWorkload, Precision};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+/// Fig 2: a log excerpt with the FFT kernels localized between the two
+/// non-computing (copy) phases.
+pub fn figure2(gpu: &GpuSpec, n: u64, f_mhz: f64, seed: u64) -> (Table, String) {
+    let w = FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes);
+    let (tl, _) = batch_timeline(gpu, &w, f_mhz, 10);
+    let mut rng = Rng::new(seed);
+    let samples = sample_timeline(
+        &tl,
+        &SensorConfig::for_gpu(gpu),
+        gpu.effective_clock(f_mhz),
+        gpu.mem_clock_mhz,
+        &mut rng,
+    );
+    // kernel events for the merge
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    for &(d, _, c) in &tl.segments {
+        if c {
+            events.push(KernelEvent { name: "fft".into(), begin_s: t, end_s: t + d });
+        }
+        t += d;
+    }
+    let merged = merge(&samples, &events, f_mhz);
+    let mut table = Table::new(
+        &format!("Fig 2: power log, {} N={} @ {} MHz", gpu.name, n, f_mhz),
+        &["timestamp_ms", "power_w", "core_clock_mhz", "is_compute"],
+    );
+    for s in &samples {
+        let is_compute = merged
+            .compute
+            .iter()
+            .any(|c| (c.timestamp_s - s.timestamp_s).abs() < 1e-12);
+        table.push_row(vec![
+            fnum(s.timestamp_s * 1e3, 1),
+            fnum(s.power_w, 2),
+            fnum(s.core_clock_mhz, 0),
+            (is_compute as u8).to_string(),
+        ]);
+    }
+    (table, render_smi_log(&samples))
+}
+
+/// Fig 3: measurement error (relative std) per length × clock.
+pub fn figure3(gpu: &GpuSpec, sweep: &GpuSweep) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 3: measurement error, {} {}", gpu.name, sweep.precision),
+        &["n", "f_mhz", "rel_err_pct"],
+    );
+    for l in &sweep.lengths {
+        for p in &l.points {
+            t.push_row(vec![
+                l.n.to_string(),
+                fnum(p.f_mhz, 1),
+                fnum(p.energy_rel_err * 100.0, 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figs 4/5: execution time t_fix for a fixed amount of data vs N.
+pub fn figure4_5(gpus: &[GpuSpec], precision: Precision, lengths: &[u64]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 4/5: t_fix vs FFT length ({precision})"),
+        &["gpu", "n", "t_fix_ms", "kernels"],
+    );
+    for g in gpus {
+        if !g.supports(precision) {
+            continue;
+        }
+        for &n in lengths {
+            if precision == Precision::Fp16 && n & (n - 1) != 0 {
+                continue;
+            }
+            let w = FftWorkload::new(n, precision, g.working_set_bytes);
+            let p = plan(n, precision);
+            let run = crate::sim::run_batch_with_plan(g, &w, &p, g.boost_clock_mhz);
+            t.push_row(vec![
+                g.name.to_string(),
+                n.to_string(),
+                fnum(run.timing.total_s * 1e3, 3),
+                p.kernel_count().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 6: t_f / t_d ratio per clock, one series per length.
+pub fn figure6(gpu: &GpuSpec, sweep: &GpuSweep) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 6: t_f/t_d vs clock, {}", gpu.name),
+        &["n", "f_mhz", "t_ratio"],
+    );
+    for l in &sweep.lengths {
+        let td = l.at(gpu.boost_clock_mhz).time_s;
+        for p in &l.points {
+            t.push_row(vec![
+                l.n.to_string(),
+                fnum(p.f_mhz, 1),
+                fnum(p.time_s / td, 4),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 7: energy per batch vs clock for N=16384 on every GPU.
+pub fn figure7(gpus: &[GpuSpec], cfg: &SweepConfig) -> Table {
+    let mut t = Table::new(
+        "Fig 7: energy per FFT batch (N=16384, FP32) vs clock",
+        &["gpu", "f_mhz", "energy_j", "is_optimal"],
+    );
+    for g in gpus {
+        let mut c = cfg.clone();
+        c.lengths = vec![16384];
+        let sweep = sweep_gpu(g, Precision::Fp32, &c);
+        let l = &sweep.lengths[0];
+        let energies: Vec<f64> = l.points.iter().map(|p| p.energy_j).collect();
+        let imin = crate::util::stats::argmin(&energies).unwrap();
+        for (i, p) in l.points.iter().enumerate() {
+            t.push_row(vec![
+                g.name.to_string(),
+                fnum(p.f_mhz, 1),
+                fnum(p.energy_j, 3),
+                ((i == imin) as u8).to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 8: averaged power vs clock across lengths.
+pub fn figure8(gpu: &GpuSpec, sweep: &GpuSweep) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 8: averaged power vs clock, {}", gpu.name),
+        &["n", "f_mhz", "avg_power_w"],
+    );
+    for l in &sweep.lengths {
+        for p in &l.points {
+            t.push_row(vec![
+                l.n.to_string(),
+                fnum(p.f_mhz, 1),
+                fnum(p.avg_power_w, 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figs 9-14: per-length optimal clock and the derived series.
+pub fn figure9_to_14(gpu: &GpuSpec, sweep: &GpuSweep) -> Table {
+    let pts = optima(gpu, sweep);
+    let mut t = Table::new(
+        &format!(
+            "Figs 9-14: optimal clock metrics, {} {}",
+            gpu.name, sweep.precision
+        ),
+        &[
+            "n",
+            "f_opt_mhz",
+            "pct_of_boost",      // Fig 9
+            "gflops_per_w",      // Fig 10
+            "time_increase_pct", // Fig 11
+            "gflops",            // Fig 12
+            "eff_inc_vs_boost",  // Fig 13
+            "eff_inc_vs_base",   // Fig 14
+            "bluestein",
+        ],
+    );
+    for (p, l) in pts.iter().zip(&sweep.lengths) {
+        let at_opt = l.at(p.f_opt_mhz);
+        t.push_row(vec![
+            p.n.to_string(),
+            fnum(p.f_opt_mhz, 1),
+            fnum(p.frac_of_boost * 100.0, 1),
+            fnum(at_opt.efficiency / 1e9, 2),
+            fnum(p.time_increase * 100.0, 2),
+            fnum(at_opt.perf_flops / 1e9, 1),
+            fnum(p.eff_increase_vs_boost, 3),
+            fnum(p.eff_increase_vs_base, 3),
+            (p.bluestein as u8).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Figs 15/16: efficiency increase at the mean optimal clock.
+pub fn figure15_16(gpu: &GpuSpec, sweep: &GpuSweep) -> (f64, Table) {
+    let pts = optima(gpu, sweep);
+    let mean_opt = mean_optimal_mhz(gpu, &pts);
+    let fixed = at_fixed_clock(gpu, sweep, mean_opt);
+    let mut t = Table::new(
+        &format!(
+            "Figs 15/16: efficiency increase at mean optimal ({} MHz), {} {}",
+            fnum(mean_opt, 0),
+            gpu.name,
+            sweep.precision
+        ),
+        &["n", "eff_inc_vs_boost", "eff_inc_vs_base", "time_increase_pct"],
+    );
+    for f in &fixed {
+        t.push_row(vec![
+            f.n.to_string(),
+            fnum(f.eff_increase_vs_boost, 3),
+            fnum(f.eff_increase_vs_base, 3),
+            fnum(f.time_increase * 100.0, 2),
+        ]);
+    }
+    (mean_opt, t)
+}
+
+/// Figs 17/18: efficiency-increase vs time-increase trade-off heatmap —
+/// every (length, clock) cell.
+pub fn figure17_18(gpu: &GpuSpec, sweep: &GpuSweep) -> Table {
+    let mut t = Table::new(
+        &format!("Figs 17/18: trade-off heatmap, {}", gpu.name),
+        &["n", "f_mhz", "eff_increase_pct", "time_increase_pct"],
+    );
+    for l in &sweep.lengths {
+        let boost = l.at(gpu.boost_clock_mhz);
+        for p in &l.points {
+            t.push_row(vec![
+                l.n.to_string(),
+                fnum(p.f_mhz, 1),
+                fnum((p.efficiency / boost.efficiency - 1.0) * 100.0, 1),
+                fnum((p.time_s / boost.time_s - 1.0) * 100.0, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 20: NVVP profiling bars for representative lengths.
+pub fn figure20(gpu: &GpuSpec, f_mhz: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 20: kernel profiles, {} @ {} MHz", gpu.name, fnum(f_mhz, 0)),
+        &[
+            "n",
+            "kernel",
+            "compute_util_pct",
+            "issue_slot_util_pct",
+            "device_mbu_pct",
+            "norm_time",
+        ],
+    );
+    for n in fig20_lengths() {
+        let w = FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes);
+        let p = plan(n, Precision::Fp32);
+        let prof = profile_plan(gpu, &w, &p, f_mhz);
+        for k in &prof.kernels {
+            t.push_row(vec![
+                n.to_string(),
+                format!("{}:{:?}", k.kernel_index, k.kind),
+                fnum(k.compute_util * 100.0, 1),
+                fnum(k.issue_slot_util * 100.0, 1),
+                fnum(k.device_mbu * 100.0, 1),
+                fnum(k.norm_time, 3),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Protocol;
+    use crate::sim::gpu::{jetson_nano, tesla_v100};
+
+    fn tiny_sweep(g: &GpuSpec) -> GpuSweep {
+        let cfg = SweepConfig {
+            lengths: vec![1024, 16384],
+            freq_stride: 24,
+            protocol: Protocol { reps_per_run: 3, runs: 3, seed: 2 },
+        };
+        sweep_gpu(g, Precision::Fp32, &cfg)
+    }
+
+    #[test]
+    fn figure2_localizes_kernels() {
+        let g = tesla_v100();
+        let (t, log) = figure2(&g, 16384, 1020.0, 9);
+        assert!(t.rows.len() > 10);
+        assert!(t.rows.iter().any(|r| r[3] == "1"));
+        assert!(t.rows.iter().any(|r| r[3] == "0"));
+        assert!(log.starts_with("timestamp_ms"));
+    }
+
+    #[test]
+    fn figure6_boost_row_is_unity() {
+        let g = tesla_v100();
+        let s = tiny_sweep(&g);
+        let t = figure6(&g, &s);
+        // the highest-clock row of each series must be ~1.0
+        let first: f64 = t.rows[0][2].parse().unwrap();
+        assert!((first - 1.0).abs() < 0.05, "{first}");
+    }
+
+    #[test]
+    fn figure7_marks_one_optimum_per_gpu() {
+        let g = [tesla_v100(), jetson_nano()];
+        let cfg = SweepConfig {
+            lengths: vec![16384],
+            freq_stride: 24,
+            protocol: Protocol { reps_per_run: 3, runs: 3, seed: 2 },
+        };
+        let t = figure7(&g, &cfg);
+        let v100_opts = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "Tesla V100" && r[3] == "1")
+            .count();
+        assert_eq!(v100_opts, 1);
+    }
+
+    #[test]
+    fn figures9_to_18_have_rows() {
+        let g = tesla_v100();
+        let s = tiny_sweep(&g);
+        assert_eq!(figure9_to_14(&g, &s).rows.len(), 2);
+        let (mean_opt, t) = figure15_16(&g, &s);
+        assert!(mean_opt > 500.0 && mean_opt < 1400.0);
+        assert_eq!(t.rows.len(), 2);
+        assert!(figure17_18(&g, &s).rows.len() > 4);
+        assert!(figure3(&g, &s).rows.len() > 4);
+        assert!(figure8(&g, &s).rows.len() > 4);
+    }
+
+    #[test]
+    fn figure20_rows_match_kernel_counts() {
+        let g = tesla_v100();
+        let t = figure20(&g, g.boost_clock_mhz);
+        // 8192→1, 16384→2, 2M→3 kernels = 6 rows
+        assert_eq!(t.rows.len(), 6);
+    }
+
+    #[test]
+    fn figure4_5_shows_staircase() {
+        let g = [tesla_v100()];
+        let t = figure4_5(&g, Precision::Fp32, &[32, 8192, 16384]);
+        let times: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!((times[1] / times[0] - 1.0).abs() < 0.3, "plateau {times:?}");
+        assert!(times[2] > 1.5 * times[1], "jump {times:?}");
+    }
+}

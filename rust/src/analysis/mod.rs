@@ -1,0 +1,13 @@
+//! Analysis layer: the "R script" of the paper — optimal/mean-optimal
+//! frequency extraction, efficiency metrics and the regeneration of every
+//! table (tables.rs) and figure (figures.rs).
+
+pub mod ablation;
+pub mod cost;
+pub mod figures;
+pub mod optimal;
+pub mod roofline;
+pub mod report;
+pub mod tables;
+
+pub use optimal::{at_fixed_clock, mean_optimal_mhz, optima, OptimalPoint};

@@ -1,0 +1,186 @@
+//! Optimal and mean-optimal core-clock frequency extraction (paper
+//! section 5.1/5.2, Fig 9, Table 3).
+
+use crate::cufft::plan::{plan, Algorithm};
+use crate::harness::sweep::{GpuSweep, LengthSweep};
+use crate::sim::GpuSpec;
+use crate::util::stats;
+
+/// The per-length optimum: the clock minimizing measured energy per batch.
+#[derive(Debug, Clone)]
+pub struct OptimalPoint {
+    pub n: u64,
+    pub f_opt_mhz: f64,
+    /// f_opt as a fraction of the boost clock (Fig 9's y-axis).
+    pub frac_of_boost: f64,
+    pub energy_j: f64,
+    /// Execution-time increase vs the boost clock (Fig 11).
+    pub time_increase: f64,
+    /// Efficiency increase vs boost (eq. 7, Fig 13).
+    pub eff_increase_vs_boost: f64,
+    /// Efficiency increase vs base clock (Fig 14).
+    pub eff_increase_vs_base: f64,
+    /// Uses the Bluestein algorithm (excluded from the Nano's mean; the
+    /// Fig 13/15 peaks).
+    pub bluestein: bool,
+}
+
+/// Moving-average smoothing (window 3) applied before the argmin, so the
+/// sensor's run-to-run drift does not pick a random point on the flat
+/// part of the energy curve (the paper's curves are visually smooth at
+/// the same measurement error).
+fn smooth3(xs: &[f64]) -> Vec<f64> {
+    (0..xs.len())
+        .map(|i| {
+            let lo = i.saturating_sub(1);
+            let hi = (i + 2).min(xs.len());
+            xs[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+/// Find the energy-optimal clock for one length sweep.
+pub fn optimal_for_length(gpu: &GpuSpec, sweep: &LengthSweep) -> OptimalPoint {
+    let energies: Vec<f64> = smooth3(&sweep.points.iter().map(|p| p.energy_j).collect::<Vec<_>>());
+    let imin = stats::argmin(&energies).expect("empty sweep");
+    let opt = &sweep.points[imin];
+    let boost = sweep.at(gpu.boost_clock_mhz);
+    let base = sweep.at(gpu.base_clock_mhz);
+    let algorithm = plan(sweep.n, sweep.precision).algorithm;
+    OptimalPoint {
+        n: sweep.n,
+        f_opt_mhz: opt.f_mhz,
+        frac_of_boost: opt.f_mhz / gpu.boost_clock_mhz,
+        energy_j: opt.energy_j,
+        time_increase: opt.time_s / boost.time_s - 1.0,
+        eff_increase_vs_boost: opt.efficiency / boost.efficiency,
+        eff_increase_vs_base: opt.efficiency / base.efficiency,
+        bluestein: algorithm == Algorithm::Bluestein,
+    }
+}
+
+/// Per-length optima for a whole gpu sweep.
+pub fn optima(gpu: &GpuSpec, sweep: &GpuSweep) -> Vec<OptimalPoint> {
+    sweep
+        .lengths
+        .iter()
+        .map(|l| optimal_for_length(gpu, l))
+        .collect()
+}
+
+/// Mean optimal frequency (Table 3): average of per-length optima.
+/// Bluestein lengths are excluded on the Jetson Nano (paper section 4:
+/// their measurement error is too large there).
+pub fn mean_optimal_mhz(gpu: &GpuSpec, points: &[OptimalPoint]) -> f64 {
+    let exclude_bluestein = gpu.name == "Jetson Nano";
+    let freqs: Vec<f64> = points
+        .iter()
+        .filter(|p| !(exclude_bluestein && p.bluestein))
+        .map(|p| p.f_opt_mhz)
+        .collect();
+    stats::mean(&freqs)
+}
+
+/// Efficiency increases when running every length at ONE clock
+/// (the mean-optimal policy of Figs 15/16).
+#[derive(Debug, Clone)]
+pub struct FixedClockPoint {
+    pub n: u64,
+    pub eff_increase_vs_boost: f64,
+    pub eff_increase_vs_base: f64,
+    pub time_increase: f64,
+}
+
+pub fn at_fixed_clock(gpu: &GpuSpec, sweep: &GpuSweep, f_mhz: f64) -> Vec<FixedClockPoint> {
+    sweep
+        .lengths
+        .iter()
+        .map(|l| {
+            let at = l.at(f_mhz);
+            let boost = l.at(gpu.boost_clock_mhz);
+            let base = l.at(gpu.base_clock_mhz);
+            FixedClockPoint {
+                n: l.n,
+                eff_increase_vs_boost: at.efficiency / boost.efficiency,
+                eff_increase_vs_base: at.efficiency / base.efficiency,
+                time_increase: at.time_s / boost.time_s - 1.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::sweep::{sweep_gpu, SweepConfig};
+    use crate::harness::Protocol;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    fn v100_sweep() -> (GpuSpec, GpuSweep) {
+        let g = tesla_v100();
+        let cfg = SweepConfig {
+            lengths: vec![1024, 16384, 19321],
+            freq_stride: 8,
+            protocol: Protocol { reps_per_run: 4, runs: 3, seed: 7 },
+        };
+        let s = sweep_gpu(&g, Precision::Fp32, &cfg);
+        (g, s)
+    }
+
+    #[test]
+    fn optimum_is_below_boost_and_saves_energy() {
+        let (g, s) = v100_sweep();
+        for p in optima(&g, &s) {
+            assert!(p.frac_of_boost < 0.85, "N={}: frac {}", p.n, p.frac_of_boost);
+            assert!(p.eff_increase_vs_boost > 1.1, "N={}: {}", p.n, p.eff_increase_vs_boost);
+        }
+    }
+
+    #[test]
+    fn v100_time_cost_is_small() {
+        let (g, s) = v100_sweep();
+        for p in optima(&g, &s) {
+            if !p.bluestein {
+                assert!(p.time_increase < 0.15, "N={}: +{:.1}%", p.n, p.time_increase * 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bluestein_flagged() {
+        let (g, s) = v100_sweep();
+        let pts = optima(&g, &s);
+        assert!(pts.iter().any(|p| p.bluestein && p.n == 19321));
+        assert!(pts.iter().any(|p| !p.bluestein && p.n == 1024));
+    }
+
+    #[test]
+    fn mean_optimal_near_table3_v100() {
+        let (g, s) = v100_sweep();
+        let pts = optima(&g, &s);
+        let mean = mean_optimal_mhz(&g, &pts);
+        assert!(
+            (mean - 945.0).abs() < 120.0,
+            "V100 FP32 mean optimal {mean} MHz vs paper 945"
+        );
+    }
+
+    #[test]
+    fn fixed_clock_close_to_per_length_optimum() {
+        // Paper: using the mean optimal loses ~5-10 pp vs per-length tuning.
+        let (g, s) = v100_sweep();
+        let pts = optima(&g, &s);
+        let mean = mean_optimal_mhz(&g, &pts);
+        let fixed = at_fixed_clock(&g, &s, mean);
+        for (f, o) in fixed.iter().zip(&pts) {
+            assert!(
+                o.eff_increase_vs_boost - f.eff_increase_vs_boost < 0.25,
+                "N={}: optimal {} vs fixed {}",
+                f.n,
+                o.eff_increase_vs_boost,
+                f.eff_increase_vs_boost
+            );
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Full-report generation: runs the sweep grid and writes every table and
+//! figure CSV under an output directory, plus a summary of paper-vs-measured
+//! headline numbers (used by `fftsweep report` and EXPERIMENTS.md).
+
+use std::path::Path;
+
+use crate::analysis::optimal::{at_fixed_clock, mean_optimal_mhz, optima};
+use crate::analysis::{figures, tables};
+use crate::harness::campaign::sweep_gpu_parallel;
+use crate::harness::sweep::SweepConfig;
+use crate::sim::gpu::{all_gpus, GpuSpec};
+use crate::types::Precision;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+
+/// Headline numbers for one (gpu, precision): what the paper's abstract
+/// and conclusions quote.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub gpu: String,
+    pub precision: Precision,
+    pub mean_optimal_mhz: f64,
+    pub paper_mean_optimal_mhz: Option<f64>,
+    /// Mean eq.7 increase at the per-length optimal clock, vs boost.
+    pub mean_eff_increase_boost: f64,
+    /// Mean eq.7 increase at the per-length optimal clock, vs base.
+    pub mean_eff_increase_base: f64,
+    /// Mean eq.7 increase at the mean-optimal (single) clock, vs boost.
+    pub mean_eff_increase_fixed_boost: f64,
+    /// Mean execution-time increase at the optimal clock.
+    pub mean_time_increase: f64,
+}
+
+/// Worker threads for report sweeps (the grid is embarrassingly parallel
+/// and deterministic per point — see `harness::campaign`).
+fn report_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Compute headlines for one gpu/precision.
+pub fn headline(gpu: &GpuSpec, precision: Precision, cfg: &SweepConfig) -> Headline {
+    let sweep = sweep_gpu_parallel(gpu, precision, cfg, report_threads());
+    let pts = optima(gpu, &sweep);
+    let mean_opt = mean_optimal_mhz(gpu, &pts);
+    let non_bluestein: Vec<_> = pts.iter().filter(|p| !p.bluestein).collect();
+    let fixed = at_fixed_clock(gpu, &sweep, mean_opt);
+    Headline {
+        gpu: gpu.name.to_string(),
+        precision,
+        mean_optimal_mhz: mean_opt,
+        paper_mean_optimal_mhz: tables::table3_paper_mhz(gpu.name, precision),
+        mean_eff_increase_boost: stats::mean(
+            &non_bluestein
+                .iter()
+                .map(|p| p.eff_increase_vs_boost)
+                .collect::<Vec<_>>(),
+        ),
+        mean_eff_increase_base: stats::mean(
+            &non_bluestein
+                .iter()
+                .map(|p| p.eff_increase_vs_base)
+                .collect::<Vec<_>>(),
+        ),
+        mean_eff_increase_fixed_boost: stats::mean(
+            &fixed
+                .iter()
+                .map(|f| f.eff_increase_vs_boost)
+                .collect::<Vec<_>>(),
+        ),
+        mean_time_increase: stats::mean(
+            &non_bluestein
+                .iter()
+                .map(|p| p.time_increase)
+                .collect::<Vec<_>>(),
+        ),
+    }
+}
+
+/// Render all headlines as the paper-vs-measured comparison table.
+pub fn headline_table(headlines: &[Headline]) -> Table {
+    let mut t = Table::new(
+        "Paper vs measured: mean optimal clock and efficiency increases",
+        &[
+            "gpu",
+            "precision",
+            "mean_opt_mhz",
+            "paper_mhz",
+            "eff_inc@opt(boost)",
+            "eff_inc@opt(base)",
+            "eff_inc@mean_opt(boost)",
+            "time_inc_pct",
+        ],
+    );
+    for h in headlines {
+        t.push_row(vec![
+            h.gpu.clone(),
+            h.precision.to_string(),
+            fnum(h.mean_optimal_mhz, 0),
+            h.paper_mean_optimal_mhz
+                .map(|x| fnum(x, 0))
+                .unwrap_or_else(|| "-".into()),
+            fnum(h.mean_eff_increase_boost, 3),
+            fnum(h.mean_eff_increase_base, 3),
+            fnum(h.mean_eff_increase_fixed_boost, 3),
+            fnum(h.mean_time_increase * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+/// Generate the complete report tree under `out_dir`.
+pub fn full_report(out_dir: &Path, cfg: &SweepConfig) -> anyhow::Result<Vec<Headline>> {
+    std::fs::create_dir_all(out_dir)?;
+    let gpus = all_gpus();
+
+    // Tables 1 & 2 are pure spec transcriptions.
+    tables::table1().write_csv(&out_dir.join("table1.csv"))?;
+    tables::table2().write_csv(&out_dir.join("table2.csv"))?;
+
+    // Fig 4/5 exec-time staircases.
+    figures::figure4_5(&gpus, Precision::Fp32, &cfg.lengths)
+        .write_csv(&out_dir.join("fig4_tfix_fp32.csv"))?;
+    figures::figure4_5(&gpus, Precision::Fp64, &cfg.lengths)
+        .write_csv(&out_dir.join("fig5_tfix_fp64.csv"))?;
+    figures::figure4_5(&gpus, Precision::Fp16, &cfg.lengths)
+        .write_csv(&out_dir.join("fig5_tfix_fp16.csv"))?;
+
+    // Fig 7 energy curves (all GPUs).
+    figures::figure7(&gpus, cfg).write_csv(&out_dir.join("fig7_energy_n16384.csv"))?;
+
+    // Fig 2 log excerpts (V100 + Titan V as in the paper).
+    let v100 = crate::sim::gpu::tesla_v100();
+    let titanv = crate::sim::gpu::titan_v();
+    figures::figure2(&v100, 16384, 1020.0, 0xF16)
+        .0
+        .write_csv(&out_dir.join("fig2_v100_log.csv"))?;
+    figures::figure2(&titanv, 16384, 1912.0, 0xF16)
+        .0
+        .write_csv(&out_dir.join("fig2_titanv_log.csv"))?;
+
+    // Fig 20 kernel profiles.
+    figures::figure20(&v100, v100.boost_clock_mhz)
+        .write_csv(&out_dir.join("fig20_profiles.csv"))?;
+
+    let mut headlines = Vec::new();
+    for gpu in &gpus {
+        for p in Precision::ALL {
+            if !gpu.supports(p) {
+                continue;
+            }
+            let sweep = sweep_gpu_parallel(gpu, p, cfg, report_threads());
+            let tag = format!(
+                "{}_{}",
+                gpu.name.to_lowercase().replace(' ', "_"),
+                p.label().to_lowercase()
+            );
+            figures::figure3(gpu, &sweep).write_csv(&out_dir.join(format!("fig3_{tag}.csv")))?;
+            figures::figure6(gpu, &sweep).write_csv(&out_dir.join(format!("fig6_{tag}.csv")))?;
+            figures::figure8(gpu, &sweep).write_csv(&out_dir.join(format!("fig8_{tag}.csv")))?;
+            figures::figure9_to_14(gpu, &sweep)
+                .write_csv(&out_dir.join(format!("fig9_14_{tag}.csv")))?;
+            let (_, f15) = figures::figure15_16(gpu, &sweep);
+            f15.write_csv(&out_dir.join(format!("fig15_16_{tag}.csv")))?;
+            figures::figure17_18(gpu, &sweep)
+                .write_csv(&out_dir.join(format!("fig17_18_{tag}.csv")))?;
+            headlines.push(headline(gpu, p, cfg));
+        }
+    }
+
+    // Table 3 from the headlines (already computed sweeps feed the figure
+    // files; re-deriving keeps the CSV self-contained).
+    let mut t3 = Table::new(
+        "Table 3: mean optimal core clock frequencies [MHz]",
+        &["Card name", "FP32", "FP64", "FP16"],
+    );
+    for gpu in &gpus {
+        let mut row = vec![gpu.name.to_string()];
+        for p in [Precision::Fp32, Precision::Fp64, Precision::Fp16] {
+            let cell = headlines
+                .iter()
+                .find(|h| h.gpu == gpu.name && h.precision == p)
+                .map(|h| fnum(h.mean_optimal_mhz, 0))
+                .unwrap_or_else(|| "NA".into());
+            row.push(cell);
+        }
+        t3.push_row(row);
+    }
+    t3.write_csv(&out_dir.join("table3.csv"))?;
+
+    headline_table(&headlines).write_csv(&out_dir.join("headlines.csv"))?;
+
+    // Machine-readable summary for downstream tooling.
+    let mut root = crate::util::json::Json::obj();
+    root.set("paper_doi", "10.1109/ACCESS.2021.3053409".into());
+    let mut arr = crate::util::json::Json::Arr(vec![]);
+    for h in &headlines {
+        let mut o = crate::util::json::Json::obj();
+        o.set("gpu", h.gpu.as_str().into());
+        o.set("precision", h.precision.label().into());
+        o.set("mean_optimal_mhz", h.mean_optimal_mhz.into());
+        o.set(
+            "paper_mean_optimal_mhz",
+            h.paper_mean_optimal_mhz
+                .map(crate::util::json::Json::Num)
+                .unwrap_or(crate::util::json::Json::Null),
+        );
+        o.set("eff_increase_vs_boost", h.mean_eff_increase_boost.into());
+        o.set("eff_increase_vs_base", h.mean_eff_increase_base.into());
+        o.set("eff_increase_mean_opt", h.mean_eff_increase_fixed_boost.into());
+        o.set("time_increase", h.mean_time_increase.into());
+        arr.push(o);
+    }
+    root.set("headlines", arr);
+    std::fs::write(out_dir.join("report.json"), root.render())?;
+    Ok(headlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Protocol;
+    use crate::sim::gpu::tesla_v100;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            lengths: vec![1024, 16384],
+            freq_stride: 24,
+            protocol: Protocol { reps_per_run: 3, runs: 3, seed: 21 },
+        }
+    }
+
+    #[test]
+    fn headline_v100_fp32_reproduces_paper_shape() {
+        let h = headline(&tesla_v100(), Precision::Fp32, &tiny_cfg());
+        // paper: ~60% efficiency increase vs boost, <10% time increase
+        assert!(
+            h.mean_eff_increase_boost > 1.25,
+            "eff increase {}",
+            h.mean_eff_increase_boost
+        );
+        assert!(h.mean_time_increase < 0.10, "time inc {}", h.mean_time_increase);
+        // mean optimal in the paper's neighbourhood
+        assert!(
+            (h.mean_optimal_mhz - 945.0).abs() < 150.0,
+            "mean opt {}",
+            h.mean_optimal_mhz
+        );
+    }
+
+    #[test]
+    fn headline_table_renders() {
+        let h = headline(&tesla_v100(), Precision::Fp32, &tiny_cfg());
+        let t = headline_table(&[h]);
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.to_ascii().contains("Tesla V100"));
+    }
+}

@@ -1,0 +1,144 @@
+//! L1 hardware-adaptation accounting (DESIGN.md §2): VMEM footprint and
+//! MXU/VPU utilization estimates for the Pallas Stockham kernel's
+//! BlockSpec, per TPU generation. `interpret=True` CPU timings say nothing
+//! about TPU performance; this is the structural analysis EXPERIMENTS.md
+//! §Perf records instead.
+
+use crate::types::Precision;
+
+/// A TPU-like target for the estimate.
+#[derive(Debug, Clone)]
+pub struct TpuTarget {
+    pub name: &'static str,
+    /// VMEM per core, bytes.
+    pub vmem_bytes: u64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbs: f64,
+    /// VPU throughput, G-lane-ops/s (8x128 lanes × clock).
+    pub vpu_glanes: f64,
+}
+
+pub fn tpu_v4() -> TpuTarget {
+    TpuTarget {
+        name: "TPUv4-core",
+        vmem_bytes: 128 << 20,
+        hbm_gbs: 1200.0,
+        vpu_glanes: 4000.0, // 8*128 lanes x 2 ALUs x ~2 ops @ ~1 GHz
+    }
+}
+
+/// Static analysis of one `fft_c2c` pallas_call.
+#[derive(Debug, Clone)]
+pub struct KernelEstimate {
+    pub tile_b: u64,
+    pub n: u64,
+    /// Bytes resident in VMEM for one grid step (in + out + ping-pong).
+    pub vmem_bytes: u64,
+    /// Fraction of VMEM used.
+    pub vmem_frac: f64,
+    /// HBM bytes moved per grid step (one read + one write of the tile).
+    pub hbm_bytes: u64,
+    /// VPU lane-operations per grid step (butterflies are elementwise
+    /// mul/add over re/im planes — VPU work, not MXU matmuls).
+    pub vpu_ops: u64,
+    /// Arithmetic intensity, ops/byte.
+    pub intensity: f64,
+    /// Roofline-predicted time per grid step on the target, seconds.
+    pub t_roofline_s: f64,
+    /// true → HBM-bound (the desired regime: matches cuFFT's single-kernel
+    /// memory-bound behaviour the paper measures).
+    pub hbm_bound: bool,
+}
+
+/// Estimate the Stockham kernel at (tile_b, n) on a target.
+pub fn estimate_fft_kernel(
+    tile_b: u64,
+    n: u64,
+    precision: Precision,
+    target: &TpuTarget,
+) -> KernelEstimate {
+    let eb = precision.real_bytes();
+    let tile_elems = tile_b * n;
+    // re+im planes, double-buffered across the stage loop: 4 planes live.
+    let vmem = 4 * tile_elems * eb;
+    // One HBM read of both planes in, one write out (all stages in-VMEM).
+    let hbm = 4 * tile_elems * eb;
+    let stages = (n as f64).log2().ceil() as u64;
+    // Per stage per element: complex add + complex sub + complex mul ≈
+    // 10 real ops, plus twiddle cos/sin amortized (precomputed per stage).
+    let vpu_ops = 10 * tile_elems * stages;
+    let t_mem = hbm as f64 / (target.hbm_gbs * 1e9);
+    let t_vpu = vpu_ops as f64 / (target.vpu_glanes * 1e9);
+    KernelEstimate {
+        tile_b,
+        n,
+        vmem_bytes: vmem,
+        vmem_frac: vmem as f64 / target.vmem_bytes as f64,
+        hbm_bytes: hbm,
+        vpu_ops,
+        intensity: vpu_ops as f64 / hbm as f64,
+        t_roofline_s: t_mem.max(t_vpu),
+        hbm_bound: t_mem >= t_vpu,
+    }
+}
+
+/// Pick the largest batch tile that keeps the kernel within a VMEM budget
+/// (the BlockSpec sizing rule for `python/compile/kernels/fft.py`).
+pub fn max_tile_b(n: u64, precision: Precision, target: &TpuTarget, budget_frac: f64) -> u64 {
+    let eb = precision.real_bytes();
+    let per_row = 4 * n * eb;
+    ((target.vmem_bytes as f64 * budget_frac) / per_row as f64).floor() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_tile_fits_vmem() {
+        // the python kernel's DEFAULT_TILE_B=16 at the largest single-kernel
+        // fp32 length must fit comfortably
+        let e = estimate_fft_kernel(16, 8192, Precision::Fp32, &tpu_v4());
+        assert!(e.vmem_frac < 0.05, "vmem frac {}", e.vmem_frac);
+    }
+
+    #[test]
+    fn vpu_butterflies_are_not_hbm_bound_the_hardware_adaptation_finding() {
+        // On the V100, 5·N·log2(N) flops against 900 GB/s leaves cuFFT
+        // memory-bound (knee ≈ 17 flops/byte). The TPU's VPU knee is much
+        // lower (≈ 3.3 ops/byte), so a pure-VPU Stockham kernel goes
+        // compute-bound beyond tiny N — the DESIGN.md §2 argument for
+        // expressing larger radix butterflies as MXU matmuls on real TPUs.
+        let tiny = estimate_fft_kernel(16, 4, Precision::Fp32, &tpu_v4());
+        assert!(tiny.hbm_bound, "intensity {}", tiny.intensity);
+        let big = estimate_fft_kernel(16, 8192, Precision::Fp32, &tpu_v4());
+        assert!(!big.hbm_bound, "intensity {}", big.intensity);
+    }
+
+    #[test]
+    fn intensity_grows_with_log_n() {
+        let a = estimate_fft_kernel(16, 256, Precision::Fp32, &tpu_v4());
+        let b = estimate_fft_kernel(16, 8192, Precision::Fp32, &tpu_v4());
+        assert!(b.intensity > a.intensity);
+        // ratio = log2 ratio
+        assert!((b.intensity / a.intensity - 13.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_tile_b_respects_budget() {
+        let t = tpu_v4();
+        let tile = max_tile_b(8192, Precision::Fp32, &t, 0.5);
+        let e = estimate_fft_kernel(tile, 8192, Precision::Fp32, &t);
+        assert!(e.vmem_frac <= 0.5);
+        let e2 = estimate_fft_kernel(tile + 1, 8192, Precision::Fp32, &t);
+        assert!(e2.vmem_frac > 0.5);
+    }
+
+    #[test]
+    fn fp64_halves_tile() {
+        let t = tpu_v4();
+        let t32 = max_tile_b(4096, Precision::Fp32, &t, 0.5);
+        let t64 = max_tile_b(4096, Precision::Fp64, &t, 0.5);
+        assert_eq!(t32, 2 * t64);
+    }
+}

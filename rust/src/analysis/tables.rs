@@ -1,0 +1,162 @@
+//! Regeneration of the paper's Tables 1-4 as CSV/ASCII.
+
+use crate::analysis::optimal::{mean_optimal_mhz, optima};
+use crate::harness::sweep::{sweep_gpu, SweepConfig};
+use crate::sim::freq_table::freq_table;
+use crate::sim::gpu::{all_gpus, GpuSpec};
+use crate::types::Precision;
+use crate::util::table::{fnum, Table};
+
+/// Table 1: allowed core-clock frequency ranges and step sizes.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1: allowed core clock frequencies",
+        &["Card name", "f_max [MHz]", "f_min [MHz]", "f_step [MHz]", "#freqs"],
+    );
+    for g in all_gpus() {
+        let ft = freq_table(&g);
+        let steps = ft
+            .steps_mhz
+            .iter()
+            .map(|s| fnum(*s, 1))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.push_row(vec![
+            g.name.to_string(),
+            fnum(ft.f_max_mhz, 1),
+            fnum(ft.f_min_mhz, 1),
+            steps,
+            ft.frequencies().len().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: GPU card specifications.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2: GPU card specifications",
+        &[
+            "Spec", "Titan XP", "Tesla P4", "Titan V", "Tesla V100", "Jetson Nano",
+        ],
+    );
+    let gs = all_gpus();
+    let col = |f: &dyn Fn(&GpuSpec) -> String| -> Vec<String> {
+        gs.iter().map(|g| f(g)).collect()
+    };
+    let rows: Vec<(&str, Vec<String>)> = vec![
+        ("CUDA Cores", col(&|g| g.cuda_cores.to_string())),
+        ("SMs", col(&|g| g.sms.to_string())),
+        (
+            "Base/Boost Core Clock [MHz]",
+            col(&|g| {
+                if g.has_base_clock() {
+                    format!("{}/{}", fnum(g.base_clock_mhz, 0), fnum(g.boost_clock_mhz, 0))
+                } else {
+                    fnum(g.boost_clock_mhz, 1)
+                }
+            }),
+        ),
+        ("Memory Clock [MHz]", col(&|g| fnum(g.mem_clock_mhz, 0))),
+        ("Dv. m. bandwidth [GB/s]", col(&|g| fnum(g.dev_bw_gbs, 1))),
+        ("Memory modules", col(&|g| g.mem_kind.label().to_string())),
+        ("Shared m. bandwidth [GB/s]", col(&|g| fnum(g.shared_bw_gbs, 0))),
+        ("Memory size [GB]", col(&|g| (g.mem_bytes >> 30).to_string())),
+        ("TDP [W]", col(&|g| fnum(g.tdp_w, 0))),
+    ];
+    for (name, cells) in rows {
+        let mut row = vec![name.to_string()];
+        row.extend(cells);
+        t.push_row(row);
+    }
+    t
+}
+
+/// Table 3: mean optimal core-clock frequencies, derived by running the
+/// full sweep per (gpu, precision).
+pub fn table3(cfg: &SweepConfig) -> Table {
+    let mut t = Table::new(
+        "Table 3: mean optimal core clock frequencies [MHz]",
+        &["Card name", "FP32", "FP64", "FP16"],
+    );
+    for g in all_gpus() {
+        let mut cells = vec![g.name.to_string()];
+        for p in [Precision::Fp32, Precision::Fp64, Precision::Fp16] {
+            if !g.supports(p) {
+                cells.push("NA".into());
+                continue;
+            }
+            let sweep = sweep_gpu(&g, p, cfg);
+            let pts = optima(&g, &sweep);
+            cells.push(fnum(mean_optimal_mhz(&g, &pts), 0));
+        }
+        t.push_row(cells);
+    }
+    t
+}
+
+/// Paper Table 3 reference values for comparison columns / tests.
+pub fn table3_paper_mhz(gpu: &str, p: Precision) -> Option<f64> {
+    let v = match (gpu, p) {
+        ("Tesla V100", Precision::Fp32) => 945.0,
+        ("Tesla V100", Precision::Fp64) => 945.0,
+        ("Tesla V100", Precision::Fp16) => 937.0,
+        ("Tesla P4", Precision::Fp32) => 746.0,
+        ("Tesla P4", Precision::Fp64) => 1126.0,
+        ("Titan V", Precision::Fp32) => 952.0,
+        ("Titan V", Precision::Fp64) => 967.0,
+        ("Titan V", Precision::Fp16) => 1042.0,
+        ("Titan XP", Precision::Fp32) => 1151.0,
+        ("Titan XP", Precision::Fp64) => 1215.0,
+        ("Jetson Nano", Precision::Fp32) => 460.8,
+        ("Jetson Nano", Precision::Fp64) => 460.8,
+        ("Jetson Nano", Precision::Fp16) => 460.8,
+        _ => return None,
+    };
+    Some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Protocol;
+
+    #[test]
+    fn table1_has_five_cards() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 5);
+        let csv = t.to_csv();
+        assert!(csv.contains("Tesla V100,1530.0,135.0"));
+        assert!(csv.contains("Jetson Nano,921.6,76.8"));
+    }
+
+    #[test]
+    fn table2_matches_paper_cells() {
+        let csv = table2().to_csv();
+        assert!(csv.contains("CUDA Cores,3840,2560,5120,5120,128"));
+        assert!(csv.contains("TDP [W],250,75,250,300,10"));
+        assert!(csv.contains("GDDR5,GDDR5,HBM2,HBM2,LPDDR4"));
+    }
+
+    #[test]
+    fn table3_paper_reference_complete() {
+        assert_eq!(table3_paper_mhz("Tesla V100", Precision::Fp32), Some(945.0));
+        assert_eq!(table3_paper_mhz("Tesla P4", Precision::Fp16), None);
+        assert_eq!(table3_paper_mhz("Titan XP", Precision::Fp16), None);
+    }
+
+    #[test]
+    fn table3_generates_na_for_unsupported() {
+        let cfg = SweepConfig {
+            lengths: vec![1024],
+            freq_stride: 40,
+            protocol: Protocol { reps_per_run: 2, runs: 2, seed: 5 },
+        };
+        let t = table3(&cfg);
+        assert_eq!(t.rows.len(), 5);
+        let p4 = t.rows.iter().find(|r| r[0] == "Tesla P4").unwrap();
+        assert_eq!(p4[3], "NA");
+        let v100 = t.rows.iter().find(|r| r[0] == "Tesla V100").unwrap();
+        assert_ne!(v100[3], "NA");
+    }
+}

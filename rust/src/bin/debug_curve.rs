@@ -1,0 +1,16 @@
+use fftsweep::sim::{run_batch, gpu::{tesla_v100, jetson_nano, tesla_p4}};
+use fftsweep::sim::freq_table::freq_table;
+use fftsweep::types::{FftWorkload, Precision};
+fn main() {
+    for g in [tesla_v100(), jetson_nano(), tesla_p4()] {
+    println!("== {}", g.name);
+    for n in [1024u64] {
+        let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+        println!("N={n}");
+        for f in freq_table(&g).stride(12) {
+            let r = run_batch(&g, &w, f);
+            println!("  f={f:7.1}  t={:8.3} ms  P={:7.1} W  E={:8.2} J", r.timing.total_s*1e3, r.avg_power_w, r.energy_j);
+        }
+    }
+    }
+}

@@ -1,0 +1,21 @@
+use fftsweep::runtime::{Manifest, Runtime};
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Manifest::default_dir())?;
+    let m = rt.load("fft_f32_n16384_b4")?;
+    let n = 16384usize; let b = 4usize;
+    let mut re = vec![0.0f32; b*n];
+    let im = vec![0.0f32; b*n];
+    for row in 0..b { re[row*n + 1] = 1.0; }
+    let out = m.run_f32(&[&re, &im])?;
+    let mut max_err = 0.0f64;
+    for k in 0..n {
+        let want = (-2.0*std::f64::consts::PI*(k as f64)/n as f64).cos();
+        max_err = max_err.max((out[0][k] as f64 - want).abs());
+    }
+    println!("artifact err vs analytic: {max_err:.3e}");
+    let s0: f64 = out[0].iter().map(|x| x.abs() as f64).sum();
+    let s1: f64 = out[1].iter().map(|x| x.abs() as f64).sum();
+    println!("sum|re|={s0:.3} sum|im|={s1:.3} len={} {}", out[0].len(), out[1].len());
+    println!("first 4 outputs: {:?} want cos: {:?}", &out[0][0..4], (0..4).map(|k| (-2.0*std::f64::consts::PI*(k as f64)/n as f64).cos()).collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,25 @@
+// Load an arbitrary HLO text file, run with synthetic inputs, print stats.
+use anyhow::Result;
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).unwrap();
+    let shapes: Vec<Vec<i64>> = std::env::args().skip(2).map(|s|
+        s.split('x').map(|d| d.parse().unwrap()).collect()).collect();
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let mut lits = Vec::new();
+    for dims in &shapes {
+        let total: i64 = dims.iter().product();
+        let data: Vec<f32> = (0..total).map(|i| ((i % 7) as f32) * 0.25 - 0.5).collect();
+        lits.push(xla::Literal::vec1(&data).reshape(dims)?);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    for (i, p) in parts.into_iter().enumerate() {
+        let v = p.to_vec::<f32>()?;
+        let sum: f64 = v.iter().map(|x| x.abs() as f64).sum();
+        println!("out{i}: len={} sum|x|={sum:.4} head={:?}", v.len(), &v[..4.min(v.len())]);
+    }
+    Ok(())
+}

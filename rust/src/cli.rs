@@ -1,0 +1,390 @@
+//! CLI command dispatch for the `fftsweep` binary.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use fftsweep::analysis::report::{full_report, headline_table};
+use fftsweep::analysis::{figures, optima, tables};
+use fftsweep::coordinator::{Engine, EngineConfig};
+use fftsweep::dsp;
+use fftsweep::harness::sweep::{paper_lengths, quick_lengths, sweep_gpu, SweepConfig};
+use fftsweep::harness::Protocol;
+use fftsweep::pipeline::{run_pipeline, table4};
+use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::gpu::{all_gpus, gpu_by_name, tesla_v100, GpuSpec};
+use fftsweep::types::Precision;
+use fftsweep::util::cliargs::Args;
+use fftsweep::util::rng::Rng;
+use fftsweep::util::table::fnum;
+
+const USAGE: &str = "\
+fftsweep — DVFS energy-efficiency study of FFTs (paper reproduction)
+
+USAGE:
+  fftsweep report   [--out results] [--quick]
+  fftsweep table    <1|2|3|4> [--quick]
+  fftsweep figure   <2|3|4|5|6|7|8|9|13|15|17|20> [--gpu v100] [--precision fp32] [--quick]
+  fftsweep sweep    [--gpu v100] [--precision fp32] [--quick]
+  fftsweep pipeline [--gpu v100] [--n 500000] [--clock 945]
+  fftsweep selftest [--artifacts artifacts]
+  fftsweep serve    [--artifacts artifacts] [--jobs 256] [--clock 945]
+  fftsweep validate [--artifacts artifacts]
+  fftsweep ablation [--gpu v100] [--n 16384]
+  fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
+  fftsweep roofline [--n 8192] [--precision fp32]
+  fftsweep cost     [--gpu v100] [--n 16384] [--clock 945] [--gpus 500]
+  fftsweep thermal  [--gpu v100] [--n 16384] [--ambient 30]
+";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "report" => cmd_report(args),
+        "table" => cmd_table(args),
+        "figure" => cmd_figure(args),
+        "sweep" => cmd_sweep(args),
+        "pipeline" => cmd_pipeline(args),
+        "selftest" => cmd_selftest(args),
+        "serve" => cmd_serve(args),
+        "validate" => cmd_validate(args),
+        "ablation" => cmd_ablation(args),
+        "schedule" => cmd_schedule(args),
+        "roofline" => cmd_roofline(args),
+        "cost" => cmd_cost(args),
+        "thermal" => cmd_thermal(args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn sweep_cfg(args: &Args) -> SweepConfig {
+    let mut cfg = if args.has("quick") {
+        SweepConfig::quick()
+    } else {
+        SweepConfig {
+            lengths: paper_lengths(),
+            freq_stride: 4,
+            protocol: Protocol::default(),
+        }
+    };
+    if let Some(ls) = args.get("lengths") {
+        cfg.lengths = ls
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+    }
+    cfg.freq_stride = args.usize_or("freq-stride", cfg.freq_stride);
+    cfg
+}
+
+fn gpu_arg(args: &Args) -> Result<GpuSpec> {
+    let name = args.str_or("gpu", "v100");
+    gpu_by_name(name).with_context(|| format!("unknown gpu '{name}'"))
+}
+
+fn precision_arg(args: &Args) -> Result<Precision> {
+    let p = args.str_or("precision", "fp32");
+    Precision::parse(p).with_context(|| format!("unknown precision '{p}'"))
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let cfg = sweep_cfg(args);
+    let headlines = full_report(&out, &cfg)?;
+    println!("{}", headline_table(&headlines).to_ascii());
+    println!("wrote CSVs under {out:?}");
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .context("table number required (1-4)")?;
+    let cfg = sweep_cfg(args);
+    match which.as_str() {
+        "1" => println!("{}", tables::table1().to_ascii()),
+        "2" => println!("{}", tables::table2().to_ascii()),
+        "3" => println!("{}", tables::table3(&cfg).to_ascii()),
+        "4" => {
+            let gpu = gpu_arg(args)?;
+            let clock = args.f64_or("clock", 945.0);
+            let n = args.u64_or("n", 500_000);
+            let rows = table4(&gpu, n, clock);
+            println!("Table 4: pipeline energy-efficiency increase ({})", gpu.name);
+            println!("{:>9} | {:>12} | {:>12}", "harmonics", "FFT time [%]", "eff increase");
+            for r in rows {
+                println!(
+                    "{:>9} | {:>12} | {:>12}",
+                    r.harmonics,
+                    fnum(r.fft_time_pct, 2),
+                    fnum(r.eff_increase, 3)
+                );
+            }
+        }
+        other => bail!("unknown table '{other}' (1-4)"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which: u32 = args
+        .positional
+        .get(1)
+        .context("figure number required")?
+        .parse()
+        .context("figure number must be an integer")?;
+    let gpu = gpu_arg(args)?;
+    let precision = precision_arg(args)?;
+    let cfg = sweep_cfg(args);
+    let table = match which {
+        2 => figures::figure2(&gpu, args.u64_or("n", 16384), args.f64_or("clock", 1020.0), 0xF16).0,
+        3 => figures::figure3(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
+        4 => figures::figure4_5(&all_gpus(), Precision::Fp32, &cfg.lengths),
+        5 => figures::figure4_5(&all_gpus(), precision, &cfg.lengths),
+        6 => figures::figure6(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
+        7 => figures::figure7(&all_gpus(), &cfg),
+        8 => figures::figure8(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
+        9..=14 => figures::figure9_to_14(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
+        15 | 16 => figures::figure15_16(&gpu, &sweep_gpu(&gpu, precision, &cfg)).1,
+        17 | 18 => figures::figure17_18(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
+        19 => {
+            let run = run_pipeline(&gpu, args.u64_or("n", 500_000), 8, Some(args.f64_or("clock", 945.0)));
+            println!("Fig 19: pipeline stage trace ({}):", gpu.name);
+            let mut t = 0.0;
+            for s in &run.stages {
+                println!(
+                    "  t={:>8} ms  {:<14} clock={:>7} MHz  P={:>7} W  E={:>8} J",
+                    fnum(t * 1e3, 2),
+                    s.name,
+                    fnum(s.clock_mhz, 0),
+                    fnum(s.energy_j / s.time_s.max(1e-12), 1),
+                    fnum(s.energy_j, 2)
+                );
+                t += s.time_s;
+            }
+            return Ok(());
+        }
+        20 => figures::figure20(&gpu, args.f64_or("clock", gpu.boost_clock_mhz)),
+        other => bail!("figure {other} not implemented (2-20)"),
+    };
+    println!("{}", table.to_ascii());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let gpu = gpu_arg(args)?;
+    let precision = precision_arg(args)?;
+    let mut cfg = sweep_cfg(args);
+    if !args.has("quick") && !args.has("lengths") {
+        cfg.lengths = quick_lengths();
+    }
+    let sweep = sweep_gpu(&gpu, precision, &cfg);
+    let pts = optima(&gpu, &sweep);
+    println!("{} {} sweep:", gpu.name, precision);
+    println!(
+        "{:>9} | {:>9} | {:>8} | {:>9} | {:>9} | {:>9}",
+        "N", "f_opt MHz", "% boost", "dT %", "Ief boost", "Ief base"
+    );
+    for p in &pts {
+        println!(
+            "{:>9} | {:>9} | {:>8} | {:>9} | {:>9} | {:>9}",
+            p.n,
+            fnum(p.f_opt_mhz, 0),
+            fnum(p.frac_of_boost * 100.0, 1),
+            fnum(p.time_increase * 100.0, 2),
+            fnum(p.eff_increase_vs_boost, 3),
+            fnum(p.eff_increase_vs_base, 3)
+        );
+    }
+    let mean = fftsweep::analysis::mean_optimal_mhz(&gpu, &pts);
+    println!("mean optimal: {} MHz", fnum(mean, 1));
+    if let Some(paper) = tables::table3_paper_mhz(gpu.name, precision) {
+        println!("paper Table 3: {} MHz", fnum(paper, 1));
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let gpu = gpu_arg(args)?;
+    let n = args.u64_or("n", 500_000);
+    let clock = args.f64_or("clock", 945.0);
+    println!("pipeline comparison on {} (N={n}, FFT clock {clock} MHz):", gpu.name);
+    let rows = table4(&gpu, n, clock);
+    println!("{:>9} | {:>12} | {:>12}", "harmonics", "FFT time [%]", "eff increase");
+    for r in &rows {
+        println!(
+            "{:>9} | {:>12} | {:>12}",
+            r.harmonics,
+            fnum(r.fft_time_pct, 2),
+            fnum(r.eff_increase, 3)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    let manifest: Vec<String> = rt.manifest().entries.keys().cloned().collect();
+    println!("artifacts: {}", manifest.join(", "));
+
+    // Validate the fp32 1024 FFT against the rust oracle.
+    let meta = rt.manifest().fft(1024, "f32")?.clone();
+    let module = rt.load(&meta.name)?;
+    let total = (meta.batch * meta.n) as usize;
+    let mut rng = Rng::new(0xA0A0);
+    let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+    let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+    let out = module.run_f32(&[&re, &im])?;
+    let mut max_err = 0.0f64;
+    for b in 0..meta.batch as usize {
+        let off = b * meta.n as usize;
+        let x: Vec<dsp::C64> = (0..meta.n as usize)
+            .map(|i| dsp::C64::new(re[off + i] as f64, im[off + i] as f64))
+            .collect();
+        let want = dsp::fft(&x);
+        for i in 0..meta.n as usize {
+            max_err = max_err
+                .max((out[0][off + i] as f64 - want[i].re).abs())
+                .max((out[1][off + i] as f64 - want[i].im).abs());
+        }
+    }
+    println!("fft_f32_n1024 max abs err vs rust oracle: {max_err:.3e}");
+    anyhow::ensure!(max_err < 1e-2, "numerics mismatch");
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let jobs = args.usize_or("jobs", 256);
+    let clock = args.f64_or("clock", 945.0);
+    let rt = std::sync::Arc::new(Runtime::new(&dir)?);
+    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default())?;
+    engine.nvml.set_gpu_locked_clocks(clock, clock)?;
+
+    let mut rng = Rng::new(7);
+    let lengths = engine.router().supported_lengths("f32");
+    anyhow::ensure!(!lengths.is_empty(), "no routable lengths");
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..jobs {
+        let n = lengths[rng.below(lengths.len() as u64) as usize] as usize;
+        let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        rxs.push(engine.submit(re, im)?);
+    }
+    engine.drain(Duration::from_secs(120));
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!("served {ok}/{jobs} jobs in {:.3} s", dt.as_secs_f64());
+    println!("{}", engine.metrics.summary());
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let n = fftsweep::runtime::validation::validate_dir(&dir)?;
+    println!("{n} artifacts validated OK (digests, HLO text, no elided constants)");
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let gpu = gpu_arg(args)?;
+    let n = args.u64_or("n", 16384);
+    println!("{}", fftsweep::analysis::ablation::ablation_table(&gpu, n).to_ascii());
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    use fftsweep::pipeline::scheduler::choose_clock;
+    use fftsweep::sim::run_batch;
+    use fftsweep::types::FftWorkload;
+    let gpu = gpu_arg(args)?;
+    let n = args.u64_or("n", 16384);
+    let mult = args.f64_or("deadline-mult", 1.5);
+    let w = FftWorkload::new(n, precision_arg(args)?, gpu.working_set_bytes);
+    let boost_t = run_batch(&gpu, &w, gpu.boost_clock_mhz).timing.total_s;
+    let c = choose_clock(&gpu, &w, boost_t * mult, 2)?;
+    println!(
+        "{} N={n}: deadline {:.3} ms ({}x boost time)\n  chose {} MHz: {:.3} ms ({:.0}% slack), energy {:.0}% of boost",
+        gpu.name,
+        boost_t * mult * 1e3,
+        mult,
+        fnum(c.f_mhz, 0),
+        c.time_s * 1e3,
+        c.slack * 100.0,
+        c.energy_vs_boost * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    use fftsweep::analysis::roofline::{estimate_fft_kernel, max_tile_b, tpu_v4};
+    let n = args.u64_or("n", 8192);
+    let precision = precision_arg(args)?;
+    let target = tpu_v4();
+    let tile = args.u64_or("tile-b", 16);
+    let e = estimate_fft_kernel(tile, n, precision, &target);
+    println!("Pallas fft_c2c BlockSpec estimate on {} (tile_b={tile}, N={n}, {precision}):", target.name);
+    println!("  VMEM: {} KiB ({:.2}% of budget)", e.vmem_bytes / 1024, e.vmem_frac * 100.0);
+    println!("  HBM per grid step: {} KiB", e.hbm_bytes / 1024);
+    println!("  VPU ops per grid step: {}", e.vpu_ops);
+    println!("  intensity {:.2} ops/byte → {}", e.intensity, if e.hbm_bound { "HBM-bound" } else { "VPU-bound (→ MXU formulation on real TPUs)" });
+    println!("  roofline time per step: {:.2} µs", e.t_roofline_s * 1e6);
+    println!("  max tile_b at 50% VMEM: {}", max_tile_b(n, precision, &target, 0.5));
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    use fftsweep::analysis::cost::{cost_table, Deployment};
+    use fftsweep::types::FftWorkload;
+    let gpu = gpu_arg(args)?;
+    let w = FftWorkload::new(args.u64_or("n", 16384), precision_arg(args)?, gpu.working_set_bytes);
+    let mut dep = Deployment::default();
+    dep.gpus = args.u64_or("gpus", dep.gpus);
+    dep.duty_cycle = args.f64_or("duty", dep.duty_cycle);
+    dep.price_per_kwh = args.f64_or("price", dep.price_per_kwh);
+    dep.co2_kg_per_kwh = args.f64_or("co2", dep.co2_kg_per_kwh);
+    println!("{}", cost_table(&gpu, &w, args.f64_or("clock", 945.0), &dep).to_ascii());
+    Ok(())
+}
+
+fn cmd_thermal(args: &Args) -> Result<()> {
+    use fftsweep::sim::thermal::{steady_state, ThermalParams};
+    use fftsweep::types::FftWorkload;
+    let gpu = gpu_arg(args)?;
+    let w = FftWorkload::new(args.u64_or("n", 16384), precision_arg(args)?, gpu.working_set_bytes);
+    let mut params = ThermalParams::default();
+    params.t_ambient_c = args.f64_or("ambient", params.t_ambient_c);
+    println!("sustained operation, {} at {:.0}°C ambient:", gpu.name, params.t_ambient_c);
+    for f in [gpu.boost_clock_mhz, args.f64_or("clock", 945.0)] {
+        let s = steady_state(&gpu, &w, f, &params);
+        println!(
+            "  {:>7} MHz: {:>5}°C, {:>6} W{}  (sustained throughput {:.2}x)",
+            fnum(f, 0),
+            fnum(s.temperature_c, 1),
+            fnum(s.power_w, 1),
+            if s.throttled { ", THROTTLED" } else { "" },
+            s.sustained_throughput
+        );
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn unused_manifest_helper(m: &Manifest) -> usize {
+    m.entries.len()
+}

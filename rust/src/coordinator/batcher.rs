@@ -1,0 +1,239 @@
+//! Dynamic batcher: packs single-transform jobs into the fixed device batch
+//! of their artifact, padding partial batches with zeros.
+//!
+//! Invariants (property-tested):
+//!   * every submitted job appears in exactly one flushed batch,
+//!   * jobs only share a batch with jobs of the same (n, dtype),
+//!   * a batch never exceeds the artifact's device batch,
+//!   * flush-on-timeout emits partial batches (no starvation).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::job::Envelope;
+
+/// A packed batch ready for execution.
+pub struct PackedBatch {
+    pub artifact: String,
+    pub n: u64,
+    pub device_batch: u64,
+    /// The member jobs, in packing order (row i of the device batch).
+    pub envelopes: Vec<Envelope>,
+}
+
+impl PackedBatch {
+    /// Concatenated, zero-padded input planes (device_batch × n each).
+    pub fn planes(&self) -> (Vec<f32>, Vec<f32>) {
+        let total = (self.device_batch * self.n) as usize;
+        let mut re = vec![0.0f32; total];
+        let mut im = vec![0.0f32; total];
+        for (i, env) in self.envelopes.iter().enumerate() {
+            let off = i * self.n as usize;
+            re[off..off + self.n as usize].copy_from_slice(&env.job.re);
+            im[off..off + self.n as usize].copy_from_slice(&env.job.im);
+        }
+        (re, im)
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.envelopes.len()
+    }
+}
+
+struct Pending {
+    artifact: String,
+    n: u64,
+    device_batch: u64,
+    envelopes: Vec<Envelope>,
+    oldest: Instant,
+}
+
+/// The batcher. Not thread-safe by itself; the engine owns it behind a lock.
+pub struct Batcher {
+    pending: BTreeMap<String, Pending>,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_wait: Duration) -> Self {
+        Self {
+            pending: BTreeMap::new(),
+            max_wait,
+        }
+    }
+
+    /// Add a job under its route; returns a batch if one became full.
+    pub fn push(
+        &mut self,
+        artifact: &str,
+        n: u64,
+        device_batch: u64,
+        env: Envelope,
+    ) -> Option<PackedBatch> {
+        let slot = self
+            .pending
+            .entry(artifact.to_string())
+            .or_insert_with(|| Pending {
+                artifact: artifact.to_string(),
+                n,
+                device_batch,
+                envelopes: Vec::new(),
+                oldest: Instant::now(),
+            });
+        debug_assert_eq!(slot.n, n, "route/artifact length mismatch");
+        if slot.envelopes.is_empty() {
+            slot.oldest = Instant::now();
+        }
+        slot.envelopes.push(env);
+        if slot.envelopes.len() as u64 >= slot.device_batch {
+            return self.take(&artifact.to_string());
+        }
+        None
+    }
+
+    /// Remove and return the pending batch for an artifact.
+    fn take(&mut self, artifact: &String) -> Option<PackedBatch> {
+        self.pending.remove(artifact).map(|p| PackedBatch {
+            artifact: p.artifact,
+            n: p.n,
+            device_batch: p.device_batch,
+            envelopes: p.envelopes,
+        })
+    }
+
+    /// Flush every pending batch older than `max_wait` (timer tick), or all
+    /// of them when `force` (shutdown/drain).
+    pub fn flush(&mut self, force: bool) -> Vec<PackedBatch> {
+        let now = Instant::now();
+        let due: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| force || now.duration_since(p.oldest) >= self.max_wait)
+            .map(|(k, _)| k.clone())
+            .collect();
+        due.iter().filter_map(|k| self.take(k)).collect()
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.values().map(|p| p.envelopes.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::FftJob;
+    use std::sync::mpsc;
+
+    fn env(id: u64, n: usize) -> (Envelope, mpsc::Receiver<anyhow::Result<crate::coordinator::job::JobResult>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Envelope {
+                job: FftJob::new(id, vec![id as f32; n], vec![0.0; n]),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fills_batch_at_device_capacity() {
+        let mut b = Batcher::new(Duration::from_millis(5));
+        let mut got = None;
+        for i in 0..4 {
+            let (e, _rx) = env(i, 8);
+            got = b.push("a", 8, 4, e);
+        }
+        let batch = got.expect("4th push must flush");
+        assert_eq!(batch.occupancy(), 4);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_force() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let (e, _rx) = env(0, 8);
+        assert!(b.push("a", 8, 4, e).is_none());
+        assert_eq!(b.pending_jobs(), 1);
+        let batches = b.flush(true);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].occupancy(), 1);
+    }
+
+    #[test]
+    fn timeout_flush() {
+        let mut b = Batcher::new(Duration::from_millis(1));
+        let (e, _rx) = env(0, 8);
+        b.push("a", 8, 4, e);
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.flush(false).len(), 1);
+    }
+
+    #[test]
+    fn separate_artifacts_never_mix() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let (e1, _r1) = env(1, 8);
+        let (e2, _r2) = env(2, 16);
+        b.push("a8", 8, 4, e1);
+        b.push("a16", 16, 4, e2);
+        let batches = b.flush(true);
+        assert_eq!(batches.len(), 2);
+        for batch in &batches {
+            let n = batch.n;
+            assert!(batch.envelopes.iter().all(|e| e.job.n == n));
+        }
+    }
+
+    #[test]
+    fn planes_zero_padded() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let (e, _rx) = env(3, 4);
+        b.push("a", 4, 3, e);
+        let batch = b.flush(true).pop().unwrap();
+        let (re, im) = batch.planes();
+        assert_eq!(re.len(), 12);
+        assert_eq!(&re[0..4], &[3.0; 4]);
+        assert_eq!(&re[4..12], &[0.0; 8]);
+        assert!(im.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_every_job_flushed_exactly_once() {
+        crate::util::prop::check(
+            "batcher conservation",
+            |rng| {
+                let jobs = rng.range_u64(1, 40) as usize;
+                let device_batch = rng.range_u64(1, 8);
+                (jobs, device_batch)
+            },
+            |&(jobs, device_batch)| {
+                let mut b = Batcher::new(Duration::from_secs(100));
+                let mut seen = Vec::new();
+                let mut rxs = Vec::new();
+                for i in 0..jobs {
+                    let (e, rx) = env(i as u64, 8);
+                    rxs.push(rx);
+                    if let Some(batch) = b.push("a", 8, device_batch, e) {
+                        seen.extend(batch.envelopes.iter().map(|e| e.job.id));
+                        if batch.occupancy() as u64 != device_batch {
+                            return Err(format!(
+                                "full batch had {} jobs, want {}",
+                                batch.occupancy(),
+                                device_batch
+                            ));
+                        }
+                    }
+                }
+                for batch in b.flush(true) {
+                    seen.extend(batch.envelopes.iter().map(|e| e.job.id));
+                }
+                seen.sort_unstable();
+                let want: Vec<u64> = (0..jobs as u64).collect();
+                if seen != want {
+                    return Err(format!("jobs lost/duplicated: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Job types flowing through the coordinator.
+
+use std::sync::mpsc;
+
+/// A single C2C FFT request: one transform of length `n` (re/im planes).
+#[derive(Debug, Clone)]
+pub struct FftJob {
+    pub id: u64,
+    pub n: u64,
+    pub dtype: &'static str,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl FftJob {
+    pub fn new(id: u64, re: Vec<f32>, im: Vec<f32>) -> Self {
+        assert_eq!(re.len(), im.len(), "re/im plane mismatch");
+        Self {
+            id,
+            n: re.len() as u64,
+            dtype: "f32",
+            re,
+            im,
+        }
+    }
+}
+
+/// The result of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub out_re: Vec<f32>,
+    pub out_im: Vec<f32>,
+    /// Wall-clock microseconds the batch execution took (shared across the
+    /// jobs batched together).
+    pub exec_us: u64,
+    /// How many jobs shared the executed batch.
+    pub batch_occupancy: usize,
+}
+
+/// A job paired with its reply channel.
+pub struct Envelope {
+    pub job: FftJob,
+    pub reply: mpsc::Sender<anyhow::Result<JobResult>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_records_length() {
+        let j = FftJob::new(7, vec![0.0; 256], vec![0.0; 256]);
+        assert_eq!(j.n, 256);
+        assert_eq!(j.dtype, "f32");
+    }
+
+    #[test]
+    #[should_panic(expected = "plane mismatch")]
+    fn mismatched_planes_rejected() {
+        FftJob::new(0, vec![0.0; 4], vec![0.0; 8]);
+    }
+}

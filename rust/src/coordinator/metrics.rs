@@ -1,0 +1,94 @@
+//! Coordinator metrics: throughput, latency, batch occupancy, and the
+//! simulated energy accounting that ties the serving loop back to the
+//! paper's DVFS result.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub batch_rows_used: AtomicU64,
+    pub batch_rows_total: AtomicU64,
+    pub exec_us_total: AtomicU64,
+    /// Simulated GPU energy at the coordinator's current clock, microjoules.
+    pub sim_energy_uj: AtomicU64,
+    /// Simulated GPU energy had every batch run at boost, microjoules.
+    pub sim_energy_boost_uj: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, rows_used: usize, rows_total: u64, exec_us: u64) {
+        self.batches_executed.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows_used.fetch_add(rows_used as u64, Ordering::Relaxed);
+        self.batch_rows_total.fetch_add(rows_total, Ordering::Relaxed);
+        self.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+    }
+
+    pub fn record_energy(&self, energy_j: f64, boost_energy_j: f64) {
+        self.sim_energy_uj
+            .fetch_add((energy_j * 1e6) as u64, Ordering::Relaxed);
+        self.sim_energy_boost_uj
+            .fetch_add((boost_energy_j * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        let total = self.batch_rows_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.batch_rows_used.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
+    /// Energy saved by DVFS relative to boost (fraction).
+    pub fn energy_saving(&self) -> f64 {
+        let boost = self.sim_energy_boost_uj.load(Ordering::Relaxed);
+        if boost == 0 {
+            return 0.0;
+        }
+        1.0 - self.sim_energy_uj.load(Ordering::Relaxed) as f64 / boost as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}%",
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.batches_executed.load(Ordering::Relaxed),
+            self.occupancy() * 100.0,
+            self.exec_us_total.load(Ordering::Relaxed) as f64 / 1e6,
+            self.energy_saving() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let m = Metrics::default();
+        m.record_batch(3, 4, 100);
+        m.record_batch(4, 4, 100);
+        assert!((m.occupancy() - 7.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_saving_math() {
+        let m = Metrics::default();
+        m.record_energy(60.0, 100.0);
+        assert!((m.energy_saving() - 0.4).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.energy_saving(), 0.0);
+        assert!(m.summary().contains("jobs 0/0"));
+    }
+}

@@ -1,0 +1,265 @@
+//! The L3 coordinator: an FFT-serving engine in the vLLM-router shape.
+//!
+//! Requests (single transforms) are routed to the artifact that serves
+//! their (length, dtype), packed by the dynamic batcher into the artifact's
+//! fixed device batch, executed on worker threads through the PJRT runtime,
+//! and split back per request. A simulated NVML clock controller accounts
+//! the DVFS energy saving of every executed batch — the serving-loop
+//! integration of the paper's result (section 5.3).
+//!
+//! No tokio in the offline crate set: std threads + mpsc channels.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod router;
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, PackedBatch};
+use crate::coordinator::job::{Envelope, FftJob, JobResult};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::pipeline::nvml::SimNvml;
+use crate::runtime::Runtime;
+use crate::sim::GpuSpec;
+use crate::types::{FftWorkload, Precision};
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub max_batch_wait: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    runtime: Arc<Runtime>,
+    router: Router,
+    batcher: Arc<Mutex<Batcher>>,
+    batch_tx: mpsc::Sender<PackedBatch>,
+    pub metrics: Arc<Metrics>,
+    /// Simulated DVFS controller for the energy accounting.
+    pub nvml: Arc<SimNvml>,
+    sim_gpu: GpuSpec,
+    workers: Vec<JoinHandle<()>>,
+    flusher: Option<JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Start the engine: spawns worker threads and the batch-timeout flusher.
+    pub fn start(runtime: Arc<Runtime>, sim_gpu: GpuSpec, cfg: EngineConfig) -> Result<Self> {
+        let router = Router::from_manifest(runtime.manifest());
+        anyhow::ensure!(!router.is_empty(), "no fft artifacts in manifest");
+        let batcher = Arc::new(Mutex::new(Batcher::new(cfg.max_batch_wait)));
+        let metrics = Arc::new(Metrics::default());
+        let nvml = Arc::new(SimNvml::new(&sim_gpu));
+        let (batch_tx, batch_rx) = mpsc::channel::<PackedBatch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let rt = runtime.clone();
+            let m = metrics.clone();
+            let nv = nvml.clone();
+            let gpu = sim_gpu.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fftsweep-worker-{w}"))
+                    .spawn(move || worker_loop(rx, rt, m, nv, gpu))?,
+            );
+        }
+
+        // Timeout flusher: emits partial batches so low request rates are
+        // never starved.
+        let flusher = {
+            let batcher = batcher.clone();
+            let tx = batch_tx.clone();
+            let stop = shutdown.clone();
+            let tick = cfg.max_batch_wait.max(Duration::from_micros(500)) / 2;
+            Some(std::thread::Builder::new().name("fftsweep-flusher".into()).spawn(
+                move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(tick);
+                        for b in batcher.lock().unwrap().flush(false) {
+                            let _ = tx.send(b);
+                        }
+                    }
+                },
+            )?)
+        };
+
+        Ok(Self {
+            runtime,
+            router,
+            batcher,
+            batch_tx,
+            metrics,
+            nvml,
+            sim_gpu,
+            workers,
+            flusher,
+            shutdown,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit one transform; returns the receiver for its result.
+    pub fn submit(
+        &self,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = FftJob::new(id, re, im);
+        let route = self.router.route(job.n, job.dtype)?.clone();
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope { job, reply: tx };
+        let full = {
+            let mut b = self.batcher.lock().unwrap();
+            b.push(&route.artifact, route.n, route.device_batch, env)
+        };
+        if let Some(batch) = full {
+            let _ = self.batch_tx.send(batch);
+        }
+        Ok(rx)
+    }
+
+    /// Force-flush pending partial batches (used before blocking waits).
+    pub fn flush(&self) {
+        for b in self.batcher.lock().unwrap().flush(true) {
+            let _ = self.batch_tx.send(b);
+        }
+    }
+
+    /// Submit-and-wait convenience.
+    pub fn execute(&self, re: Vec<f32>, im: Vec<f32>) -> Result<JobResult> {
+        let rx = self.submit(re, im)?;
+        self.flush();
+        let result = rx.recv()??;
+        Ok(result)
+    }
+
+    /// Wait until every submitted job completed (or `timeout`).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        self.flush();
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            let sub = self.metrics.jobs_submitted.load(Ordering::Relaxed);
+            let done = self.metrics.jobs_completed.load(Ordering::Relaxed)
+                + self.metrics.jobs_failed.load(Ordering::Relaxed);
+            if done >= sub {
+                return true;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        false
+    }
+
+    /// Stop workers and flusher.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.flush();
+        drop(self.batch_tx);
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    pub fn sim_gpu(&self) -> &GpuSpec {
+        &self.sim_gpu
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<PackedBatch>>>,
+    runtime: Arc<Runtime>,
+    metrics: Arc<Metrics>,
+    nvml: Arc<SimNvml>,
+    gpu: GpuSpec,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // channel closed: shutdown
+            }
+        };
+        let occupancy = batch.occupancy();
+        let rows_total = batch.device_batch;
+        let t0 = Instant::now();
+        let result = runtime
+            .load(&batch.artifact)
+            .and_then(|m| {
+                let (re, im) = batch.planes();
+                m.run_f32(&[&re, &im])
+            });
+        let exec_us = t0.elapsed().as_micros() as u64;
+        metrics.record_batch(occupancy, rows_total, exec_us);
+
+        // DVFS energy accounting: what this batch would cost on the
+        // simulated GPU at the locked clock vs at boost.
+        let w = FftWorkload::new(
+            batch.n,
+            Precision::Fp32,
+            batch.device_batch * batch.n * Precision::Fp32.complex_bytes(),
+        );
+        let locked = nvml.current_clock_mhz();
+        let e_locked = crate::sim::run_batch(&gpu, &w, locked).energy_j;
+        let e_boost = crate::sim::run_batch(&gpu, &w, gpu.boost_clock_mhz).energy_j;
+        metrics.record_energy(e_locked, e_boost);
+
+        match result {
+            Ok(outputs) => {
+                let out_re = &outputs[0];
+                let out_im = &outputs[1];
+                let n = batch.n as usize;
+                for (i, env) in batch.envelopes.into_iter().enumerate() {
+                    let off = i * n;
+                    let res = JobResult {
+                        id: env.job.id,
+                        out_re: out_re[off..off + n].to_vec(),
+                        out_im: out_im[off..off + n].to_vec(),
+                        exec_us,
+                        batch_occupancy: occupancy,
+                    };
+                    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = env.reply.send(Ok(res));
+                }
+            }
+            Err(e) => {
+                for env in batch.envelopes {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = env.reply.send(Err(anyhow::anyhow!("{e:#}")));
+                }
+            }
+        }
+    }
+}

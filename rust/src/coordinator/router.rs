@@ -1,0 +1,104 @@
+//! Routing: map an incoming job to the AOT artifact that can serve it.
+//!
+//! Mirrors the vLLM-router shape: a static routing table derived from the
+//! manifest, plus admission checks (supported length/dtype).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Manifest;
+
+/// Routing table: (n, dtype) → artifact name + its fixed device batch.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    routes: BTreeMap<(u64, String), RouteEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouteEntry {
+    pub artifact: String,
+    /// Transform length the artifact serves.
+    pub n: u64,
+    /// The artifact's fixed batch dimension (the batcher packs up to this
+    /// many transforms per execution).
+    pub device_batch: u64,
+}
+
+impl Router {
+    /// Build from every `fft` artifact in the manifest.
+    pub fn from_manifest(manifest: &Manifest) -> Self {
+        let mut routes = BTreeMap::new();
+        for a in manifest.of_kind("fft") {
+            routes.insert(
+                (a.n, a.dtype.clone()),
+                RouteEntry {
+                    artifact: a.name.clone(),
+                    n: a.n,
+                    device_batch: a.batch,
+                },
+            );
+        }
+        Self { routes }
+    }
+
+    pub fn route(&self, n: u64, dtype: &str) -> Result<&RouteEntry> {
+        self.routes
+            .get(&(n, dtype.to_string()))
+            .with_context(|| format!("no artifact serves n={n} dtype={dtype}"))
+    }
+
+    pub fn supported_lengths(&self, dtype: &str) -> Vec<u64> {
+        self.routes
+            .keys()
+            .filter(|(_, d)| d == dtype)
+            .map(|(n, _)| *n)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = "name\tfile\tkind\tn\tbatch\tdtype\tharmonics\tinputs\tn_outputs\tsha256_16\n\
+            fft_f32_n256_b256\tf1\tfft\t256\t256\tf32\t0\tf32:256x256;f32:256x256\t2\td\n\
+            fft_f32_n1024_b64\tf2\tfft\t1024\t64\tf32\t0\tf32:64x1024;f32:64x1024\t2\td\n\
+            fft_f64_n1024_b64\tf3\tfft\t1024\t64\tf64\t0\tf64:64x1024;f64:64x1024\t2\td\n\
+            pipeline_n16384_h8\tf4\tpipeline\t16384\t4\tf32\t8\tf32:4x16384;f32:4x16384\t3\td\n";
+        Manifest::parse(Path::new("."), text).unwrap()
+    }
+
+    #[test]
+    fn routes_ffts_only() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.len(), 3);
+        let e = r.route(1024, "f32").unwrap();
+        assert_eq!(e.artifact, "fft_f32_n1024_b64");
+        assert_eq!(e.device_batch, 64);
+    }
+
+    #[test]
+    fn unsupported_length_rejected() {
+        let r = Router::from_manifest(&manifest());
+        assert!(r.route(512, "f32").is_err());
+        assert!(r.route(1024, "f16").is_err());
+    }
+
+    #[test]
+    fn supported_lengths_by_dtype() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.supported_lengths("f32"), vec![256, 1024]);
+        assert_eq!(r.supported_lengths("f64"), vec![1024]);
+    }
+}

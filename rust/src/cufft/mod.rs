@@ -1,0 +1,8 @@
+//! cuFFT library model: plan construction (kernel decomposition, algorithm
+//! selection) and the NVVP-style per-kernel profile used for Fig 20.
+
+pub mod plan;
+pub mod profile;
+pub mod radix;
+
+pub use plan::{plan, Algorithm, FftPlan, KernelDesc, KernelKind};

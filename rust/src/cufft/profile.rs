@@ -1,0 +1,129 @@
+//! NVVP-style kernel profiling report (paper Fig 20).
+//!
+//! For a plan at a given clock, report per kernel: compute utilization,
+//! issue-slot utilization, device-memory bandwidth utilization, and the
+//! normalized execution time — the four bars the paper plots for
+//! N ∈ {8192, 16k, 2M} on the V100.
+
+use crate::cufft::plan::{FftPlan, KernelKind};
+use crate::sim::exec_model::time_plan;
+use crate::sim::gpu::GpuSpec;
+use crate::types::FftWorkload;
+
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub kernel_index: usize,
+    pub kind: KernelKind,
+    pub compute_util: f64,
+    pub issue_slot_util: f64,
+    pub device_mbu: f64,
+    pub time_s: f64,
+    /// Execution time normalized to the slowest kernel in the comparison
+    /// set (the paper normalizes "from fastest to slowest").
+    pub norm_time: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlanProfile {
+    pub n: u64,
+    pub f_mhz: f64,
+    pub kernels: Vec<KernelProfile>,
+}
+
+/// Profile one plan at one clock.
+pub fn profile_plan(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    plan: &FftPlan,
+    f_mhz: f64,
+) -> PlanProfile {
+    let timing = time_plan(gpu, workload, plan, f_mhz);
+    let t_max = timing
+        .per_kernel
+        .iter()
+        .map(|k| k.t_total)
+        .fold(0.0_f64, f64::max);
+    let kernels = timing
+        .per_kernel
+        .iter()
+        .enumerate()
+        .map(|(i, k)| KernelProfile {
+            kernel_index: i,
+            kind: plan.kernels[i].kind,
+            compute_util: k.compute_util,
+            issue_slot_util: k.issue_util,
+            device_mbu: k.mem_util,
+            time_s: k.t_total,
+            norm_time: if t_max > 0.0 { k.t_total / t_max } else { 0.0 },
+        })
+        .collect();
+    PlanProfile {
+        n: workload.n,
+        f_mhz,
+        kernels,
+    }
+}
+
+/// The Fig 20 comparison set: representative lengths with 1, 2 and 3+
+/// kernels, profiled across the sweep's frequency range.
+pub fn fig20_lengths() -> [u64; 3] {
+    [8192, 16384, 1 << 21]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cufft::plan::plan;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    #[test]
+    fn profile_has_one_row_per_kernel() {
+        let g = tesla_v100();
+        for n in fig20_lengths() {
+            let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+            let p = plan(n, Precision::Fp32);
+            let prof = profile_plan(&g, &w, &p, g.boost_clock_mhz);
+            assert_eq!(prof.kernels.len(), p.kernel_count());
+        }
+    }
+
+    #[test]
+    fn utilizations_are_fractions() {
+        let g = tesla_v100();
+        let w = FftWorkload::new(1 << 21, Precision::Fp32, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let prof = profile_plan(&g, &w, &p, 945.0);
+        for k in &prof.kernels {
+            assert!((0.0..=1.0).contains(&k.compute_util));
+            assert!((0.0..=1.0).contains(&k.issue_slot_util));
+            assert!((0.0..=1.0).contains(&k.device_mbu));
+            assert!((0.0..=1.0).contains(&k.norm_time));
+        }
+        assert!(prof.kernels.iter().any(|k| (k.norm_time - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn memory_bound_signature_at_boost() {
+        // Fig 20: device MBU high, issue slots mid, compute lowish.
+        let g = tesla_v100();
+        let w = FftWorkload::new(8192, Precision::Fp32, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let prof = profile_plan(&g, &w, &p, g.boost_clock_mhz);
+        let k = &prof.kernels[0];
+        assert!(k.device_mbu > 0.75, "mbu {}", k.device_mbu);
+        assert!(k.issue_slot_util < k.device_mbu);
+    }
+
+    #[test]
+    fn issue_saturates_at_low_clock() {
+        // Section 6: at the critical frequency the issued-instruction slots
+        // saturate — issue utilization rises as the clock falls.
+        let g = tesla_v100();
+        let w = FftWorkload::new(8192, Precision::Fp32, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let hi = profile_plan(&g, &w, &p, g.boost_clock_mhz).kernels[0].issue_slot_util;
+        let lo = profile_plan(&g, &w, &p, 500.0).kernels[0].issue_slot_util;
+        assert!(lo > hi, "issue util must rise as clock falls: {lo} vs {hi}");
+    }
+}

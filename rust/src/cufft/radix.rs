@@ -1,0 +1,132 @@
+//! Mixed-radix decomposition: how cuFFT factors a smooth length into the
+//! radix passes its kernel zoo supports (radix 2..127, specialized kernels
+//! for 2,3,4,5,7,8,11,13,16,32; composite radices built from them).
+//!
+//! Used by the plan model for smooth non-power-of-two lengths, where the
+//! butterfly cost per element is sum(radix_cost) rather than log2(N), and
+//! by the tests that pin the paper's observation that higher radices (7+)
+//! carry extra measurement variance.
+
+use crate::cufft::plan::factorize;
+
+/// Radices with dedicated cuFFT kernels, largest first (greedy packing).
+pub const NATIVE_RADICES: [u64; 10] = [32, 16, 13, 11, 8, 7, 5, 4, 3, 2];
+
+/// One radix pass in the butterfly schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RadixPass {
+    pub radix: u64,
+}
+
+impl RadixPass {
+    /// Relative butterfly cost per element of a radix-r pass, in radix-2-
+    /// equivalent stages: log2(r) for power-of-two radices; odd radices pay
+    /// a small penalty (no perfectly balanced split).
+    pub fn stage_cost(&self) -> f64 {
+        let log2r = (self.radix as f64).log2();
+        if self.radix.is_power_of_two() {
+            log2r
+        } else {
+            log2r * 1.12
+        }
+    }
+}
+
+/// Greedy mixed-radix schedule for a smooth n: factorize, then pack prime
+/// factors into the largest native radices available.
+pub fn radix_schedule(n: u64) -> Vec<RadixPass> {
+    assert!(n >= 2);
+    let mut counts = std::collections::BTreeMap::new();
+    for p in factorize(n) {
+        *counts.entry(p).or_insert(0u32) += 1;
+    }
+    let mut passes = Vec::new();
+    // 2^k packing: prefer radix 32/16/8/4/2.
+    if let Some(&k) = counts.get(&2) {
+        let mut k = k;
+        for r in [32u64, 16, 8, 4, 2] {
+            let bits = r.trailing_zeros();
+            while k >= bits {
+                passes.push(RadixPass { radix: r });
+                k -= bits;
+            }
+        }
+        counts.remove(&2);
+    }
+    // Other primes: native if supported, else as their own radix (cuFFT has
+    // generic kernels up to 127).
+    for (&p, &k) in &counts {
+        for _ in 0..k {
+            passes.push(RadixPass { radix: p });
+        }
+    }
+    passes.sort_by(|a, b| b.radix.cmp(&a.radix));
+    passes
+}
+
+/// Total radix-2-equivalent stage cost of a schedule.
+pub fn total_stage_cost(passes: &[RadixPass]) -> f64 {
+    passes.iter().map(|p| p.stage_cost()).sum()
+}
+
+/// Whether the schedule uses a "high" radix (7+): the paper observes these
+/// carry up to 5% measurement error (section 4).
+pub fn uses_high_radix(passes: &[RadixPass]) -> bool {
+    passes
+        .iter()
+        .any(|p| !p.radix.is_power_of_two() && p.radix >= 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn product(passes: &[RadixPass]) -> u64 {
+        passes.iter().map(|p| p.radix).product()
+    }
+
+    #[test]
+    fn schedule_reconstructs_n() {
+        for n in [2u64, 8, 96, 768, 1000, 19321 / 139 * 5, 1000000, 1 << 21] {
+            let s = radix_schedule(n);
+            assert_eq!(product(&s), n, "N={n}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn pow2_prefers_large_radices() {
+        let s = radix_schedule(1 << 21);
+        // 21 bits → 32·32·32·32·2 = 4 radix-32 passes + 1 radix-2
+        assert_eq!(s.iter().filter(|p| p.radix == 32).count(), 4);
+        assert_eq!(s.iter().filter(|p| p.radix == 2).count(), 1);
+    }
+
+    #[test]
+    fn stage_cost_matches_log2_for_pow2() {
+        let s = radix_schedule(1 << 13);
+        assert!((total_stage_cost(&s) - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn odd_radices_cost_more() {
+        // 3^4 = 81 vs 2^6 = 64: per-element stage cost of 81 exceeds log2(81)
+        let s3 = radix_schedule(81);
+        assert!(total_stage_cost(&s3) > (81f64).log2());
+    }
+
+    #[test]
+    fn high_radix_detection() {
+        assert!(uses_high_radix(&radix_schedule(7 * 1024)));
+        assert!(uses_high_radix(&radix_schedule(127)));
+        assert!(!uses_high_radix(&radix_schedule(4096)));
+        assert!(!uses_high_radix(&radix_schedule(96))); // 2^5·3
+    }
+
+    #[test]
+    fn smooth_1e6_schedule() {
+        // 10^6 = 2^6 · 5^6
+        let s = radix_schedule(1_000_000);
+        assert_eq!(product(&s), 1_000_000);
+        assert_eq!(s.iter().filter(|p| p.radix == 5).count(), 6);
+    }
+}

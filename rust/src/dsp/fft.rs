@@ -1,0 +1,222 @@
+//! Pure-rust Stockham FFT — the runtime-side numerical oracle.
+//!
+//! The PJRT artifacts are validated against this implementation (which is
+//! itself validated against closed-form DFT cases), giving two independent
+//! oracles for the same math: `kernels/ref.py` at build time, this module
+//! at run time.
+
+/// Complex number as (re, im); kept as a plain struct to avoid any
+/// dependency on external num crates.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+
+    pub fn conj(self) -> C64 {
+        C64::new(self.re, -self.im)
+    }
+
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn expi(theta: f64) -> C64 {
+        C64::new(theta.cos(), theta.sin())
+    }
+}
+
+/// In-place-ish radix-2 Stockham autosort FFT. `sign = -1` forward,
+/// `+1` inverse (unnormalized). Panics unless `x.len()` is a power of two.
+pub fn fft_stockham(x: &[C64], sign: f64) -> Vec<C64> {
+    let n = x.len();
+    assert!(n.is_power_of_two() && n >= 1, "length must be a power of two");
+    if n == 1 {
+        return x.to_vec();
+    }
+    let mut cur = x.to_vec();
+    let mut next = vec![C64::default(); n];
+    // State: viewed as (rows = n_cur, cols = s); n_cur halves, s doubles.
+    let mut n_cur = n;
+    let mut s = 1usize;
+    while n_cur > 1 {
+        let m = n_cur / 2;
+        let theta0 = sign * 2.0 * std::f64::consts::PI / n_cur as f64;
+        for p in 0..m {
+            let w = C64::expi(theta0 * p as f64);
+            for q in 0..s {
+                let a = cur[p * s + q];
+                let b = cur[(p + m) * s + q];
+                next[(2 * p) * s + q] = a.add(b);
+                next[(2 * p + 1) * s + q] = a.sub(b).mul(w);
+            }
+        }
+        std::mem::swap(&mut cur, &mut next);
+        n_cur = m;
+        s *= 2;
+    }
+    cur
+}
+
+/// Forward DFT (matches `jnp.fft.fft` sign conventions).
+pub fn fft(x: &[C64]) -> Vec<C64> {
+    fft_stockham(x, -1.0)
+}
+
+/// Inverse DFT, normalized by 1/N.
+pub fn ifft(x: &[C64]) -> Vec<C64> {
+    let n = x.len() as f64;
+    fft_stockham(x, 1.0).into_iter().map(|c| c.scale(1.0 / n)).collect()
+}
+
+/// Naive O(N²) DFT — the oracle's oracle, for tests only.
+pub fn dft_naive(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    (0..n)
+        .map(|l| {
+            let mut acc = C64::default();
+            for (k, &v) in x.iter().enumerate() {
+                let w = C64::expi(-2.0 * std::f64::consts::PI * (k * l % n) as f64 / n as f64);
+                acc = acc.add(v.mul(w));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Batched power spectrum |X|² of a real/imag plane pair (row-major B×N).
+pub fn power_spectrum(re: &[f32], im: &[f32]) -> Vec<f32> {
+    re.iter()
+        .zip(im)
+        .map(|(r, i)| (*r as f64 * *r as f64 + *i as f64 * *i as f64) as f32)
+        .collect()
+}
+
+/// Harmonic sum over a single spectrum: out[k] = Σ_{h=1..H} p[h·k].
+pub fn harmonic_sum(p: &[f32], harmonics: usize) -> Vec<f32> {
+    let n_out = p.len() / harmonics;
+    (0..n_out)
+        .map(|k| (1..=harmonics).map(|h| p[k * h] as f64).sum::<f64>() as f32)
+        .collect()
+}
+
+/// Mean and population std of a slice.
+pub fn moments(p: &[f32]) -> (f32, f32) {
+    let n = p.len() as f64;
+    let mean = p.iter().map(|x| *x as f64).sum::<f64>() / n;
+    let var = p.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean as f32, var.sqrt() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[C64], b: &[C64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol,
+                "{x:?} vs {y:?}"
+            );
+        }
+    }
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut r = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| C64::new(r.gauss(), r.gauss())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [2usize, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            close(&fft(&x), &dft_naive(&x), 1e-8 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![C64::default(); 16];
+        x[0] = C64::new(1.0, 0.0);
+        for c in fft(&x) {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let x = rand_signal(128, 5);
+        close(&ifft(&fft(&x)), &x, 1e-10);
+    }
+
+    #[test]
+    fn parseval() {
+        let x = rand_signal(512, 9);
+        let y = fft(&x);
+        let et: f64 = x.iter().map(|c| c.abs2()).sum();
+        let ef: f64 = y.iter().map(|c| c.abs2()).sum::<f64>() / 512.0;
+        assert!((et - ef).abs() / et < 1e-12);
+    }
+
+    #[test]
+    fn tone_lands_on_bin() {
+        let n = 64;
+        let k = 5;
+        let x: Vec<C64> = (0..n)
+            .map(|t| C64::expi(2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64))
+            .collect();
+        let y = fft(&x);
+        assert!((y[k].re - n as f64).abs() < 1e-9);
+        for (i, c) in y.iter().enumerate() {
+            if i != k {
+                assert!(c.abs2() < 1e-16, "leak at {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        fft(&vec![C64::default(); 12]);
+    }
+
+    #[test]
+    fn harmonic_sum_basic() {
+        let p: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let hs = harmonic_sum(&p, 2);
+        assert_eq!(hs.len(), 8);
+        assert_eq!(hs[3], 3.0 + 6.0);
+    }
+
+    #[test]
+    fn moments_basic() {
+        let (m, s) = moments(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-6);
+        assert!((s - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime-side DSP: a pure-rust FFT/spectrum/harmonic-sum oracle used to
+//! validate the PJRT artifacts, plus synthetic signal generators for the
+//! end-to-end pipeline example.
+
+pub mod fft;
+pub mod signal;
+
+pub use fft::{fft, harmonic_sum, ifft, moments, power_spectrum, C64};
+pub use signal::{detect_peak, pulsar_time_series, PulsarParams};

@@ -1,0 +1,144 @@
+//! Parallel measurement campaign: fan the full (gpu × precision × length ×
+//! clock) grid across worker threads. The simulator is deterministic per
+//! point, so parallel execution reproduces the serial results exactly —
+//! property-tested below.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::harness::measure::{measure_point, Measurement, Protocol};
+use crate::harness::sweep::{GpuSweep, LengthSweep, SweepConfig};
+use crate::sim::freq_table::freq_table;
+use crate::sim::GpuSpec;
+use crate::types::{FftWorkload, Precision};
+
+/// One grid point job.
+#[derive(Debug, Clone)]
+struct Point {
+    length_idx: usize,
+    freq_idx: usize,
+    n: u64,
+    f_mhz: f64,
+}
+
+/// Run a sweep with `threads` workers. Equivalent to
+/// `harness::sweep::sweep_gpu` but wall-clock ~threads× faster on the full
+/// paper grid.
+pub fn sweep_gpu_parallel(
+    gpu: &GpuSpec,
+    precision: Precision,
+    cfg: &SweepConfig,
+    threads: usize,
+) -> GpuSweep {
+    assert!(gpu.supports(precision));
+    let lengths: Vec<u64> = if precision == Precision::Fp16 {
+        crate::harness::sweep::pow2_only(&cfg.lengths)
+    } else {
+        cfg.lengths.clone()
+    };
+    let freqs = freq_table(gpu).stride(cfg.freq_stride);
+
+    let mut points = Vec::new();
+    for (li, &n) in lengths.iter().enumerate() {
+        for (fi, &f) in freqs.iter().enumerate() {
+            points.push(Point { length_idx: li, freq_idx: fi, n, f_mhz: f });
+        }
+    }
+
+    let gpu = Arc::new(gpu.clone());
+    let protocol = Arc::new(cfg.protocol.clone());
+    let queue = Arc::new(std::sync::Mutex::new(points.into_iter()));
+    let (tx, rx) = mpsc::channel::<(usize, usize, Measurement)>();
+
+    let threads = threads.max(1);
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        let gpu = gpu.clone();
+        let protocol: Arc<Protocol> = protocol.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let point = { queue.lock().unwrap().next() };
+            let Some(p) = point else { return };
+            let w = FftWorkload::new(p.n, precision, gpu.working_set_bytes);
+            let m = measure_point(&gpu, &w, p.f_mhz, &protocol);
+            if tx.send((p.length_idx, p.freq_idx, m)).is_err() {
+                return;
+            }
+        }));
+    }
+    drop(tx);
+
+    // Collect into the (length, freq) grid, preserving order.
+    let mut grid: Vec<Vec<Option<Measurement>>> =
+        lengths.iter().map(|_| vec![None; freqs.len()]).collect();
+    for (li, fi, m) in rx {
+        grid[li][fi] = Some(m);
+    }
+    for h in handles {
+        h.join().expect("campaign worker panicked");
+    }
+
+    GpuSweep {
+        gpu_name: gpu.name.to_string(),
+        precision,
+        lengths: lengths
+            .iter()
+            .zip(grid)
+            .map(|(&n, row)| LengthSweep {
+                n,
+                precision,
+                points: row.into_iter().map(|m| m.expect("missing point")).collect(),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::sweep::sweep_gpu;
+    use crate::sim::gpu::tesla_v100;
+
+    fn cfg() -> SweepConfig {
+        SweepConfig {
+            lengths: vec![1024, 16384],
+            freq_stride: 24,
+            protocol: Protocol { reps_per_run: 3, runs: 3, seed: 77 },
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let g = tesla_v100();
+        let serial = sweep_gpu(&g, Precision::Fp32, &cfg());
+        let parallel = sweep_gpu_parallel(&g, Precision::Fp32, &cfg(), 4);
+        assert_eq!(serial.lengths.len(), parallel.lengths.len());
+        for (s, p) in serial.lengths.iter().zip(&parallel.lengths) {
+            assert_eq!(s.n, p.n);
+            assert_eq!(s.points.len(), p.points.len());
+            for (a, b) in s.points.iter().zip(&p.points) {
+                assert_eq!(a.f_mhz, b.f_mhz);
+                assert_eq!(a.energy_j, b.energy_j, "determinism broken at N={} f={}", s.n, a.f_mhz);
+                assert_eq!(a.time_s, b.time_s);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = tesla_v100();
+        let s = sweep_gpu_parallel(&g, Precision::Fp32, &cfg(), 1);
+        assert_eq!(s.lengths.len(), 2);
+    }
+
+    #[test]
+    fn fp16_filtering_preserved() {
+        let g = tesla_v100();
+        let mut c = cfg();
+        c.lengths = vec![1024, 19321];
+        let s = sweep_gpu_parallel(&g, Precision::Fp16, &c, 2);
+        assert_eq!(s.lengths.len(), 1);
+        assert_eq!(s.lengths[0].n, 1024);
+    }
+}

@@ -1,0 +1,82 @@
+//! Energy/efficiency metric definitions — the paper's equations 3-8.
+
+use crate::types::FftWorkload;
+
+/// eq. (3): E_f = Σ P_i · t_i  — implemented over sensor samples in
+/// `sim::sensor::integrate_energy`; this wrapper documents the pairing.
+pub use crate::sim::sensor::integrate_energy as energy_from_samples;
+
+/// eq. (5): computational performance in FLOPS.
+/// C_p = 5 N log2(N) · N_b · N_FFT / t
+pub fn performance_flops(workload: &FftWorkload, n_runs: u64, total_time_s: f64) -> f64 {
+    if total_time_s <= 0.0 {
+        return 0.0;
+    }
+    workload.flops() * n_runs as f64 / total_time_s
+}
+
+/// eq. (4): energy efficiency E_ef = C_p · t / E_f  (FLOPS per watt).
+pub fn energy_efficiency(c_p_flops: f64, total_time_s: f64, energy_j: f64) -> f64 {
+    if energy_j <= 0.0 {
+        return 0.0;
+    }
+    c_p_flops * total_time_s / energy_j
+}
+
+/// eq. (7): increase in energy efficiency I_ef = E_ef,o / E_ef,d.
+pub fn efficiency_increase(e_ef_optimal: f64, e_ef_default: f64) -> f64 {
+    if e_ef_default <= 0.0 {
+        return 0.0;
+    }
+    e_ef_optimal / e_ef_default
+}
+
+/// GFLOPS/W convenience used by Fig 10.
+pub fn gflops_per_watt(workload: &FftWorkload, n_runs: u64, time_s: f64, energy_j: f64) -> f64 {
+    let cp = performance_flops(workload, n_runs, time_s);
+    energy_efficiency(cp, time_s, energy_j) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Precision};
+
+    fn wl() -> FftWorkload {
+        // 4 FFTs of N=1024 fp32
+        FftWorkload::new(1024, Precision::Fp32, 1024 * 8 * 4)
+    }
+
+    #[test]
+    fn eq5_performance() {
+        let w = wl();
+        // 5·1024·10·4 flops in 1 ms → 204.8 MFLOP / 1e-3 s
+        let f = performance_flops(&w, 1, 1e-3);
+        assert!((f - 5.0 * 1024.0 * 10.0 * 4.0 / 1e-3).abs() < 1.0);
+        assert_eq!(performance_flops(&w, 1, 0.0), 0.0);
+    }
+
+    #[test]
+    fn eq4_is_flops_per_watt() {
+        // C_p·t/E = (flops/s)·s/J = flops/J = flops per watt-second per second
+        let w = wl();
+        let cp = performance_flops(&w, 1, 2.0);
+        let eef = energy_efficiency(cp, 2.0, 100.0);
+        // total flops / energy
+        assert!((eef - w.flops() / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq7_ratio() {
+        assert_eq!(efficiency_increase(3.0, 2.0), 1.5);
+        assert_eq!(efficiency_increase(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn gflops_per_watt_scales() {
+        let w = wl();
+        let a = gflops_per_watt(&w, 10, 1.0, 50.0);
+        let b = gflops_per_watt(&w, 10, 1.0, 100.0);
+        assert!((a / b - 2.0).abs() < 1e-9);
+    }
+}

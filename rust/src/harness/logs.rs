@@ -1,0 +1,203 @@
+//! The two measurement log files the paper's protocol produces, and their
+//! timestamp merge (the job the authors' R script does — section 4):
+//!
+//!   * an nvidia-smi/tegrastats style log: timestamp, power, core clock,
+//!     memory clock, sampled every ~10-14 ms,
+//!   * an nvprof style log: begin/end timestamps of every GPU kernel.
+//!
+//! `merge` localizes the FFT kernels inside the smi log (the red dots of
+//! Fig 2) and verifies the requested clock was actually applied.
+
+use crate::sim::sensor::PowerSample;
+
+/// One nvprof-style kernel event.
+#[derive(Debug, Clone)]
+pub struct KernelEvent {
+    pub name: String,
+    pub begin_s: f64,
+    pub end_s: f64,
+}
+
+/// The merged view of one measurement run.
+#[derive(Debug, Clone)]
+pub struct MergedLog {
+    /// Samples falling inside any kernel interval (compute samples).
+    pub compute: Vec<PowerSample>,
+    /// Samples outside every kernel interval (grey dots of Fig 2).
+    pub noncompute: Vec<PowerSample>,
+    /// nvprof total kernel time (the paper's execution-time source).
+    pub kernel_time_s: f64,
+    /// Whether every compute sample reports the requested clock
+    /// (the Titan V capping check of section 4).
+    pub clock_honoured: bool,
+    /// Maximum clock observed while computing.
+    pub observed_clock_mhz: f64,
+}
+
+/// Render samples in the nvidia-smi CSV dialect (timestamp-ms, W, MHz, MHz).
+pub fn render_smi_log(samples: &[PowerSample]) -> String {
+    let mut out = String::from("timestamp_ms,power_w,core_clock_mhz,mem_clock_mhz\n");
+    for s in samples {
+        out.push_str(&format!(
+            "{:.1},{:.2},{:.0},{:.0}\n",
+            s.timestamp_s * 1e3,
+            s.power_w,
+            s.core_clock_mhz,
+            s.mem_clock_mhz
+        ));
+    }
+    out
+}
+
+/// Render kernel events in an nvprof-like CSV dialect.
+pub fn render_nvprof_log(events: &[KernelEvent]) -> String {
+    let mut out = String::from("kernel,begin_ms,end_ms\n");
+    for e in events {
+        out.push_str(&format!(
+            "{},{:.3},{:.3}\n",
+            e.name,
+            e.begin_s * 1e3,
+            e.end_s * 1e3
+        ));
+    }
+    out
+}
+
+/// Parse the smi CSV back (round-trip used by tests and the `figure 2` CLI).
+pub fn parse_smi_log(text: &str) -> Vec<PowerSample> {
+    text.lines()
+        .skip(1)
+        .filter_map(|l| {
+            let mut it = l.split(',');
+            Some(PowerSample {
+                timestamp_s: it.next()?.parse::<f64>().ok()? / 1e3,
+                power_w: it.next()?.parse().ok()?,
+                core_clock_mhz: it.next()?.parse().ok()?,
+                mem_clock_mhz: it.next()?.parse().ok()?,
+            })
+        })
+        .collect()
+}
+
+/// Merge the two logs by timestamp (the R-script step).
+///
+/// Both logs are chronologically ordered (they are append-only recordings),
+/// so the kernel localization is a two-pointer scan: O(samples + events)
+/// rather than O(samples × events) — the harness merges timelines with
+/// thousands of repeated-batch kernel events per measurement (§Perf).
+pub fn merge(
+    samples: &[PowerSample],
+    events: &[KernelEvent],
+    requested_clock_mhz: f64,
+) -> MergedLog {
+    debug_assert!(samples.windows(2).all(|w| w[0].timestamp_s <= w[1].timestamp_s));
+    debug_assert!(events.windows(2).all(|w| w[0].begin_s <= w[1].begin_s));
+    let mut compute = Vec::new();
+    let mut noncompute = Vec::new();
+    let mut ei = 0usize;
+    for s in samples {
+        let t = s.timestamp_s;
+        while ei < events.len() && events[ei].end_s <= t {
+            ei += 1;
+        }
+        if ei < events.len() && t >= events[ei].begin_s && t < events[ei].end_s {
+            compute.push(*s);
+        } else {
+            noncompute.push(*s);
+        }
+    }
+    let kernel_time_s = events.iter().map(|e| e.end_s - e.begin_s).sum();
+    let observed_clock_mhz = compute
+        .iter()
+        .map(|s| s.core_clock_mhz)
+        .fold(0.0_f64, f64::max);
+    let clock_honoured = compute
+        .iter()
+        .all(|s| (s.core_clock_mhz - requested_clock_mhz).abs() < 1.0);
+    MergedLog {
+        compute,
+        noncompute,
+        kernel_time_s,
+        clock_honoured,
+        observed_clock_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, p: f64, clk: f64) -> PowerSample {
+        PowerSample {
+            timestamp_s: t,
+            power_w: p,
+            core_clock_mhz: clk,
+            mem_clock_mhz: 877.0,
+        }
+    }
+
+    #[test]
+    fn merge_splits_compute_from_noncompute() {
+        let samples: Vec<PowerSample> =
+            (0..10).map(|i| sample(i as f64 * 0.1, 100.0, 1000.0)).collect();
+        let events = vec![KernelEvent {
+            name: "fft".into(),
+            begin_s: 0.25,
+            end_s: 0.65,
+        }];
+        let m = merge(&samples, &events, 1000.0);
+        assert_eq!(m.compute.len(), 4); // t = .3, .4, .5, .6
+        assert_eq!(m.noncompute.len(), 6);
+        assert!((m.kernel_time_s - 0.4).abs() < 1e-12);
+        assert!(m.clock_honoured);
+    }
+
+    #[test]
+    fn capped_clock_detected() {
+        // Titan V case: requested 1912 but computes at 1335.
+        let samples = vec![sample(0.1, 150.0, 1335.0), sample(0.2, 150.0, 1335.0)];
+        let events = vec![KernelEvent {
+            name: "fft".into(),
+            begin_s: 0.0,
+            end_s: 0.3,
+        }];
+        let m = merge(&samples, &events, 1912.0);
+        assert!(!m.clock_honoured);
+        assert_eq!(m.observed_clock_mhz, 1335.0);
+    }
+
+    #[test]
+    fn smi_log_roundtrip() {
+        let samples = vec![sample(0.0142, 213.55, 945.0), sample(0.0289, 210.0, 945.0)];
+        let text = render_smi_log(&samples);
+        let back = parse_smi_log(&text);
+        assert_eq!(back.len(), 2);
+        assert!((back[0].timestamp_s - 0.0142).abs() < 1e-4);
+        assert!((back[0].power_w - 213.55).abs() < 1e-9);
+        assert_eq!(back[1].core_clock_mhz, 945.0);
+    }
+
+    #[test]
+    fn nvprof_log_rendering() {
+        let ev = vec![KernelEvent {
+            name: "vector_fft_radix8".into(),
+            begin_s: 0.001,
+            end_s: 0.004,
+        }];
+        let text = render_nvprof_log(&ev);
+        assert!(text.contains("vector_fft_radix8,1.000,4.000"));
+    }
+
+    #[test]
+    fn merge_with_multi_kernel_events() {
+        let samples: Vec<PowerSample> =
+            (0..20).map(|i| sample(i as f64 * 0.05, 100.0, 900.0)).collect();
+        let events = vec![
+            KernelEvent { name: "pass0".into(), begin_s: 0.10, end_s: 0.30 },
+            KernelEvent { name: "pass1".into(), begin_s: 0.50, end_s: 0.70 },
+        ];
+        let m = merge(&samples, &events, 900.0);
+        assert!((m.kernel_time_s - 0.4).abs() < 1e-12);
+        assert!(m.compute.len() >= 6);
+    }
+}

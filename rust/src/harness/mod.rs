@@ -1,0 +1,12 @@
+//! Measurement harness: the paper's experimental protocol (section 4) —
+//! sweep orchestration, smi/nvprof log emulation + merge, and the energy
+//! metric definitions (eqs. 3-8).
+
+pub mod campaign;
+pub mod energy;
+pub mod logs;
+pub mod measure;
+pub mod sweep;
+
+pub use measure::{measure_point, Measurement, Protocol};
+pub use sweep::{sweep_all, sweep_gpu, GpuSweep, LengthSweep, SweepConfig};

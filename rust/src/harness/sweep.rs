@@ -1,0 +1,209 @@
+//! Frequency sweep orchestrator: the paper's full measurement grid —
+//! every supported clock × every FFT length × every precision × every GPU.
+
+use crate::sim::freq_table::freq_table;
+use crate::sim::GpuSpec;
+use crate::types::{FftWorkload, Precision};
+
+use super::measure::{measure_point, Measurement, Protocol};
+
+/// FFT lengths in the paper's test set: powers of two 2^5..2^21, a few
+/// smooth non-powers-of-two, and Bluestein lengths (139², a large prime
+/// multiple).
+pub fn paper_lengths() -> Vec<u64> {
+    let mut v: Vec<u64> = (5..=21).map(|k| 1u64 << k).collect();
+    v.extend([96, 768, 1536, 3 * 4096, 5 * 4096, 1000000]); // smooth non-pow2
+    v.extend([19321, 32771 * 2]); // Bluestein (139², 2·prime)
+    v.sort_unstable();
+    v
+}
+
+/// A reduced length set for quick sweeps and tests.
+pub fn quick_lengths() -> Vec<u64> {
+    vec![256, 1024, 8192, 16384, 1 << 18, 1 << 21, 19321]
+}
+
+/// Only power-of-two lengths (the FP16 constraint).
+pub fn pow2_only(lengths: &[u64]) -> Vec<u64> {
+    lengths
+        .iter()
+        .copied()
+        .filter(|n| n & (n - 1) == 0)
+        .collect()
+}
+
+/// The sweep result for one FFT length: one Measurement per clock.
+#[derive(Debug, Clone)]
+pub struct LengthSweep {
+    pub n: u64,
+    pub precision: Precision,
+    pub points: Vec<Measurement>,
+}
+
+impl LengthSweep {
+    pub fn frequencies(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.f_mhz).collect()
+    }
+
+    /// Measurement at (or nearest to) a given clock.
+    pub fn at(&self, f_mhz: f64) -> &Measurement {
+        self.points
+            .iter()
+            .min_by(|a, b| {
+                (a.f_mhz - f_mhz)
+                    .abs()
+                    .partial_cmp(&(b.f_mhz - f_mhz).abs())
+                    .unwrap()
+            })
+            .expect("empty sweep")
+    }
+
+    /// The default (boost-clock) point.
+    pub fn default_point(&self, gpu: &GpuSpec) -> &Measurement {
+        self.at(gpu.boost_clock_mhz)
+    }
+}
+
+/// Full sweep for one (gpu, precision): every length × every clock.
+#[derive(Debug, Clone)]
+pub struct GpuSweep {
+    pub gpu_name: String,
+    pub precision: Precision,
+    pub lengths: Vec<LengthSweep>,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub lengths: Vec<u64>,
+    /// Take every k-th table frequency (1 = the paper's full grid).
+    pub freq_stride: usize,
+    pub protocol: Protocol,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            lengths: paper_lengths(),
+            freq_stride: 4,
+            protocol: Protocol::default(),
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn quick() -> Self {
+        Self {
+            lengths: quick_lengths(),
+            freq_stride: 12,
+            protocol: Protocol::quick(),
+        }
+    }
+}
+
+/// Run the sweep for one gpu/precision pair. Lengths unsupported by the
+/// precision (FP16 non-pow2) are skipped, mirroring cuFFT's support matrix.
+pub fn sweep_gpu(gpu: &GpuSpec, precision: Precision, cfg: &SweepConfig) -> GpuSweep {
+    assert!(
+        gpu.supports(precision),
+        "{} does not support {}",
+        gpu.name,
+        precision
+    );
+    let lengths: Vec<u64> = if precision == Precision::Fp16 {
+        pow2_only(&cfg.lengths)
+    } else {
+        cfg.lengths.clone()
+    };
+    let freqs = freq_table(gpu).stride(cfg.freq_stride);
+    let sweeps = lengths
+        .iter()
+        .map(|&n| {
+            let w = FftWorkload::new(n, precision, gpu.working_set_bytes);
+            let points = freqs
+                .iter()
+                .map(|&f| measure_point(gpu, &w, f, &cfg.protocol))
+                .collect();
+            LengthSweep { n, precision, points }
+        })
+        .collect();
+    GpuSweep {
+        gpu_name: gpu.name.to_string(),
+        precision,
+        lengths: sweeps,
+    }
+}
+
+/// Every supported (gpu, precision) sweep for a set of GPUs.
+pub fn sweep_all(gpus: &[GpuSpec], cfg: &SweepConfig) -> Vec<(GpuSpec, GpuSweep)> {
+    let mut out = Vec::new();
+    for gpu in gpus {
+        for p in Precision::ALL {
+            if gpu.supports(p) {
+                out.push((gpu.clone(), sweep_gpu(gpu, p, cfg)));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::{tesla_p4, tesla_v100};
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            lengths: vec![1024, 16384],
+            freq_stride: 30,
+            protocol: Protocol { reps_per_run: 4, runs: 3, seed: 11 },
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let g = tesla_v100();
+        let cfg = tiny_cfg();
+        let s = sweep_gpu(&g, Precision::Fp32, &cfg);
+        assert_eq!(s.lengths.len(), 2);
+        let nf = freq_table(&g).stride(30).len();
+        for l in &s.lengths {
+            assert_eq!(l.points.len(), nf);
+        }
+    }
+
+    #[test]
+    fn fp16_drops_non_pow2() {
+        let g = tesla_v100();
+        let mut cfg = tiny_cfg();
+        cfg.lengths = vec![1024, 19321, 4096];
+        let s = sweep_gpu(&g, Precision::Fp16, &cfg);
+        let ns: Vec<u64> = s.lengths.iter().map(|l| l.n).collect();
+        assert_eq!(ns, vec![1024, 4096]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn p4_fp16_rejected() {
+        sweep_gpu(&tesla_p4(), Precision::Fp16, &tiny_cfg());
+    }
+
+    #[test]
+    fn paper_lengths_sorted_unique_and_has_bluestein() {
+        let ls = paper_lengths();
+        assert!(ls.windows(2).all(|w| w[0] < w[1]));
+        assert!(ls.contains(&19321));
+        assert!(ls.contains(&(1 << 21)));
+        assert!(ls.contains(&32));
+    }
+
+    #[test]
+    fn at_finds_nearest_clock() {
+        let g = tesla_v100();
+        let s = sweep_gpu(&g, Precision::Fp32, &tiny_cfg());
+        let m = s.lengths[0].at(946.0);
+        assert!((m.f_mhz - 946.0).abs() < 120.0);
+        let d = s.lengths[0].default_point(&g);
+        assert!((d.f_mhz - g.boost_clock_mhz).abs() < 120.0);
+    }
+}

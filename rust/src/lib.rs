@@ -1,0 +1,26 @@
+//! # fftsweep
+//!
+//! Reproduction of "Efficiency Near the Edge: Increasing the Energy
+//! Efficiency of FFTs on GPUs for Real-time Edge Computing"
+//! (Adámek et al., 2020) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L1** (python, build-time): Pallas Stockham FFT / spectrum /
+//!   harmonic-sum kernels,
+//! * **L2** (python, build-time): JAX graphs AOT-lowered to HLO text,
+//! * **L3** (this crate): PJRT runtime, request coordinator, the GPU DVFS
+//!   simulator that substitutes for the paper's five NVIDIA cards, the
+//!   measurement harness (energy eqs. 3-8) and the analysis that
+//!   regenerates every table and figure.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod cufft;
+pub mod dsp;
+pub mod harness;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod types;
+pub mod util;

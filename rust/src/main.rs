@@ -1,0 +1,28 @@
+//! `fftsweep` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   report            run the sweep grid, write every table/figure CSV
+//!   table <1|2|3|4>   print one paper table
+//!   figure <2..20>    print one paper figure's series
+//!   sweep             sweep one GPU/precision, print optima
+//!   pipeline          run the section-5.3 pipeline comparison (Table 4)
+//!   selftest          load AOT artifacts, run them, verify vs rust oracle
+//!   serve             coordinator demo: batch-serve random FFT jobs
+//!
+//! `fftsweep --help` prints usage.
+
+use fftsweep::util::cliargs::Args;
+
+mod cli;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match cli::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,12 @@
+//! The section-5.3 pulsar-search pipeline: stage model, simulated NVML
+//! clock control, pipeline runner (Table 4 / Fig 19) and the real-time
+//! provisioning model (section 2.3).
+
+pub mod nvml;
+pub mod realtime;
+pub mod scheduler;
+pub mod runner;
+pub mod stages;
+
+pub use nvml::{ClockGuard, SimNvml};
+pub use runner::{run_pipeline, table4, PipelineRun, Table4Row};

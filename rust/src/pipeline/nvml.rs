@@ -1,0 +1,178 @@
+//! Simulated NVIDIA Management Library (NVML) clock control.
+//!
+//! The paper's pipeline demo (section 5.3) brackets the cuFFT call with
+//! `nvmlDeviceSetGpuLockedClocks` / `nvmlDeviceResetGpuLockedClocks`.
+//! This module reproduces that call surface against the simulator,
+//! including the two real-world constraints the paper notes:
+//!   * locked clocks are fully supported only on Tesla-class boards,
+//!   * requests snap to the card's supported frequency table, and the
+//!     driver may cap the effective compute clock (Titan V).
+
+use std::sync::Mutex;
+
+use crate::sim::freq_table::{freq_table, FreqTable};
+use crate::sim::GpuSpec;
+
+#[derive(Debug, thiserror::Error)]
+pub enum NvmlError {
+    #[error("locked clocks not supported on {0} (non-Tesla board)")]
+    NotSupported(String),
+    #[error("requested clock range [{0}, {1}] MHz invalid")]
+    BadRange(f64, f64),
+}
+
+/// Clock-lock state of one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClockState {
+    Default,
+    Locked { min_mhz: f64, max_mhz: f64 },
+}
+
+/// The simulated NVML handle for one GPU.
+pub struct SimNvml {
+    gpu_name: String,
+    boost_mhz: f64,
+    table: FreqTable,
+    tesla_class: bool,
+    state: Mutex<ClockState>,
+    /// Every state transition, for the Fig 19 clock trace.
+    transitions: Mutex<Vec<(ClockState, f64)>>,
+}
+
+impl SimNvml {
+    pub fn new(gpu: &GpuSpec) -> Self {
+        Self {
+            gpu_name: gpu.name.to_string(),
+            boost_mhz: gpu.boost_clock_mhz,
+            table: freq_table(gpu),
+            tesla_class: gpu.name.starts_with("Tesla"),
+            state: Mutex::new(ClockState::Default),
+            transitions: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// nvmlDeviceSetGpuLockedClocks(min, max).
+    pub fn set_gpu_locked_clocks(&self, min_mhz: f64, max_mhz: f64) -> Result<(), NvmlError> {
+        if !self.tesla_class {
+            return Err(NvmlError::NotSupported(self.gpu_name.clone()));
+        }
+        if !(min_mhz <= max_mhz) || min_mhz <= 0.0 {
+            return Err(NvmlError::BadRange(min_mhz, max_mhz));
+        }
+        let snapped = ClockState::Locked {
+            min_mhz: self.table.snap(min_mhz),
+            max_mhz: self.table.snap(max_mhz),
+        };
+        *self.state.lock().unwrap() = snapped;
+        self.transitions
+            .lock()
+            .unwrap()
+            .push((snapped, self.current_clock_mhz()));
+        Ok(())
+    }
+
+    /// nvmlDeviceResetGpuLockedClocks().
+    pub fn reset_gpu_locked_clocks(&self) {
+        *self.state.lock().unwrap() = ClockState::Default;
+        self.transitions
+            .lock()
+            .unwrap()
+            .push((ClockState::Default, self.current_clock_mhz()));
+    }
+
+    pub fn state(&self) -> ClockState {
+        *self.state.lock().unwrap()
+    }
+
+    /// The clock the card would run a kernel at right now.
+    pub fn current_clock_mhz(&self) -> f64 {
+        match *self.state.lock().unwrap() {
+            ClockState::Default => self.boost_mhz,
+            ClockState::Locked { max_mhz, .. } => max_mhz,
+        }
+    }
+
+    pub fn transition_count(&self) -> usize {
+        self.transitions.lock().unwrap().len()
+    }
+}
+
+/// RAII clock-lock guard: lock on creation, reset on drop (exception-safe
+/// pipeline integration with "minimal changes to the codebase").
+pub struct ClockGuard<'a> {
+    nvml: &'a SimNvml,
+}
+
+impl<'a> ClockGuard<'a> {
+    pub fn lock(nvml: &'a SimNvml, mhz: f64) -> Result<Self, NvmlError> {
+        nvml.set_gpu_locked_clocks(mhz, mhz)?;
+        Ok(Self { nvml })
+    }
+}
+
+impl Drop for ClockGuard<'_> {
+    fn drop(&mut self) {
+        self.nvml.reset_gpu_locked_clocks();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::{jetson_nano, tesla_v100, titan_xp};
+
+    #[test]
+    fn lock_and_reset() {
+        let nv = SimNvml::new(&tesla_v100());
+        assert_eq!(nv.current_clock_mhz(), 1530.0);
+        nv.set_gpu_locked_clocks(945.0, 945.0).unwrap();
+        let f = nv.current_clock_mhz();
+        assert!((f - 945.0).abs() <= 8.0, "snapped to {f}");
+        nv.reset_gpu_locked_clocks();
+        assert_eq!(nv.current_clock_mhz(), 1530.0);
+        assert_eq!(nv.transition_count(), 2);
+    }
+
+    #[test]
+    fn non_tesla_rejected() {
+        for g in [titan_xp(), jetson_nano()] {
+            let nv = SimNvml::new(&g);
+            assert!(matches!(
+                nv.set_gpu_locked_clocks(900.0, 900.0),
+                Err(NvmlError::NotSupported(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn bad_range_rejected() {
+        let nv = SimNvml::new(&tesla_v100());
+        assert!(matches!(
+            nv.set_gpu_locked_clocks(1000.0, 900.0),
+            Err(NvmlError::BadRange(..))
+        ));
+        assert!(nv.set_gpu_locked_clocks(-5.0, 900.0).is_err());
+    }
+
+    #[test]
+    fn guard_resets_on_drop() {
+        let nv = SimNvml::new(&tesla_v100());
+        {
+            let _g = ClockGuard::lock(&nv, 945.0).unwrap();
+            assert!(matches!(nv.state(), ClockState::Locked { .. }));
+        }
+        assert_eq!(nv.state(), ClockState::Default);
+    }
+
+    #[test]
+    fn requests_snap_to_table() {
+        let nv = SimNvml::new(&tesla_v100());
+        nv.set_gpu_locked_clocks(946.3, 946.3).unwrap();
+        if let ClockState::Locked { max_mhz, .. } = nv.state() {
+            let table = freq_table(&tesla_v100());
+            assert!(table.contains(max_mhz));
+        } else {
+            panic!("not locked");
+        }
+    }
+}

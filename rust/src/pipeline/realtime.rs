@@ -1,0 +1,107 @@
+//! Real-time processing model (paper section 2.3 / 6.1).
+//!
+//! The real-time speed-up S = t_a / t_p: acquisition time over processing
+//! time. S >= 1 → the pipeline keeps up. Lowering the clock trades S for
+//! energy; when S drops below 1 more cards are needed, with the capital vs
+//! operational cost trade-off the paper discusses.
+
+/// Real-time characteristics of one configuration.
+#[derive(Debug, Clone)]
+pub struct RealtimeAssessment {
+    /// S = t_a / t_p.
+    pub speedup: f64,
+    pub realtime: bool,
+    /// Cards needed to restore S >= 1 at this clock (paper's "60% more
+    /// hardware" style statements).
+    pub cards_needed: u64,
+    /// Fractional extra hardware vs a single boost-clock card that just
+    /// meets real time.
+    pub extra_hardware_frac: f64,
+}
+
+/// Assess a configuration: data acquired over `t_acquire_s` must be
+/// processed in `t_process_s` per card; FFT batches split freely across
+/// cards (the paper's assumption for transforms that fit in card memory).
+pub fn assess(t_acquire_s: f64, t_process_s: f64) -> RealtimeAssessment {
+    assert!(t_acquire_s > 0.0 && t_process_s > 0.0);
+    let speedup = t_acquire_s / t_process_s;
+    let cards_needed = (t_process_s / t_acquire_s).ceil().max(1.0) as u64;
+    RealtimeAssessment {
+        speedup,
+        realtime: speedup >= 1.0,
+        cards_needed,
+        extra_hardware_frac: (t_process_s / t_acquire_s - 1.0).max(0.0),
+    }
+}
+
+/// The energy/hardware trade-off of running at a lower clock: given the
+/// boost-clock processing time (S=1 reference: t_a == t_p_boost) and the
+/// slowdown factor at the tuned clock, how much more hardware for how much
+/// less energy?
+#[derive(Debug, Clone)]
+pub struct TradeOff {
+    pub slowdown: f64,
+    pub cards_needed: u64,
+    pub energy_ratio: f64,
+    /// Net energy change across the (larger) fleet.
+    pub fleet_energy_ratio: f64,
+}
+
+pub fn tradeoff(slowdown: f64, energy_ratio: f64) -> TradeOff {
+    assert!(slowdown > 0.0 && energy_ratio > 0.0);
+    let cards = slowdown.ceil().max(1.0) as u64;
+    TradeOff {
+        slowdown,
+        cards_needed: cards,
+        energy_ratio,
+        // Each card now processes 1/cards of the data in the same wall
+        // time; total energy scales with the per-unit-work energy only.
+        fleet_energy_ratio: energy_ratio,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_above_one_is_realtime() {
+        let a = assess(10.0, 8.0);
+        assert!(a.realtime);
+        assert!((a.speedup - 1.25).abs() < 1e-12);
+        assert_eq!(a.cards_needed, 1);
+        assert_eq!(a.extra_hardware_frac, 0.0);
+    }
+
+    #[test]
+    fn jetson_case_sixty_percent_more_hardware() {
+        // Paper: Nano needs ~60% more time at optimal → 60% more hardware.
+        let a = assess(1.0, 1.6);
+        assert!(!a.realtime);
+        assert_eq!(a.cards_needed, 2);
+        assert!((a.extra_hardware_frac - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v100_case_stays_realtime_with_slack() {
+        // <5% slowdown fits inside a real pipeline's performance buffer.
+        let a = assess(1.0, 1.04);
+        assert_eq!(a.cards_needed, 2); // strictly S<1 without buffer...
+        assert!(!a.realtime);
+        let with_buffer = assess(1.10, 1.04);
+        assert!(with_buffer.realtime);
+    }
+
+    #[test]
+    fn tradeoff_fleet_energy() {
+        let t = tradeoff(1.6, 0.6);
+        assert_eq!(t.cards_needed, 2);
+        assert!((t.fleet_energy_ratio - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_times_rejected() {
+        assess(0.0, 1.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! DVFS deadline scheduler — the "integration into existing pipelines"
+//! extension (paper section 6.2): given a real-time deadline per batch,
+//! pick the lowest-energy clock that still meets it.
+//!
+//! This is the policy a production pipeline would run instead of a fixed
+//! mean-optimal clock: workloads with slack get deeper frequency cuts;
+//! tight deadlines stay near boost.
+
+use crate::sim::freq_table::freq_table;
+use crate::sim::{run_batch, GpuSpec};
+use crate::types::FftWorkload;
+
+/// A scheduling decision.
+#[derive(Debug, Clone)]
+pub struct ClockChoice {
+    pub f_mhz: f64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Energy relative to running the same batch at boost.
+    pub energy_vs_boost: f64,
+    /// Deadline slack that remains (fraction of the deadline).
+    pub slack: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ScheduleError {
+    #[error("deadline {0} s unreachable even at boost ({1} s needed)")]
+    Infeasible(f64, f64),
+}
+
+/// Pick the energy-minimal supported clock whose batch time fits within
+/// `deadline_s`. Scans the (subsampled) frequency table — the table is
+/// small and the exec model analytic, so this is microseconds of work.
+pub fn choose_clock(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    deadline_s: f64,
+    freq_stride: usize,
+) -> Result<ClockChoice, ScheduleError> {
+    let boost = run_batch(gpu, workload, gpu.boost_clock_mhz);
+    if boost.timing.total_s > deadline_s {
+        return Err(ScheduleError::Infeasible(deadline_s, boost.timing.total_s));
+    }
+    let mut best: Option<ClockChoice> = None;
+    for f in freq_table(gpu).stride(freq_stride) {
+        let run = run_batch(gpu, workload, f);
+        if run.timing.total_s > deadline_s {
+            continue;
+        }
+        let cand = ClockChoice {
+            f_mhz: f,
+            time_s: run.timing.total_s,
+            energy_j: run.energy_j,
+            energy_vs_boost: run.energy_j / boost.energy_j,
+            slack: 1.0 - run.timing.total_s / deadline_s,
+        };
+        if best.as_ref().map(|b| cand.energy_j < b.energy_j).unwrap_or(true) {
+            best = Some(cand);
+        }
+    }
+    Ok(best.expect("boost clock always feasible here"))
+}
+
+/// Schedule a heterogeneous queue of (workload, deadline) batches; returns
+/// the per-batch choices plus the aggregate saving.
+pub fn schedule_queue(
+    gpu: &GpuSpec,
+    queue: &[(FftWorkload, f64)],
+    freq_stride: usize,
+) -> Result<(Vec<ClockChoice>, f64), ScheduleError> {
+    let mut choices = Vec::with_capacity(queue.len());
+    let mut e_tuned = 0.0;
+    let mut e_boost = 0.0;
+    for (w, d) in queue {
+        let c = choose_clock(gpu, w, *d, freq_stride)?;
+        e_tuned += c.energy_j;
+        e_boost += c.energy_j / c.energy_vs_boost;
+        choices.push(c);
+    }
+    Ok((choices, 1.0 - e_tuned / e_boost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    fn wl(n: u64) -> FftWorkload {
+        let g = tesla_v100();
+        FftWorkload::new(n, Precision::Fp32, g.working_set_bytes)
+    }
+
+    #[test]
+    fn loose_deadline_picks_low_clock() {
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let c = choose_clock(&g, &w, boost_t * 3.0, 4).unwrap();
+        assert!(c.f_mhz < 0.8 * g.boost_clock_mhz, "chose {}", c.f_mhz);
+        assert!(c.energy_vs_boost < 0.8);
+        assert!(c.slack > 0.0);
+    }
+
+    #[test]
+    fn tight_deadline_stays_near_boost() {
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let c = choose_clock(&g, &w, boost_t * 1.005, 4).unwrap();
+        // must meet the deadline
+        assert!(c.time_s <= boost_t * 1.005);
+        // cannot cut very deep
+        assert!(c.f_mhz > 0.55 * g.boost_clock_mhz);
+    }
+
+    #[test]
+    fn infeasible_deadline_rejected() {
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        assert!(matches!(
+            choose_clock(&g, &w, boost_t * 0.5, 4),
+            Err(ScheduleError::Infeasible(..))
+        ));
+    }
+
+    #[test]
+    fn deeper_slack_never_costs_more_energy() {
+        let g = tesla_v100();
+        let w = wl(1024);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let mut last = f64::MAX;
+        for mult in [1.01, 1.05, 1.2, 2.0, 4.0] {
+            let c = choose_clock(&g, &w, boost_t * mult, 4).unwrap();
+            assert!(
+                c.energy_j <= last + 1e-9,
+                "more slack must not cost energy (mult {mult})"
+            );
+            last = c.energy_j;
+        }
+    }
+
+    #[test]
+    fn queue_schedule_aggregates() {
+        let g = tesla_v100();
+        let boost_t = run_batch(&g, &wl(16384), g.boost_clock_mhz).timing.total_s;
+        let queue = vec![
+            (wl(16384), boost_t * 2.0),
+            (wl(1024), boost_t * 1.5),
+            (wl(262144), boost_t * 8.0),
+        ];
+        let (choices, saving) = schedule_queue(&g, &queue, 8).unwrap();
+        assert_eq!(choices.len(), 3);
+        assert!(saving > 0.1, "aggregate saving {saving}");
+    }
+
+    #[test]
+    fn prop_deadline_always_met() {
+        let g = tesla_v100();
+        crate::util::prop::check(
+            "scheduler meets deadlines",
+            |rng| {
+                let n = 1u64 << rng.range_u64(8, 18);
+                let mult = 1.0 + rng.f64() * 3.0;
+                (n, mult)
+            },
+            |&(n, mult)| {
+                let w = wl(n);
+                let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+                let deadline = boost_t * mult;
+                match choose_clock(&g, &w, deadline, 12) {
+                    Ok(c) => {
+                        if c.time_s > deadline {
+                            return Err(format!("deadline violated: {} > {}", c.time_s, deadline));
+                        }
+                        if c.energy_vs_boost > 1.0 + 1e-9 {
+                            return Err("worse than boost".into());
+                        }
+                        Ok(())
+                    }
+                    Err(e) => Err(format!("unexpected: {e}")),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! The pulsar-search pipeline stage model (paper section 5.3).
+//!
+//! Stages: FFT → power spectrum → mean & std → harmonic sum.  The non-FFT
+//! stages are simple pointwise/reduction kernels; the harmonic sum is the
+//! standard doubling implementation (log2(H) passes over the spectrum).
+//! Stage traffic is expressed in units of the complex input size, the same
+//! convention as `cufft::plan`.
+
+use crate::cufft::plan::{plan, KernelDesc, KernelKind};
+use crate::types::Precision;
+
+/// One pipeline stage: a name plus the kernels it launches.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: &'static str,
+    pub kernels: Vec<KernelDesc>,
+    pub is_fft: bool,
+}
+
+fn pointwise(traffic_factor: f64) -> KernelDesc {
+    KernelDesc {
+        kind: KernelKind::Pointwise,
+        stages: 0.0,
+        traffic_factor,
+        shared_resident: false,
+    }
+}
+
+/// Build the stage list for FFT length `n` and `harmonics` summed.
+pub fn pipeline_stages(n: u64, precision: Precision, harmonics: u64) -> Vec<Stage> {
+    assert!(harmonics >= 1 && harmonics.is_power_of_two(), "harmonics must be a power of two");
+    let fft_plan = plan(n, precision);
+    let mut stages = vec![Stage {
+        name: "fft",
+        kernels: fft_plan.kernels.clone(),
+        is_fft: true,
+    }];
+    // power spectrum: read complex (1.0 of data), write real (0.5)
+    stages.push(Stage {
+        name: "power_spectrum",
+        kernels: vec![pointwise(1.5)],
+        is_fft: false,
+    });
+    // mean & std: read the real spectrum (0.5), tiny write
+    stages.push(Stage {
+        name: "mean_std",
+        kernels: vec![pointwise(0.55)],
+        is_fft: false,
+    });
+    // harmonic sum: doubling algorithm, log2(H) passes, each read+write the
+    // real spectrum (0.5 + 0.5), with a fixed normalization pass.
+    let hs_passes = (harmonics as f64).log2().max(0.0) as u64;
+    let mut hs = vec![pointwise(0.5)];
+    for _ in 0..hs_passes {
+        hs.push(pointwise(1.0));
+    }
+    stages.push(Stage {
+        name: "harmonic_sum",
+        kernels: hs,
+        is_fft: false,
+    });
+    stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_list_structure() {
+        let s = pipeline_stages(500_000, Precision::Fp32, 8);
+        let names: Vec<&str> = s.iter().map(|st| st.name).collect();
+        assert_eq!(names, vec!["fft", "power_spectrum", "mean_std", "harmonic_sum"]);
+        assert!(s[0].is_fft && !s[1].is_fft);
+    }
+
+    #[test]
+    fn n_5e5_is_smooth_multikernel() {
+        // 5·10^5 = 2^5 · 5^6: Cooley-Tukey, multiple passes.
+        let s = pipeline_stages(500_000, Precision::Fp32, 2);
+        assert!(s[0].kernels.len() >= 2, "{}", s[0].kernels.len());
+    }
+
+    #[test]
+    fn harmonic_sum_grows_with_h() {
+        let h2 = pipeline_stages(500_000, Precision::Fp32, 2);
+        let h32 = pipeline_stages(500_000, Precision::Fp32, 32);
+        let t = |s: &Stage| s.kernels.iter().map(|k| k.traffic_factor).sum::<f64>();
+        assert!(t(&h32[3]) > t(&h2[3]));
+        assert_eq!(h2[3].kernels.len(), 2);
+        assert_eq!(h32[3].kernels.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn odd_harmonics_rejected() {
+        pipeline_stages(1024, Precision::Fp32, 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Artifact manifest: the TSV index `python/compile/aot.py` writes next to
+//! the HLO text files in `artifacts/`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-lowered module as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "fft" | "spectrum" | "pipeline"
+    pub kind: String,
+    pub n: u64,
+    pub batch: u64,
+    pub dtype: String,
+    pub harmonics: u64,
+    /// Raw input spec string, e.g. "f32:4x16384;f32:4x16384".
+    pub inputs: String,
+    pub n_outputs: usize,
+    pub digest: String,
+}
+
+impl ArtifactMeta {
+    /// Parsed input shapes: (dtype, dims) per parameter.
+    pub fn input_shapes(&self) -> Vec<(String, Vec<u64>)> {
+        self.inputs
+            .split(';')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                let (ty, dims) = s.split_once(':').unwrap_or(("f32", s));
+                let dims = dims
+                    .split('x')
+                    .filter_map(|d| d.parse().ok())
+                    .collect::<Vec<u64>>();
+                (ty.to_string(), dims)
+            })
+            .collect()
+    }
+
+    pub fn elements_per_input(&self) -> u64 {
+        self.batch * self.n
+    }
+}
+
+/// The manifest: name → ArtifactMeta, plus the base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        let cols: Vec<&str> = header.split('\t').collect();
+        if cols.first() != Some(&"name") {
+            bail!("unexpected manifest header: {header}");
+        }
+        let mut entries = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 10 {
+                bail!("manifest line {} has {} fields, want 10", i + 2, f.len());
+            }
+            let meta = ArtifactMeta {
+                name: f[0].to_string(),
+                file: dir.join(f[1]),
+                kind: f[2].to_string(),
+                n: f[3].parse().context("bad n")?,
+                batch: f[4].parse().context("bad batch")?,
+                dtype: f[5].to_string(),
+                harmonics: f[6].parse().context("bad harmonics")?,
+                inputs: f[7].to_string(),
+                n_outputs: f[8].parse().context("bad n_outputs")?,
+                digest: f[9].to_string(),
+            };
+            entries.insert(meta.name.clone(), meta);
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts of a kind, ordered by name.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.entries.values().filter(|a| a.kind == kind).collect()
+    }
+
+    /// The pipeline artifact with a specific harmonic count.
+    pub fn pipeline(&self, harmonics: u64) -> Result<&ArtifactMeta> {
+        self.entries
+            .values()
+            .find(|a| a.kind == "pipeline" && a.harmonics == harmonics)
+            .with_context(|| format!("no pipeline artifact with h={harmonics}"))
+    }
+
+    /// The FFT artifact for (n, dtype), if lowered.
+    pub fn fft(&self, n: u64, dtype: &str) -> Result<&ArtifactMeta> {
+        self.entries
+            .values()
+            .find(|a| a.kind == "fft" && a.n == n && a.dtype == dtype)
+            .with_context(|| format!("no fft artifact n={n} dtype={dtype}"))
+    }
+
+    /// Default artifact directory: $FFTSWEEP_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FFTSWEEP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tfile\tkind\tn\tbatch\tdtype\tharmonics\tinputs\tn_outputs\tsha256_16\n\
+        fft_f32_n1024_b64\tfft_f32_n1024_b64.hlo.txt\tfft\t1024\t64\tf32\t0\tf32:64x1024;f32:64x1024\t2\tdeadbeef00000000\n\
+        pipeline_n16384_h8\tpipeline_n16384_h8.hlo.txt\tpipeline\t16384\t4\tf32\t8\tf32:4x16384;f32:4x16384\t3\tcafebabe00000000\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let f = m.get("fft_f32_n1024_b64").unwrap();
+        assert_eq!(f.n, 1024);
+        assert_eq!(f.batch, 64);
+        assert_eq!(f.n_outputs, 2);
+        assert_eq!(f.file, Path::new("/tmp/a/fft_f32_n1024_b64.hlo.txt"));
+    }
+
+    #[test]
+    fn input_shapes_parse() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let f = m.get("fft_f32_n1024_b64").unwrap();
+        let shapes = f.input_shapes();
+        assert_eq!(shapes.len(), 2);
+        assert_eq!(shapes[0], ("f32".to_string(), vec![64, 1024]));
+    }
+
+    #[test]
+    fn kind_and_lookup_helpers() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert_eq!(m.of_kind("fft").len(), 1);
+        assert!(m.pipeline(8).is_ok());
+        assert!(m.pipeline(4).is_err());
+        assert!(m.fft(1024, "f32").is_ok());
+        assert!(m.fft(1024, "f64").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "bogus\theader\n").is_err());
+        assert!(Manifest::parse(Path::new("."), "").is_err());
+        let short = "name\tfile\tkind\tn\tbatch\tdtype\tharmonics\tinputs\tn_outputs\tsha256_16\nonly\tthree\tfields\n";
+        assert!(Manifest::parse(Path::new("."), short).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! PJRT runtime client: loads HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, and executes them from the rust hot path.
+//!
+//! Interchange is HLO *text* (see /opt/xla-example/README.md): jax >= 0.5
+//! emits HloModuleProto with 64-bit ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactMeta, Manifest};
+
+/// A compiled artifact plus its metadata.
+pub struct LoadedModule {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModule {
+    /// Execute with f32 input planes, returning the flattened f32 outputs.
+    /// Input/outputs are row-major (batch, n).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let literals = self.literals_f32(inputs)?;
+        self.run_literals(&literals)
+    }
+
+    /// Build input literals (exposed so benches can split setup from run).
+    pub fn literals_f32(&self, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        let shapes = self.meta.input_shapes();
+        anyhow::ensure!(
+            inputs.len() == shapes.len(),
+            "artifact {} wants {} inputs, got {}",
+            self.meta.name,
+            shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, (_ty, dims)) in inputs.iter().zip(&shapes) {
+            let want: u64 = dims.iter().product();
+            anyhow::ensure!(
+                want == data.len() as u64,
+                "artifact {} input wants {} elements, got {}",
+                self.meta.name,
+                want,
+                data.len()
+            );
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        Ok(literals)
+    }
+
+    /// Execute pre-built literals.
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.n_outputs,
+            "artifact {}: {} outputs, manifest says {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.n_outputs
+        );
+        parts
+            .into_iter()
+            .map(|p| {
+                let p = if p.ty()? == xla::ElementType::F32 {
+                    p
+                } else {
+                    p.convert(xla::PrimitiveType::F32)?
+                };
+                Ok(p.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+
+    /// Execute with f64 planes (the fp64 artifacts).
+    pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let shapes = self.meta.input_shapes();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, (_ty, dims)) in inputs.iter().zip(&shapes) {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| {
+                let p = if p.ty()? == xla::ElementType::F64 {
+                    p
+                } else {
+                    p.convert(xla::PrimitiveType::F64)?
+                };
+                Ok(p.to_vec::<f64>()?)
+            })
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compile cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedModule>>>,
+}
+
+// PJRT handles are internally synchronized for our usage pattern (compile
+// once, execute from the owning thread group).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for LoadedModule {}
+unsafe impl Sync for LoadedModule {}
+
+impl Runtime {
+    /// Create against an artifact directory (reads manifest.tsv).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedModule>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .context("artifact path not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let module = std::sync::Arc::new(LoadedModule { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), module.clone());
+        Ok(module)
+    }
+
+    /// Names of all artifacts currently compiled.
+    pub fn loaded_names(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 runtime: load AOT artifacts (HLO text), compile once on the PJRT CPU
+//! client, execute from rust. Python never runs here.
+
+pub mod artifact;
+pub mod client;
+pub mod validation;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use client::{LoadedModule, Runtime};

@@ -1,0 +1,215 @@
+//! Artifact validation: verify that the on-disk HLO text matches the
+//! manifest digests and contains no elided constants (the silent-zeros
+//! failure mode the AOT guard also checks — defense in depth on the
+//! consumer side).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifact::Manifest;
+
+/// A validation finding for one artifact.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub artifact: String,
+    pub issue: Issue,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Issue {
+    MissingFile,
+    DigestMismatch { expected: String, actual: String },
+    ElidedConstants,
+    NotHloText,
+}
+
+/// sha256 (pure-rust, compact) — first 16 hex chars, matching aot.py.
+pub fn sha256_16(data: &[u8]) -> String {
+    let digest = sha256(data);
+    digest.iter().take(8).map(|b| format!("{b:02x}")).collect()
+}
+
+fn sha256(data: &[u8]) -> [u8; 32] {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let mut msg = data.to_vec();
+    let bitlen = (data.len() as u64) * 8;
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    for chunk in msg.chunks(64) {
+        let mut w = [0u32; 64];
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes(chunk[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ ((!e) & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    let mut out = [0u8; 32];
+    for (i, v) in h.iter().enumerate() {
+        out[4 * i..4 * i + 4].copy_from_slice(&v.to_be_bytes());
+    }
+    out
+}
+
+/// Validate every artifact in a manifest. Empty vec == all good.
+pub fn validate(manifest: &Manifest) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for a in manifest.entries.values() {
+        let Ok(text) = std::fs::read_to_string(&a.file) else {
+            findings.push(Finding {
+                artifact: a.name.clone(),
+                issue: Issue::MissingFile,
+            });
+            continue;
+        };
+        if !text.starts_with("HloModule") {
+            findings.push(Finding {
+                artifact: a.name.clone(),
+                issue: Issue::NotHloText,
+            });
+            continue;
+        }
+        if text.contains("constant({...})") {
+            findings.push(Finding {
+                artifact: a.name.clone(),
+                issue: Issue::ElidedConstants,
+            });
+        }
+        let actual = sha256_16(text.as_bytes());
+        if actual != a.digest {
+            findings.push(Finding {
+                artifact: a.name.clone(),
+                issue: Issue::DigestMismatch {
+                    expected: a.digest.clone(),
+                    actual,
+                },
+            });
+        }
+    }
+    findings
+}
+
+/// Validate a directory, erroring on any finding.
+pub fn validate_dir(dir: &Path) -> Result<usize> {
+    let manifest = Manifest::load(dir)?;
+    let findings = validate(&manifest);
+    if !findings.is_empty() {
+        bail!(
+            "artifact validation failed:\n{}",
+            findings
+                .iter()
+                .map(|f| format!("  {}: {:?}", f.artifact, f.issue))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+    Ok(manifest.entries.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        // sha256("") = e3b0c44298fc1c14...
+        assert_eq!(sha256_16(b""), "e3b0c44298fc1c14");
+        // sha256("abc") = ba7816bf8f01cfea...
+        assert_eq!(sha256_16(b"abc"), "ba7816bf8f01cfea");
+        // longer-than-one-block input
+        let long = vec![b'a'; 1000];
+        assert_eq!(sha256(&long).len(), 32);
+    }
+
+    #[test]
+    fn validate_detects_problems() {
+        let dir = std::env::temp_dir().join(format!("fftsweep_val_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = "HloModule test\nENTRY main {}\n";
+        std::fs::write(dir.join("good.hlo.txt"), good).unwrap();
+        std::fs::write(dir.join("elided.hlo.txt"), "HloModule t\nconstant({...})\n").unwrap();
+        std::fs::write(dir.join("binary.hlo.txt"), "\x08\x01 proto bytes").unwrap();
+        let digest = sha256_16(good.as_bytes());
+        let manifest_text = format!(
+            "name\tfile\tkind\tn\tbatch\tdtype\tharmonics\tinputs\tn_outputs\tsha256_16\n\
+             good\tgood.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\t{digest}\n\
+             bad_digest\tgood.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\t0000000000000000\n\
+             elided\telided.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\tffffffffffffffff\n\
+             binary\tbinary.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\tffffffffffffffff\n\
+             missing\tnope.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\tffffffffffffffff\n"
+        );
+        std::fs::write(dir.join("manifest.tsv"), manifest_text).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let findings = validate(&manifest);
+        let by_name = |n: &str| findings.iter().find(|f| f.artifact == n);
+        assert!(by_name("good").is_none());
+        assert!(matches!(by_name("bad_digest").unwrap().issue, Issue::DigestMismatch { .. }));
+        assert_eq!(by_name("elided").unwrap().issue, Issue::ElidedConstants);
+        assert_eq!(by_name("binary").unwrap().issue, Issue::NotHloText);
+        assert_eq!(by_name("missing").unwrap().issue, Issue::MissingFile);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_artifacts_validate_if_present() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            let n = validate_dir(&dir).expect("artifacts must validate");
+            assert!(n >= 5);
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Kernel execution-time model under core-clock scaling.
+//!
+//! Every cuFFT kernel is device-memory-bandwidth bound at the default clock
+//! (paper section 2). Lowering the core clock affects it through three
+//! coupled rooflines:
+//!
+//!   t_mem    — device traffic / effective bandwidth. Effective bandwidth
+//!              *slightly improves* at lower clocks (reduced cache
+//!              contention — the paper's case (a)/(b)), but collapses once
+//!              the issue rate can no longer keep enough memory requests in
+//!              flight (latency-hiding loss, section 6).
+//!   t_issue  — instruction issue: elements × cycles-per-element / (cores·f).
+//!              Dominates on compute-weak parts (Jetson; crippled-FP64
+//!              consumer cards) → the paper's case (c).
+//!   t_shared — shared-memory/L1 traffic at a bandwidth proportional to f.
+//!              Dominates for the largest single-kernel N (the paper's
+//!              N = 8192 case (c) on the V100).
+//!
+//! Below the P-state floor the driver drops to an idle-class state with
+//! severely reduced resources — the sharp cliff all cards show.
+
+use crate::cufft::plan::{FftPlan, KernelKind};
+use crate::sim::gpu::GpuSpec;
+use crate::types::FftWorkload;
+
+/// Timing decomposition of one kernel at one clock (all seconds).
+#[derive(Debug, Clone)]
+pub struct KernelTiming {
+    pub t_mem: f64,
+    pub t_issue: f64,
+    pub t_shared: f64,
+    /// Smooth-max of the three rooflines, including the P-state penalty.
+    pub t_total: f64,
+    /// Device-memory bandwidth utilization (for Fig 20).
+    pub mem_util: f64,
+    /// Issue-slot utilization (for Fig 20).
+    pub issue_util: f64,
+    /// Compute (FP pipe) utilization estimate (for Fig 20).
+    pub compute_util: f64,
+}
+
+/// Timing of a full plan at one clock.
+#[derive(Debug, Clone)]
+pub struct PlanTiming {
+    pub per_kernel: Vec<KernelTiming>,
+    pub total_s: f64,
+}
+
+/// Smooth maximum (p-norm): differentiable crossovers between rooflines,
+/// matching the gradual onset the paper measures rather than a hard kink.
+fn smooth_max3(a: f64, b: f64, c: f64) -> f64 {
+    const P: f64 = 6.0;
+    let m = a.max(b).max(c);
+    if m <= 0.0 {
+        return 0.0;
+    }
+    let s = (a / m).powf(P) + (b / m).powf(P) + (c / m).powf(P);
+    m * s.powf(1.0 / P)
+}
+
+/// Time one kernel of `plan` over `workload` at core clock `f_mhz`.
+pub fn time_kernel(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    kernel_stages: f64,
+    traffic_factor: f64,
+    kind: KernelKind,
+    shared_resident: bool,
+    f_mhz: f64,
+) -> KernelTiming {
+    let f = gpu.effective_clock(f_mhz);
+    let f_frac = f / gpu.boost_clock_mhz;
+    let data_bytes = workload.data_bytes as f64;
+    let elements = workload.elements() as f64;
+
+    // --- device-memory roofline ---
+    let traffic = traffic_factor * data_bytes;
+    // case (a)/(b): a few % of bandwidth comes back at lower clock as L2
+    // contention eases...
+    let relief = 1.0 + gpu.contention_relief * (1.0 - f_frac).max(0.0);
+    // ...until the issue rate can no longer cover memory latency: below
+    // f_sat the outstanding-request count drops linearly with f.
+    let issue_cycles_per_elem = match kind {
+        KernelKind::FftPass => {
+            gpu.cycles_base
+                + gpu.cycles_per_stage * kernel_stages / gpu.fp_ratio(workload.precision)
+        }
+        KernelKind::Pointwise => gpu.cycles_base + 2.0 / gpu.fp_ratio(workload.precision),
+    };
+    // Latency hiding: warps generate one memory request every k cycles, so
+    // the request rate is ∝ f and independent of transform length. Below
+    // the per-architecture saturation fraction the effective bandwidth
+    // scales with the clock (section 6: "not enough threads with data").
+    let hiding = (f_frac / gpu.mem_sat_frac).min(1.0);
+    let bw_eff = gpu.dev_bw_gbs * 1e9 * relief * hiding.max(1e-3);
+    let t_mem = traffic / bw_eff;
+    let t_mem_ideal = traffic / (gpu.dev_bw_gbs * 1e9);
+
+    // --- instruction-issue roofline ---
+    let t_issue = elements * issue_cycles_per_elem / (gpu.cuda_cores as f64 * f * 1e6);
+
+    // --- shared-memory roofline (single-kernel resident passes) ---
+    let t_shared = if shared_resident && kernel_stages > 0.0 {
+        // Radix-8 butterflies: one shared-memory round trip (read+write)
+        // per three radix-2-equivalent stages.
+        let shared_round_trips = (kernel_stages / 3.0).ceil();
+        let shared_traffic = 2.0 * shared_round_trips * data_bytes;
+        shared_traffic / (gpu.shared_bw_gbs * 1e9 * f_frac.max(1e-3))
+    } else {
+        0.0
+    };
+
+    let mut t_total = smooth_max3(t_mem, t_issue, t_shared);
+
+    // --- idle P-state cliff ---
+    if f < gpu.pstate_floor_mhz {
+        t_total *= gpu.pstate_penalty;
+    }
+
+    let mem_util = (t_mem_ideal / t_total).min(1.0);
+    let issue_util = (t_issue / t_total).min(1.0);
+    // FP pipes are busy for the butterfly's FLOP share of issue cycles.
+    let fp_share = if issue_cycles_per_elem > 0.0 {
+        (gpu.cycles_per_stage * kernel_stages / gpu.fp_ratio(workload.precision)
+            / issue_cycles_per_elem)
+            .min(1.0)
+    } else {
+        0.0
+    };
+    let compute_util = issue_util * fp_share;
+
+    KernelTiming {
+        t_mem,
+        t_issue,
+        t_shared,
+        t_total,
+        mem_util,
+        issue_util,
+        compute_util,
+    }
+}
+
+/// Time a whole plan at one clock.
+pub fn time_plan(gpu: &GpuSpec, workload: &FftWorkload, plan: &FftPlan, f_mhz: f64) -> PlanTiming {
+    let per_kernel: Vec<KernelTiming> = plan
+        .kernels
+        .iter()
+        .map(|k| {
+            time_kernel(
+                gpu,
+                workload,
+                k.stages,
+                k.traffic_factor,
+                k.kind,
+                k.shared_resident,
+                f_mhz,
+            )
+        })
+        .collect();
+    let total_s = per_kernel.iter().map(|k| k.t_total).sum();
+    PlanTiming { per_kernel, total_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cufft::plan::plan;
+    use crate::sim::gpu::{jetson_nano, tesla_v100};
+    use crate::types::{gib, FftWorkload, Precision};
+
+    fn v100_w(n: u64) -> (GpuSpec, FftWorkload) {
+        let g = tesla_v100();
+        let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+        (g, w)
+    }
+
+    #[test]
+    fn memory_bound_at_boost() {
+        let (g, w) = v100_w(1024);
+        let p = plan(w.n, w.precision);
+        let t = time_plan(&g, &w, &p, g.boost_clock_mhz);
+        let k = &t.per_kernel[0];
+        assert!(k.t_mem > k.t_issue, "cuFFT must be memory-bound at boost");
+        assert!(k.t_mem > k.t_shared);
+        // 2 GiB read+write at 900 GB/s ≈ 4.8 ms
+        assert!((t.total_s - 2.0 * gib(2) as f64 / 900e9).abs() / t.total_s < 0.15);
+    }
+
+    #[test]
+    fn fig20_issue_utilization_midrange_at_boost() {
+        // NVVP reports roughly half-utilized issue slots for mid-size N.
+        let (g, w) = v100_w(4096);
+        let p = plan(w.n, w.precision);
+        let t = time_plan(&g, &w, &p, g.boost_clock_mhz);
+        let k = &t.per_kernel[0];
+        assert!(
+            k.issue_util > 0.25 && k.issue_util < 0.85,
+            "issue_util={}",
+            k.issue_util
+        );
+        assert!(k.mem_util > 0.8, "mem_util={}", k.mem_util);
+    }
+
+    #[test]
+    fn case_b_small_slowdown_at_optimal_v100() {
+        // Paper: V100 exec-time increase at the optimal clock is below ~5%
+        // for most N (Fig 11).
+        for n in [256u64, 1024, 4096, 65536] {
+            let (g, w) = v100_w(n);
+            let p = plan(w.n, w.precision);
+            let t_boost = time_plan(&g, &w, &p, g.boost_clock_mhz).total_s;
+            let t_opt = time_plan(&g, &w, &p, 945.0).total_s;
+            let inc = t_opt / t_boost - 1.0;
+            assert!(
+                inc < 0.10,
+                "N={n}: {:.1}% increase at 945 MHz",
+                inc * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn case_c_shared_bound_n8192() {
+        // N=8192 is the largest single-kernel fp32 plan: highest shared-
+        // memory pressure → markedly worse slowdown than its neighbours
+        // (paper Fig 6 case (c)).
+        let (g, w8) = v100_w(8192);
+        let p8 = plan(8192, Precision::Fp32);
+        let (_, w1) = v100_w(1024);
+        let p1 = plan(1024, Precision::Fp32);
+        let f = 700.0;
+        let slow8 = time_plan(&g, &w8, &p8, f).total_s
+            / time_plan(&g, &w8, &p8, g.boost_clock_mhz).total_s;
+        let slow1 = time_plan(&g, &w1, &p1, f).total_s
+            / time_plan(&g, &w1, &p1, g.boost_clock_mhz).total_s;
+        assert!(
+            slow8 > slow1 + 0.02,
+            "8192 should degrade faster: {slow8:.3} vs {slow1:.3}"
+        );
+    }
+
+    #[test]
+    fn jetson_is_compute_bound_case_c() {
+        // Paper: the Nano shows case (c) almost everywhere — time rises
+        // with every frequency decrement.
+        let g = jetson_nano();
+        let w = FftWorkload::new(1024, Precision::Fp32, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let fs = [921.6, 768.0, 614.4, 460.8, 307.2];
+        let times: Vec<f64> = fs.iter().map(|&f| time_plan(&g, &w, &p, f).total_s).collect();
+        for win in times.windows(2) {
+            assert!(win[1] > win[0] * 1.02, "Jetson time must rise per step: {times:?}");
+        }
+        // slowdown at the knee is substantial (paper: ≥ 40%)
+        assert!(times[3] / times[0] > 1.3, "{:?}", times);
+    }
+
+    #[test]
+    fn pstate_cliff() {
+        let (g, w) = v100_w(1024);
+        let p = plan(w.n, w.precision);
+        let just_above = time_plan(&g, &w, &p, g.pstate_floor_mhz + 5.0).total_s;
+        let below = time_plan(&g, &w, &p, g.pstate_floor_mhz - 30.0).total_s;
+        assert!(below > just_above * 1.8, "{below} vs {just_above}");
+    }
+
+    #[test]
+    fn titan_v_cap_freezes_times_above_1335() {
+        let g = crate::sim::gpu::titan_v();
+        let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let a = time_plan(&g, &w, &p, 1912.0).total_s;
+        let b = time_plan(&g, &w, &p, 1400.0).total_s;
+        let c = time_plan(&g, &w, &p, 1335.0).total_s;
+        assert_eq!(a, c);
+        assert_eq!(b, c);
+        let lower = time_plan(&g, &w, &p, 1000.0).total_s;
+        assert!(lower != c);
+    }
+
+    #[test]
+    fn crippled_fp64_dominated_by_issue() {
+        let g = crate::sim::gpu::tesla_p4();
+        let w = FftWorkload::new(4096, Precision::Fp64, g.working_set_bytes);
+        let p = plan(w.n, w.precision);
+        let t = time_plan(&g, &w, &p, g.boost_clock_mhz);
+        let k = &t.per_kernel[0];
+        assert!(
+            k.t_issue > k.t_mem,
+            "P4 FP64 must be compute-bound: issue {} vs mem {}",
+            k.t_issue,
+            k.t_mem
+        );
+    }
+
+    #[test]
+    fn staircase_total_time_vs_n() {
+        // t_fix roughly flat across the single-kernel plateau, then jumps
+        // (Fig 4).
+        let (g, _) = v100_w(0x1000);
+        let t = |n: u64| {
+            let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+            time_plan(&g, &w, &plan(n, Precision::Fp32), g.boost_clock_mhz).total_s
+        };
+        let t32 = t(32);
+        let t8192 = t(8192);
+        let t16384 = t(16384);
+        assert!((t8192 / t32 - 1.0).abs() < 0.25, "plateau: {t32} vs {t8192}");
+        assert!(t16384 > 1.6 * t8192, "staircase jump missing");
+    }
+
+    #[test]
+    fn smooth_max_bounds() {
+        assert!(smooth_max3(1.0, 0.0, 0.0) >= 1.0);
+        assert!(smooth_max3(1.0, 1.0, 1.0) <= 3.0f64.powf(1.0 / 6.0) * 1.0 + 1e-12);
+        assert_eq!(smooth_max3(0.0, 0.0, 0.0), 0.0);
+    }
+}

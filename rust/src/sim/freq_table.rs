@@ -1,0 +1,193 @@
+//! Allowed core-clock frequency tables (paper Table 1).
+//!
+//! Clocks can only be set to hardware-defined values: from f_max down to
+//! f_min with an alternating step pattern (7/8 MHz on Volta, 12/13 MHz on
+//! Pascal, a fixed 76.8 MHz on the Jetson Nano).
+
+use crate::sim::gpu::GpuSpec;
+
+/// Table 1 row: the DVFS-settable clock domain of one card.
+#[derive(Debug, Clone)]
+pub struct FreqTable {
+    pub f_max_mhz: f64,
+    pub f_min_mhz: f64,
+    /// Alternating decrement pattern, applied cyclically from f_max.
+    pub steps_mhz: Vec<f64>,
+}
+
+impl FreqTable {
+    /// Enumerate every supported frequency, descending from f_max to f_min.
+    pub fn frequencies(&self) -> Vec<f64> {
+        let mut out = vec![self.f_max_mhz];
+        let mut f = self.f_max_mhz;
+        let mut i = 0usize;
+        while f > self.f_min_mhz {
+            f -= self.steps_mhz[i % self.steps_mhz.len()];
+            i += 1;
+            if f < self.f_min_mhz - 1e-9 {
+                break;
+            }
+            out.push((f * 10.0).round() / 10.0);
+        }
+        if (out.last().copied().unwrap_or(f64::MAX) - self.f_min_mhz).abs() > 1e-9 {
+            out.push(self.f_min_mhz);
+        }
+        out
+    }
+
+    /// Snap an arbitrary request to the nearest supported clock
+    /// (what the driver does with a requested locked clock).
+    pub fn snap(&self, requested_mhz: f64) -> f64 {
+        self.frequencies()
+            .into_iter()
+            .min_by(|a, b| {
+                (a - requested_mhz)
+                    .abs()
+                    .partial_cmp(&(b - requested_mhz).abs())
+                    .unwrap()
+            })
+            .unwrap_or(self.f_max_mhz)
+    }
+
+    pub fn contains(&self, f_mhz: f64) -> bool {
+        self.frequencies().iter().any(|f| (f - f_mhz).abs() < 1e-6)
+    }
+
+    /// Every k-th frequency (the sweep harness subsamples dense tables).
+    /// The stride is clamped so short tables (Jetson: 12 entries) always
+    /// keep at least ~8 points.
+    pub fn stride(&self, k: usize) -> Vec<f64> {
+        let all = self.frequencies();
+        let k = k.max(1).min((all.len() / 8).max(1));
+        let mut out: Vec<f64> = all.iter().copied().step_by(k).collect();
+        if let (Some(&last_all), Some(&last_out)) = (all.last(), out.last()) {
+            if (last_all - last_out).abs() > 1e-9 {
+                out.push(last_all); // always include f_min
+            }
+        }
+        out
+    }
+}
+
+/// Table 1 for a given card.
+pub fn freq_table(gpu: &GpuSpec) -> FreqTable {
+    match gpu.name {
+        "Tesla V100" => FreqTable {
+            f_max_mhz: 1530.0,
+            f_min_mhz: 135.0,
+            steps_mhz: vec![7.0, 8.0],
+        },
+        "Tesla P4" => FreqTable {
+            f_max_mhz: 1531.0,
+            f_min_mhz: 455.0,
+            steps_mhz: vec![12.0, 13.0],
+        },
+        "Titan XP" => FreqTable {
+            f_max_mhz: 1911.0,
+            f_min_mhz: 379.0,
+            steps_mhz: vec![12.0, 13.0],
+        },
+        "Titan V" => FreqTable {
+            f_max_mhz: 1912.0,
+            f_min_mhz: 135.0,
+            steps_mhz: vec![7.0, 8.0],
+        },
+        "Jetson Nano" => FreqTable {
+            f_max_mhz: 921.6,
+            f_min_mhz: 76.8,
+            steps_mhz: vec![76.8],
+        },
+        other => panic!("no frequency table for {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::*;
+
+    #[test]
+    fn v100_table_bounds_and_steps() {
+        let t = freq_table(&tesla_v100());
+        let f = t.frequencies();
+        assert_eq!(f[0], 1530.0);
+        assert_eq!(*f.last().unwrap(), 135.0);
+        // alternating 7/8 → pairs of 15 MHz
+        assert_eq!(f[0] - f[1], 7.0);
+        assert_eq!(f[1] - f[2], 8.0);
+        // 1530 - 135 = 1395 = 93 * 15 → exact landing on f_min
+        assert_eq!(f.len(), 187);
+    }
+
+    #[test]
+    fn jetson_table_is_uniform() {
+        let t = freq_table(&jetson_nano());
+        let f = t.frequencies();
+        assert_eq!(f.len(), 12);
+        assert!((f[0] - 921.6).abs() < 1e-9);
+        assert!((f[11] - 76.8).abs() < 1e-9);
+        for w in f.windows(2) {
+            assert!((w[0] - w[1] - 76.8).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_tables_descend_to_fmin() {
+        for g in all_gpus() {
+            let t = freq_table(&g);
+            let f = t.frequencies();
+            assert!(f.windows(2).all(|w| w[0] > w[1]), "{} not descending", g.name);
+            assert!((f[0] - t.f_max_mhz).abs() < 1e-9);
+            assert!((*f.last().unwrap() - t.f_min_mhz).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn paper_table1_values() {
+        let cases = [
+            ("Tesla V100", 1530.0, 135.0),
+            ("Tesla P4", 1531.0, 455.0),
+            ("Titan XP", 1911.0, 379.0),
+            ("Titan V", 1912.0, 135.0),
+            ("Jetson Nano", 921.6, 76.8),
+        ];
+        for (name, fmax, fmin) in cases {
+            let g = gpu_by_name(name).unwrap();
+            let t = freq_table(&g);
+            assert_eq!(t.f_max_mhz, fmax, "{name}");
+            assert_eq!(t.f_min_mhz, fmin, "{name}");
+        }
+    }
+
+    #[test]
+    fn snap_picks_nearest() {
+        let t = freq_table(&tesla_v100());
+        let snapped = t.snap(946.0);
+        assert!(t.contains(snapped));
+        assert!((snapped - 946.0).abs() <= 8.0);
+    }
+
+    #[test]
+    fn stride_keeps_endpoints() {
+        let t = freq_table(&tesla_v100());
+        let s = t.stride(10);
+        assert_eq!(s[0], 1530.0);
+        assert!((s.last().unwrap() - 135.0).abs() < 1e-9);
+        assert!(s.len() < t.frequencies().len());
+    }
+
+    #[test]
+    fn boost_clock_is_in_table_neighbourhood() {
+        for g in all_gpus() {
+            let t = freq_table(&g);
+            let snapped = t.snap(g.boost_clock_mhz);
+            assert!(
+                (snapped - g.boost_clock_mhz).abs() <= 13.0,
+                "{}: boost {} snapped {}",
+                g.name,
+                g.boost_clock_mhz,
+                snapped
+            );
+        }
+    }
+}

@@ -1,0 +1,408 @@
+//! GPU card specifications (paper Table 2) plus the DVFS model parameters
+//! each card needs for the power/performance simulation.
+//!
+//! The spec columns are transcribed from the paper; the model parameters
+//! (voltage curve, power split, issue cost) are calibrated so that the
+//! derived optimal frequencies land on the paper's Table 3 and the
+//! qualitative behaviours of Figs 6-8 emerge.
+
+use crate::types::{gib, Precision};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryKind {
+    Gddr5,
+    Hbm2,
+    Lpddr4,
+}
+
+impl MemoryKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            MemoryKind::Gddr5 => "GDDR5",
+            MemoryKind::Hbm2 => "HBM2",
+            MemoryKind::Lpddr4 => "LPDDR4",
+        }
+    }
+
+    /// HBM2 cards expose no memory-clock control (paper section 2.2).
+    pub fn memory_clock_adjustable(self) -> bool {
+        !matches!(self, MemoryKind::Hbm2)
+    }
+}
+
+/// Table 2 hardware spec + DVFS model calibration for one card.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: &'static str,
+    pub cuda_cores: u32,
+    pub sms: u32,
+    pub base_clock_mhz: f64,
+    pub boost_clock_mhz: f64,
+    pub mem_clock_mhz: f64,
+    /// Device-memory bandwidth, GB/s.
+    pub dev_bw_gbs: f64,
+    /// Shared-memory bandwidth at boost clock, GB/s (Table 2 formula).
+    pub shared_bw_gbs: f64,
+    pub mem_kind: MemoryKind,
+    pub mem_bytes: u64,
+    pub tdp_w: f64,
+    /// Fixed working set the harness processes per batch (paper: 2 GiB,
+    /// Jetson ¼ of that due to its 4 GB of memory).
+    pub working_set_bytes: u64,
+
+    // ---- DVFS / power model calibration ----
+    /// Always-on board power (fans, VRM losses, idle SMs), W.
+    pub idle_w: f64,
+    /// Leakage at V = Vmax, W; scales with (V/Vmax)^2.
+    pub leak_w: f64,
+    /// Memory subsystem power at 100% device-BW utilization, W.
+    pub mem_w: f64,
+    /// Core dynamic power at boost clock, Vmax, 100% active, W.
+    pub core_w: f64,
+    /// Minimum core voltage as a fraction of Vmax (the DVFS voltage floor).
+    pub v_min_frac: f64,
+    /// Clock at/below which voltage sits at the floor, MHz. The energy
+    /// optimum gravitates here for memory-bound kernels (Table 3).
+    pub f_knee_mhz: f64,
+    /// Below this clock the driver drops to an idle-class P-state with
+    /// severely reduced resources (sharp time cliff, paper section 6).
+    pub pstate_floor_mhz: f64,
+    /// Extra slowdown multiplier inside the idle P-state.
+    pub pstate_penalty: f64,
+    /// Driver-enforced compute clock cap (Titan V: 1335 MHz, section 4).
+    pub driver_cap_mhz: Option<f64>,
+    /// Issue cost: pipeline cycles per complex element per butterfly stage.
+    pub cycles_per_stage: f64,
+    /// Issue cost: fixed addressing/load-store cycles per complex element
+    /// per kernel pass.
+    pub cycles_base: f64,
+    /// FP throughput relative to FP32 (t_issue divides by this).
+    pub fp64_ratio: f64,
+    pub fp16_ratio: Option<f64>,
+    /// Relative std-dev of the power sensor (paper: ~3-5%, Jetson ≤15%).
+    pub sensor_noise_sd: f64,
+    /// Relative BW relief from reduced cache contention at lower clocks
+    /// (case (a)/(b) of Fig 6).
+    pub contention_relief: f64,
+    /// Clock fraction (of boost) below which the address-generation rate
+    /// can no longer keep the memory system saturated. A per-architecture
+    /// constant — warps issue one request every k cycles, so the request
+    /// rate is ∝ f and independent of FFT length, which is why the paper
+    /// finds near-identical optimal clocks across lengths (Fig 9).
+    pub mem_sat_frac: f64,
+}
+
+impl GpuSpec {
+    pub fn supports(&self, p: Precision) -> bool {
+        match p {
+            Precision::Fp16 => self.fp16_ratio.is_some(),
+            _ => true,
+        }
+    }
+
+    /// "Crippled" FP64 (1/32 rate consumer parts) behaves compute-bound.
+    pub fn fp_ratio(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp32 => 1.0,
+            Precision::Fp64 => self.fp64_ratio,
+            Precision::Fp16 => self.fp16_ratio.unwrap_or(1.0),
+        }
+    }
+
+    /// The default (boost) clock — what the card runs without DVFS tuning.
+    pub fn default_clock_mhz(&self) -> f64 {
+        self.boost_clock_mhz
+    }
+
+    /// Effective compute clock after driver capping (Titan V, section 4).
+    pub fn effective_clock(&self, requested_mhz: f64) -> f64 {
+        match self.driver_cap_mhz {
+            Some(cap) => requested_mhz.min(cap),
+            None => requested_mhz,
+        }
+    }
+
+    pub fn has_base_clock(&self) -> bool {
+        // The Jetson Nano has no separate base clock (paper Fig 16 note).
+        self.base_clock_mhz != self.boost_clock_mhz
+    }
+}
+
+pub fn tesla_v100() -> GpuSpec {
+    GpuSpec {
+        name: "Tesla V100",
+        arch: "Volta",
+        cuda_cores: 5120,
+        sms: 80,
+        base_clock_mhz: 1200.0,
+        boost_clock_mhz: 1530.0,
+        mem_clock_mhz: 877.0,
+        dev_bw_gbs: 900.0,
+        shared_bw_gbs: 14550.0,
+        mem_kind: MemoryKind::Hbm2,
+        mem_bytes: gib(16),
+        tdp_w: 300.0,
+        working_set_bytes: gib(2),
+        idle_w: 38.0,
+        leak_w: 44.0,
+        mem_w: 72.0,
+        core_w: 150.0,
+        v_min_frac: 0.70,
+        f_knee_mhz: 960.0,
+        pstate_floor_mhz: 300.0,
+        pstate_penalty: 2.8,
+        driver_cap_mhz: None,
+        cycles_per_stage: 5.3,
+        cycles_base: 6.0,
+        fp64_ratio: 0.5,
+        fp16_ratio: Some(2.0),
+        sensor_noise_sd: 0.040,
+        contention_relief: 0.035,
+        mem_sat_frac: 0.58,
+    }
+}
+
+pub fn tesla_p4() -> GpuSpec {
+    GpuSpec {
+        name: "Tesla P4",
+        arch: "Pascal",
+        cuda_cores: 2560,
+        sms: 20,
+        base_clock_mhz: 810.0,
+        boost_clock_mhz: 1063.0,
+        mem_clock_mhz: 3003.0,
+        dev_bw_gbs: 192.0,
+        shared_bw_gbs: 2657.0,
+        mem_kind: MemoryKind::Gddr5,
+        mem_bytes: gib(8),
+        tdp_w: 75.0,
+        working_set_bytes: gib(2),
+        idle_w: 11.0,
+        leak_w: 13.0,
+        mem_w: 20.0,
+        core_w: 36.0,
+        v_min_frac: 0.76,
+        f_knee_mhz: 755.0,
+        pstate_floor_mhz: 500.0,
+        pstate_penalty: 2.2,
+        driver_cap_mhz: None,
+        cycles_per_stage: 5.8,
+        cycles_base: 6.0,
+        fp64_ratio: 1.0 / 32.0,
+        fp16_ratio: None,
+        sensor_noise_sd: 0.045,
+        contention_relief: 0.025,
+        mem_sat_frac: 0.66,
+    }
+}
+
+pub fn titan_xp() -> GpuSpec {
+    GpuSpec {
+        name: "Titan XP",
+        arch: "Pascal",
+        cuda_cores: 3840,
+        sms: 30,
+        base_clock_mhz: 1405.0,
+        boost_clock_mhz: 1480.0,
+        mem_clock_mhz: 5005.0,
+        dev_bw_gbs: 547.0,
+        shared_bw_gbs: 5395.0,
+        mem_kind: MemoryKind::Gddr5,
+        mem_bytes: gib(12),
+        tdp_w: 250.0,
+        working_set_bytes: gib(2),
+        idle_w: 24.0,
+        leak_w: 36.0,
+        mem_w: 58.0,
+        core_w: 120.0,
+        v_min_frac: 0.74,
+        f_knee_mhz: 1160.0,
+        pstate_floor_mhz: 500.0,
+        pstate_penalty: 2.4,
+        driver_cap_mhz: None,
+        cycles_per_stage: 5.8,
+        cycles_base: 6.0,
+        fp64_ratio: 1.0 / 32.0,
+        fp16_ratio: None,
+        sensor_noise_sd: 0.045,
+        contention_relief: 0.030,
+        mem_sat_frac: 0.74,
+    }
+}
+
+pub fn titan_v() -> GpuSpec {
+    GpuSpec {
+        name: "Titan V",
+        arch: "Volta",
+        cuda_cores: 5120,
+        sms: 80,
+        base_clock_mhz: 1220.0,
+        boost_clock_mhz: 1455.0,
+        mem_clock_mhz: 850.0,
+        dev_bw_gbs: 652.0,
+        shared_bw_gbs: 14550.0,
+        mem_kind: MemoryKind::Hbm2,
+        mem_bytes: gib(12),
+        tdp_w: 250.0,
+        working_set_bytes: gib(2),
+        idle_w: 30.0,
+        leak_w: 40.0,
+        mem_w: 60.0,
+        core_w: 138.0,
+        v_min_frac: 0.72,
+        f_knee_mhz: 965.0,
+        pstate_floor_mhz: 300.0,
+        pstate_penalty: 2.8,
+        // The driver caps compute kernels at 1335 MHz even when a higher
+        // clock is requested (paper section 4, driver 450.36.06).
+        driver_cap_mhz: Some(1335.0),
+        cycles_per_stage: 5.3,
+        cycles_base: 6.0,
+        fp64_ratio: 0.5,
+        fp16_ratio: Some(2.0),
+        sensor_noise_sd: 0.045,
+        contention_relief: 0.030,
+        mem_sat_frac: 0.62,
+    }
+}
+
+pub fn jetson_nano() -> GpuSpec {
+    GpuSpec {
+        name: "Jetson Nano",
+        arch: "Maxwell",
+        cuda_cores: 128,
+        sms: 2,
+        // No distinct base clock on the Nano.
+        base_clock_mhz: 921.6,
+        boost_clock_mhz: 921.6,
+        mem_clock_mhz: 1600.0,
+        dev_bw_gbs: 25.6,
+        shared_bw_gbs: 230.0,
+        mem_kind: MemoryKind::Lpddr4,
+        mem_bytes: gib(4),
+        tdp_w: 10.0,
+        // ¼ of the 2 GiB working set (paper: limited card memory).
+        working_set_bytes: gib(2) / 4,
+        idle_w: 1.6,
+        leak_w: 1.1,
+        mem_w: 1.9,
+        core_w: 4.3,
+        v_min_frac: 0.56,
+        f_knee_mhz: 470.0,
+        pstate_floor_mhz: 100.0,
+        pstate_penalty: 2.0,
+        driver_cap_mhz: None,
+        cycles_per_stage: 4.4,
+        cycles_base: 3.2,
+        fp64_ratio: 1.0 / 32.0,
+        fp16_ratio: Some(2.0),
+        sensor_noise_sd: 0.10,
+        contention_relief: 0.015,
+        mem_sat_frac: 0.50,
+    }
+}
+
+/// All five cards in the paper's order of presentation.
+pub fn all_gpus() -> Vec<GpuSpec> {
+    vec![titan_xp(), tesla_p4(), titan_v(), tesla_v100(), jetson_nano()]
+}
+
+/// Lookup by loose name ("v100", "Tesla V100", "jetson", ...).
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    let lower = name.to_ascii_lowercase().replace([' ', '-', '_'], "");
+    all_gpus().into_iter().find(|g| {
+        let gname = g.name.to_ascii_lowercase().replace(' ', "");
+        gname == lower
+            || gname.contains(&lower)
+            || (lower == "nano" && g.name == "Jetson Nano")
+            || (lower == "xp" && g.name == "Titan XP")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_core_counts() {
+        assert_eq!(tesla_v100().cuda_cores, 5120);
+        assert_eq!(tesla_v100().sms, 80);
+        assert_eq!(tesla_p4().cuda_cores, 2560);
+        assert_eq!(titan_xp().sms, 30);
+        assert_eq!(jetson_nano().cuda_cores, 128);
+    }
+
+    #[test]
+    fn table2_bandwidths() {
+        assert_eq!(tesla_v100().dev_bw_gbs, 900.0);
+        assert_eq!(titan_v().dev_bw_gbs, 652.0);
+        assert_eq!(jetson_nano().dev_bw_gbs, 25.6);
+        assert_eq!(tesla_v100().shared_bw_gbs, 14550.0);
+    }
+
+    #[test]
+    fn hbm2_memory_clock_fixed() {
+        assert!(!tesla_v100().mem_kind.memory_clock_adjustable());
+        assert!(!titan_v().mem_kind.memory_clock_adjustable());
+        assert!(tesla_p4().mem_kind.memory_clock_adjustable());
+        assert!(jetson_nano().mem_kind.memory_clock_adjustable());
+    }
+
+    #[test]
+    fn precision_support_matrix() {
+        // P4 and Titan XP do not support FP16 (paper section 5).
+        assert!(!tesla_p4().supports(Precision::Fp16));
+        assert!(!titan_xp().supports(Precision::Fp16));
+        assert!(tesla_v100().supports(Precision::Fp16));
+        assert!(titan_v().supports(Precision::Fp16));
+        assert!(jetson_nano().supports(Precision::Fp16));
+        for g in all_gpus() {
+            assert!(g.supports(Precision::Fp32));
+            assert!(g.supports(Precision::Fp64));
+        }
+    }
+
+    #[test]
+    fn crippled_fp64_on_consumer_parts() {
+        assert!(tesla_p4().fp_ratio(Precision::Fp64) < 0.1);
+        assert!(titan_xp().fp_ratio(Precision::Fp64) < 0.1);
+        assert_eq!(tesla_v100().fp_ratio(Precision::Fp64), 0.5);
+    }
+
+    #[test]
+    fn titan_v_driver_cap() {
+        let tv = titan_v();
+        assert_eq!(tv.effective_clock(1912.0), 1335.0);
+        assert_eq!(tv.effective_clock(1000.0), 1000.0);
+        assert_eq!(tesla_v100().effective_clock(1530.0), 1530.0);
+    }
+
+    #[test]
+    fn jetson_quarter_working_set() {
+        assert_eq!(jetson_nano().working_set_bytes * 4, tesla_v100().working_set_bytes);
+        assert!(!jetson_nano().has_base_clock());
+        assert!(tesla_v100().has_base_clock());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(gpu_by_name("v100").unwrap().name, "Tesla V100");
+        assert_eq!(gpu_by_name("Jetson Nano").unwrap().name, "Jetson Nano");
+        assert_eq!(gpu_by_name("titanv").unwrap().name, "Titan V");
+        assert_eq!(gpu_by_name("xp").unwrap().name, "Titan XP");
+        assert_eq!(gpu_by_name("p4").unwrap().name, "Tesla P4");
+        assert!(gpu_by_name("a100").is_none());
+    }
+
+    #[test]
+    fn knee_matches_table3_neighbourhood() {
+        // The calibrated knee must sit near the paper's mean optimal
+        // frequency for the memory-bound FP32 case.
+        assert!((tesla_v100().f_knee_mhz - 945.0).abs() < 40.0);
+        assert!((tesla_p4().f_knee_mhz - 746.0).abs() < 40.0);
+        assert!((titan_v().f_knee_mhz - 952.0).abs() < 40.0);
+        assert!((titan_xp().f_knee_mhz - 1151.0).abs() < 40.0);
+        assert!((jetson_nano().f_knee_mhz - 460.8).abs() < 40.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! GPU DVFS simulator: the substitution for the paper's five physical
+//! NVIDIA cards (see DESIGN.md §1).
+//!
+//! `gpu` holds Table 2 specs + model calibration, `freq_table` holds
+//! Table 1, `exec_model` prices a cuFFT plan at a clock, `power` prices
+//! the board power, and `sensor` turns ground-truth timelines into the
+//! noisy driver samples the harness integrates.
+
+pub mod exec_model;
+pub mod freq_table;
+pub mod gpu;
+pub mod power;
+pub mod sensor;
+pub mod thermal;
+
+use crate::cufft::plan::{plan, FftPlan};
+use crate::sim::exec_model::{time_plan, PlanTiming};
+use crate::sim::power::kernel_power_w;
+use crate::sim::sensor::PowerTimeline;
+use crate::types::FftWorkload;
+
+pub use gpu::GpuSpec;
+
+/// The full simulated outcome of running one FFT batch at one clock.
+#[derive(Debug, Clone)]
+pub struct BatchRun {
+    pub f_mhz: f64,
+    pub timing: PlanTiming,
+    /// Mean power over the batch's compute time, W.
+    pub avg_power_w: f64,
+    /// Ground-truth energy over the compute time, J.
+    pub energy_j: f64,
+}
+
+/// Simulate one batch of `workload` on `gpu` at requested clock `f_mhz`.
+pub fn run_batch(gpu: &GpuSpec, workload: &FftWorkload, f_mhz: f64) -> BatchRun {
+    let p = plan(workload.n, workload.precision);
+    run_batch_with_plan(gpu, workload, &p, f_mhz)
+}
+
+pub fn run_batch_with_plan(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    plan: &FftPlan,
+    f_mhz: f64,
+) -> BatchRun {
+    let timing = time_plan(gpu, workload, plan, f_mhz);
+    let mut energy = 0.0;
+    for k in &timing.per_kernel {
+        energy += kernel_power_w(gpu, k, f_mhz) * k.t_total;
+    }
+    let avg_power_w = if timing.total_s > 0.0 {
+        energy / timing.total_s
+    } else {
+        0.0
+    };
+    BatchRun {
+        f_mhz,
+        timing,
+        avg_power_w,
+        energy_j: energy,
+    }
+}
+
+/// Build the power timeline of `reps` back-to-back batches bracketed by
+/// host-transfer segments, ready for the sensor (the paper's measurement
+/// protocol: transfer in, run the FFT repeatedly, transfer out — Fig 2).
+pub fn batch_timeline(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    f_mhz: f64,
+    reps: usize,
+) -> (PowerTimeline, BatchRun) {
+    let run = run_batch(gpu, workload, f_mhz);
+    let mut tl = PowerTimeline::default();
+    // host->device copy of the working set over PCIe (~12 GB/s effective) or
+    // the Nano's unified memory path.
+    let copy_bw = if gpu.name == "Jetson Nano" { 8e9 } else { 12e9 };
+    let copy_s = workload.data_bytes as f64 / copy_bw;
+    let p_copy = power::noncompute_power_w(gpu, f_mhz);
+    tl.push(copy_s, p_copy, false);
+    for _ in 0..reps {
+        for k in &run.timing.per_kernel {
+            tl.push(k.t_total, kernel_power_w(gpu, k, f_mhz), true);
+        }
+    }
+    tl.push(copy_s, p_copy, false);
+    (tl, run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    #[test]
+    fn energy_minimum_below_boost_v100() {
+        // The defining result: sweeping clocks, the energy per batch has a
+        // minimum well below boost (Fig 7).
+        let g = tesla_v100();
+        let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+        let fs = crate::sim::freq_table::freq_table(&g).frequencies();
+        let runs: Vec<BatchRun> = fs.iter().map(|&f| run_batch(&g, &w, f)).collect();
+        let energies: Vec<f64> = runs.iter().map(|r| r.energy_j).collect();
+        let imin = crate::util::stats::argmin(&energies).unwrap();
+        let f_opt = fs[imin];
+        assert!(
+            f_opt < 0.8 * g.boost_clock_mhz,
+            "optimal {f_opt} MHz not below boost"
+        );
+        assert!(
+            f_opt > 0.4 * g.boost_clock_mhz,
+            "optimal {f_opt} MHz implausibly low"
+        );
+    }
+
+    #[test]
+    fn timeline_contains_compute_and_copies() {
+        let g = tesla_v100();
+        let w = FftWorkload::new(1024, Precision::Fp32, g.working_set_bytes);
+        let (tl, run) = batch_timeline(&g, &w, 1000.0, 3);
+        assert!(tl.segments.first().unwrap().2 == false);
+        assert!(tl.segments.last().unwrap().2 == false);
+        let compute: f64 = tl.compute_duration();
+        assert!((compute - 3.0 * run.timing.total_s).abs() < 1e-12);
+        // compute power above copy power
+        let p_copy = tl.segments[0].1;
+        let p_kernel = tl.segments[1].1;
+        assert!(p_kernel > p_copy);
+    }
+
+    #[test]
+    fn avg_power_consistent_with_energy() {
+        let g = tesla_v100();
+        let w = FftWorkload::new(4096, Precision::Fp32, g.working_set_bytes);
+        let r = run_batch(&g, &w, 1200.0);
+        assert!((r.avg_power_w * r.timing.total_s - r.energy_j).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,133 @@
+//! Shared domain types: precision, FFT workload descriptors.
+
+use std::fmt;
+
+/// Floating-point precision of a transform (paper: FP16 / FP32 / FP64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Fp16,
+    Fp32,
+    Fp64,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] = [Precision::Fp32, Precision::Fp64, Precision::Fp16];
+
+    /// Bytes per *complex* element (interleaved re/im).
+    pub fn complex_bytes(self) -> u64 {
+        match self {
+            Precision::Fp16 => 4,
+            Precision::Fp32 => 8,
+            Precision::Fp64 => 16,
+        }
+    }
+
+    pub fn real_bytes(self) -> u64 {
+        self.complex_bytes() / 2
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "FP16",
+            Precision::Fp32 => "FP32",
+            Precision::Fp64 => "FP64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" | "half" => Some(Precision::Fp16),
+            "fp32" | "f32" | "float" | "single" => Some(Precision::Fp32),
+            "fp64" | "f64" | "double" => Some(Precision::Fp64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A batched 1D C2C FFT workload over a fixed amount of device memory
+/// (the paper's measurement unit, section 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FftWorkload {
+    /// Transform length N.
+    pub n: u64,
+    /// Precision of the transform.
+    pub precision: Precision,
+    /// Total bytes of input data processed per batch (paper: 2 GB, Jetson ¼).
+    pub data_bytes: u64,
+}
+
+impl FftWorkload {
+    pub fn new(n: u64, precision: Precision, data_bytes: u64) -> Self {
+        Self { n, precision, data_bytes }
+    }
+
+    /// Number of transforms per batch: N_FFT = M / (N * B)  (paper eq. 6).
+    pub fn n_fft(&self) -> u64 {
+        (self.data_bytes / (self.n * self.precision.complex_bytes())).max(1)
+    }
+
+    /// Total complex elements per batch.
+    pub fn elements(&self) -> u64 {
+        self.n_fft() * self.n
+    }
+
+    /// FLOP count for one batch: 5 N log2 N * N_FFT  (paper eq. 5 numerator,
+    /// with N_b = 1 run).
+    pub fn flops(&self) -> f64 {
+        5.0 * self.n as f64 * (self.n as f64).log2() * self.n_fft() as f64
+    }
+}
+
+/// GiB → bytes.
+pub const fn gib(x: u64) -> u64 {
+    x * 1024 * 1024 * 1024
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_bytes_per_precision() {
+        assert_eq!(Precision::Fp16.complex_bytes(), 4);
+        assert_eq!(Precision::Fp32.complex_bytes(), 8);
+        assert_eq!(Precision::Fp64.complex_bytes(), 16);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("double"), Some(Precision::Fp64));
+        assert_eq!(Precision::parse("HALF"), Some(Precision::Fp16));
+        assert_eq!(Precision::parse("int8"), None);
+    }
+
+    #[test]
+    fn eq6_batch_count() {
+        // 2 GiB of fp32 complex data, N = 16384 -> 16384 FFTs (paper sec. 5.1)
+        let w = FftWorkload::new(16384, Precision::Fp32, gib(2));
+        assert_eq!(w.n_fft(), 16384);
+        assert_eq!(w.elements(), 16384 * 16384);
+    }
+
+    #[test]
+    fn elements_constant_across_n() {
+        let a = FftWorkload::new(256, Precision::Fp32, gib(2));
+        let b = FftWorkload::new(65536, Precision::Fp32, gib(2));
+        assert_eq!(a.elements(), b.elements());
+    }
+
+    #[test]
+    fn flops_match_eq5() {
+        let w = FftWorkload::new(1024, Precision::Fp32, 1024 * 8 * 4); // 4 FFTs
+        assert_eq!(w.n_fft(), 4);
+        let expect = 5.0 * 1024.0 * 10.0 * 4.0;
+        assert!((w.flops() - expect).abs() < 1e-6);
+    }
+}

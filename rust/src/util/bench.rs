@@ -1,0 +1,204 @@
+//! Micro-benchmark harness (offline substitute for `criterion`).
+//!
+//! `cargo bench` binaries (`harness = false`) use [`Bench`] to time closures
+//! with warmup, report mean / σ / min / p50 / p95 and ns-per-iteration, and
+//! optionally dump a CSV next to the figure outputs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_meps(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.mean_ns / 1e9) / 1e6)
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub min_time: Duration,
+    results: Vec<BenchResult>,
+    suite: String,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        Self {
+            warmup: 3,
+            iters: 30,
+            min_time: Duration::from_millis(50),
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f`, which must consume/blackhole its own result.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    pub fn run_with_elements<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.iters);
+        let start_all = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            // keep very fast benches honest, very slow benches bounded
+            if start_all.elapsed() > Duration::from_secs(20) && samples_ns.len() >= 5 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            iters: samples_ns.len(),
+            mean_ns: stats::mean(&samples_ns),
+            std_ns: stats::std_dev(&samples_ns),
+            min_ns: stats::min(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            elements,
+        };
+        println!("{}", format_result(&res));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all collected results as an aligned table.
+    pub fn summary(&self) -> String {
+        let mut t = Table::new(
+            &format!("bench suite: {}", self.suite),
+            &["benchmark", "iters", "mean", "sigma", "min", "p95", "Melem/s"],
+        );
+        for r in &self.results {
+            t.push_row(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                human_ns(r.mean_ns),
+                human_ns(r.std_ns),
+                human_ns(r.min_ns),
+                human_ns(r.p95_ns),
+                r.throughput_meps()
+                    .map(|x| format!("{x:.1}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t.to_ascii()
+    }
+}
+
+pub fn format_result(r: &BenchResult) -> String {
+    let tp = r
+        .throughput_meps()
+        .map(|x| format!("  {x:.1} Melem/s"))
+        .unwrap_or_default();
+    format!(
+        "{:<52} {:>10}/iter (σ {:>9}, min {:>9}, n={}){}",
+        r.name,
+        human_ns(r.mean_ns),
+        human_ns(r.std_ns),
+        human_ns(r.min_ns),
+        r.iters,
+        tp
+    )
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std-only black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_results() {
+        let mut b = Bench::new("unit").with_iters(1, 5);
+        b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].mean_ns >= 0.0);
+        assert_eq!(b.results()[0].iters, 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new("unit").with_iters(0, 3);
+        let r = b
+            .run_with_elements("spin", Some(1000), &mut || {
+                let mut s = 0u64;
+                for i in 0..1000u64 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            })
+            .clone();
+        assert!(r.throughput_meps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert!(human_ns(1500.0).ends_with("µs"));
+        assert!(human_ns(2.5e6).ends_with("ms"));
+        assert!(human_ns(3.2e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn summary_contains_all_rows() {
+        let mut b = Bench::new("unit").with_iters(0, 2);
+        b.run("a", || {});
+        b.run("b", || {});
+        let s = b.summary();
+        assert!(s.contains("unit/a") && s.contains("unit/b"));
+    }
+}

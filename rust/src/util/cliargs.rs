@@ -1,0 +1,165 @@
+//! Minimal CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("missing required argument --{0}")]
+    Missing(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    Invalid {
+        key: String,
+        value: String,
+        why: String,
+    },
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.entry(stripped.to_string()).or_default().push(v);
+                } else {
+                    out.flags.entry(stripped.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str, ArgError> {
+        self.get(key).ok_or_else(|| ArgError::Missing(key.into()))
+    }
+
+    pub fn parse_typed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|e| ArgError::Invalid {
+                key: key.into(),
+                value: s.into(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_typed(key).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_typed(key).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_typed(key).ok().flatten().unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--lengths 256,1024,4096`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(s) if !s.is_empty() => s.split(',').map(|x| x.trim().to_string()).collect(),
+            _ => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = args(&["sweep", "--gpu", "v100", "--verbose", "--n=4096"]);
+        assert_eq!(a.positional, vec!["sweep"]);
+        assert_eq!(a.get("gpu"), Some("v100"));
+        assert_eq!(a.get("n"), Some("4096"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = args(&["--x", "3.5", "--n", "42"]);
+        assert_eq!(a.f64_or("x", 0.0), 3.5);
+        assert_eq!(a.u64_or("n", 0), 42);
+        assert_eq!(a.u64_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn invalid_typed_value_is_error() {
+        let a = args(&["--n", "notanumber"]);
+        assert!(a.parse_typed::<u64>("n").is_err());
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = args(&[]);
+        assert!(a.required("gpu").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--lengths", "1, 2,4"]);
+        assert_eq!(a.list_or("lengths", &[]), vec!["1", "2", "4"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn repeated_flags_last_wins_but_all_kept() {
+        let a = args(&["--gpu", "v100", "--gpu", "nano"]);
+        assert_eq!(a.get("gpu"), Some("nano"));
+        assert_eq!(a.get_all("gpu"), vec!["v100", "nano"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cross-cutting utilities: deterministic PRNG, statistics, CLI parsing,
+//! CSV/ASCII tables, micro-bench harness and the mini property-testing
+//! framework (offline substitutes for rand/clap/serde/criterion/proptest —
+//! see DESIGN.md §1).
+
+pub mod bench;
+pub mod cliargs;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,116 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! Runs a property over N generated cases from a seeded [`Rng`]; on failure
+//! it reports the failing case's seed so the exact case can be replayed.
+//! Used by the coordinator/sim invariant tests.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xfeed_beef }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the replay seed
+/// on the first failure.
+pub fn for_all<T, G, P>(cfg: PropConfig, name: &str, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (replay seed {case_seed:#x}):\n  \
+                 input: {input:?}\n  reason: {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with the default config.
+pub fn check<T, G, P>(name: &str, generate: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for_all(PropConfig::default(), name, generate, prop);
+}
+
+/// Assert helper producing `Result<(), String>` bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all(
+            PropConfig { cases: 64, seed: 1 },
+            "addition commutes",
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        for_all(
+            PropConfig { cases: 16, seed: 9 },
+            "collect",
+            |r| r.next_u64(),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        for_all(
+            PropConfig { cases: 16, seed: 9 },
+            "collect",
+            |r| r.next_u64(),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

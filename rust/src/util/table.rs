@@ -1,0 +1,145 @@
+//! CSV and aligned-ASCII table writers (no `serde` in the offline crate set).
+//!
+//! Every figure/table the harness regenerates is emitted twice: a CSV file
+//! for plotting and an aligned text rendering for the terminal/EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Convenience: format heterogenous cells.
+    pub fn row(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.push_row(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_line(&self.columns));
+        for r in &self.rows {
+            out.push_str(&csv_line(r));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// Aligned fixed-width rendering with a title rule.
+    pub fn to_ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, cell) in r.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len().saturating_sub(1);
+        let _ = writeln!(out, "{}", self.title);
+        let _ = writeln!(out, "{}", "=".repeat(total.max(self.title.len())));
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        let _ = writeln!(out, "{}", header.join(" | "));
+        let _ = writeln!(out, "{}", "-".repeat(total.max(self.title.len())));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            let _ = writeln!(out, "{}", line.join(" | "));
+        }
+        out
+    }
+}
+
+fn csv_line<S: AsRef<str>>(cells: &[S]) -> String {
+    let quoted: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            let c = c.as_ref();
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        })
+        .collect();
+    format!("{}\n", quoted.join(","))
+}
+
+/// Format a float with a fixed number of decimals, trimming "-0.000".
+pub fn fnum(x: f64, decimals: usize) -> String {
+    let s = format!("{x:.decimals$}");
+    if s.starts_with("-0.") && s[3..].chars().all(|c| c == '0') {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_basic() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["1".into(), "x,y".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    fn ascii_is_aligned() {
+        let mut t = Table::new("Demo", &["name", "v"]);
+        t.push_row(vec!["long-name".into(), "1".into()]);
+        t.push_row(vec!["x".into(), "22".into()]);
+        let a = t.to_ascii();
+        let lines: Vec<&str> = a.lines().collect();
+        assert!(lines[2].contains("name"));
+        // all data lines same width
+        assert_eq!(lines[4].len(), lines[5].len());
+    }
+
+    #[test]
+    fn quote_escaping() {
+        let mut t = Table::new("t", &["a"]);
+        t.push_row(vec!["say \"hi\"".into()]);
+        assert!(t.to_csv().contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn fnum_strips_negative_zero() {
+        assert_eq!(fnum(-0.00001, 3), "0.000");
+        assert_eq!(fnum(1.23456, 2), "1.23");
+    }
+}

@@ -1,0 +1,287 @@
+//! Integration tests over the PJRT runtime + coordinator: load real AOT
+//! artifacts, execute them, and validate numerics against the pure-rust
+//! DSP oracle. Requires `make artifacts` to have run (skips otherwise so
+//! `cargo test` works in a fresh checkout).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fftsweep::coordinator::{Engine, EngineConfig};
+use fftsweep::dsp;
+use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Runtime> {
+    artifact_dir().map(|d| Runtime::new(&d).expect("runtime"))
+}
+
+fn rand_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+    )
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    assert!(m.of_kind("fft").len() >= 4);
+    assert_eq!(m.of_kind("pipeline").len(), 5);
+    for a in m.entries.values() {
+        assert!(a.file.exists(), "{:?} missing", a.file);
+    }
+}
+
+#[test]
+fn fft_artifact_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    for (n, name) in [(256u64, "fft_f32_n256_b256"), (1024, "fft_f32_n1024_b64")] {
+        let module = rt.load(name).expect("load");
+        let total = (module.meta.batch * n) as usize;
+        let (re, im) = rand_planes(total, n);
+        let out = module.run_f32(&[&re, &im]).expect("run");
+        assert_eq!(out.len(), 2);
+        // check a few batch rows against the oracle
+        for b in [0usize, module.meta.batch as usize - 1] {
+            let off = b * n as usize;
+            let x: Vec<dsp::C64> = (0..n as usize)
+                .map(|i| dsp::C64::new(re[off + i] as f64, im[off + i] as f64))
+                .collect();
+            let want = dsp::fft(&x);
+            for i in 0..n as usize {
+                assert!(
+                    (out[0][off + i] as f64 - want[i].re).abs() < 1e-2
+                        && (out[1][off + i] as f64 - want[i].im).abs() < 1e-2,
+                    "{name} row {b} bin {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn four_step_artifact_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let module = rt.load("fft_f32_n16384_b4").expect("load");
+    let n = 16384usize;
+    let (re, im) = rand_planes(module.meta.batch as usize * n, 99);
+    let out = module.run_f32(&[&re, &im]).expect("run");
+    let x: Vec<dsp::C64> = (0..n)
+        .map(|i| dsp::C64::new(re[i] as f64, im[i] as f64))
+        .collect();
+    let want = dsp::fft(&x);
+    let scale = want.iter().map(|c| c.abs2().sqrt()).fold(0.0, f64::max);
+    for i in 0..n {
+        let err = ((out[0][i] as f64 - want[i].re).powi(2)
+            + (out[1][i] as f64 - want[i].im).powi(2))
+        .sqrt();
+        assert!(err / scale < 1e-4, "bin {i}: err {err}");
+    }
+}
+
+#[test]
+fn fp64_artifact_runs() {
+    let Some(rt) = runtime() else { return };
+    let module = rt.load("fft_f64_n1024_b64").expect("load");
+    let total = (module.meta.batch * module.meta.n) as usize;
+    let mut rng = Rng::new(3);
+    let re: Vec<f64> = (0..total).map(|_| rng.gauss()).collect();
+    let im: Vec<f64> = (0..total).map(|_| rng.gauss()).collect();
+    let out = module.run_f64(&[&re, &im]).expect("run");
+    let x: Vec<dsp::C64> = (0..1024).map(|i| dsp::C64::new(re[i], im[i])).collect();
+    let want = dsp::fft(&x);
+    for i in 0..1024 {
+        assert!((out[0][i] - want[i].re).abs() < 1e-8, "bin {i}");
+    }
+}
+
+#[test]
+fn pipeline_artifact_detects_pulsar() {
+    let Some(rt) = runtime() else { return };
+    let module = rt.load("pipeline_n16384_h8").expect("load");
+    let n = 16384usize;
+    let batch = module.meta.batch as usize;
+    let params = dsp::PulsarParams {
+        fundamental_bin: 321,
+        harmonics: 8,
+        amplitude: 0.25,
+    };
+    let mut rng = Rng::new(42);
+    let mut re = Vec::with_capacity(batch * n);
+    let mut im = Vec::with_capacity(batch * n);
+    for _ in 0..batch {
+        let x = dsp::pulsar_time_series(n, &params, &mut rng);
+        for c in &x {
+            re.push(c.re as f32);
+            im.push(c.im as f32);
+        }
+    }
+    let out = module.run_f32(&[&re, &im]).expect("run");
+    assert_eq!(out.len(), 3); // harmonic sums, mean, std
+    let n_out = n / 8;
+    for b in 0..batch {
+        let hs = &out[0][b * n_out..(b + 1) * n_out];
+        let det = dsp::detect_peak(hs, 8).expect("detection");
+        assert_eq!(det.bin, 321, "batch {b}: snr {}", det.snr);
+        assert!(det.snr > 8.0, "batch {b}: snr {}", det.snr);
+    }
+    // mean/std outputs are per-row scalars
+    assert_eq!(out[1].len(), batch);
+    assert_eq!(out[2].len(), batch);
+    assert!(out[2].iter().all(|&s| s > 0.0));
+}
+
+#[test]
+fn engine_serves_batched_jobs_correctly() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
+    engine.nvml.set_gpu_locked_clocks(945.0, 945.0).expect("lock");
+
+    // Pre-build payloads and oracles so the submit loop is tight — the
+    // flusher must not see artificial gaps between submissions.
+    let n = 1024usize;
+    let mut rng = Rng::new(11);
+    let mut payloads = Vec::new();
+    let mut want = Vec::new();
+    for _ in 0..70 {
+        let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let x: Vec<dsp::C64> = re
+            .iter()
+            .zip(&im)
+            .map(|(&r, &i)| dsp::C64::new(r as f64, i as f64))
+            .collect();
+        want.push(dsp::fft(&x));
+        payloads.push((re, im));
+    }
+    let mut jobs = Vec::new();
+    for (re, im) in payloads {
+        jobs.push(engine.submit(re, im).expect("submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(120)), "drain timed out");
+    for (rx, want) in jobs.into_iter().zip(want) {
+        let res = rx.recv().expect("recv").expect("job ok");
+        assert_eq!(res.out_re.len(), n);
+        for i in 0..n {
+            assert!(
+                (res.out_re[i] as f64 - want[i].re).abs() < 1e-2,
+                "job {} bin {i}",
+                res.id
+            );
+        }
+    }
+    // 70 jobs into device batches of 64: at least 2 batches, high occupancy
+    let batches = engine
+        .metrics
+        .batches_executed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches >= 2);
+    assert!(engine.metrics.occupancy() > 0.5);
+    // DVFS accounting shows a saving at 945 vs boost
+    assert!(engine.metrics.energy_saving() > 0.15);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_unroutable_length() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
+    assert!(engine.submit(vec![0.0; 123], vec![0.0; 123]).is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn spectrum_artifact_is_fft_power() {
+    let Some(rt) = runtime() else { return };
+    let module = rt.load("spectrum_f32_n4096_b16").expect("load");
+    let n = 4096usize;
+    let (re, im) = rand_planes(module.meta.batch as usize * n, 5);
+    let out = module.run_f32(&[&re, &im]).expect("run");
+    let x: Vec<dsp::C64> = (0..n)
+        .map(|i| dsp::C64::new(re[i] as f64, im[i] as f64))
+        .collect();
+    let want = dsp::fft(&x);
+    for i in 0..n {
+        let p = want[i].abs2();
+        let got = out[0][i] as f64;
+        assert!(
+            (got - p).abs() <= 1e-3 * p.max(1.0),
+            "bin {i}: {got} vs {p}"
+        );
+    }
+}
+
+#[test]
+fn corrupted_artifact_fails_loud_not_silent() {
+    // Failure injection: a tampered HLO file must produce an error at load
+    // time (and `validate` must flag the digest), never silent bad numbers.
+    let Some(dir) = artifact_dir() else { return };
+    let tmp = std::env::temp_dir().join(format!("fftsweep_corrupt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        std::fs::copy(&p, tmp.join(p.file_name().unwrap())).unwrap();
+    }
+    // truncate one artifact mid-instruction
+    let victim = tmp.join("fft_f32_n1024_b64.hlo.txt");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+
+    let findings = fftsweep::runtime::validation::validate(
+        &Manifest::load(&tmp).unwrap(),
+    );
+    assert!(
+        findings.iter().any(|f| f.artifact == "fft_f32_n1024_b64"),
+        "validation must flag the tampered artifact"
+    );
+
+    let rt = Runtime::new(&tmp).expect("runtime");
+    assert!(
+        rt.load("fft_f32_n1024_b64").is_err(),
+        "loading a truncated HLO must error"
+    );
+    // untouched artifacts still load
+    assert!(rt.load("fft_f32_n256_b256").is_ok());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn engine_survives_mixed_good_and_bad_submissions() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
+    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
+    let mut rng = Rng::new(5);
+    let mut good = Vec::new();
+    for i in 0..20 {
+        if i % 3 == 0 {
+            // unroutable length — rejected synchronously, engine unharmed
+            assert!(engine.submit(vec![0.0; 100], vec![0.0; 100]).is_err());
+        } else {
+            let re: Vec<f32> = (0..256).map(|_| rng.gauss() as f32).collect();
+            let im: Vec<f32> = (0..256).map(|_| rng.gauss() as f32).collect();
+            good.push(engine.submit(re, im).expect("good submit"));
+        }
+    }
+    assert!(engine.drain(Duration::from_secs(60)));
+    for rx in good {
+        assert!(rx.recv().expect("recv").is_ok());
+    }
+    engine.shutdown();
+}
