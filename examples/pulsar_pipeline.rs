@@ -12,7 +12,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use fftsweep::dsp;
-use fftsweep::pipeline::{run_pipeline, table4};
+use fftsweep::governor::GovernorKind;
+use fftsweep::pipeline::{run_pipeline_at, table4};
 use fftsweep::runtime::{Manifest, Runtime};
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::rng::Rng;
@@ -80,7 +81,9 @@ fn main() -> Result<()> {
     println!("\n=== Table 4 reproduction (simulated V100, N=5e5, FFT @ 945 MHz via NVML) ===");
     println!("{:>9} | {:>12} | {:>12} | paper", "harmonics", "FFT time [%]", "eff increase");
     let paper = [(2u64, 60.85, 1.291), (4, 58.56, 1.290), (8, 55.92, 1.267), (16, 53.73, 1.260), (32, 51.34, 1.240)];
-    for (row, (ph, pfft, peff)) in table4(&gpu, 500_000, 945.0).iter().zip(paper) {
+    for (row, (ph, pfft, peff)) in
+        table4(&gpu, 500_000, &GovernorKind::FixedClock(945.0)).iter().zip(paper)
+    {
         assert_eq!(row.harmonics, ph);
         println!(
             "{:>9} | {:>12} | {:>12} | {:>5}% / {}",
@@ -93,7 +96,7 @@ fn main() -> Result<()> {
     }
 
     println!("\n=== Fig 19: pipeline power/clock trace (simulated) ===");
-    let run = run_pipeline(&gpu, 500_000, 8, Some(945.0));
+    let run = run_pipeline_at(&gpu, 500_000, 8, Some(945.0));
     let mut t = 0.0;
     for s in &run.stages {
         println!(

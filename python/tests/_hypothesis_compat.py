@@ -1,0 +1,41 @@
+"""Optional-dependency shim for `hypothesis`.
+
+The offline image does not always ship hypothesis; importing it at module
+scope turned every property-test file into a collection error, taking the
+fixed-parametrization tests down with it. Route imports through this shim:
+with hypothesis installed the real objects are re-exported; without it the
+`@given` tests turn into pytest skips and strategy expressions evaluate to
+inert placeholders.
+"""
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategy:
+        """Absorbs any strategy construction (st.integers(...), .map(...))."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    strategies = _Strategy()

@@ -1,8 +1,9 @@
 //! Bench: Table 4 + Fig 19 — the pulsar-pipeline energy-efficiency
-//! increase per harmonic configuration with NVML clock bracketing.
+//! increase per clock governor, with NVML clock bracketing.
 
 mod common;
 
+use fftsweep::governor::GovernorKind;
 use fftsweep::pipeline::{run_pipeline, table4};
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::bench::{black_box, Bench};
@@ -15,7 +16,7 @@ fn main() {
 
     let mut rows = None;
     b.run("table4_v100_n5e5", || {
-        rows = Some(table4(&gpu, 500_000, 945.0));
+        rows = Some(table4(&gpu, 500_000, &GovernorKind::FixedClock(945.0)));
     });
     let rows = rows.unwrap();
 
@@ -43,11 +44,38 @@ fn main() {
     t.write_csv(&out.join("table4.csv")).unwrap();
     println!("\n{}", t.to_ascii());
 
-    // Fig 19 trace generation speed (per pipeline run).
+    // Every governor through the full pipeline at h=8: the policy menu's
+    // relative cost, plus the per-run latency of the governed runner.
+    let mut menu = Table::new(
+        "Pipeline energy by governor (V100, N=5e5, h=8, vs all-boost)",
+        &["governor", "energy_j", "saving_pct", "time_s"],
+    );
+    let mut boost_gov = GovernorKind::FixedBoost.make();
+    let baseline = run_pipeline(&gpu, 500_000, 8, &mut *boost_gov);
+    for kind in GovernorKind::all(945.0) {
+        let mut gov = kind.make();
+        let label = kind.label();
+        let mut last = None;
+        b.run(&format!("pipeline_h8_{label}"), || {
+            last = Some(run_pipeline(&gpu, 500_000, 8, &mut *gov));
+        });
+        let run = last.unwrap();
+        menu.push_row(vec![
+            label,
+            fnum(run.total_energy_j(), 1),
+            fnum((1.0 - run.total_energy_j() / baseline.total_energy_j()) * 100.0, 1),
+            fnum(run.total_time_s(), 4),
+        ]);
+    }
+    menu.write_csv(&out.join("pipeline_governors.csv")).unwrap();
+    println!("{}", menu.to_ascii());
+
+    // Fig 19 trace generation speed (per governed pipeline run).
+    let mut fixed = GovernorKind::FixedClock(945.0).make();
     b.run("fig19_pipeline_run", || {
-        black_box(run_pipeline(&gpu, 500_000, 8, Some(945.0)));
+        black_box(run_pipeline(&gpu, 500_000, 8, &mut *fixed));
     });
-    let run = run_pipeline(&gpu, 500_000, 8, Some(945.0));
+    let run = run_pipeline(&gpu, 500_000, 8, &mut *fixed);
     let mut fig19 = Table::new(
         "Fig 19: pipeline power/clock trace",
         &["t_ms", "stage", "clock_mhz", "power_w"],

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fftsweep::coordinator::{Engine, EngineConfig};
+use fftsweep::governor::GovernorKind;
 use fftsweep::runtime::{Manifest, Runtime};
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::bench::{black_box, Bench};
@@ -57,7 +58,13 @@ fn main() {
     drop((m1024, pipe));
 
     // Coordinator throughput: 256 jobs of N=1024 through the batcher.
-    let engine = Engine::start(rt.clone(), tesla_v100(), EngineConfig::default()).expect("engine");
+    let engine = Engine::start_single(
+        rt.clone(),
+        tesla_v100(),
+        GovernorKind::FixedClock(945.0),
+        EngineConfig::default(),
+    )
+    .expect("engine");
     let n = 1024usize;
     let payloads: Vec<(Vec<f32>, Vec<f32>)> = (0..256)
         .map(|_| {
@@ -79,7 +86,7 @@ fn main() {
         }
     });
     println!("engine metrics: {}", engine.metrics.summary());
-    engine.shutdown();
+    println!("{}", engine.shutdown());
 
     println!("\n{}", b.summary());
     println!("{}", coord.summary());

@@ -5,9 +5,11 @@
 pub mod ablation;
 pub mod cost;
 pub mod figures;
+pub mod govern;
 pub mod optimal;
 pub mod roofline;
 pub mod report;
 pub mod tables;
 
+pub use govern::{comparison, synthetic_trace, GovernorOutcome, TrafficTrace};
 pub use optimal::{at_fixed_clock, mean_optimal_mhz, optima, OptimalPoint};

@@ -6,14 +6,15 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use fftsweep::analysis::report::{full_report, headline_table};
-use fftsweep::analysis::{figures, optima, tables};
-use fftsweep::coordinator::{Engine, EngineConfig};
+use fftsweep::analysis::{figures, govern, optima, tables};
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
 use fftsweep::dsp;
+use fftsweep::governor::{GovernorContext, GovernorKind};
 use fftsweep::harness::sweep::{paper_lengths, quick_lengths, sweep_gpu, SweepConfig};
 use fftsweep::harness::Protocol;
-use fftsweep::pipeline::{run_pipeline, table4};
+use fftsweep::pipeline::{run_pipeline_at, table4};
 use fftsweep::runtime::{Manifest, Runtime};
-use fftsweep::sim::gpu::{all_gpus, gpu_by_name, tesla_v100, GpuSpec};
+use fftsweep::sim::gpu::{all_gpus, gpu_by_name, GpuSpec};
 use fftsweep::types::Precision;
 use fftsweep::util::cliargs::Args;
 use fftsweep::util::rng::Rng;
@@ -27,15 +28,25 @@ USAGE:
   fftsweep table    <1|2|3|4> [--quick]
   fftsweep figure   <2|3|4|5|6|7|8|9|13|15|17|20> [--gpu v100] [--precision fp32] [--quick]
   fftsweep sweep    [--gpu v100] [--precision fp32] [--quick]
-  fftsweep pipeline [--gpu v100] [--n 500000] [--clock 945]
+  fftsweep pipeline [--gpu v100] [--n 500000] [--governor fixed --clock 945]
   fftsweep selftest [--artifacts artifacts]
-  fftsweep serve    [--artifacts artifacts] [--jobs 256] [--clock 945]
+  fftsweep serve    [--artifacts artifacts] [--jobs 256] [--governor fixed --clock 945]
+                    [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
+  fftsweep govern   [--gpu v100] [--batches 96] [--seed 7] [--clock 945] [--quick]
   fftsweep validate [--artifacts artifacts]
   fftsweep ablation [--gpu v100] [--n 16384]
   fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
   fftsweep roofline [--n 8192] [--precision fp32]
   fftsweep cost     [--gpu v100] [--n 16384] [--clock 945] [--gpus 500]
   fftsweep thermal  [--gpu v100] [--n 16384] [--ambient 30]
+
+GOVERNORS (the --governor values):
+  boost        no DVFS: everything at the boost clock
+  fixed:<mhz>  one locked clock (bare `fixed` reads --clock, default 945)
+  optimal      per-length measured energy optimum (paper Fig 9)
+  common       the paper's single mean-optimal clock (Table 3)
+  deadline     lowest-energy clock that meets each batch deadline (§6.2)
+  adaptive     EWMA slack feedback, descends the energy curve under slack
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
@@ -51,6 +62,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "pipeline" => cmd_pipeline(args),
         "selftest" => cmd_selftest(args),
         "serve" => cmd_serve(args),
+        "govern" => cmd_govern(args),
         "validate" => cmd_validate(args),
         "ablation" => cmd_ablation(args),
         "schedule" => cmd_schedule(args),
@@ -91,6 +103,15 @@ fn precision_arg(args: &Args) -> Result<Precision> {
     Precision::parse(p).with_context(|| format!("unknown precision '{p}'"))
 }
 
+/// `--governor <name>` with `fixed` (the default) reading `--clock`.
+fn governor_arg(args: &Args, default: &str) -> Result<GovernorKind> {
+    let name = args.str_or("governor", default);
+    if name == "fixed" {
+        return Ok(GovernorKind::FixedClock(args.f64_or("clock", 945.0)));
+    }
+    GovernorKind::parse(name)
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.str_or("out", "results"));
     let cfg = sweep_cfg(args);
@@ -112,10 +133,14 @@ fn cmd_table(args: &Args) -> Result<()> {
         "3" => println!("{}", tables::table3(&cfg).to_ascii()),
         "4" => {
             let gpu = gpu_arg(args)?;
-            let clock = args.f64_or("clock", 945.0);
+            let kind = governor_arg(args, "fixed")?;
             let n = args.u64_or("n", 500_000);
-            let rows = table4(&gpu, n, clock);
-            println!("Table 4: pipeline energy-efficiency increase ({})", gpu.name);
+            let rows = table4(&gpu, n, &kind);
+            println!(
+                "Table 4: pipeline energy-efficiency increase ({}, governor {})",
+                gpu.name,
+                kind.label()
+            );
             println!("{:>9} | {:>12} | {:>12}", "harmonics", "FFT time [%]", "eff increase");
             for r in rows {
                 println!(
@@ -153,7 +178,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
         15 | 16 => figures::figure15_16(&gpu, &sweep_gpu(&gpu, precision, &cfg)).1,
         17 | 18 => figures::figure17_18(&gpu, &sweep_gpu(&gpu, precision, &cfg)),
         19 => {
-            let run = run_pipeline(&gpu, args.u64_or("n", 500_000), 8, Some(args.f64_or("clock", 945.0)));
+            let run = run_pipeline_at(&gpu, args.u64_or("n", 500_000), 8, Some(args.f64_or("clock", 945.0)));
             println!("Fig 19: pipeline stage trace ({}):", gpu.name);
             let mut t = 0.0;
             for s in &run.stages {
@@ -212,9 +237,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let gpu = gpu_arg(args)?;
     let n = args.u64_or("n", 500_000);
-    let clock = args.f64_or("clock", 945.0);
-    println!("pipeline comparison on {} (N={n}, FFT clock {clock} MHz):", gpu.name);
-    let rows = table4(&gpu, n, clock);
+    let kind = governor_arg(args, "fixed")?;
+    println!(
+        "pipeline comparison on {} (N={n}, FFT governor {}):",
+        gpu.name,
+        kind.label()
+    );
+    let rows = table4(&gpu, n, &kind);
     println!("{:>9} | {:>12} | {:>12}", "harmonics", "FFT time [%]", "eff increase");
     for r in &rows {
         println!(
@@ -261,13 +290,46 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fleet spec: `--gpus v100,p4,...` (heterogeneous) or `--cards N` copies
+/// of `--gpu`.
+fn fleet_arg(args: &Args, governor: &GovernorKind) -> Result<Vec<CardConfig>> {
+    let specs: Vec<GpuSpec> = if let Some(list) = args.get("gpus") {
+        list.split(',')
+            .map(|name| {
+                gpu_by_name(name.trim()).with_context(|| format!("unknown gpu '{name}'"))
+            })
+            .collect::<Result<_>>()?
+    } else {
+        let gpu = gpu_arg(args)?;
+        vec![gpu; args.usize_or("cards", 1).max(1)]
+    };
+    Ok(specs
+        .into_iter()
+        .map(|spec| CardConfig::new(spec, governor.clone()))
+        .collect())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let jobs = args.usize_or("jobs", 256);
-    let clock = args.f64_or("clock", 945.0);
+    let governor = governor_arg(args, "fixed")?;
+    let fleet = fleet_arg(args, &governor)?;
+    let n_cards = fleet.len();
+    let cfg = EngineConfig {
+        governor_ctx: GovernorContext {
+            deadline_s: args.parse_typed::<f64>("deadline-ms")?.map(|ms| ms * 1e-3),
+            freq_stride: args.usize_or("freq-stride", 2),
+            ..GovernorContext::default()
+        },
+        ..EngineConfig::default()
+    };
     let rt = std::sync::Arc::new(Runtime::new(&dir)?);
-    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default())?;
-    engine.nvml.set_gpu_locked_clocks(clock, clock)?;
+    println!(
+        "serving on {n_cards} card(s), governor {} (runtime: {})",
+        governor.label(),
+        rt.platform()
+    );
+    let engine = Engine::start(rt, fleet, cfg)?;
 
     let mut rng = Rng::new(7);
     let lengths = engine.router().supported_lengths("f32");
@@ -289,8 +351,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let dt = t0.elapsed();
     println!("served {ok}/{jobs} jobs in {:.3} s", dt.as_secs_f64());
-    println!("{}", engine.metrics.summary());
-    engine.shutdown();
+    println!("{}", engine.fleet_report());
+    println!("{}", engine.shutdown());
+    Ok(())
+}
+
+fn cmd_govern(args: &Args) -> Result<()> {
+    let gpu = gpu_arg(args)?;
+    let quick = args.has("quick");
+    let batches = args.usize_or("batches", if quick { 24 } else { 96 });
+    let seed = args.u64_or("seed", 7);
+    let fixed_mhz = args
+        .parse_typed::<f64>("clock")?
+        .or_else(|| tables::table3_paper_mhz(gpu.name, Precision::Fp32))
+        .unwrap_or(gpu.f_knee_mhz);
+    let ctx = GovernorContext {
+        freq_stride: args.usize_or("freq-stride", if quick { 8 } else { 2 }),
+        ..GovernorContext::default()
+    };
+    let trace = govern::synthetic_trace(&gpu, batches, seed);
+    let kinds = GovernorKind::all(fixed_mhz);
+    let (outcomes, table) = govern::comparison(&gpu, &trace, &kinds, &ctx);
+    println!("{}", table.to_ascii());
+    for o in &outcomes {
+        if !o.all_deadlines_met() {
+            println!(
+                "note: {} missed {} deadline(s) — static policies cannot see per-batch slack",
+                o.label,
+                o.batches - o.deadlines_met
+            );
+        }
+    }
     Ok(())
 }
 
@@ -309,7 +400,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
-    use fftsweep::pipeline::scheduler::choose_clock;
+    use fftsweep::governor::choose_clock;
     use fftsweep::sim::run_batch;
     use fftsweep::types::FftWorkload;
     let gpu = gpu_arg(args)?;

@@ -1,9 +1,11 @@
 //! Dynamic batcher: packs single-transform jobs into the fixed device batch
-//! of their artifact, padding partial batches with zeros.
+//! of their artifact, padding partial batches with zeros. Batches are keyed
+//! by (artifact, card) so a fleet engine can pack independently per card.
 //!
 //! Invariants (property-tested):
 //!   * every submitted job appears in exactly one flushed batch,
-//!   * jobs only share a batch with jobs of the same (n, dtype),
+//!   * jobs only share a batch with jobs of the same (n, dtype) on the
+//!     same card,
 //!   * a batch never exceeds the artifact's device batch,
 //!   * flush-on-timeout emits partial batches (no starvation).
 
@@ -12,11 +14,13 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::job::Envelope;
 
-/// A packed batch ready for execution.
+/// A packed batch ready for execution on one card.
 pub struct PackedBatch {
     pub artifact: String,
     pub n: u64,
     pub device_batch: u64,
+    /// Fleet card index this batch was packed for.
+    pub card: usize,
     /// The member jobs, in packing order (row i of the device batch).
     pub envelopes: Vec<Envelope>,
 }
@@ -44,13 +48,14 @@ struct Pending {
     artifact: String,
     n: u64,
     device_batch: u64,
+    card: usize,
     envelopes: Vec<Envelope>,
     oldest: Instant,
 }
 
 /// The batcher. Not thread-safe by itself; the engine owns it behind a lock.
 pub struct Batcher {
-    pending: BTreeMap<String, Pending>,
+    pending: BTreeMap<(String, usize), Pending>,
     pub max_wait: Duration,
 }
 
@@ -62,41 +67,42 @@ impl Batcher {
         }
     }
 
-    /// Add a job under its route; returns a batch if one became full.
+    /// Add a job under its (route, card); returns a batch if one became full.
     pub fn push(
         &mut self,
         artifact: &str,
         n: u64,
         device_batch: u64,
+        card: usize,
         env: Envelope,
     ) -> Option<PackedBatch> {
-        let slot = self
-            .pending
-            .entry(artifact.to_string())
-            .or_insert_with(|| Pending {
-                artifact: artifact.to_string(),
-                n,
-                device_batch,
-                envelopes: Vec::new(),
-                oldest: Instant::now(),
-            });
+        let key = (artifact.to_string(), card);
+        let slot = self.pending.entry(key.clone()).or_insert_with(|| Pending {
+            artifact: artifact.to_string(),
+            n,
+            device_batch,
+            card,
+            envelopes: Vec::new(),
+            oldest: Instant::now(),
+        });
         debug_assert_eq!(slot.n, n, "route/artifact length mismatch");
         if slot.envelopes.is_empty() {
             slot.oldest = Instant::now();
         }
         slot.envelopes.push(env);
         if slot.envelopes.len() as u64 >= slot.device_batch {
-            return self.take(&artifact.to_string());
+            return self.take(&key);
         }
         None
     }
 
-    /// Remove and return the pending batch for an artifact.
-    fn take(&mut self, artifact: &String) -> Option<PackedBatch> {
-        self.pending.remove(artifact).map(|p| PackedBatch {
+    /// Remove and return the pending batch for an (artifact, card) slot.
+    fn take(&mut self, key: &(String, usize)) -> Option<PackedBatch> {
+        self.pending.remove(key).map(|p| PackedBatch {
             artifact: p.artifact,
             n: p.n,
             device_batch: p.device_batch,
+            card: p.card,
             envelopes: p.envelopes,
         })
     }
@@ -105,7 +111,7 @@ impl Batcher {
     /// of them when `force` (shutdown/drain).
     pub fn flush(&mut self, force: bool) -> Vec<PackedBatch> {
         let now = Instant::now();
-        let due: Vec<String> = self
+        let due: Vec<(String, usize)> = self
             .pending
             .iter()
             .filter(|(_, p)| force || now.duration_since(p.oldest) >= self.max_wait)
@@ -142,10 +148,11 @@ mod tests {
         let mut got = None;
         for i in 0..4 {
             let (e, _rx) = env(i, 8);
-            got = b.push("a", 8, 4, e);
+            got = b.push("a", 8, 4, 0, e);
         }
         let batch = got.expect("4th push must flush");
         assert_eq!(batch.occupancy(), 4);
+        assert_eq!(batch.card, 0);
         assert_eq!(b.pending_jobs(), 0);
     }
 
@@ -153,7 +160,7 @@ mod tests {
     fn partial_batch_flushes_on_force() {
         let mut b = Batcher::new(Duration::from_secs(10));
         let (e, _rx) = env(0, 8);
-        assert!(b.push("a", 8, 4, e).is_none());
+        assert!(b.push("a", 8, 4, 0, e).is_none());
         assert_eq!(b.pending_jobs(), 1);
         let batches = b.flush(true);
         assert_eq!(batches.len(), 1);
@@ -164,7 +171,7 @@ mod tests {
     fn timeout_flush() {
         let mut b = Batcher::new(Duration::from_millis(1));
         let (e, _rx) = env(0, 8);
-        b.push("a", 8, 4, e);
+        b.push("a", 8, 4, 0, e);
         std::thread::sleep(Duration::from_millis(3));
         assert_eq!(b.flush(false).len(), 1);
     }
@@ -174,8 +181,8 @@ mod tests {
         let mut b = Batcher::new(Duration::from_secs(10));
         let (e1, _r1) = env(1, 8);
         let (e2, _r2) = env(2, 16);
-        b.push("a8", 8, 4, e1);
-        b.push("a16", 16, 4, e2);
+        b.push("a8", 8, 4, 0, e1);
+        b.push("a16", 16, 4, 0, e2);
         let batches = b.flush(true);
         assert_eq!(batches.len(), 2);
         for batch in &batches {
@@ -185,10 +192,26 @@ mod tests {
     }
 
     #[test]
+    fn separate_cards_never_mix() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let (e1, _r1) = env(1, 8);
+        let (e2, _r2) = env(2, 8);
+        b.push("a", 8, 4, 0, e1);
+        b.push("a", 8, 4, 1, e2);
+        assert_eq!(b.pending_jobs(), 2);
+        let batches = b.flush(true);
+        assert_eq!(batches.len(), 2, "same artifact, different cards");
+        for batch in &batches {
+            assert_eq!(batch.occupancy(), 1);
+            assert_eq!(batch.envelopes[0].job.id as usize, batch.card + 1);
+        }
+    }
+
+    #[test]
     fn planes_zero_padded() {
         let mut b = Batcher::new(Duration::from_secs(10));
         let (e, _rx) = env(3, 4);
-        b.push("a", 4, 3, e);
+        b.push("a", 4, 3, 0, e);
         let batch = b.flush(true).pop().unwrap();
         let (re, im) = batch.planes();
         assert_eq!(re.len(), 12);
@@ -204,16 +227,17 @@ mod tests {
             |rng| {
                 let jobs = rng.range_u64(1, 40) as usize;
                 let device_batch = rng.range_u64(1, 8);
-                (jobs, device_batch)
+                let cards = rng.range_u64(1, 4) as usize;
+                (jobs, device_batch, cards)
             },
-            |&(jobs, device_batch)| {
+            |&(jobs, device_batch, cards)| {
                 let mut b = Batcher::new(Duration::from_secs(100));
                 let mut seen = Vec::new();
                 let mut rxs = Vec::new();
                 for i in 0..jobs {
                     let (e, rx) = env(i as u64, 8);
                     rxs.push(rx);
-                    if let Some(batch) = b.push("a", 8, device_batch, e) {
+                    if let Some(batch) = b.push("a", 8, device_batch, i % cards, e) {
                         seen.extend(batch.envelopes.iter().map(|e| e.job.id));
                         if batch.occupancy() as u64 != device_batch {
                             return Err(format!(

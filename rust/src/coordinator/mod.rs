@@ -1,11 +1,17 @@
-//! The L3 coordinator: an FFT-serving engine in the vLLM-router shape.
+//! The L3 coordinator: an FFT-serving fleet engine in the vLLM-router shape.
 //!
 //! Requests (single transforms) are routed to the artifact that serves
-//! their (length, dtype), packed by the dynamic batcher into the artifact's
-//! fixed device batch, executed on worker threads through the PJRT runtime,
-//! and split back per request. A simulated NVML clock controller accounts
-//! the DVFS energy saving of every executed batch — the serving-loop
-//! integration of the paper's result (section 5.3).
+//! their (length, dtype), dispatched least-loaded across N simulated cards
+//! (heterogeneous specs allowed), packed by the dynamic batcher into the
+//! artifact's fixed device batch per card, executed on per-card worker
+//! threads through the runtime, and split back per request.
+//!
+//! Every worker owns its own simulated NVML handle and its own
+//! [`crate::governor::ClockGovernor`] instance: the governor picks the
+//! clock each batch runs at, the simulator prices the batch at that clock
+//! vs boost, and [`Metrics`] accounts energy/latency/occupancy per card
+//! and fleet-wide — the serving-loop integration of the paper's DVFS
+//! result (section 5.3) generalized to swappable clock policies.
 //!
 //! No tokio in the offline crate set: std threads + mpsc channels.
 
@@ -14,7 +20,7 @@ pub mod job;
 pub mod metrics;
 pub mod router;
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -25,74 +31,125 @@ use crate::coordinator::batcher::{Batcher, PackedBatch};
 use crate::coordinator::job::{Envelope, FftJob, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
+use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorKind};
 use crate::pipeline::nvml::SimNvml;
 use crate::runtime::Runtime;
+use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::types::{FftWorkload, Precision};
+
+/// One card in the fleet: a simulated GPU plus the clock policy governing it.
+#[derive(Debug, Clone)]
+pub struct CardConfig {
+    pub spec: GpuSpec,
+    pub governor: GovernorKind,
+}
+
+impl CardConfig {
+    pub fn new(spec: GpuSpec, governor: GovernorKind) -> Self {
+        Self { spec, governor }
+    }
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    pub workers: usize,
     pub max_batch_wait: Duration,
+    /// Deadline/stride/tolerance knobs threaded to every governor.
+    pub governor_ctx: GovernorContext,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         Self {
-            workers: 2,
             max_batch_wait: Duration::from_millis(2),
+            governor_ctx: GovernorContext::default(),
         }
     }
 }
 
-/// The serving engine.
+/// Runtime state of one fleet card, exposed for inspection.
+pub struct Card {
+    pub spec: GpuSpec,
+    pub governor_label: String,
+    /// The card's simulated NVML handle (clock-lock trace inspection).
+    pub nvml: Arc<SimNvml>,
+    /// Per-card serving metrics.
+    pub metrics: Arc<Metrics>,
+    /// Jobs routed to this card and not yet completed.
+    inflight: Arc<AtomicU64>,
+}
+
+impl Card {
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// The serving engine: a fleet of N governed cards behind one router.
 pub struct Engine {
     runtime: Arc<Runtime>,
     router: Router,
     batcher: Arc<Mutex<Batcher>>,
-    batch_tx: mpsc::Sender<PackedBatch>,
+    cards: Vec<Card>,
+    batch_txs: Vec<mpsc::Sender<PackedBatch>>,
+    /// Fleet-aggregate metrics (every card also records its own).
     pub metrics: Arc<Metrics>,
-    /// Simulated DVFS controller for the energy accounting.
-    pub nvml: Arc<SimNvml>,
-    sim_gpu: GpuSpec,
     workers: Vec<JoinHandle<()>>,
     flusher: Option<JoinHandle<()>>,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
 }
 
 impl Engine {
-    /// Start the engine: spawns worker threads and the batch-timeout flusher.
-    pub fn start(runtime: Arc<Runtime>, sim_gpu: GpuSpec, cfg: EngineConfig) -> Result<Self> {
+    /// Start a fleet: one worker thread per card, each owning its own
+    /// `SimNvml` and governor instance, plus the batch-timeout flusher.
+    pub fn start(runtime: Arc<Runtime>, fleet: Vec<CardConfig>, cfg: EngineConfig) -> Result<Self> {
+        anyhow::ensure!(!fleet.is_empty(), "fleet needs at least one card");
         let router = Router::from_manifest(runtime.manifest());
         anyhow::ensure!(!router.is_empty(), "no fft artifacts in manifest");
         let batcher = Arc::new(Mutex::new(Batcher::new(cfg.max_batch_wait)));
         let metrics = Arc::new(Metrics::default());
-        let nvml = Arc::new(SimNvml::new(&sim_gpu));
-        let (batch_tx, batch_rx) = mpsc::channel::<PackedBatch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
+        let mut cards = Vec::new();
+        let mut batch_txs = Vec::new();
         let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let rx = batch_rx.clone();
-            let rt = runtime.clone();
-            let m = metrics.clone();
-            let nv = nvml.clone();
-            let gpu = sim_gpu.clone();
+        for (i, cc) in fleet.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<PackedBatch>();
+            let card_metrics = Arc::new(Metrics::default());
+            let nvml = Arc::new(SimNvml::new(&cc.spec));
+            let inflight = Arc::new(AtomicU64::new(0));
+            let governor = cc.governor.make();
+            let worker = WorkerState {
+                gpu: cc.spec.clone(),
+                runtime: runtime.clone(),
+                fleet_metrics: metrics.clone(),
+                card_metrics: card_metrics.clone(),
+                nvml: nvml.clone(),
+                inflight: inflight.clone(),
+                ctx: cfg.governor_ctx.clone(),
+            };
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("fftsweep-worker-{w}"))
-                    .spawn(move || worker_loop(rx, rt, m, nv, gpu))?,
+                    .name(format!("fftsweep-card-{i}"))
+                    .spawn(move || worker_loop(rx, worker, governor))?,
             );
+            cards.push(Card {
+                spec: cc.spec,
+                governor_label: cc.governor.label(),
+                nvml,
+                metrics: card_metrics,
+                inflight,
+            });
+            batch_txs.push(tx);
         }
 
         // Timeout flusher: emits partial batches so low request rates are
         // never starved.
         let flusher = {
             let batcher = batcher.clone();
-            let tx = batch_tx.clone();
+            let txs = batch_txs.clone();
             let stop = shutdown.clone();
             let tick = cfg.max_batch_wait.max(Duration::from_micros(500)) / 2;
             Some(std::thread::Builder::new().name("fftsweep-flusher".into()).spawn(
@@ -100,7 +157,7 @@ impl Engine {
                     while !stop.load(Ordering::Relaxed) {
                         std::thread::sleep(tick);
                         for b in batcher.lock().unwrap().flush(false) {
-                            let _ = tx.send(b);
+                            let _ = txs[b.card].send(b);
                         }
                     }
                 },
@@ -111,19 +168,36 @@ impl Engine {
             runtime,
             router,
             batcher,
-            batch_tx,
+            cards,
+            batch_txs,
             metrics,
-            nvml,
-            sim_gpu,
             workers,
             flusher,
             shutdown,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
         })
+    }
+
+    /// Single-card convenience (the pre-fleet call shape).
+    pub fn start_single(
+        runtime: Arc<Runtime>,
+        spec: GpuSpec,
+        governor: GovernorKind,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        Self::start(runtime, vec![CardConfig::new(spec, governor)], cfg)
     }
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    pub fn cards(&self) -> &[Card] {
+        &self.cards
     }
 
     /// Submit one transform; returns the receiver for its result.
@@ -135,15 +209,22 @@ impl Engine {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = FftJob::new(id, re, im);
         let route = self.router.route(job.n, job.dtype)?.clone();
+
+        // Least-loaded dispatch across the fleet.
+        let loads: Vec<u64> = self.cards.iter().map(|c| c.inflight()).collect();
+        let card = Router::least_loaded(&loads).expect("fleet is non-empty");
+        self.cards[card].inflight.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.cards[card].metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+
         let (tx, rx) = mpsc::channel();
         let env = Envelope { job, reply: tx };
         let full = {
             let mut b = self.batcher.lock().unwrap();
-            b.push(&route.artifact, route.n, route.device_batch, env)
+            b.push(&route.artifact, route.n, route.device_batch, card, env)
         };
         if let Some(batch) = full {
-            let _ = self.batch_tx.send(batch);
+            let _ = self.batch_txs[card].send(batch);
         }
         Ok(rx)
     }
@@ -151,7 +232,7 @@ impl Engine {
     /// Force-flush pending partial batches (used before blocking waits).
     pub fn flush(&self) {
         for b in self.batcher.lock().unwrap().flush(true) {
-            let _ = self.batch_tx.send(b);
+            let _ = self.batch_txs[b.card].send(b);
         }
     }
 
@@ -179,63 +260,112 @@ impl Engine {
         false
     }
 
-    /// Stop workers and flusher.
-    pub fn shutdown(mut self) {
+    /// Per-card + fleet-aggregate metrics report.
+    pub fn fleet_report(&self) -> String {
+        let mut out = String::new();
+        for (i, c) in self.cards.iter().enumerate() {
+            out.push_str(&format!(
+                "card{i} {} [{}]: {} (clock transitions {})\n",
+                c.spec.name,
+                c.governor_label,
+                c.metrics.summary(),
+                c.nvml.transition_count()
+            ));
+        }
+        out.push_str(&format!("fleet: {}", self.metrics.summary()));
+        out
+    }
+
+    /// Stop the fleet deterministically: flush, join the flusher, close
+    /// every card channel, join every worker. Returns the final fleet
+    /// summary line (all counters quiescent once this returns).
+    pub fn shutdown(mut self) -> String {
         self.shutdown.store(true, Ordering::Relaxed);
         self.flush();
-        drop(self.batch_tx);
         if let Some(f) = self.flusher.take() {
             let _ = f.join();
         }
+        // Dropping every sender closes each card's channel; workers drain
+        // what was already queued and then exit.
+        self.batch_txs.clear();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-    }
-
-    pub fn sim_gpu(&self) -> &GpuSpec {
-        &self.sim_gpu
+        format!("final {}", self.fleet_report().lines().last().unwrap_or_default())
     }
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<mpsc::Receiver<PackedBatch>>>,
-    runtime: Arc<Runtime>,
-    metrics: Arc<Metrics>,
-    nvml: Arc<SimNvml>,
+/// Everything one card worker owns besides its governor.
+struct WorkerState {
     gpu: GpuSpec,
+    runtime: Arc<Runtime>,
+    fleet_metrics: Arc<Metrics>,
+    card_metrics: Arc<Metrics>,
+    nvml: Arc<SimNvml>,
+    inflight: Arc<AtomicU64>,
+    ctx: GovernorContext,
+}
+
+fn worker_loop(
+    rx: mpsc::Receiver<PackedBatch>,
+    w: WorkerState,
+    mut governor: Box<dyn ClockGovernor>,
 ) {
-    loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => return, // channel closed: shutdown
-            }
-        };
+    let table = freq_table(&w.gpu);
+    let tesla_class = w.gpu.name.starts_with("Tesla");
+    while let Ok(batch) = rx.recv() {
         let occupancy = batch.occupancy();
         let rows_total = batch.device_batch;
+
+        // Clock policy: ask the governor, then drive the simulated NVML the
+        // way the paper's pipeline brackets cuFFT calls (Tesla-class only;
+        // other cards apply the snapped clock offline).
+        let workload = FftWorkload::new(
+            batch.n,
+            Precision::Fp32,
+            batch.device_batch * batch.n * Precision::Fp32.complex_bytes(),
+        );
+        let requested = governor
+            .choose(&w.gpu, &workload, &w.ctx)
+            .unwrap_or(w.gpu.boost_clock_mhz);
+        let clock = if tesla_class {
+            let _ = w.nvml.set_gpu_locked_clocks(requested, requested);
+            w.nvml.current_clock_mhz()
+        } else {
+            table.snap(requested)
+        };
+
         let t0 = Instant::now();
-        let result = runtime
+        let result = w
+            .runtime
             .load(&batch.artifact)
             .and_then(|m| {
                 let (re, im) = batch.planes();
                 m.run_f32(&[&re, &im])
             });
         let exec_us = t0.elapsed().as_micros() as u64;
-        metrics.record_batch(occupancy, rows_total, exec_us);
+        w.fleet_metrics.record_batch(occupancy, rows_total, exec_us);
+        w.card_metrics.record_batch(occupancy, rows_total, exec_us);
 
-        // DVFS energy accounting: what this batch would cost on the
-        // simulated GPU at the locked clock vs at boost.
-        let w = FftWorkload::new(
-            batch.n,
-            Precision::Fp32,
-            batch.device_batch * batch.n * Precision::Fp32.complex_bytes(),
-        );
-        let locked = nvml.current_clock_mhz();
-        let e_locked = crate::sim::run_batch(&gpu, &w, locked).energy_j;
-        let e_boost = crate::sim::run_batch(&gpu, &w, gpu.boost_clock_mhz).energy_j;
-        metrics.record_energy(e_locked, e_boost);
+        // DVFS energy accounting: what this batch costs on the simulated
+        // card at the governed clock vs at boost.
+        let run = crate::sim::run_batch(&w.gpu, &workload, clock);
+        let boost = crate::sim::run_batch(&w.gpu, &workload, w.gpu.boost_clock_mhz);
+        w.fleet_metrics.record_energy(run.energy_j, boost.energy_j);
+        w.card_metrics.record_energy(run.energy_j, boost.energy_j);
 
+        // Close the feedback loop for adaptive policies.
+        let deadline = w.ctx.effective_deadline_s(boost.timing.total_s);
+        governor.observe(&BatchFeedback {
+            n: batch.n,
+            f_mhz: clock,
+            time_s: run.timing.total_s,
+            deadline_s: deadline,
+            slack: 1.0 - run.timing.total_s / deadline,
+            energy_j: run.energy_j,
+        });
+
+        let n_env = batch.envelopes.len() as u64;
         match result {
             Ok(outputs) => {
                 let out_re = &outputs[0];
@@ -250,16 +380,19 @@ fn worker_loop(
                         exec_us,
                         batch_occupancy: occupancy,
                     };
-                    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    w.fleet_metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    w.card_metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     let _ = env.reply.send(Ok(res));
                 }
             }
             Err(e) => {
                 for env in batch.envelopes {
-                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    w.fleet_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    w.card_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                     let _ = env.reply.send(Err(anyhow::anyhow!("{e:#}")));
                 }
             }
         }
+        w.inflight.fetch_sub(n_env, Ordering::Relaxed);
     }
 }

@@ -63,6 +63,17 @@ impl Router {
     pub fn is_empty(&self) -> bool {
         self.routes.is_empty()
     }
+
+    /// Least-loaded dispatch across a fleet: the index of the card with the
+    /// fewest in-flight jobs (ties broken toward the lowest index, so a
+    /// cold fleet fills deterministically). `None` on an empty fleet.
+    pub fn least_loaded(loads: &[u64]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &load)| (load, i))
+            .map(|(i, _)| i)
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +111,20 @@ mod tests {
         let r = Router::from_manifest(&manifest());
         assert_eq!(r.supported_lengths("f32"), vec![256, 1024]);
         assert_eq!(r.supported_lengths("f64"), vec![1024]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_min_then_lowest_index() {
+        assert_eq!(Router::least_loaded(&[3, 1, 2]), Some(1));
+        assert_eq!(Router::least_loaded(&[2, 2, 2]), Some(0));
+        assert_eq!(Router::least_loaded(&[5]), Some(0));
+        assert_eq!(Router::least_loaded(&[]), None);
+        // dispatching into the returned slot converges toward balance
+        let mut loads = vec![4u64, 0, 2];
+        for _ in 0..6 {
+            let i = Router::least_loaded(&loads).unwrap();
+            loads[i] += 1;
+        }
+        assert_eq!(loads, vec![4, 4, 4]);
     }
 }

@@ -1,0 +1,303 @@
+//! Adaptive clock policy: EWMA feedback on observed batch slack.
+//!
+//! Starts every length at boost and walks down the card's frequency table
+//! one step at a time, but only while (a) an EWMA of the observed slack
+//! says the slack is persistent, (b) the model predicts the next clock
+//! still meets the deadline, and (c) the next clock still lowers energy
+//! (the descent parks at the knee of the energy curve instead of falling
+//! off the p-state cliff). A missed or near-missed deadline walks back up
+//! immediately.
+//!
+//! Invariants (tested below): chosen clocks always meet the effective
+//! deadline, and per-batch energy never exceeds the boost-clock energy.
+
+use std::collections::HashMap;
+
+use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorError};
+use crate::sim::freq_table::freq_table;
+use crate::sim::{run_batch, GpuSpec};
+use crate::types::FftWorkload;
+
+/// EWMA weight of the newest slack observation.
+const ALPHA: f64 = 0.35;
+/// Sustained-slack threshold that allows one step down the table.
+const STEP_DOWN_SLACK: f64 = 0.08;
+/// Slack below which we retreat toward boost.
+const STEP_UP_SLACK: f64 = 0.02;
+
+struct LengthState {
+    /// Index into the descending frequency list (0 = f_max).
+    idx: usize,
+    ewma_slack: f64,
+    observed: u64,
+}
+
+/// Per-card frequency list + per-length descent state.
+struct CardState {
+    freqs: Vec<f64>,
+    /// Index of the boost clock in `freqs` — the ceiling of every descent
+    /// (some tables run past boost, e.g. the P4's f_max 1531 vs boost 1063).
+    start: usize,
+    lengths: HashMap<u64, LengthState>,
+}
+
+pub struct Adaptive {
+    cards: HashMap<String, CardState>,
+}
+
+impl Adaptive {
+    pub fn new() -> Self {
+        Self { cards: HashMap::new() }
+    }
+
+    fn card_state<'a>(
+        cards: &'a mut HashMap<String, CardState>,
+        gpu: &GpuSpec,
+    ) -> &'a mut CardState {
+        cards.entry(gpu.name.to_string()).or_insert_with(|| {
+            let freqs = freq_table(gpu).frequencies();
+            let start = Self::boost_idx(&freqs, gpu.boost_clock_mhz);
+            CardState {
+                freqs,
+                start,
+                lengths: HashMap::new(),
+            }
+        })
+    }
+
+    /// Index of the boost clock in the descending table (first entry at or
+    /// below boost — f_max can exceed boost on some cards).
+    fn boost_idx(freqs: &[f64], boost_mhz: f64) -> usize {
+        freqs
+            .iter()
+            .position(|&f| f <= boost_mhz + 1e-9)
+            .unwrap_or(0)
+    }
+}
+
+impl Default for Adaptive {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClockGovernor for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        let boost = run_batch(gpu, workload, gpu.boost_clock_mhz);
+        let deadline = ctx.effective_deadline_s(boost.timing.total_s);
+        if boost.timing.total_s > deadline {
+            return Err(GovernorError::Infeasible(deadline, boost.timing.total_s));
+        }
+        let card = Self::card_state(&mut self.cards, gpu);
+        let start = card.start;
+        let state = card
+            .lengths
+            .entry(workload.n)
+            .or_insert_with(|| LengthState { idx: start, ewma_slack: 0.0, observed: 0 });
+
+        // Step down one table entry when the EWMA says the slack persists,
+        // but only if the next clock is predicted feasible AND cheaper.
+        if state.observed > 0 && state.ewma_slack > STEP_DOWN_SLACK {
+            let next = state.idx + ctx.freq_stride.max(1);
+            if next < card.freqs.len() {
+                let here = run_batch(gpu, workload, card.freqs[state.idx]);
+                let there = run_batch(gpu, workload, card.freqs[next]);
+                if there.timing.total_s <= deadline && there.energy_j < here.energy_j {
+                    state.idx = next;
+                    state.ewma_slack = 0.0; // re-observe at the new clock
+                }
+            }
+        }
+
+        // Feasibility clamp: retreat toward boost until the prediction fits
+        // the deadline (exact under the analytic model, so deadlines are
+        // never missed by construction).
+        while state.idx > start
+            && run_batch(gpu, workload, card.freqs[state.idx]).timing.total_s > deadline
+        {
+            state.idx -= 1;
+        }
+        Ok(card.freqs[state.idx])
+    }
+
+    fn observe(&mut self, fb: &BatchFeedback) {
+        for card in self.cards.values_mut() {
+            if let Some(state) = card.lengths.get_mut(&fb.n) {
+                state.observed += 1;
+                state.ewma_slack = ALPHA * fb.slack + (1.0 - ALPHA) * state.ewma_slack;
+                if fb.slack < STEP_UP_SLACK && state.idx > card.start {
+                    // Deadline pressure: retreat immediately, but never
+                    // above boost (the table may run past the boost clock).
+                    state.idx = state.idx.saturating_sub(2).max(card.start);
+                    state.ewma_slack = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::types::Precision;
+
+    fn wl(n: u64) -> FftWorkload {
+        let g = tesla_v100();
+        FftWorkload::new(n, Precision::Fp32, g.working_set_bytes)
+    }
+
+    /// Drive the governor over `batches` identical batches, returning the
+    /// clocks it chose. Feedback uses the analytic model, like the engine.
+    fn drive(gov: &mut Adaptive, n: u64, deadline_mult: f64, batches: usize) -> Vec<f64> {
+        let g = tesla_v100();
+        let w = wl(n);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * deadline_mult),
+            freq_stride: 4,
+            ..GovernorContext::default()
+        };
+        let mut clocks = Vec::new();
+        for _ in 0..batches {
+            let f = gov.choose(&g, &w, &ctx).expect("feasible");
+            let run = run_batch(&g, &w, f);
+            let deadline = ctx.effective_deadline_s(boost_t);
+            gov.observe(&BatchFeedback {
+                n,
+                f_mhz: f,
+                time_s: run.timing.total_s,
+                deadline_s: deadline,
+                slack: 1.0 - run.timing.total_s / deadline,
+                energy_j: run.energy_j,
+            });
+            clocks.push(f);
+        }
+        clocks
+    }
+
+    #[test]
+    fn descends_under_persistent_slack() {
+        let mut gov = Adaptive::new();
+        let clocks = drive(&mut gov, 16384, 2.0, 40);
+        let g = tesla_v100();
+        assert_eq!(clocks[0], g.boost_clock_mhz, "starts at boost");
+        let last = *clocks.last().unwrap();
+        assert!(last < 0.8 * g.boost_clock_mhz, "never descended: {last}");
+        // descent is monotone non-increasing under constant load
+        for w in clocks.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn never_misses_deadline_and_never_beats_boost_energy() {
+        let g = tesla_v100();
+        for mult in [1.05, 1.3, 2.5] {
+            let mut gov = Adaptive::new();
+            let w = wl(16384);
+            let boost = run_batch(&g, &w, g.boost_clock_mhz);
+            let deadline = boost.timing.total_s * mult;
+            for f in drive(&mut gov, 16384, mult, 30) {
+                let run = run_batch(&g, &w, f);
+                assert!(run.timing.total_s <= deadline + 1e-12, "missed at {f} MHz");
+                assert!(run.energy_j <= boost.energy_j + 1e-9, "worse than boost at {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn parks_at_energy_knee_not_pstate_cliff() {
+        // With a very loose deadline the descent must stop where energy
+        // stops improving, not race to f_min.
+        let g = tesla_v100();
+        let mut gov = Adaptive::new();
+        let clocks = drive(&mut gov, 16384, 6.0, 120);
+        let last = *clocks.last().unwrap();
+        assert!(
+            last > 0.4 * g.boost_clock_mhz,
+            "fell past the knee to {last} MHz"
+        );
+        assert!(last < 0.8 * g.boost_clock_mhz, "never reached the knee: {last}");
+    }
+
+    #[test]
+    fn tight_deadline_keeps_boost() {
+        let g = tesla_v100();
+        let mut gov = Adaptive::new();
+        let clocks = drive(&mut gov, 16384, 1.001, 10);
+        for f in clocks {
+            assert!(f > 0.9 * g.boost_clock_mhz, "over-cut to {f}");
+        }
+    }
+
+    #[test]
+    fn infeasible_deadline_is_an_error() {
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let mut gov = Adaptive::new();
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * 0.5),
+            ..GovernorContext::default()
+        };
+        assert!(matches!(
+            gov.choose(&g, &w, &ctx),
+            Err(GovernorError::Infeasible(..))
+        ));
+    }
+
+    #[test]
+    fn retreat_never_exceeds_boost_when_table_runs_past_it() {
+        // The P4's frequency table tops out at 1531 MHz, well above its
+        // 1063 MHz boost; a deadline-pressure retreat must stop at boost.
+        let g = crate::sim::gpu::tesla_p4();
+        let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let mut gov = Adaptive::new();
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * 1.01),
+            freq_stride: 4,
+            ..GovernorContext::default()
+        };
+        for _ in 0..5 {
+            let f = gov.choose(&g, &w, &ctx).expect("feasible");
+            assert!(f <= g.boost_clock_mhz + 1e-9, "retreated above boost: {f}");
+            let run = run_batch(&g, &w, f);
+            let deadline = boost_t * 1.01;
+            gov.observe(&BatchFeedback {
+                n: w.n,
+                f_mhz: f,
+                time_s: run.timing.total_s,
+                deadline_s: deadline,
+                slack: 1.0 - run.timing.total_s / deadline,
+                energy_j: run.energy_j,
+            });
+        }
+    }
+
+    #[test]
+    fn state_is_per_length() {
+        let g = tesla_v100();
+        let mut gov = Adaptive::new();
+        drive(&mut gov, 16384, 3.0, 30);
+        // a fresh length starts from boost again
+        let w = wl(1024);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * 3.0),
+            ..GovernorContext::default()
+        };
+        let f = gov.choose(&g, &w, &ctx).unwrap();
+        assert_eq!(f, g.boost_clock_mhz);
+    }
+}

@@ -1,11 +1,10 @@
-//! DVFS deadline scheduler — the "integration into existing pipelines"
-//! extension (paper section 6.2): given a real-time deadline per batch,
-//! pick the lowest-energy clock that still meets it.
-//!
-//! This is the policy a production pipeline would run instead of a fixed
-//! mean-optimal clock: workloads with slack get deeper frequency cuts;
-//! tight deadlines stay near boost.
+//! Deadline-aware clock policy — the "integration into existing pipelines"
+//! extension (paper §6.2), absorbed from the old `pipeline::scheduler`:
+//! given a real-time deadline per batch, pick the lowest-energy supported
+//! clock that still meets it. Workloads with slack get deeper frequency
+//! cuts; tight deadlines stay near boost.
 
+use crate::governor::{ClockGovernor, GovernorContext, GovernorError};
 use crate::sim::freq_table::freq_table;
 use crate::sim::{run_batch, GpuSpec};
 use crate::types::FftWorkload;
@@ -22,12 +21,6 @@ pub struct ClockChoice {
     pub slack: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
-pub enum ScheduleError {
-    #[error("deadline {0} s unreachable even at boost ({1} s needed)")]
-    Infeasible(f64, f64),
-}
-
 /// Pick the energy-minimal supported clock whose batch time fits within
 /// `deadline_s`. Scans the (subsampled) frequency table — the table is
 /// small and the exec model analytic, so this is microseconds of work.
@@ -36,10 +29,10 @@ pub fn choose_clock(
     workload: &FftWorkload,
     deadline_s: f64,
     freq_stride: usize,
-) -> Result<ClockChoice, ScheduleError> {
+) -> Result<ClockChoice, GovernorError> {
     let boost = run_batch(gpu, workload, gpu.boost_clock_mhz);
     if boost.timing.total_s > deadline_s {
-        return Err(ScheduleError::Infeasible(deadline_s, boost.timing.total_s));
+        return Err(GovernorError::Infeasible(deadline_s, boost.timing.total_s));
     }
     let mut best: Option<ClockChoice> = None;
     for f in freq_table(gpu).stride(freq_stride) {
@@ -58,7 +51,17 @@ pub fn choose_clock(
             best = Some(cand);
         }
     }
-    Ok(best.expect("boost clock always feasible here"))
+    match best {
+        Some(c) => Ok(c),
+        // The table stride skipped every feasible clock; fall back to boost.
+        None => Ok(ClockChoice {
+            f_mhz: gpu.boost_clock_mhz,
+            time_s: boost.timing.total_s,
+            energy_j: boost.energy_j,
+            energy_vs_boost: 1.0,
+            slack: 1.0 - boost.timing.total_s / deadline_s,
+        }),
+    }
 }
 
 /// Schedule a heterogeneous queue of (workload, deadline) batches; returns
@@ -67,7 +70,7 @@ pub fn schedule_queue(
     gpu: &GpuSpec,
     queue: &[(FftWorkload, f64)],
     freq_stride: usize,
-) -> Result<(Vec<ClockChoice>, f64), ScheduleError> {
+) -> Result<(Vec<ClockChoice>, f64), GovernorError> {
     let mut choices = Vec::with_capacity(queue.len());
     let mut e_tuned = 0.0;
     let mut e_boost = 0.0;
@@ -78,6 +81,45 @@ pub fn schedule_queue(
         choices.push(c);
     }
     Ok((choices, 1.0 - e_tuned / e_boost))
+}
+
+/// The governor wrapper: per batch, run [`choose_clock`] against the
+/// context's deadline (explicit, or the tolerance-scaled boost time).
+pub struct DeadlineAware {
+    /// Most recent decision, kept for introspection.
+    pub last_choice: Option<ClockChoice>,
+}
+
+impl DeadlineAware {
+    pub fn new() -> Self {
+        Self { last_choice: None }
+    }
+}
+
+impl Default for DeadlineAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClockGovernor for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        let boost_t = run_batch(gpu, workload, gpu.boost_clock_mhz).timing.total_s;
+        let deadline = ctx.effective_deadline_s(boost_t);
+        let c = choose_clock(gpu, workload, deadline, ctx.freq_stride)?;
+        let f = c.f_mhz;
+        self.last_choice = Some(c);
+        Ok(f)
+    }
 }
 
 #[cfg(test)]
@@ -121,8 +163,27 @@ mod tests {
         let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
         assert!(matches!(
             choose_clock(&g, &w, boost_t * 0.5, 4),
-            Err(ScheduleError::Infeasible(..))
+            Err(GovernorError::Infeasible(..))
         ));
+    }
+
+    #[test]
+    fn governor_surfaces_infeasible_deadline() {
+        // Error-path migration: the governor propagates Infeasible when the
+        // context's explicit deadline is unreachable even at boost.
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let mut gov = DeadlineAware::new();
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * 0.5),
+            ..GovernorContext::default()
+        };
+        assert!(matches!(
+            gov.choose(&g, &w, &ctx),
+            Err(GovernorError::Infeasible(..))
+        ));
+        assert!(gov.last_choice.is_none());
     }
 
     #[test]
@@ -132,12 +193,19 @@ mod tests {
         let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
         let mut last = f64::MAX;
         for mult in [1.01, 1.05, 1.2, 2.0, 4.0] {
-            let c = choose_clock(&g, &w, boost_t * mult, 4).unwrap();
+            let mut gov = DeadlineAware::new();
+            let ctx = GovernorContext {
+                deadline_s: Some(boost_t * mult),
+                freq_stride: 4,
+                ..GovernorContext::default()
+            };
+            let f = gov.choose(&g, &w, &ctx).unwrap();
+            let e = run_batch(&g, &w, f).energy_j;
             assert!(
-                c.energy_j <= last + 1e-9,
+                e <= last + 1e-9,
                 "more slack must not cost energy (mult {mult})"
             );
-            last = c.energy_j;
+            last = e;
         }
     }
 
@@ -159,7 +227,7 @@ mod tests {
     fn prop_deadline_always_met() {
         let g = tesla_v100();
         crate::util::prop::check(
-            "scheduler meets deadlines",
+            "governor meets deadlines",
             |rng| {
                 let n = 1u64 << rng.range_u64(8, 18);
                 let mult = 1.0 + rng.f64() * 3.0;

@@ -1,0 +1,159 @@
+//! Static clock policies: boost (no DVFS), one operator-chosen locked
+//! clock, and the paper's common (mean-optimal) clock for all lengths.
+
+use std::collections::HashMap;
+
+use crate::analysis::{mean_optimal_mhz, optima};
+use crate::governor::{ClockGovernor, GovernorContext, GovernorError};
+use crate::harness::sweep::{quick_lengths, sweep_gpu, SweepConfig};
+use crate::harness::Protocol;
+use crate::sim::freq_table::freq_table;
+use crate::sim::GpuSpec;
+use crate::types::FftWorkload;
+
+/// The no-DVFS default: every batch at the boost clock.
+pub struct FixedBoost;
+
+impl ClockGovernor for FixedBoost {
+    fn name(&self) -> &'static str {
+        "boost"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        _workload: &FftWorkload,
+        _ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        Ok(gpu.boost_clock_mhz)
+    }
+}
+
+/// One operator-chosen locked clock, snapped to the card's frequency table
+/// (what `nvmlDeviceSetGpuLockedClocks` would do with the raw request).
+pub struct FixedClock {
+    requested_mhz: f64,
+    snapped: HashMap<String, f64>,
+}
+
+impl FixedClock {
+    pub fn new(mhz: f64) -> Self {
+        Self {
+            requested_mhz: mhz,
+            snapped: HashMap::new(),
+        }
+    }
+}
+
+impl ClockGovernor for FixedClock {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        _workload: &FftWorkload,
+        _ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        let f = *self
+            .snapped
+            .entry(gpu.name.to_string())
+            .or_insert_with(|| freq_table(gpu).snap(self.requested_mhz));
+        Ok(f)
+    }
+}
+
+/// The paper's production policy (Table 3, Figs 15/16): one clock for every
+/// length — the mean of the per-length optima. Derived once per card from a
+/// quick measurement sweep and cached.
+pub struct CommonClock {
+    cache: HashMap<String, f64>,
+}
+
+impl CommonClock {
+    pub fn new() -> Self {
+        Self { cache: HashMap::new() }
+    }
+
+    fn derive(gpu: &GpuSpec) -> f64 {
+        let cfg = SweepConfig {
+            lengths: quick_lengths(),
+            freq_stride: 6,
+            protocol: Protocol::quick(),
+        };
+        let sweep = sweep_gpu(gpu, crate::types::Precision::Fp32, &cfg);
+        let pts = optima(gpu, &sweep);
+        let mean = mean_optimal_mhz(gpu, &pts);
+        freq_table(gpu).snap(mean)
+    }
+}
+
+impl Default for CommonClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClockGovernor for CommonClock {
+    fn name(&self) -> &'static str {
+        "common"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        _workload: &FftWorkload,
+        _ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        let f = *self
+            .cache
+            .entry(gpu.name.to_string())
+            .or_insert_with(|| Self::derive(gpu));
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::{tesla_p4, tesla_v100};
+    use crate::types::Precision;
+
+    fn wl(gpu: &GpuSpec, n: u64) -> FftWorkload {
+        FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes)
+    }
+
+    #[test]
+    fn fixed_clock_snaps_to_table() {
+        let g = tesla_v100();
+        let mut gov = FixedClock::new(946.3);
+        let f = gov.choose(&g, &wl(&g, 1024), &GovernorContext::default()).unwrap();
+        assert!(freq_table(&g).contains(f), "{f} not a table clock");
+        assert!((f - 946.3).abs() <= 8.0);
+    }
+
+    #[test]
+    fn common_clock_near_paper_table3() {
+        // Governor-equivalence satellite: CommonClock lands in the paper's
+        // Table 3 neighbourhood (V100 FP32: 945 MHz).
+        let g = tesla_v100();
+        let mut gov = CommonClock::new();
+        let f = gov.choose(&g, &wl(&g, 16384), &GovernorContext::default()).unwrap();
+        assert!((f - 945.0).abs() < 120.0, "V100 common clock {f} vs paper 945");
+        // decision is length-independent and cached
+        let f2 = gov.choose(&g, &wl(&g, 1024), &GovernorContext::default()).unwrap();
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn common_clock_is_per_card() {
+        let mut gov = CommonClock::new();
+        let v100 = tesla_v100();
+        let p4 = tesla_p4();
+        let fv = gov.choose(&v100, &wl(&v100, 16384), &GovernorContext::default()).unwrap();
+        let fp = gov.choose(&p4, &wl(&p4, 16384), &GovernorContext::default()).unwrap();
+        assert!(fv > fp, "V100 {fv} should clock above P4 {fp}");
+        assert!((fp - 746.0).abs() < 120.0, "P4 common clock {fp} vs paper 746");
+    }
+}

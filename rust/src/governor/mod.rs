@@ -1,0 +1,244 @@
+//! Pluggable DVFS clock governors — the system's central policy axis.
+//!
+//! The paper's headline result (one locked clock ≈ −50% energy, <10%
+//! slowdown) is the simplest of several clock policies a production
+//! pipeline could run. This subsystem makes the policy a first-class,
+//! swappable component: a [`ClockGovernor`] decides, per batch, which core
+//! clock a simulated card should run at, and optionally adapts from
+//! feedback about the batches it already governed.
+//!
+//! Implementations:
+//!   * [`FixedBoost`] — the no-DVFS default (everything at boost),
+//!   * [`FixedClock`] — one operator-chosen locked clock,
+//!   * [`PerLengthOptimal`] — the per-N energy optimum (paper §5.1, Fig 9),
+//!   * [`CommonClock`] — the paper's single mean-optimal clock for all
+//!     lengths (Table 3, Figs 15/16),
+//!   * [`DeadlineAware`] — lowest-energy clock that still meets a
+//!     per-batch deadline (paper §6.2),
+//!   * [`Adaptive`] — EWMA feedback on observed batch slack, descending
+//!     the energy curve only while slack persists.
+//!
+//! Consumers: the multi-card [`crate::coordinator::Engine`], the pipeline
+//! runner (`pipeline::runner`), the `fftsweep govern` replay table
+//! (`analysis::govern`) and the benches.
+
+pub mod adaptive;
+pub mod deadline;
+pub mod fixed;
+pub mod optimal;
+
+pub use adaptive::Adaptive;
+pub use deadline::{choose_clock, schedule_queue, ClockChoice, DeadlineAware};
+pub use fixed::{CommonClock, FixedBoost, FixedClock};
+pub use optimal::PerLengthOptimal;
+
+use crate::sim::GpuSpec;
+use crate::types::FftWorkload;
+
+/// Per-engine knobs a governor may consult when choosing a clock.
+#[derive(Debug, Clone)]
+pub struct GovernorContext {
+    /// Soft per-batch deadline, seconds. `None` = throughput mode: policies
+    /// that need a deadline derive one as `boost_time * slack_tolerance`.
+    pub deadline_s: Option<f64>,
+    /// Frequency-table stride used when a policy scans clocks.
+    pub freq_stride: usize,
+    /// Allowed slowdown vs boost when no explicit deadline is given
+    /// (the paper's "<10%" envelope → 1.10).
+    pub slack_tolerance: f64,
+}
+
+impl Default for GovernorContext {
+    fn default() -> Self {
+        Self {
+            deadline_s: None,
+            freq_stride: 2,
+            slack_tolerance: 1.10,
+        }
+    }
+}
+
+impl GovernorContext {
+    /// The deadline a batch is judged against: the explicit one, or the
+    /// tolerance-scaled boost time.
+    pub fn effective_deadline_s(&self, boost_time_s: f64) -> f64 {
+        self.deadline_s.unwrap_or(boost_time_s * self.slack_tolerance)
+    }
+}
+
+/// Outcome of one governed batch, fed back to the governor.
+#[derive(Debug, Clone)]
+pub struct BatchFeedback {
+    pub n: u64,
+    /// The clock the batch ran at, MHz.
+    pub f_mhz: f64,
+    /// Simulated batch time at that clock, s.
+    pub time_s: f64,
+    /// The deadline the batch was judged against, s.
+    pub deadline_s: f64,
+    /// Remaining slack as a fraction of the deadline (negative = missed).
+    pub slack: f64,
+    pub energy_j: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GovernorError {
+    #[error("deadline {0} s unreachable even at boost ({1} s needed)")]
+    Infeasible(f64, f64),
+}
+
+/// A clock policy. One instance per worker/card: implementations may keep
+/// mutable state (caches, EWMA) and are driven from a single thread.
+pub trait ClockGovernor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick the core clock (MHz) to run `workload` on `gpu` under `ctx`.
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError>;
+
+    /// Observe the outcome of a governed batch (no-op for static policies).
+    fn observe(&mut self, _feedback: &BatchFeedback) {}
+}
+
+/// Constructible governor identity — what flows through configs and CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GovernorKind {
+    FixedBoost,
+    FixedClock(f64),
+    PerLengthOptimal,
+    CommonClock,
+    DeadlineAware,
+    Adaptive,
+}
+
+impl GovernorKind {
+    /// All six policies, with `fixed_mhz` parameterizing `FixedClock`
+    /// (the `govern` comparison replays each of these over one trace).
+    pub fn all(fixed_mhz: f64) -> Vec<GovernorKind> {
+        vec![
+            GovernorKind::FixedBoost,
+            GovernorKind::FixedClock(fixed_mhz),
+            GovernorKind::PerLengthOptimal,
+            GovernorKind::CommonClock,
+            GovernorKind::DeadlineAware,
+            GovernorKind::Adaptive,
+        ]
+    }
+
+    /// Parse a CLI spelling: `boost`, `fixed:<mhz>` (or a bare number),
+    /// `optimal`, `common`, `deadline`, `adaptive`.
+    pub fn parse(s: &str) -> anyhow::Result<GovernorKind> {
+        let lower = s.trim().to_ascii_lowercase();
+        if let Some(mhz) = lower.strip_prefix("fixed:") {
+            let mhz: f64 = mhz
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad clock in governor spec '{s}'"))?;
+            return Ok(GovernorKind::FixedClock(mhz));
+        }
+        if let Ok(mhz) = lower.parse::<f64>() {
+            return Ok(GovernorKind::FixedClock(mhz));
+        }
+        match lower.as_str() {
+            "boost" | "fixed-boost" | "default" => Ok(GovernorKind::FixedBoost),
+            "optimal" | "per-length" | "per-length-optimal" => Ok(GovernorKind::PerLengthOptimal),
+            "common" | "common-clock" | "mean-optimal" => Ok(GovernorKind::CommonClock),
+            "deadline" | "deadline-aware" => Ok(GovernorKind::DeadlineAware),
+            "adaptive" | "ewma" => Ok(GovernorKind::Adaptive),
+            other => anyhow::bail!(
+                "unknown governor '{other}' (try boost, fixed:<mhz>, optimal, common, deadline, adaptive)"
+            ),
+        }
+    }
+
+    /// Instantiate a fresh governor of this kind.
+    pub fn make(&self) -> Box<dyn ClockGovernor> {
+        match self {
+            GovernorKind::FixedBoost => Box::new(FixedBoost),
+            GovernorKind::FixedClock(mhz) => Box::new(FixedClock::new(*mhz)),
+            GovernorKind::PerLengthOptimal => Box::new(PerLengthOptimal::new()),
+            GovernorKind::CommonClock => Box::new(CommonClock::new()),
+            GovernorKind::DeadlineAware => Box::new(DeadlineAware::new()),
+            GovernorKind::Adaptive => Box::new(Adaptive::new()),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            GovernorKind::FixedBoost => "boost".into(),
+            GovernorKind::FixedClock(mhz) => format!("fixed:{mhz:.0}"),
+            GovernorKind::PerLengthOptimal => "optimal".into(),
+            GovernorKind::CommonClock => "common".into(),
+            GovernorKind::DeadlineAware => "deadline".into(),
+            GovernorKind::Adaptive => "adaptive".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::sim::run_batch;
+    use crate::types::Precision;
+
+    fn wl(n: u64) -> FftWorkload {
+        let g = tesla_v100();
+        FftWorkload::new(n, Precision::Fp32, g.working_set_bytes)
+    }
+
+    #[test]
+    fn parse_all_spellings() {
+        assert_eq!(GovernorKind::parse("boost").unwrap(), GovernorKind::FixedBoost);
+        assert_eq!(GovernorKind::parse("fixed:945").unwrap(), GovernorKind::FixedClock(945.0));
+        assert_eq!(GovernorKind::parse("945").unwrap(), GovernorKind::FixedClock(945.0));
+        assert_eq!(GovernorKind::parse("optimal").unwrap(), GovernorKind::PerLengthOptimal);
+        assert_eq!(GovernorKind::parse("common").unwrap(), GovernorKind::CommonClock);
+        assert_eq!(GovernorKind::parse("deadline").unwrap(), GovernorKind::DeadlineAware);
+        assert_eq!(GovernorKind::parse("adaptive").unwrap(), GovernorKind::Adaptive);
+        assert!(GovernorKind::parse("warp9").is_err());
+        assert!(GovernorKind::parse("fixed:fast").is_err());
+    }
+
+    #[test]
+    fn all_six_constructible() {
+        let kinds = GovernorKind::all(945.0);
+        assert_eq!(kinds.len(), 6);
+        let g = tesla_v100();
+        let w = wl(16384);
+        let ctx = GovernorContext::default();
+        for kind in &kinds {
+            let mut gov = kind.make();
+            let f = gov.choose(&g, &w, &ctx).expect("feasible default ctx");
+            assert!(f > 0.0 && f <= g.boost_clock_mhz + 1.0, "{}: {f}", gov.name());
+        }
+    }
+
+    #[test]
+    fn fixed_boost_equivalent_to_boost_run_batch() {
+        // Governor-equivalence: FixedBoost's decision prices identically to
+        // a raw boost-clock run_batch.
+        let g = tesla_v100();
+        let ctx = GovernorContext::default();
+        let mut gov = GovernorKind::FixedBoost.make();
+        for n in [1024u64, 16384, 262144] {
+            let w = wl(n);
+            let f = gov.choose(&g, &w, &ctx).unwrap();
+            let via_gov = run_batch(&g, &w, f);
+            let via_boost = run_batch(&g, &w, g.boost_clock_mhz);
+            assert_eq!(via_gov.energy_j, via_boost.energy_j, "N={n}");
+            assert_eq!(via_gov.timing.total_s, via_boost.timing.total_s, "N={n}");
+        }
+    }
+
+    #[test]
+    fn effective_deadline_falls_back_to_tolerance() {
+        let ctx = GovernorContext::default();
+        assert!((ctx.effective_deadline_s(2.0) - 2.2).abs() < 1e-12);
+        let ctx = GovernorContext { deadline_s: Some(0.5), ..GovernorContext::default() };
+        assert_eq!(ctx.effective_deadline_s(2.0), 0.5);
+    }
+}

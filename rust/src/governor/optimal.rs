@@ -1,0 +1,98 @@
+//! Per-length optimal clock policy (paper §5.1, Fig 9): each FFT length
+//! runs at its own measured energy optimum, backed by `analysis::optimal`.
+
+use std::collections::HashMap;
+
+use crate::analysis::optimal::optimal_for_length;
+use crate::governor::{ClockGovernor, GovernorContext, GovernorError};
+use crate::harness::sweep::{sweep_gpu, SweepConfig};
+use crate::harness::Protocol;
+use crate::sim::GpuSpec;
+use crate::types::FftWorkload;
+
+/// Per-(card, length) energy-optimal clocks, measured lazily and cached.
+pub struct PerLengthOptimal {
+    cache: HashMap<(String, u64), f64>,
+}
+
+impl PerLengthOptimal {
+    pub fn new() -> Self {
+        Self { cache: HashMap::new() }
+    }
+
+    fn derive(gpu: &GpuSpec, workload: &FftWorkload, ctx: &GovernorContext) -> f64 {
+        let cfg = SweepConfig {
+            lengths: vec![workload.n],
+            freq_stride: ctx.freq_stride.max(4),
+            protocol: Protocol::quick(),
+        };
+        let sweep = sweep_gpu(gpu, workload.precision, &cfg);
+        optimal_for_length(gpu, &sweep.lengths[0]).f_opt_mhz
+    }
+}
+
+impl Default for PerLengthOptimal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClockGovernor for PerLengthOptimal {
+    fn name(&self) -> &'static str {
+        "optimal"
+    }
+
+    fn choose(
+        &mut self,
+        gpu: &GpuSpec,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
+    ) -> Result<f64, GovernorError> {
+        let key = (gpu.name.to_string(), workload.n);
+        if let Some(&f) = self.cache.get(&key) {
+            return Ok(f);
+        }
+        let f = Self::derive(gpu, workload, ctx);
+        self.cache.insert(key, f);
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use crate::sim::run_batch;
+    use crate::types::Precision;
+
+    fn wl(gpu: &GpuSpec, n: u64) -> FftWorkload {
+        FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes)
+    }
+
+    #[test]
+    fn optimum_sits_below_boost_and_saves_energy() {
+        let g = tesla_v100();
+        let mut gov = PerLengthOptimal::new();
+        let ctx = GovernorContext::default();
+        for n in [1024u64, 16384] {
+            let w = wl(&g, n);
+            let f = gov.choose(&g, &w, &ctx).unwrap();
+            assert!(f < 0.85 * g.boost_clock_mhz, "N={n}: {f} not below boost");
+            assert!(f > 0.4 * g.boost_clock_mhz, "N={n}: {f} implausibly low");
+            let e_opt = run_batch(&g, &w, f).energy_j;
+            let e_boost = run_batch(&g, &w, g.boost_clock_mhz).energy_j;
+            assert!(e_opt < 0.90 * e_boost, "N={n}: {e_opt} vs boost {e_boost}");
+        }
+    }
+
+    #[test]
+    fn cache_makes_repeat_choices_identical() {
+        let g = tesla_v100();
+        let mut gov = PerLengthOptimal::new();
+        let ctx = GovernorContext::default();
+        let w = wl(&g, 16384);
+        let f1 = gov.choose(&g, &w, &ctx).unwrap();
+        let f2 = gov.choose(&g, &w, &ctx).unwrap();
+        assert_eq!(f1, f2);
+    }
+}

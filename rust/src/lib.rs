@@ -18,6 +18,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod cufft;
 pub mod dsp;
+pub mod governor;
 pub mod harness;
 pub mod pipeline;
 pub mod runtime;

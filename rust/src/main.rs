@@ -7,7 +7,8 @@
 //!   sweep             sweep one GPU/precision, print optima
 //!   pipeline          run the section-5.3 pipeline comparison (Table 4)
 //!   selftest          load AOT artifacts, run them, verify vs rust oracle
-//!   serve             coordinator demo: batch-serve random FFT jobs
+//!   serve             fleet demo: batch-serve FFT jobs across N governed cards
+//!   govern            replay one traffic trace under every clock governor
 //!
 //! `fftsweep --help` prints usage.
 

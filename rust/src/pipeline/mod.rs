@@ -1,12 +1,15 @@
 //! The section-5.3 pulsar-search pipeline: stage model, simulated NVML
-//! clock control, pipeline runner (Table 4 / Fig 19) and the real-time
-//! provisioning model (section 2.3).
+//! clock control, governed pipeline runner (Table 4 / Fig 19) and the
+//! real-time provisioning model (section 2.3).
+//!
+//! The deadline clock policy that used to live here moved to
+//! [`crate::governor::deadline`] when clock policies became a first-class
+//! subsystem.
 
 pub mod nvml;
 pub mod realtime;
-pub mod scheduler;
 pub mod runner;
 pub mod stages;
 
 pub use nvml::{ClockGuard, SimNvml};
-pub use runner::{run_pipeline, table4, PipelineRun, Table4Row};
+pub use runner::{run_pipeline, run_pipeline_at, table4, PipelineRun, Table4Row};

@@ -1,11 +1,14 @@
 //! Pipeline execution on the simulated GPU with NVML clock control —
 //! regenerates Table 4 and the Fig 19 power/clock trace.
 //!
-//! Two clock policies are compared, exactly as the paper does:
-//!   * default: everything at boost,
-//!   * DVFS: the FFT stage bracketed by SetGpuLockedClocks(mean-optimal) /
-//!     ResetGpuLockedClocks, everything else at boost.
+//! The FFT stage's clock is decided by a pluggable
+//! [`crate::governor::ClockGovernor`]; non-FFT stages always run at boost,
+//! exactly as the paper brackets only the cuFFT call with
+//! SetGpuLockedClocks / ResetGpuLockedClocks. The paper's two policies are
+//! the `FixedBoost` (default) and `FixedClock(mean-optimal)` (DVFS)
+//! governors; `table4` compares any governor against boost.
 
+use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorKind};
 use crate::pipeline::nvml::{ClockGuard, SimNvml};
 use crate::pipeline::stages::{pipeline_stages, Stage};
 use crate::sim::exec_model::time_kernel;
@@ -75,14 +78,16 @@ fn run_stage(gpu: &GpuSpec, workload: &FftWorkload, stage: &Stage, f_mhz: f64) -
     }
 }
 
-/// Run the pipeline once. `fft_clock_mhz = None` → default policy;
-/// `Some(f)` → NVML-locked clock for the FFT stage only.
+/// Run the pipeline once with `governor` deciding the FFT-stage clock.
+/// The governor sees the FFT workload, decides, and gets the stage outcome
+/// fed back (so adaptive policies work across repeated pipeline runs).
 pub fn run_pipeline(
     gpu: &GpuSpec,
     n: u64,
     harmonics: u64,
-    fft_clock_mhz: Option<f64>,
+    governor: &mut dyn ClockGovernor,
 ) -> PipelineRun {
+    let ctx = GovernorContext::default();
     let nvml = SimNvml::new(gpu);
     let workload = FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes);
     let stages = pipeline_stages(n, Precision::Fp32, harmonics);
@@ -92,19 +97,32 @@ pub fn run_pipeline(
     let mut t = 0.0;
     for stage in &stages {
         let clock = if stage.is_fft {
-            match fft_clock_mhz {
-                Some(f) if nvml_supported(gpu) => {
-                    // the paper's bracketing: lock, run, reset (via guard)
-                    let _guard = ClockGuard::lock(&nvml, f).expect("tesla-class lock");
-                    nvml.current_clock_mhz()
-                }
-                Some(f) => f, // non-Tesla: the harness sets clocks offline
-                None => gpu.boost_clock_mhz,
+            let requested = governor
+                .choose(gpu, &workload, &ctx)
+                .unwrap_or(gpu.boost_clock_mhz);
+            if nvml_supported(gpu) {
+                // the paper's bracketing: lock, run, reset (via guard)
+                let _guard = ClockGuard::lock(&nvml, requested).expect("tesla-class lock");
+                nvml.current_clock_mhz()
+            } else {
+                requested // non-Tesla: the harness sets clocks offline
             }
         } else {
             gpu.boost_clock_mhz
         };
         let run = run_stage(gpu, &workload, stage, clock);
+        if stage.is_fft {
+            let boost_probe = run_stage(gpu, &workload, stage, gpu.boost_clock_mhz);
+            let deadline = ctx.effective_deadline_s(boost_probe.time_s);
+            governor.observe(&BatchFeedback {
+                n,
+                f_mhz: clock,
+                time_s: run.time_s,
+                deadline_s: deadline,
+                slack: 1.0 - run.time_s / deadline,
+                energy_j: run.energy_j,
+            });
+        }
         clock_trace.push((t, run.clock_mhz));
         timeline.push(run.time_s, run.energy_j / run.time_s.max(1e-12), true);
         t += run.time_s;
@@ -115,6 +133,22 @@ pub fn run_pipeline(
         timeline,
         clock_trace,
     }
+}
+
+/// Fixed-clock convenience, the pre-governor call shape:
+/// `None` → boost everywhere; `Some(f)` → NVML-locked FFT clock.
+pub fn run_pipeline_at(
+    gpu: &GpuSpec,
+    n: u64,
+    harmonics: u64,
+    fft_clock_mhz: Option<f64>,
+) -> PipelineRun {
+    let kind = match fft_clock_mhz {
+        Some(f) => GovernorKind::FixedClock(f),
+        None => GovernorKind::FixedBoost,
+    };
+    let mut gov = kind.make();
+    run_pipeline(gpu, n, harmonics, &mut *gov)
 }
 
 fn nvml_supported(gpu: &GpuSpec) -> bool {
@@ -129,13 +163,17 @@ pub struct Table4Row {
     pub eff_increase: f64,
 }
 
-/// Regenerate Table 4: pipeline energy-efficiency increase vs #harmonics.
-pub fn table4(gpu: &GpuSpec, n: u64, fft_clock_mhz: f64) -> Vec<Table4Row> {
+/// Regenerate Table 4: pipeline energy-efficiency increase vs #harmonics,
+/// for any clock governor compared against the all-boost default. One
+/// governor instance spans all rows, so sweep-derived policies
+/// (CommonClock, PerLengthOptimal) measure once and reuse their cache.
+pub fn table4(gpu: &GpuSpec, n: u64, governor: &GovernorKind) -> Vec<Table4Row> {
+    let mut gov = governor.make();
     [2u64, 4, 8, 16, 32]
         .iter()
         .map(|&h| {
-            let default = run_pipeline(gpu, n, h, None);
-            let dvfs = run_pipeline(gpu, n, h, Some(fft_clock_mhz));
+            let default = run_pipeline_at(gpu, n, h, None);
+            let dvfs = run_pipeline(gpu, n, h, &mut *gov);
             // Same work both ways → efficiency increase = energy ratio
             // corrected by the time ratio (eq. 4 with equal C_p·t... the
             // paper reports E_ef ratios; with fixed work this reduces to
@@ -159,8 +197,8 @@ mod tests {
     #[test]
     fn dvfs_saves_pipeline_energy() {
         let g = tesla_v100();
-        let default = run_pipeline(&g, N, 8, None);
-        let dvfs = run_pipeline(&g, N, 8, Some(945.0));
+        let default = run_pipeline_at(&g, N, 8, None);
+        let dvfs = run_pipeline_at(&g, N, 8, Some(945.0));
         assert!(dvfs.total_energy_j() < default.total_energy_j());
         // and costs little time
         let slowdown = dvfs.total_time_s() / default.total_time_s();
@@ -168,11 +206,28 @@ mod tests {
     }
 
     #[test]
+    fn governed_pipeline_beats_boost_for_energy_policies() {
+        // The governor plumbing end to end: every energy-oriented policy
+        // must save pipeline energy vs the all-boost default.
+        let g = tesla_v100();
+        let default = run_pipeline_at(&g, N, 8, None);
+        for kind in [GovernorKind::CommonClock, GovernorKind::DeadlineAware] {
+            let mut gov = kind.make();
+            let run = run_pipeline(&g, N, 8, &mut *gov);
+            assert!(
+                run.total_energy_j() < default.total_energy_j(),
+                "{:?} failed to save energy",
+                kind
+            );
+        }
+    }
+
+    #[test]
     fn fft_fraction_decreases_with_harmonics() {
         // Table 4 column 2: 60.85% at h=2 → 51.34% at h=32.
         let g = tesla_v100();
-        let f2 = run_pipeline(&g, N, 2, None).fft_time_fraction();
-        let f32_ = run_pipeline(&g, N, 32, None).fft_time_fraction();
+        let f2 = run_pipeline_at(&g, N, 2, None).fft_time_fraction();
+        let f32_ = run_pipeline_at(&g, N, 32, None).fft_time_fraction();
         assert!(f2 > f32_, "{f2} !> {f32_}");
         assert!((0.45..0.75).contains(&f2), "h=2 fraction {f2}");
         assert!((0.35..0.65).contains(&f32_), "h=32 fraction {f32_}");
@@ -182,7 +237,7 @@ mod tests {
     fn table4_shape_matches_paper() {
         // Efficiency increase ~1.24-1.29, monotonically decreasing with h.
         let g = tesla_v100();
-        let rows = table4(&g, N, 945.0);
+        let rows = table4(&g, N, &GovernorKind::FixedClock(945.0));
         assert_eq!(rows.len(), 5);
         for w in rows.windows(2) {
             assert!(
@@ -205,7 +260,7 @@ mod tests {
     #[test]
     fn clock_trace_shows_fft_dip() {
         let g = tesla_v100();
-        let run = run_pipeline(&g, N, 8, Some(945.0));
+        let run = run_pipeline_at(&g, N, 8, Some(945.0));
         // first stage (fft) at the locked clock, later stages at boost
         assert!(run.clock_trace[0].1 < 1000.0);
         assert_eq!(run.clock_trace[1].1, g.boost_clock_mhz);
@@ -218,8 +273,8 @@ mod tests {
         // by the FFT's time share. Check within a loose band.
         let g = tesla_v100();
         let h = 2;
-        let default = run_pipeline(&g, N, h, None);
-        let dvfs = run_pipeline(&g, N, h, Some(945.0));
+        let default = run_pipeline_at(&g, N, h, None);
+        let dvfs = run_pipeline_at(&g, N, h, Some(945.0));
         let frac = default.fft_time_fraction();
         let fft_only_default: f64 = default.stages[0].energy_j;
         let fft_only_dvfs: f64 = dvfs.stages[0].energy_j;

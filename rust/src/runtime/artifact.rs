@@ -127,6 +127,40 @@ impl Manifest {
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
+
+    /// Digest marker for entries that exist only in the simulated backend.
+    pub const SIMULATED_DIGEST: &'static str = "simulated";
+
+    /// The standard artifact set as a synthetic manifest (no files on
+    /// disk) — what the simulated runtime backend serves when `aot.py`
+    /// never ran. Mirrors the names/batches `make artifacts` produces.
+    pub fn synthetic(dir: &Path) -> Self {
+        let mut entries = BTreeMap::new();
+        let mut add = |name: String, kind: &str, n: u64, batch: u64, dtype: &str, harmonics: u64, n_outputs: usize| {
+            let meta = ArtifactMeta {
+                file: dir.join(format!("{name}.hlo.txt")),
+                kind: kind.to_string(),
+                n,
+                batch,
+                dtype: dtype.to_string(),
+                harmonics,
+                inputs: format!("{dtype}:{batch}x{n};{dtype}:{batch}x{n}"),
+                n_outputs,
+                digest: Self::SIMULATED_DIGEST.to_string(),
+                name: name.clone(),
+            };
+            entries.insert(name, meta);
+        };
+        for (n, batch) in [(256u64, 256u64), (1024, 64), (4096, 16), (16384, 4)] {
+            add(format!("fft_f32_n{n}_b{batch}"), "fft", n, batch, "f32", 0, 2);
+        }
+        add("fft_f64_n1024_b64".into(), "fft", 1024, 64, "f64", 0, 2);
+        add("spectrum_f32_n4096_b16".into(), "spectrum", 4096, 16, "f32", 0, 1);
+        for h in [2u64, 4, 8, 16, 32] {
+            add(format!("pipeline_n16384_h{h}"), "pipeline", 16384, 4, "f32", h, 3);
+        }
+        Self { dir: dir.to_path_buf(), entries }
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +199,19 @@ mod tests {
         assert!(m.pipeline(4).is_err());
         assert!(m.fft(1024, "f32").is_ok());
         assert!(m.fft(1024, "f64").is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_real_shape() {
+        let m = Manifest::synthetic(Path::new("/nonexistent"));
+        assert!(m.of_kind("fft").len() >= 4);
+        assert_eq!(m.of_kind("pipeline").len(), 5);
+        let f = m.fft(1024, "f32").unwrap();
+        assert_eq!(f.batch, 64);
+        assert_eq!(f.input_shapes()[0], ("f32".to_string(), vec![64, 1024]));
+        assert_eq!(f.digest, Manifest::SIMULATED_DIGEST);
+        assert!(m.pipeline(8).is_ok());
+        assert!(m.fft(1024, "f64").is_ok());
     }
 
     #[test]

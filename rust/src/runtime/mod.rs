@@ -1,9 +1,23 @@
-//! L3 runtime: load AOT artifacts (HLO text), compile once on the PJRT CPU
-//! client, execute from rust. Python never runs here.
+//! L3 runtime: load AOT artifacts (HLO text) and execute them from rust.
+//! Python never runs here.
+//!
+//! Two interchangeable backends behind one API:
+//!   * `client` (feature `xla`): compile-once PJRT CPU execution of the
+//!     real HLO text — requires the native `xla_extension` binding (see
+//!     Cargo.toml header note),
+//!   * `sim_client` (default): a pure-rust backend that executes artifacts
+//!     with the DSP oracle and synthesizes a manifest when none is on
+//!     disk, so the serving stack runs in hermetic environments.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(not(feature = "xla"))]
+pub mod sim_client;
 pub mod validation;
 
 pub use artifact::{ArtifactMeta, Manifest};
+#[cfg(feature = "xla")]
 pub use client::{LoadedModule, Runtime};
+#[cfg(not(feature = "xla"))]
+pub use sim_client::{LoadedModule, Runtime};

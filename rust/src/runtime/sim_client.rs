@@ -1,0 +1,281 @@
+//! Simulated runtime backend (default build): executes artifacts with the
+//! pure-rust DSP oracle instead of PJRT, so the coordinator, CLI and tests
+//! run in environments without the native XLA library or any artifacts on
+//! disk. API-compatible with `client::Runtime` (the `xla`-feature backend).
+//!
+//! Defense-in-depth is preserved: when a manifest and HLO files DO exist
+//! on disk, loads still verify the digest and the HLO-text header, so a
+//! tampered artifact fails loudly here exactly as it does under PJRT.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactMeta, Manifest};
+use super::validation::sha256_16;
+use crate::dsp;
+
+/// A loaded artifact plus its metadata, executed by the DSP oracle.
+pub struct LoadedModule {
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedModule {
+    /// Execute with f32 input planes, returning the flattened f32 outputs.
+    /// Input/outputs are row-major (batch, n).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.check_inputs(inputs.len(), inputs.iter().map(|i| i.len()))?;
+        let (re, im) = (inputs[0], inputs[1]);
+        let n = self.meta.n as usize;
+        let batch = self.meta.batch as usize;
+        match self.meta.kind.as_str() {
+            "fft" => {
+                let mut out_re = Vec::with_capacity(batch * n);
+                let mut out_im = Vec::with_capacity(batch * n);
+                for b in 0..batch {
+                    for c in row_fft(re, im, b, n) {
+                        out_re.push(c.re as f32);
+                        out_im.push(c.im as f32);
+                    }
+                }
+                Ok(vec![out_re, out_im])
+            }
+            "spectrum" => {
+                let mut power = Vec::with_capacity(batch * n);
+                for b in 0..batch {
+                    let x = row_fft(re, im, b, n);
+                    power.extend(x.iter().map(|c| c.abs2() as f32));
+                }
+                Ok(vec![power])
+            }
+            "pipeline" => {
+                let h = self.meta.harmonics as usize;
+                let n_out = n / h.max(1);
+                let mut hs = Vec::with_capacity(batch * n_out);
+                let mut means = Vec::with_capacity(batch);
+                let mut stds = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let x = row_fft(re, im, b, n);
+                    let power: Vec<f32> = x.iter().map(|c| c.abs2() as f32).collect();
+                    hs.extend(dsp::harmonic_sum(&power, h));
+                    let (mean, std) = dsp::moments(&power);
+                    means.push(mean);
+                    stds.push(std);
+                }
+                Ok(vec![hs, means, stds])
+            }
+            other => anyhow::bail!("sim backend cannot execute kind '{other}'"),
+        }
+    }
+
+    /// Build "input literals". The sim backend has no device buffers; this
+    /// exists so benches exercising setup-vs-run splits still compile.
+    pub fn literals_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.check_inputs(inputs.len(), inputs.iter().map(|i| i.len()))?;
+        Ok(inputs.iter().map(|i| i.to_vec()).collect())
+    }
+
+    /// Execute pre-built literals.
+    pub fn run_literals(&self, literals: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let planes: Vec<&[f32]> = literals.iter().map(|l| l.as_slice()).collect();
+        self.run_f32(&planes)
+    }
+
+    /// Execute with f64 planes (the fp64 artifacts).
+    pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        self.check_inputs(inputs.len(), inputs.iter().map(|i| i.len()))?;
+        anyhow::ensure!(
+            self.meta.kind == "fft",
+            "sim backend only runs fft artifacts in f64"
+        );
+        let (re, im) = (inputs[0], inputs[1]);
+        let n = self.meta.n as usize;
+        let batch = self.meta.batch as usize;
+        let mut out_re = Vec::with_capacity(batch * n);
+        let mut out_im = Vec::with_capacity(batch * n);
+        for b in 0..batch {
+            let off = b * n;
+            let x: Vec<dsp::C64> = (0..n)
+                .map(|i| dsp::C64::new(re[off + i], im[off + i]))
+                .collect();
+            for c in dsp::fft(&x) {
+                out_re.push(c.re);
+                out_im.push(c.im);
+            }
+        }
+        Ok(vec![out_re, out_im])
+    }
+
+    fn check_inputs(&self, got: usize, lens: impl Iterator<Item = usize>) -> Result<()> {
+        let shapes = self.meta.input_shapes();
+        anyhow::ensure!(
+            got == shapes.len(),
+            "artifact {} wants {} inputs, got {got}",
+            self.meta.name,
+            shapes.len()
+        );
+        for (len, (_ty, dims)) in lens.zip(&shapes) {
+            let want: u64 = dims.iter().product();
+            anyhow::ensure!(
+                want == len as u64,
+                "artifact {} input wants {want} elements, got {len}",
+                self.meta.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The simulated runtime: manifest (on-disk or synthetic) + a load cache.
+pub struct Runtime {
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedModule>>>,
+}
+
+impl Runtime {
+    /// Create against an artifact directory. Reads `manifest.tsv` when
+    /// present; otherwise synthesizes the standard artifact set so the
+    /// serving stack works in a fresh checkout.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = if artifact_dir.join("manifest.tsv").exists() {
+            Manifest::load(artifact_dir)?
+        } else {
+            Manifest::synthetic(artifact_dir)
+        };
+        Ok(Self {
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "sim-cpu (dsp oracle; build with --features xla for PJRT)".to_string()
+    }
+
+    /// Load an artifact (cached). Real on-disk artifacts are digest- and
+    /// header-checked; synthetic entries load directly.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedModule>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        if meta.digest != Manifest::SIMULATED_DIGEST {
+            let text = std::fs::read_to_string(&meta.file)
+                .with_context(|| format!("reading HLO text {:?}", meta.file))?;
+            anyhow::ensure!(
+                text.starts_with("HloModule"),
+                "artifact {name}: {:?} is not HLO text",
+                meta.file
+            );
+            let actual = sha256_16(text.as_bytes());
+            anyhow::ensure!(
+                actual == meta.digest,
+                "artifact {name}: digest mismatch ({actual} vs manifest {})",
+                meta.digest
+            );
+        }
+        let module = Arc::new(LoadedModule { meta });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), module.clone());
+        Ok(module)
+    }
+
+    /// Names of all artifacts currently loaded.
+    pub fn loaded_names(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+fn row_fft(re: &[f32], im: &[f32], row: usize, n: usize) -> Vec<dsp::C64> {
+    let off = row * n;
+    let x: Vec<dsp::C64> = (0..n)
+        .map(|i| dsp::C64::new(re[off + i] as f64, im[off + i] as f64))
+        .collect();
+    dsp::fft(&x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rt() -> Runtime {
+        Runtime::new(Path::new("/nonexistent-artifacts")).unwrap()
+    }
+
+    #[test]
+    fn synthetic_runtime_serves_fft() {
+        let rt = rt();
+        let m = rt.load("fft_f32_n256_b256").unwrap();
+        let total = (m.meta.batch * m.meta.n) as usize;
+        let mut rng = Rng::new(1);
+        let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let out = m.run_f32(&[&re, &im]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), total);
+        // row 0 matches the oracle by construction; sanity: Parseval
+        let n = m.meta.n as usize;
+        let e_time: f64 = (0..n)
+            .map(|i| (re[i] as f64).powi(2) + (im[i] as f64).powi(2))
+            .sum();
+        let e_freq: f64 = (0..n)
+            .map(|i| (out[0][i] as f64).powi(2) + (out[1][i] as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-6 * e_time.max(1.0));
+    }
+
+    #[test]
+    fn wrong_input_arity_or_shape_rejected() {
+        let rt = rt();
+        let m = rt.load("fft_f32_n256_b256").unwrap();
+        let total = (m.meta.batch * m.meta.n) as usize;
+        let plane = vec![0.0f32; total];
+        assert!(m.run_f32(&[&plane]).is_err(), "arity");
+        let short = vec![0.0f32; total - 1];
+        assert!(m.run_f32(&[&short, &plane]).is_err(), "shape");
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let rt = rt();
+        assert!(rt.load("fft_f32_n512_b1").is_err());
+    }
+
+    #[test]
+    fn load_is_cached() {
+        let rt = rt();
+        rt.load("fft_f32_n1024_b64").unwrap();
+        rt.load("fft_f32_n1024_b64").unwrap();
+        assert_eq!(rt.loaded_names(), vec!["fft_f32_n1024_b64".to_string()]);
+    }
+
+    #[test]
+    fn on_disk_artifacts_are_digest_checked() {
+        let dir = std::env::temp_dir().join(format!("fftsweep_sim_rt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = "HloModule sim_check\nENTRY main {}\n";
+        std::fs::write(dir.join("good.hlo.txt"), good).unwrap();
+        let digest = sha256_16(good.as_bytes());
+        let manifest = format!(
+            "name\tfile\tkind\tn\tbatch\tdtype\tharmonics\tinputs\tn_outputs\tsha256_16\n\
+             good\tgood.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\t{digest}\n\
+             tampered\tgood.hlo.txt\tfft\t8\t1\tf32\t0\tf32:1x8;f32:1x8\t2\t0000000000000000\n"
+        );
+        std::fs::write(dir.join("manifest.tsv"), manifest).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.load("good").is_ok());
+        assert!(rt.load("tampered").is_err(), "digest mismatch must fail loud");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,177 @@
+//! Fleet-engine integration tests over the simulated runtime backend.
+//!
+//! These run in a fresh checkout: the default (non-`xla`) runtime
+//! synthesizes its manifest, so the whole serving stack — router,
+//! least-loaded dispatch, per-card governors, NVML bracketing, metrics —
+//! is exercised without any AOT artifacts on disk.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
+use fftsweep::dsp;
+use fftsweep::governor::GovernorKind;
+use fftsweep::runtime::Runtime;
+use fftsweep::sim::gpu::{tesla_p4, tesla_v100};
+use fftsweep::util::rng::Rng;
+
+fn sim_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"))
+}
+
+fn rand_planes(n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+    )
+}
+
+#[test]
+fn single_card_serves_correct_ffts() {
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedClock(945.0),
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    let n = 1024usize;
+    let mut rng = Rng::new(3);
+    let (re, im) = rand_planes(n, &mut rng);
+    let x: Vec<dsp::C64> = re
+        .iter()
+        .zip(&im)
+        .map(|(&r, &i)| dsp::C64::new(r as f64, i as f64))
+        .collect();
+    let want = dsp::fft(&x);
+    let res = engine.execute(re, im).expect("job");
+    for i in 0..n {
+        assert!((res.out_re[i] as f64 - want[i].re).abs() < 1e-2, "bin {i}");
+        assert!((res.out_im[i] as f64 - want[i].im).abs() < 1e-2, "bin {i}");
+    }
+    // locked below boost → the accounting must show a saving
+    assert!(engine.metrics.energy_saving() > 0.15);
+    engine.shutdown();
+}
+
+#[test]
+fn fleet_spreads_load_and_aggregates_metrics() {
+    let fleet = (0..4)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::CommonClock))
+        .collect();
+    let engine = Engine::start(sim_runtime(), fleet, EngineConfig::default()).expect("engine");
+    let mut rng = Rng::new(9);
+    let n = 256usize;
+    let jobs = 64usize;
+    let mut rxs = Vec::new();
+    for _ in 0..jobs {
+        let (re, im) = rand_planes(n, &mut rng);
+        rxs.push(engine.submit(re, im).expect("submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(60)), "drain timed out");
+    for rx in rxs {
+        assert!(rx.recv().expect("recv").is_ok());
+    }
+
+    // least-loaded dispatch spread jobs over every card. Exact 16/16/16/16
+    // balance holds unless the submit loop is preempted past the 2 ms
+    // flush timeout, so only a coarse floor is asserted.
+    let per_card: Vec<u64> = engine
+        .cards()
+        .iter()
+        .map(|c| c.metrics.jobs_completed.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+    assert_eq!(per_card.iter().sum::<u64>(), jobs as u64);
+    assert!(
+        per_card.iter().all(|&c| c >= 4),
+        "least-loaded must spread jobs over every card: {per_card:?}"
+    );
+
+    // per-card + fleet aggregate energy accounting: common clock < boost
+    for c in engine.cards() {
+        assert!(
+            c.metrics.energy_saving() > 0.10,
+            "card saving {}",
+            c.metrics.energy_saving()
+        );
+        assert_eq!(c.inflight(), 0);
+    }
+    assert!(engine.metrics.energy_saving() > 0.10);
+    let report = engine.fleet_report();
+    assert_eq!(report.lines().count(), 5, "4 card lines + 1 fleet line");
+    assert!(report.contains("card3"));
+    assert!(report.contains("fleet:"));
+
+    let last = engine.shutdown();
+    assert!(last.starts_with("final"), "shutdown must emit a final summary: {last}");
+    assert!(last.contains("jobs 64/64"));
+}
+
+#[test]
+fn heterogeneous_fleet_reports_per_card_specs() {
+    let fleet = vec![
+        CardConfig::new(tesla_v100(), GovernorKind::CommonClock),
+        CardConfig::new(tesla_p4(), GovernorKind::CommonClock),
+    ];
+    let engine = Engine::start(sim_runtime(), fleet, EngineConfig::default()).expect("engine");
+    let mut rng = Rng::new(4);
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        let (re, im) = rand_planes(1024, &mut rng);
+        rxs.push(engine.submit(re, im).expect("submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(60)));
+    for rx in rxs {
+        assert!(rx.recv().expect("recv").is_ok());
+    }
+    let report = engine.fleet_report();
+    assert!(report.contains("Tesla V100"));
+    assert!(report.contains("Tesla P4"));
+    engine.shutdown();
+}
+
+#[test]
+fn fleet_governors_are_per_card_instances() {
+    // Two cards under the adaptive governor: each worker owns its own
+    // instance, so both descend independently from boost.
+    let fleet = vec![
+        CardConfig::new(tesla_v100(), GovernorKind::Adaptive),
+        CardConfig::new(tesla_v100(), GovernorKind::Adaptive),
+    ];
+    let engine = Engine::start(sim_runtime(), fleet, EngineConfig::default()).expect("engine");
+    let mut rng = Rng::new(5);
+    for _ in 0..6 {
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            let (re, im) = rand_planes(4096, &mut rng);
+            rxs.push(engine.submit(re, im).expect("submit"));
+        }
+        assert!(engine.drain(Duration::from_secs(60)));
+        for rx in rxs {
+            assert!(rx.recv().expect("recv").is_ok());
+        }
+    }
+    // adaptive never does worse than boost, on either card
+    for c in engine.cards() {
+        assert!(c.metrics.energy_saving() >= -1e-9);
+        assert!(c.metrics.batches_executed.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn shutdown_is_deterministic_and_idempotent_per_engine() {
+    // No jobs at all: shutdown must still join cleanly and report zeros.
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    let summary = engine.shutdown();
+    assert!(summary.contains("jobs 0/0"), "{summary}");
+}

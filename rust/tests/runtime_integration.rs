@@ -9,6 +9,7 @@ use std::time::Duration;
 
 use fftsweep::coordinator::{Engine, EngineConfig};
 use fftsweep::dsp;
+use fftsweep::governor::GovernorKind;
 use fftsweep::runtime::{Manifest, Runtime};
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::rng::Rng;
@@ -149,8 +150,13 @@ fn pipeline_artifact_detects_pulsar() {
 fn engine_serves_batched_jobs_correctly() {
     let Some(dir) = artifact_dir() else { return };
     let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
-    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
-    engine.nvml.set_gpu_locked_clocks(945.0, 945.0).expect("lock");
+    let engine = Engine::start_single(
+        rt,
+        tesla_v100(),
+        GovernorKind::FixedClock(945.0),
+        EngineConfig::default(),
+    )
+    .expect("engine");
 
     // Pre-build payloads and oracles so the submit loop is tight — the
     // flusher must not see artificial gaps between submissions.
@@ -201,7 +207,13 @@ fn engine_serves_batched_jobs_correctly() {
 fn engine_rejects_unroutable_length() {
     let Some(dir) = artifact_dir() else { return };
     let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
-    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
+    let engine = Engine::start_single(
+        rt,
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
     assert!(engine.submit(vec![0.0; 123], vec![0.0; 123]).is_err());
     engine.shutdown();
 }
@@ -266,7 +278,13 @@ fn corrupted_artifact_fails_loud_not_silent() {
 fn engine_survives_mixed_good_and_bad_submissions() {
     let Some(dir) = artifact_dir() else { return };
     let rt = Arc::new(Runtime::new(&dir).expect("runtime"));
-    let engine = Engine::start(rt, tesla_v100(), EngineConfig::default()).expect("engine");
+    let engine = Engine::start_single(
+        rt,
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
     let mut rng = Rng::new(5);
     let mut good = Vec::new();
     for i in 0..20 {
