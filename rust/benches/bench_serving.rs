@@ -1,0 +1,222 @@
+//! Bench: the planned-FFT serving engine, end to end — the first point on
+//! the repo's committed perf trajectory (`BENCH_serving.json`).
+//!
+//! Four measurements:
+//!   1. pre-PR sim path (per-row `Vec<C64>` + per-butterfly trig via
+//!      `dsp::fft`) in rows/s — the baseline the planner replaces,
+//!   2. planned path (`dsp::planner`, cached twiddles, reused scratch,
+//!      row-parallel) on the identical workload in rows/s,
+//!   3. fleet end-to-end throughput: jobs/s through a 2-card engine on the
+//!      n=1024 workload (open loop), plus an allocation-frequency proxy
+//!      from a counting global allocator,
+//!   4. closed-loop `execute()` latency (p50/p99 ms).
+//!
+//! Regenerate with:
+//!   cd rust && cargo bench --bench bench_serving            # full
+//!   cd rust && cargo bench --bench bench_serving -- --quick # CI smoke
+//! The JSON lands in ./BENCH_serving.json (override: --out <path>); the
+//! committed trajectory baseline lives at the repo root and is gated by
+//! the `bench-smoke` CI job (scripts/check_bench.py).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
+use fftsweep::dsp;
+use fftsweep::dsp::planner::{self, Direction};
+use fftsweep::governor::GovernorKind;
+use fftsweep::runtime::Runtime;
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::bench::black_box;
+use fftsweep::util::json::Json;
+use fftsweep::util::rng::Rng;
+use fftsweep::util::stats::percentile;
+
+/// Counting allocator: the "allocs-frequency proxy". Counts every alloc and
+/// realloc so a serving phase can report allocations per job served.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const N: usize = 1024;
+const DEVICE_BATCH: usize = 64;
+const CARDS: usize = 2;
+
+fn rand_planes(total: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..total).map(|_| rng.gauss() as f32).collect(),
+        (0..total).map(|_| rng.gauss() as f32).collect(),
+    )
+}
+
+/// The pre-PR sim execution path, preserved here as the comparison
+/// baseline: per row, build a `Vec<C64>` and call the trig-recomputing
+/// oracle (exactly what `runtime::sim_client::row_fft` used to do).
+fn naive_rows(re: &[f32], im: &[f32], rows: usize) -> f64 {
+    let mut sink = 0.0f64;
+    for r in 0..rows {
+        let off = r * N;
+        let x: Vec<dsp::C64> = (0..N)
+            .map(|i| dsp::C64::new(re[off + i] as f64, im[off + i] as f64))
+            .collect();
+        let y = dsp::fft(&x);
+        sink += y[0].re;
+    }
+    sink
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "BENCH_serving.json".to_string());
+
+    let dft_rows = if quick { 640 } else { 4096 };
+    let fleet_jobs = if quick { 512 } else { 4096 };
+    let latency_iters = if quick { 50 } else { 200 };
+
+    let mut rng = Rng::new(0xf00d);
+    let (re, im) = rand_planes(dft_rows * N, &mut rng);
+
+    // 1. Pre-PR path: per-row allocation + per-butterfly trig.
+    let t0 = Instant::now();
+    black_box(naive_rows(&re, &im, dft_rows));
+    let naive_s = t0.elapsed().as_secs_f64();
+    let naive_rows_per_s = dft_rows as f64 / naive_s;
+
+    // 2. Planned path, identical workload (warm the plan cache first so
+    //    this measures steady state, as a serving loop sees it). Measured
+    //    twice: serial isolates the planning win (twiddle cache + scratch
+    //    reuse, apples-to-apples vs the serial naive path), then the
+    //    row-parallel entry point the serving engine actually calls.
+    let plan = planner::plan_for(N);
+    let mut out_re = vec![0.0f32; dft_rows * N];
+    let mut out_im = vec![0.0f32; dft_rows * N];
+    planner::run_rows(&plan, Direction::Forward, &re, &im, DEVICE_BATCH, &mut out_re, &mut out_im);
+
+    let mut scratch = planner::FftScratch::new();
+    let t0 = Instant::now();
+    plan.run_rows_serial(
+        Direction::Forward,
+        &re,
+        &im,
+        dft_rows,
+        &mut out_re,
+        &mut out_im,
+        &mut scratch,
+    );
+    let serial_s = t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+    let planned_serial_rows_per_s = dft_rows as f64 / serial_s;
+    let serial_speedup = planned_serial_rows_per_s / naive_rows_per_s;
+
+    let t0 = Instant::now();
+    planner::run_rows(&plan, Direction::Forward, &re, &im, dft_rows, &mut out_re, &mut out_im);
+    let planned_s = t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+    let planned_rows_per_s = dft_rows as f64 / planned_s;
+    let speedup = planned_rows_per_s / naive_rows_per_s;
+
+    println!(
+        "planner: naive {naive_rows_per_s:.0} rows/s, planned serial \
+         {planned_serial_rows_per_s:.0} rows/s ({serial_speedup:.1}x), planned parallel \
+         {planned_rows_per_s:.0} rows/s ({speedup:.1}x, n={N})"
+    );
+
+    // 3. Fleet end to end: open-loop throughput + allocation proxy.
+    let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
+    let fleet = (0..CARDS)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedClock(945.0)))
+        .collect();
+    let engine = Engine::start(rt, fleet, EngineConfig::default()).expect("engine");
+    let payloads: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..fleet_jobs).map(|_| rand_planes(N, &mut rng)).collect();
+    // Warmup: one round trip per card so module/plan/scratch caches are hot.
+    for _ in 0..2 * DEVICE_BATCH {
+        let (re, im) = payloads[0].clone();
+        engine.submit(re, im).expect("warmup submit");
+    }
+    assert!(engine.drain(Duration::from_secs(120)), "warmup drain");
+
+    let allocs_before = ALLOC_CALLS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(fleet_jobs);
+    for (re, im) in payloads {
+        rxs.push(engine.submit(re, im).expect("submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(600)), "drain timed out");
+    for rx in rxs {
+        black_box(rx.recv().expect("recv").expect("job ok"));
+    }
+    let fleet_s = t0.elapsed().as_secs_f64();
+    let allocs = ALLOC_CALLS.load(Ordering::Relaxed) - allocs_before;
+    let jobs_per_s = fleet_jobs as f64 / fleet_s;
+    let allocs_per_job = allocs as f64 / fleet_jobs as f64;
+
+    println!(
+        "fleet: {jobs_per_s:.0} jobs/s over {CARDS} cards ({fleet_jobs} jobs of n={N}), \
+         {allocs_per_job:.1} allocs/job"
+    );
+
+    // 4. Closed-loop execute() latency.
+    let mut lat_ms = Vec::with_capacity(latency_iters);
+    for _ in 0..latency_iters {
+        let (re, im) = rand_planes(N, &mut rng);
+        let t0 = Instant::now();
+        black_box(engine.execute(re, im).expect("execute"));
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let p50 = percentile(&lat_ms, 50.0);
+    let p99 = percentile(&lat_ms, 99.0);
+    println!("latency: p50 {p50:.3} ms, p99 {p99:.3} ms ({latency_iters} closed-loop jobs)");
+    println!("{}", engine.fleet_report());
+    engine.shutdown();
+
+    let mut root = Json::obj();
+    root.set("bench", "serving".into());
+    root.set("schema", 1.0.into());
+    root.set("quick", quick.into());
+    root.set("n", (N as u64).into());
+    root.set("device_batch", (DEVICE_BATCH as u64).into());
+    root.set("cards", (CARDS as u64).into());
+    root.set("jobs", (fleet_jobs as u64).into());
+    root.set("naive_rows_per_s", naive_rows_per_s.into());
+    root.set("planned_serial_rows_per_s", planned_serial_rows_per_s.into());
+    root.set("planned_serial_speedup", serial_speedup.into());
+    root.set("planned_rows_per_s", planned_rows_per_s.into());
+    root.set("planned_speedup", speedup.into());
+    let mut fleet_json = Json::obj();
+    fleet_json.set("jobs_per_s", jobs_per_s.into());
+    fleet_json.set("p50_ms", p50.into());
+    fleet_json.set("p99_ms", p99.into());
+    fleet_json.set("allocs_per_job", allocs_per_job.into());
+    root.set("fleet", fleet_json);
+    std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
+    println!("wrote {out_path}");
+}

@@ -10,13 +10,15 @@
 //!   * flush-on-timeout emits partial batches (no starvation).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::job::Envelope;
 
 /// A packed batch ready for execution on one card.
 pub struct PackedBatch {
-    pub artifact: String,
+    /// Interned artifact name (shared with the router's route entry).
+    pub artifact: Arc<str>,
     pub n: u64,
     pub device_batch: u64,
     /// Fleet card index this batch was packed for.
@@ -28,15 +30,26 @@ pub struct PackedBatch {
 impl PackedBatch {
     /// Concatenated, zero-padded input planes (device_batch × n each).
     pub fn planes(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        self.planes_into(&mut re, &mut im);
+        (re, im)
+    }
+
+    /// Fill caller-owned plane buffers (resize + zero + pack): a worker
+    /// reusing the same two `Vec`s per batch never reallocates once they
+    /// reach the card's largest device batch.
+    pub fn planes_into(&self, re: &mut Vec<f32>, im: &mut Vec<f32>) {
         let total = (self.device_batch * self.n) as usize;
-        let mut re = vec![0.0f32; total];
-        let mut im = vec![0.0f32; total];
+        re.clear();
+        re.resize(total, 0.0);
+        im.clear();
+        im.resize(total, 0.0);
         for (i, env) in self.envelopes.iter().enumerate() {
             let off = i * self.n as usize;
             re[off..off + self.n as usize].copy_from_slice(&env.job.re);
             im[off..off + self.n as usize].copy_from_slice(&env.job.im);
         }
-        (re, im)
     }
 
     pub fn occupancy(&self) -> usize {
@@ -45,7 +58,7 @@ impl PackedBatch {
 }
 
 struct Pending {
-    artifact: String,
+    artifact: Arc<str>,
     n: u64,
     device_batch: u64,
     card: usize,
@@ -55,7 +68,7 @@ struct Pending {
 
 /// The batcher. Not thread-safe by itself; the engine owns it behind a lock.
 pub struct Batcher {
-    pending: BTreeMap<(String, usize), Pending>,
+    pending: BTreeMap<(Arc<str>, usize), Pending>,
     pub max_wait: Duration,
 }
 
@@ -67,37 +80,46 @@ impl Batcher {
         }
     }
 
-    /// Add a job under its (route, card); returns a batch if one became full.
+    /// Add a job under its (route, card); returns `Ok(Some(batch))` when
+    /// the slot reached the device batch. A transform-length mismatch
+    /// against an existing slot is a hard error (in release builds it
+    /// previously survived as a `debug_assert` until `planes()` panicked
+    /// mid-copy): the job is rejected, the slot is left intact.
     pub fn push(
         &mut self,
-        artifact: &str,
+        artifact: &Arc<str>,
         n: u64,
         device_batch: u64,
         card: usize,
         env: Envelope,
-    ) -> Option<PackedBatch> {
-        let key = (artifact.to_string(), card);
+    ) -> anyhow::Result<Option<PackedBatch>> {
+        let key = (artifact.clone(), card);
         let slot = self.pending.entry(key.clone()).or_insert_with(|| Pending {
-            artifact: artifact.to_string(),
+            artifact: artifact.clone(),
             n,
             device_batch,
             card,
             envelopes: Vec::new(),
             oldest: Instant::now(),
         });
-        debug_assert_eq!(slot.n, n, "route/artifact length mismatch");
+        anyhow::ensure!(
+            slot.n == n,
+            "batcher: artifact '{artifact}' packs n={}, got a job with n={n} \
+             (route/artifact length mismatch)",
+            slot.n
+        );
         if slot.envelopes.is_empty() {
             slot.oldest = Instant::now();
         }
         slot.envelopes.push(env);
         if slot.envelopes.len() as u64 >= slot.device_batch {
-            return self.take(&key);
+            return Ok(self.take(&key));
         }
-        None
+        Ok(None)
     }
 
     /// Remove and return the pending batch for an (artifact, card) slot.
-    fn take(&mut self, key: &(String, usize)) -> Option<PackedBatch> {
+    fn take(&mut self, key: &(Arc<str>, usize)) -> Option<PackedBatch> {
         self.pending.remove(key).map(|p| PackedBatch {
             artifact: p.artifact,
             n: p.n,
@@ -107,11 +129,19 @@ impl Batcher {
         })
     }
 
+    /// Targeted flush of one (artifact, card) slot — lets a blocking caller
+    /// release just its own partial batch while unrelated traffic keeps
+    /// packing toward full batches. Takes the interned key for a direct
+    /// map lookup (no scan over unrelated slots).
+    pub fn flush_slot(&mut self, artifact: &Arc<str>, card: usize) -> Option<PackedBatch> {
+        self.take(&(artifact.clone(), card))
+    }
+
     /// Flush every pending batch older than `max_wait` (timer tick), or all
     /// of them when `force` (shutdown/drain).
     pub fn flush(&mut self, force: bool) -> Vec<PackedBatch> {
         let now = Instant::now();
-        let due: Vec<(String, usize)> = self
+        let due: Vec<(Arc<str>, usize)> = self
             .pending
             .iter()
             .filter(|(_, p)| force || now.duration_since(p.oldest) >= self.max_wait)
@@ -142,13 +172,18 @@ mod tests {
         )
     }
 
+    fn name(s: &str) -> Arc<str> {
+        Arc::from(s)
+    }
+
     #[test]
     fn fills_batch_at_device_capacity() {
         let mut b = Batcher::new(Duration::from_millis(5));
+        let a = name("a");
         let mut got = None;
         for i in 0..4 {
             let (e, _rx) = env(i, 8);
-            got = b.push("a", 8, 4, 0, e);
+            got = b.push(&a, 8, 4, 0, e).unwrap();
         }
         let batch = got.expect("4th push must flush");
         assert_eq!(batch.occupancy(), 4);
@@ -159,8 +194,9 @@ mod tests {
     #[test]
     fn partial_batch_flushes_on_force() {
         let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
         let (e, _rx) = env(0, 8);
-        assert!(b.push("a", 8, 4, 0, e).is_none());
+        assert!(b.push(&a, 8, 4, 0, e).unwrap().is_none());
         assert_eq!(b.pending_jobs(), 1);
         let batches = b.flush(true);
         assert_eq!(batches.len(), 1);
@@ -170,8 +206,9 @@ mod tests {
     #[test]
     fn timeout_flush() {
         let mut b = Batcher::new(Duration::from_millis(1));
+        let a = name("a");
         let (e, _rx) = env(0, 8);
-        b.push("a", 8, 4, 0, e);
+        b.push(&a, 8, 4, 0, e).unwrap();
         std::thread::sleep(Duration::from_millis(3));
         assert_eq!(b.flush(false).len(), 1);
     }
@@ -181,8 +218,8 @@ mod tests {
         let mut b = Batcher::new(Duration::from_secs(10));
         let (e1, _r1) = env(1, 8);
         let (e2, _r2) = env(2, 16);
-        b.push("a8", 8, 4, 0, e1);
-        b.push("a16", 16, 4, 0, e2);
+        b.push(&name("a8"), 8, 4, 0, e1).unwrap();
+        b.push(&name("a16"), 16, 4, 0, e2).unwrap();
         let batches = b.flush(true);
         assert_eq!(batches.len(), 2);
         for batch in &batches {
@@ -194,10 +231,11 @@ mod tests {
     #[test]
     fn separate_cards_never_mix() {
         let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
         let (e1, _r1) = env(1, 8);
         let (e2, _r2) = env(2, 8);
-        b.push("a", 8, 4, 0, e1);
-        b.push("a", 8, 4, 1, e2);
+        b.push(&a, 8, 4, 0, e1).unwrap();
+        b.push(&a, 8, 4, 1, e2).unwrap();
         assert_eq!(b.pending_jobs(), 2);
         let batches = b.flush(true);
         assert_eq!(batches.len(), 2, "same artifact, different cards");
@@ -208,16 +246,76 @@ mod tests {
     }
 
     #[test]
+    fn length_mismatch_is_a_real_error() {
+        // Promoted from a debug_assert: a route/artifact mismatch must be
+        // rejected in release builds too, before it can corrupt planes().
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let (e1, _r1) = env(1, 8);
+        assert!(b.push(&a, 8, 4, 0, e1).unwrap().is_none());
+        let (e2, _r2) = env(2, 16);
+        assert!(b.push(&a, 16, 4, 0, e2).is_err(), "mismatched n must error");
+        // The existing slot is untouched and still flushes its one job.
+        assert_eq!(b.pending_jobs(), 1);
+        let batches = b.flush(true);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].envelopes[0].job.id, 1);
+    }
+
+    #[test]
+    fn flush_slot_is_targeted() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let other = name("other");
+        let (e1, _r1) = env(1, 8);
+        let (e2, _r2) = env(2, 8);
+        let (e3, _r3) = env(3, 8);
+        b.push(&a, 8, 4, 0, e1).unwrap();
+        b.push(&a, 8, 4, 1, e2).unwrap();
+        b.push(&other, 8, 4, 0, e3).unwrap();
+        // Only (a, card 0) flushes; the other card's slot and the other
+        // artifact keep packing.
+        let batch = b.flush_slot(&a, 0).expect("slot had a partial batch");
+        assert_eq!(batch.card, 0);
+        assert_eq!(batch.envelopes[0].job.id, 1);
+        assert_eq!(b.pending_jobs(), 2);
+        assert!(b.flush_slot(&a, 0).is_none(), "slot already empty");
+        assert!(b.flush_slot(&name("missing"), 0).is_none());
+    }
+
+    #[test]
     fn planes_zero_padded() {
         let mut b = Batcher::new(Duration::from_secs(10));
         let (e, _rx) = env(3, 4);
-        b.push("a", 4, 3, 0, e);
+        b.push(&name("a"), 4, 3, 0, e).unwrap();
         let batch = b.flush(true).pop().unwrap();
         let (re, im) = batch.planes();
         assert_eq!(re.len(), 12);
         assert_eq!(&re[0..4], &[3.0; 4]);
         assert_eq!(&re[4..12], &[0.0; 8]);
         assert!(im.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn planes_into_reuses_and_rezeroes_buffers() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let (e, _rx) = env(7, 4);
+        b.push(&a, 4, 3, 0, e).unwrap();
+        let batch = b.flush(true).pop().unwrap();
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        batch.planes_into(&mut re, &mut im);
+        assert_eq!(&re[0..4], &[7.0; 4]);
+        let ptr = re.as_ptr();
+        // A smaller follow-up batch through the same buffers: padding must
+        // be re-zeroed (no stale rows) and no reallocation happens.
+        let (e2, _rx2) = env(0, 4);
+        b.push(&a, 4, 3, 0, e2).unwrap();
+        let batch2 = b.flush(true).pop().unwrap();
+        batch2.planes_into(&mut re, &mut im);
+        assert_eq!(re.as_ptr(), ptr, "reused buffers must not reallocate");
+        assert!(re[4..].iter().all(|&x| x == 0.0), "padding re-zeroed");
     }
 
     #[test]
@@ -232,12 +330,13 @@ mod tests {
             },
             |&(jobs, device_batch, cards)| {
                 let mut b = Batcher::new(Duration::from_secs(100));
+                let a = name("a");
                 let mut seen = Vec::new();
                 let mut rxs = Vec::new();
                 for i in 0..jobs {
                     let (e, rx) = env(i as u64, 8);
                     rxs.push(rx);
-                    if let Some(batch) = b.push("a", 8, device_batch, i % cards, e) {
+                    if let Some(batch) = b.push(&a, 8, device_batch, i % cards, e).unwrap() {
                         seen.extend(batch.envelopes.iter().map(|e| e.job.id));
                         if batch.occupancy() as u64 != device_batch {
                             return Err(format!(

@@ -20,6 +20,7 @@ pub mod job;
 pub mod metrics;
 pub mod router;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -32,7 +33,7 @@ use crate::coordinator::job::{Envelope, FftJob, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorKind};
-use crate::pipeline::nvml::SimNvml;
+use crate::pipeline::nvml::{ClockState, SimNvml};
 use crate::runtime::Runtime;
 use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
@@ -146,12 +147,16 @@ impl Engine {
         }
 
         // Timeout flusher: emits partial batches so low request rates are
-        // never starved.
+        // never starved. The tick is capped so shutdown() never waits a
+        // full max_batch_wait for the flusher to notice the stop flag.
         let flusher = {
             let batcher = batcher.clone();
             let txs = batch_txs.clone();
             let stop = shutdown.clone();
-            let tick = cfg.max_batch_wait.max(Duration::from_micros(500)) / 2;
+            let tick = (cfg.max_batch_wait / 2).clamp(
+                Duration::from_micros(500),
+                Duration::from_millis(50),
+            );
             Some(std::thread::Builder::new().name("fftsweep-flusher".into()).spawn(
                 move || {
                     while !stop.load(Ordering::Relaxed) {
@@ -206,6 +211,18 @@ impl Engine {
         re: Vec<f32>,
         im: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        self.submit_routed(re, im).map(|(rx, ..)| rx)
+    }
+
+    /// Submit, also reporting where the job was packed and whether the
+    /// push already dispatched a full batch — `execute` uses this to flush
+    /// only its own (artifact, card) slot, and only when needed.
+    #[allow(clippy::type_complexity)]
+    fn submit_routed(
+        &self,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = FftJob::new(id, re, im);
         let route = self.router.route(job.n, job.dtype)?.clone();
@@ -219,27 +236,56 @@ impl Engine {
 
         let (tx, rx) = mpsc::channel();
         let env = Envelope { job, reply: tx };
-        let full = {
+        let pushed = {
             let mut b = self.batcher.lock().unwrap();
             b.push(&route.artifact, route.n, route.device_batch, card, env)
         };
-        if let Some(batch) = full {
-            let _ = self.batch_txs[card].send(batch);
+        let mut dispatched_full = false;
+        match pushed {
+            Ok(Some(batch)) => {
+                let _ = self.batch_txs[card].send(batch);
+                dispatched_full = true;
+            }
+            Ok(None) => {}
+            Err(e) => {
+                // The job never entered a batch: undo its accounting so
+                // drain()/occupancy stay truthful, then surface the error.
+                self.cards[card].inflight.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                self.cards[card].metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
         }
-        Ok(rx)
+        Ok((rx, route.artifact, card, dispatched_full))
     }
 
-    /// Force-flush pending partial batches (used before blocking waits).
+    /// Force-flush ALL pending partial batches, fleet-wide (drain/shutdown
+    /// path — prefer `flush_slot` for per-request nudging).
     pub fn flush(&self) {
         for b in self.batcher.lock().unwrap().flush(true) {
             let _ = self.batch_txs[b.card].send(b);
         }
     }
 
-    /// Submit-and-wait convenience.
+    /// Flush only one (artifact, card) slot, leaving unrelated partial
+    /// batches to keep packing toward full occupancy.
+    pub fn flush_slot(&self, artifact: &Arc<str>, card: usize) {
+        let batch = self.batcher.lock().unwrap().flush_slot(artifact, card);
+        if let Some(b) = batch {
+            let _ = self.batch_txs[b.card].send(b);
+        }
+    }
+
+    /// Submit-and-wait convenience. Only the caller's own (artifact, card)
+    /// slot is flushed: concurrent traffic on other artifacts/cards keeps
+    /// batching instead of being force-flushed fleet-wide per call.
     pub fn execute(&self, re: Vec<f32>, im: Vec<f32>) -> Result<JobResult> {
-        let rx = self.submit(re, im)?;
-        self.flush();
+        let (rx, artifact, card, dispatched_full) = self.submit_routed(re, im)?;
+        // If the push completed a full batch, the job is already on its
+        // way — flushing would only release someone else's fresh partial.
+        if !dispatched_full {
+            self.flush_slot(&artifact, card);
+        }
         let result = rx.recv()??;
         Ok(result)
     }
@@ -312,14 +358,33 @@ fn worker_loop(
     mut governor: Box<dyn ClockGovernor>,
 ) {
     let table = freq_table(&w.gpu);
-    let tesla_class = w.gpu.name.starts_with("Tesla");
+    let tesla_class = w.nvml.supports_locked_clocks();
+    let boost_mhz = w.gpu.boost_clock_mhz;
+    // Worker-owned steady-state caches: loaded modules per artifact (no
+    // runtime.load() per batch), reusable input/output planes (no per-batch
+    // plane allocation), the boost-clock pricing baseline per
+    // (n, device_batch) so energy accounting costs one model evaluation
+    // per batch instead of two, and the last governed clock so NVML is
+    // only driven (and the transition trace only grows) when the governor
+    // actually changes its request.
+    let mut modules: HashMap<Arc<str>, Arc<crate::runtime::LoadedModule>> = HashMap::new();
+    let mut boost_runs: HashMap<(u64, u64), crate::sim::BatchRun> = HashMap::new();
+    let mut in_re: Vec<f32> = Vec::new();
+    let mut in_im: Vec<f32> = Vec::new();
+    let mut out_re: Vec<f32> = Vec::new();
+    let mut out_im: Vec<f32> = Vec::new();
+    let mut last_requested = f64::NAN;
+    let mut last_clock = boost_mhz;
     while let Ok(batch) = rx.recv() {
         let occupancy = batch.occupancy();
         let rows_total = batch.device_batch;
 
         // Clock policy: ask the governor, then drive the simulated NVML the
         // way the paper's pipeline brackets cuFFT calls (Tesla-class only;
-        // other cards apply the snapped clock offline).
+        // other cards apply the snapped clock offline). A boost-or-above
+        // request means "no DVFS": the card runs default clocks — no lock,
+        // and no upward snap past boost (the P4's boost sits between table
+        // entries; nearest-snap would price 'boost' above boost).
         let workload = FftWorkload::new(
             batch.n,
             Precision::Fp32,
@@ -327,30 +392,53 @@ fn worker_loop(
         );
         let requested = governor
             .choose(&w.gpu, &workload, &w.ctx)
-            .unwrap_or(w.gpu.boost_clock_mhz);
-        let clock = if tesla_class {
-            let _ = w.nvml.set_gpu_locked_clocks(requested, requested);
-            w.nvml.current_clock_mhz()
+            .unwrap_or(boost_mhz);
+        let clock = if requested == last_requested {
+            last_clock
         } else {
-            table.snap(requested)
+            last_requested = requested;
+            last_clock = if requested >= boost_mhz {
+                if tesla_class && matches!(w.nvml.state(), ClockState::Locked { .. }) {
+                    w.nvml.reset_gpu_locked_clocks();
+                }
+                boost_mhz
+            } else if tesla_class {
+                let _ = w.nvml.set_gpu_locked_clocks(requested, requested);
+                w.nvml.current_clock_mhz()
+            } else {
+                table.snap(requested)
+            };
+            last_clock
         };
 
         let t0 = Instant::now();
-        let result = w
-            .runtime
-            .load(&batch.artifact)
-            .and_then(|m| {
-                let (re, im) = batch.planes();
-                m.run_f32(&[&re, &im])
-            });
+        let module = match modules.get(&batch.artifact) {
+            Some(m) => Ok(m.clone()),
+            None => w.runtime.load(&batch.artifact).map(|m| {
+                modules.insert(batch.artifact.clone(), m.clone());
+                m
+            }),
+        };
+        let result = module.and_then(|m| {
+            batch.planes_into(&mut in_re, &mut in_im);
+            m.run_fft_f32_into(&in_re, &in_im, &mut out_re, &mut out_im)
+        });
         let exec_us = t0.elapsed().as_micros() as u64;
         w.fleet_metrics.record_batch(occupancy, rows_total, exec_us);
         w.card_metrics.record_batch(occupancy, rows_total, exec_us);
 
         // DVFS energy accounting: what this batch costs on the simulated
-        // card at the governed clock vs at boost.
-        let run = crate::sim::run_batch(&w.gpu, &workload, clock);
-        let boost = crate::sim::run_batch(&w.gpu, &workload, w.gpu.boost_clock_mhz);
+        // card at the governed clock vs at boost. The boost baseline is
+        // clock-independent per (n, device_batch), so it is memoized.
+        let boost = boost_runs
+            .entry((batch.n, batch.device_batch))
+            .or_insert_with(|| crate::sim::run_batch(&w.gpu, &workload, boost_mhz))
+            .clone();
+        let run = if clock == boost_mhz {
+            boost.clone()
+        } else {
+            crate::sim::run_batch(&w.gpu, &workload, clock)
+        };
         w.fleet_metrics.record_energy(run.energy_j, boost.energy_j);
         w.card_metrics.record_energy(run.energy_j, boost.energy_j);
 
@@ -367,9 +455,7 @@ fn worker_loop(
 
         let n_env = batch.envelopes.len() as u64;
         match result {
-            Ok(outputs) => {
-                let out_re = &outputs[0];
-                let out_im = &outputs[1];
+            Ok(()) => {
                 let n = batch.n as usize;
                 for (i, env) in batch.envelopes.into_iter().enumerate() {
                     let off = i * n;

@@ -4,6 +4,7 @@
 //! manifest, plus admission checks (supported length/dtype).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -17,7 +18,9 @@ pub struct Router {
 
 #[derive(Debug, Clone)]
 pub struct RouteEntry {
-    pub artifact: String,
+    /// Interned artifact name: cloning a route (or keying a batcher slot)
+    /// bumps a refcount instead of copying the string.
+    pub artifact: Arc<str>,
     /// Transform length the artifact serves.
     pub n: u64,
     /// The artifact's fixed batch dimension (the batcher packs up to this
@@ -33,7 +36,7 @@ impl Router {
             routes.insert(
                 (a.n, a.dtype.clone()),
                 RouteEntry {
-                    artifact: a.name.clone(),
+                    artifact: Arc::from(a.name.as_str()),
                     n: a.n,
                     device_batch: a.batch,
                 },
@@ -95,7 +98,7 @@ mod tests {
         let r = Router::from_manifest(&manifest());
         assert_eq!(r.len(), 3);
         let e = r.route(1024, "f32").unwrap();
-        assert_eq!(e.artifact, "fft_f32_n1024_b64");
+        assert_eq!(&*e.artifact, "fft_f32_n1024_b64");
         assert_eq!(e.device_batch, 64);
     }
 

@@ -3,7 +3,9 @@
 //! end-to-end pipeline example.
 
 pub mod fft;
+pub mod planner;
 pub mod signal;
 
 pub use fft::{fft, harmonic_sum, ifft, moments, power_spectrum, C64};
+pub use planner::{fft_planned, plan_for, Direction, FftPlan, FftScratch};
 pub use signal::{detect_peak, pulsar_time_series, PulsarParams};

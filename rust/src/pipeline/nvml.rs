@@ -95,6 +95,13 @@ impl SimNvml {
     pub fn transition_count(&self) -> usize {
         self.transitions.lock().unwrap().len()
     }
+
+    /// Whether this board accepts `set_gpu_locked_clocks` (Tesla-class).
+    /// Single source of truth for the check — consumers should ask the
+    /// handle instead of re-matching on the GPU name.
+    pub fn supports_locked_clocks(&self) -> bool {
+        self.tesla_class
+    }
 }
 
 /// RAII clock-lock guard: lock on creation, reset on drop (exception-safe

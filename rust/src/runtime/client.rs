@@ -78,6 +78,30 @@ impl LoadedModule {
             .collect()
     }
 
+    /// Serving path for `fft` artifacts writing into caller-owned output
+    /// planes (API parity with the sim backend's zero-copy path; PJRT
+    /// returns owned literals, so this copies once into the buffers).
+    pub fn run_fft_f32_into(
+        &self,
+        re: &[f32],
+        im: &[f32],
+        out_re: &mut Vec<f32>,
+        out_im: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "fft",
+            "run_fft_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        let outputs = self.run_f32(&[re, im])?;
+        out_re.clear();
+        out_re.extend_from_slice(&outputs[0]);
+        out_im.clear();
+        out_im.extend_from_slice(&outputs[1]);
+        Ok(())
+    }
+
     /// Execute with f64 planes (the fp64 artifacts).
     pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
         let shapes = self.meta.input_shapes();
@@ -161,8 +185,11 @@ impl Runtime {
         Ok(module)
     }
 
-    /// Names of all artifacts currently compiled.
+    /// Names of all artifacts currently compiled, sorted (same contract as
+    /// the sim backend: stable for logs and assertions).
     pub fn loaded_names(&self) -> Vec<String> {
-        self.cache.lock().unwrap().keys().cloned().collect()
+        let mut names: Vec<String> = self.cache.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
     }
 }

@@ -1,7 +1,13 @@
 //! Simulated runtime backend (default build): executes artifacts with the
-//! pure-rust DSP oracle instead of PJRT, so the coordinator, CLI and tests
+//! pure-rust DSP stack instead of PJRT, so the coordinator, CLI and tests
 //! run in environments without the native XLA library or any artifacts on
 //! disk. API-compatible with `client::Runtime` (the `xla`-feature backend).
+//!
+//! Execution goes through the planned engine (`dsp::planner`): cached
+//! twiddle tables, reusable SoA scratch planes and row-parallel batch
+//! execution — no per-row trig or allocation, which is what makes the
+//! serving fleet's hot loop cheap. Numerics are bit-identical to the
+//! `dsp::fft` oracle (the planner mirrors its butterfly schedule).
 //!
 //! Defense-in-depth is preserved: when a manifest and HLO files DO exist
 //! on disk, loads still verify the digest and the HLO-text header, so a
@@ -9,20 +15,39 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
 use super::artifact::{ArtifactMeta, Manifest};
 use super::validation::sha256_16;
 use crate::dsp;
+use crate::dsp::planner::{self, Direction};
 
 /// A loaded artifact plus its metadata, executed by the DSP oracle.
 pub struct LoadedModule {
     pub meta: ArtifactMeta,
+    /// The execution plan for `meta.n`, resolved once at load time so the
+    /// serving hot path never touches the global plan-cache lock.
+    /// `None` only for a non-power-of-two manifest entry (execution of
+    /// such an entry panics, as the Stockham oracle always has).
+    fft_plan: Option<std::sync::Arc<crate::dsp::planner::FftPlan>>,
 }
 
 impl LoadedModule {
+    fn new(meta: ArtifactMeta) -> Self {
+        let n = meta.n as usize;
+        let fft_plan = n.is_power_of_two().then(|| planner::plan_for(n));
+        Self { meta, fft_plan }
+    }
+
+    fn plan(&self) -> std::sync::Arc<crate::dsp::planner::FftPlan> {
+        match &self.fft_plan {
+            Some(p) => p.clone(),
+            None => planner::plan_for(self.meta.n as usize),
+        }
+    }
+
     /// Execute with f32 input planes, returning the flattened f32 outputs.
     /// Input/outputs are row-major (batch, n).
     pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
@@ -32,35 +57,34 @@ impl LoadedModule {
         let batch = self.meta.batch as usize;
         match self.meta.kind.as_str() {
             "fft" => {
-                let mut out_re = Vec::with_capacity(batch * n);
-                let mut out_im = Vec::with_capacity(batch * n);
-                for b in 0..batch {
-                    for c in row_fft(re, im, b, n) {
-                        out_re.push(c.re as f32);
-                        out_im.push(c.im as f32);
-                    }
-                }
+                // Single fft execution path (inputs validated above).
+                let mut out_re = Vec::new();
+                let mut out_im = Vec::new();
+                self.exec_fft_into(re, im, &mut out_re, &mut out_im);
                 Ok(vec![out_re, out_im])
             }
             "spectrum" => {
-                let mut power = Vec::with_capacity(batch * n);
-                for b in 0..batch {
-                    let x = row_fft(re, im, b, n);
-                    power.extend(x.iter().map(|c| c.abs2() as f32));
-                }
-                Ok(vec![power])
+                let plan = self.plan();
+                let mut f_re = vec![0.0f32; batch * n];
+                let mut f_im = vec![0.0f32; batch * n];
+                planner::run_rows(&plan, Direction::Forward, re, im, batch, &mut f_re, &mut f_im);
+                Ok(vec![dsp::power_spectrum(&f_re, &f_im)])
             }
             "pipeline" => {
+                let plan = self.plan();
+                let mut f_re = vec![0.0f32; batch * n];
+                let mut f_im = vec![0.0f32; batch * n];
+                planner::run_rows(&plan, Direction::Forward, re, im, batch, &mut f_re, &mut f_im);
+                let power = dsp::power_spectrum(&f_re, &f_im);
                 let h = self.meta.harmonics as usize;
                 let n_out = n / h.max(1);
                 let mut hs = Vec::with_capacity(batch * n_out);
                 let mut means = Vec::with_capacity(batch);
                 let mut stds = Vec::with_capacity(batch);
                 for b in 0..batch {
-                    let x = row_fft(re, im, b, n);
-                    let power: Vec<f32> = x.iter().map(|c| c.abs2() as f32).collect();
-                    hs.extend(dsp::harmonic_sum(&power, h));
-                    let (mean, std) = dsp::moments(&power);
+                    let row = &power[b * n..(b + 1) * n];
+                    hs.extend(dsp::harmonic_sum(row, h));
+                    let (mean, std) = dsp::moments(row);
                     means.push(mean);
                     stds.push(std);
                 }
@@ -68,6 +92,38 @@ impl LoadedModule {
             }
             other => anyhow::bail!("sim backend cannot execute kind '{other}'"),
         }
+    }
+
+    /// Zero-copy serving path for `fft` artifacts: execute straight into
+    /// caller-owned output planes. The buffers are resized (never shrunk)
+    /// and fully overwritten, so a worker reusing the same two `Vec`s per
+    /// batch reaches a zero-allocation steady state.
+    pub fn run_fft_f32_into(
+        &self,
+        re: &[f32],
+        im: &[f32],
+        out_re: &mut Vec<f32>,
+        out_im: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "fft",
+            "run_fft_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        self.check_inputs(2, [re.len(), im.len()].into_iter())?;
+        self.exec_fft_into(re, im, out_re, out_im);
+        Ok(())
+    }
+
+    /// The one fft execution body (callers have validated inputs).
+    fn exec_fft_into(&self, re: &[f32], im: &[f32], out_re: &mut Vec<f32>, out_im: &mut Vec<f32>) {
+        let n = self.meta.n as usize;
+        let batch = self.meta.batch as usize;
+        out_re.resize(batch * n, 0.0);
+        out_im.resize(batch * n, 0.0);
+        let plan = self.plan();
+        planner::run_rows(&plan, Direction::Forward, re, im, batch, out_re, out_im);
     }
 
     /// Build "input literals". The sim backend has no device buffers; this
@@ -93,18 +149,10 @@ impl LoadedModule {
         let (re, im) = (inputs[0], inputs[1]);
         let n = self.meta.n as usize;
         let batch = self.meta.batch as usize;
-        let mut out_re = Vec::with_capacity(batch * n);
-        let mut out_im = Vec::with_capacity(batch * n);
-        for b in 0..batch {
-            let off = b * n;
-            let x: Vec<dsp::C64> = (0..n)
-                .map(|i| dsp::C64::new(re[off + i], im[off + i]))
-                .collect();
-            for c in dsp::fft(&x) {
-                out_re.push(c.re);
-                out_im.push(c.im);
-            }
-        }
+        let plan = self.plan();
+        let mut out_re = vec![0.0f64; batch * n];
+        let mut out_im = vec![0.0f64; batch * n];
+        planner::run_rows(&plan, Direction::Forward, re, im, batch, &mut out_re, &mut out_im);
         Ok(vec![out_re, out_im])
     }
 
@@ -129,9 +177,14 @@ impl LoadedModule {
 }
 
 /// The simulated runtime: manifest (on-disk or synthetic) + a load cache.
+///
+/// The cache is a `RwLock` so the hot path (cache hit) takes only a read
+/// lock; concurrent misses both validate outside the lock and the
+/// write-side entry API keeps whichever module landed first, so racing
+/// loaders converge on one shared `Arc` (no double-load divergence).
 pub struct Runtime {
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<LoadedModule>>>,
+    cache: RwLock<HashMap<String, Arc<LoadedModule>>>,
 }
 
 impl Runtime {
@@ -146,7 +199,7 @@ impl Runtime {
         };
         Ok(Self {
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
         })
     }
 
@@ -161,7 +214,7 @@ impl Runtime {
     /// Load an artifact (cached). Real on-disk artifacts are digest- and
     /// header-checked; synthetic entries load directly.
     pub fn load(&self, name: &str) -> Result<Arc<LoadedModule>> {
-        if let Some(m) = self.cache.lock().unwrap().get(name) {
+        if let Some(m) = self.cache.read().unwrap().get(name) {
             return Ok(m.clone());
         }
         let meta = self.manifest.get(name)?.clone();
@@ -180,26 +233,25 @@ impl Runtime {
                 meta.digest
             );
         }
-        let module = Arc::new(LoadedModule { meta });
-        self.cache
-            .lock()
+        let module = Arc::new(LoadedModule::new(meta));
+        // First inserter wins: a load racing this one returns the already
+        // cached module instead of installing a second copy.
+        Ok(self
+            .cache
+            .write()
             .unwrap()
-            .insert(name.to_string(), module.clone());
-        Ok(module)
+            .entry(name.to_string())
+            .or_insert(module)
+            .clone())
     }
 
-    /// Names of all artifacts currently loaded.
+    /// Names of all artifacts currently loaded, sorted (stable for logs
+    /// and assertions regardless of hash order).
     pub fn loaded_names(&self) -> Vec<String> {
-        self.cache.lock().unwrap().keys().cloned().collect()
+        let mut names: Vec<String> = self.cache.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
     }
-}
-
-fn row_fft(re: &[f32], im: &[f32], row: usize, n: usize) -> Vec<dsp::C64> {
-    let off = row * n;
-    let x: Vec<dsp::C64> = (0..n)
-        .map(|i| dsp::C64::new(re[off + i] as f64, im[off + i] as f64))
-        .collect();
-    dsp::fft(&x)
 }
 
 #[cfg(test)]
@@ -254,9 +306,70 @@ mod tests {
     #[test]
     fn load_is_cached() {
         let rt = rt();
-        rt.load("fft_f32_n1024_b64").unwrap();
-        rt.load("fft_f32_n1024_b64").unwrap();
+        let a = rt.load("fft_f32_n1024_b64").unwrap();
+        let b = rt.load("fft_f32_n1024_b64").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must return the same module");
         assert_eq!(rt.loaded_names(), vec!["fft_f32_n1024_b64".to_string()]);
+    }
+
+    #[test]
+    fn loaded_names_are_sorted() {
+        let rt = rt();
+        // Load in non-sorted order; the listing must come back sorted.
+        rt.load("fft_f32_n256_b256").unwrap();
+        rt.load("fft_f32_n1024_b64").unwrap();
+        rt.load("fft_f32_n16384_b4").unwrap();
+        let names = rt.loaded_names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert_eq!(names.len(), 3);
+    }
+
+    #[test]
+    fn concurrent_loads_converge_on_one_module() {
+        let rt = Arc::new(rt());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let rt = rt.clone();
+                std::thread::spawn(move || rt.load("fft_f32_n4096_b16").unwrap())
+            })
+            .collect();
+        let modules: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // First insert wins; every racer gets a clone of the cached Arc.
+        let canonical = rt.load("fft_f32_n4096_b16").unwrap();
+        assert!(modules.iter().all(|m| Arc::ptr_eq(m, &canonical)));
+        assert_eq!(rt.loaded_names(), vec!["fft_f32_n4096_b16".to_string()]);
+    }
+
+    #[test]
+    fn run_into_matches_run_and_reuses_buffers() {
+        let rt = rt();
+        let m = rt.load("fft_f32_n256_b256").unwrap();
+        let total = (m.meta.batch * m.meta.n) as usize;
+        let mut rng = Rng::new(8);
+        let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let want = m.run_f32(&[&re, &im]).unwrap();
+        let mut out_re = Vec::new();
+        let mut out_im = Vec::new();
+        m.run_fft_f32_into(&re, &im, &mut out_re, &mut out_im).unwrap();
+        assert_eq!(out_re, want[0]);
+        assert_eq!(out_im, want[1]);
+        // Second run reuses the same output allocations.
+        let ptr = out_re.as_ptr();
+        m.run_fft_f32_into(&re, &im, &mut out_re, &mut out_im).unwrap();
+        assert_eq!(out_re.as_ptr(), ptr, "steady state must not reallocate outputs");
+    }
+
+    #[test]
+    fn run_into_rejects_non_fft_kinds() {
+        let rt = rt();
+        let m = rt.load("spectrum_f32_n4096_b16").unwrap();
+        let total = (m.meta.batch * m.meta.n) as usize;
+        let plane = vec![0.0f32; total];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        assert!(m.run_fft_f32_into(&plane, &plane, &mut a, &mut b).is_err());
     }
 
     #[test]

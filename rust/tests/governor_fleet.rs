@@ -163,6 +163,45 @@ fn fleet_governors_are_per_card_instances() {
 }
 
 #[test]
+fn execute_flushes_only_its_own_slot() {
+    // A pending partial batch on another artifact must NOT be force-flushed
+    // by an unrelated execute(): it keeps packing toward full occupancy.
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig {
+            // Disable the timeout flusher for the duration of the test so
+            // only explicit flushes can release the partial batch.
+            max_batch_wait: Duration::from_secs(3600),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(17);
+
+    // One n=256 job: batch 256 on that artifact, so it stays pending.
+    let (re, im) = rand_planes(256, &mut rng);
+    let pending_rx = engine.submit(re, im).expect("submit");
+
+    // An unrelated n=1024 execute() completes without disturbing it.
+    let (re, im) = rand_planes(1024, &mut rng);
+    let res = engine.execute(re, im).expect("execute");
+    assert_eq!(res.out_re.len(), 1024);
+    assert_eq!(res.batch_occupancy, 1);
+    assert!(
+        matches!(pending_rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)),
+        "partial n=256 batch must still be packing after an unrelated execute()"
+    );
+
+    // A fleet-wide flush (the drain/shutdown primitive) releases it.
+    engine.flush();
+    assert!(engine.drain(Duration::from_secs(60)));
+    assert!(pending_rx.recv().expect("recv").is_ok());
+    engine.shutdown();
+}
+
+#[test]
 fn shutdown_is_deterministic_and_idempotent_per_engine() {
     // No jobs at all: shutdown must still join cleanly and report zeros.
     let engine = Engine::start_single(

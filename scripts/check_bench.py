@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""CI gate for the serving-bench trajectory (bench-smoke job).
+
+Usage: check_bench.py <fresh BENCH_serving.json> <committed baseline>
+
+Fails (exit 1) when:
+  * either file is malformed JSON or missing required fields,
+  * fleet throughput regressed more than 30% below the committed baseline.
+
+The committed baseline is intentionally conservative: it is the floor the
+trajectory must never fall under, not the best number ever seen. Update it
+(from a `cargo bench --bench bench_serving` run on a quiet machine) when a
+PR intentionally moves serving performance.
+"""
+
+import json
+import sys
+
+REQUIRED = ["bench", "schema", "naive_rows_per_s", "planned_rows_per_s", "planned_speedup", "fleet"]
+REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
+MAX_REGRESSION = 0.30
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"FAIL: {path}: unreadable or malformed JSON ({e})")
+    if not isinstance(doc, dict) or not isinstance(doc.get("fleet"), dict):
+        sys.exit(f"FAIL: {path}: expected an object with a 'fleet' object")
+    missing = [k for k in REQUIRED if k not in doc]
+    missing += [f"fleet.{k}" for k in REQUIRED_FLEET if k not in doc["fleet"]]
+    if missing:
+        sys.exit(f"FAIL: {path}: missing fields {missing}")
+    return doc
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} <fresh.json> <baseline.json>")
+    fresh = load(sys.argv[1])
+    base = load(sys.argv[2])
+
+    got = fresh["fleet"]["jobs_per_s"]
+    floor = base["fleet"]["jobs_per_s"] * (1.0 - MAX_REGRESSION)
+    print(f"fleet throughput: {got:.0f} jobs/s (baseline {base['fleet']['jobs_per_s']:.0f}, floor {floor:.0f})")
+    print(f"planned speedup vs pre-plan path: {fresh['planned_speedup']:.1f}x")
+    if got < floor:
+        sys.exit(f"FAIL: throughput {got:.0f} jobs/s regressed >{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}")
+    if fresh["planned_speedup"] < 1.0:
+        sys.exit("FAIL: planned path slower than the naive per-row path — planner regression")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()
