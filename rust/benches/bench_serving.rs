@@ -1,11 +1,13 @@
 //! Bench: the planned-FFT serving engine, end to end — the first point on
 //! the repo's committed perf trajectory (`BENCH_serving.json`).
 //!
-//! Four measurements:
+//! Five measurements:
 //!   1. pre-PR sim path (per-row `Vec<C64>` + per-butterfly trig via
 //!      `dsp::fft`) in rows/s — the baseline the planner replaces,
 //!   2. planned path (`dsp::planner`, cached twiddles, reused scratch,
 //!      row-parallel) on the identical workload in rows/s,
+//!   2b. the opened workload shapes: mixed-radix non-pow2 (n=1536),
+//!      Bluestein prime (n=1009) and real-input rFFT (n=4096) rows/s,
 //!   3. fleet end-to-end throughput: jobs/s through a 2-card engine on the
 //!      n=1024 workload (open loop), plus an allocation-frequency proxy
 //!      from a counting global allocator,
@@ -149,6 +151,50 @@ fn main() {
          {planned_rows_per_s:.0} rows/s ({speedup:.1}x, n={N})"
     );
 
+    // 2b. The opened workload shapes, through the same planned row-parallel
+    // path: a smooth non-pow2 length (mixed-radix 2/3/5), a prime length
+    // (Bluestein chirp-z) and the real-input transform.
+    let cplx_rows_per_s = |n: usize, rows: usize, rng: &mut Rng| -> f64 {
+        let plan = planner::plan_for(n);
+        let (re, im) = rand_planes(rows * n, rng);
+        let mut o_re = vec![0.0f32; rows * n];
+        let mut o_im = vec![0.0f32; rows * n];
+        // warm plan + scratch, then measure steady state
+        planner::run_rows(&plan, Direction::Forward, &re, &im, rows, &mut o_re, &mut o_im);
+        let t0 = Instant::now();
+        planner::run_rows(&plan, Direction::Forward, &re, &im, rows, &mut o_re, &mut o_im);
+        let dt = t0.elapsed().as_secs_f64();
+        black_box(&o_re);
+        rows as f64 / dt
+    };
+    const N_NONPOW2: usize = 1536; // 2^9 · 3
+    const N_BLUESTEIN: usize = 1009; // prime
+    const N_RFFT: usize = 4096;
+    let nonpow2_rows = if quick { 512 } else { 2048 };
+    let nonpow2_rows_per_s = cplx_rows_per_s(N_NONPOW2, nonpow2_rows, &mut rng);
+    let bluestein_rows_per_s = cplx_rows_per_s(N_BLUESTEIN, nonpow2_rows, &mut rng);
+
+    let rfft_rows = if quick { 256 } else { 1024 };
+    let rplan = planner::rfft_plan_for(N_RFFT);
+    let o_len = rplan.out_len();
+    let (rfft_in, _) = rand_planes(rfft_rows * N_RFFT, &mut rng);
+    let mut r_re = vec![0.0f32; rfft_rows * o_len];
+    let mut r_im = vec![0.0f32; rfft_rows * o_len];
+    planner::run_rfft_rows(&rplan, &rfft_in, rfft_rows, &mut r_re, &mut r_im);
+    let t0 = Instant::now();
+    planner::run_rfft_rows(&rplan, &rfft_in, rfft_rows, &mut r_re, &mut r_im);
+    let rfft_s = t0.elapsed().as_secs_f64();
+    black_box(&r_re);
+    let rfft_rows_per_s = rfft_rows as f64 / rfft_s;
+    let complex_4096_rows_per_s = cplx_rows_per_s(N_RFFT, rfft_rows, &mut rng);
+    let rfft_vs_complex = rfft_rows_per_s / complex_4096_rows_per_s;
+
+    println!(
+        "off-grid: n={N_NONPOW2} mixed-radix {nonpow2_rows_per_s:.0} rows/s, n={N_BLUESTEIN} \
+         bluestein {bluestein_rows_per_s:.0} rows/s, n={N_RFFT} rfft {rfft_rows_per_s:.0} rows/s \
+         ({rfft_vs_complex:.2}x vs complex)"
+    );
+
     // 3. Fleet end to end: open-loop throughput + allocation proxy.
     let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
     let fleet = (0..CARDS)
@@ -200,7 +246,7 @@ fn main() {
 
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 1.0.into());
+    root.set("schema", 2.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -211,6 +257,19 @@ fn main() {
     root.set("planned_serial_speedup", serial_speedup.into());
     root.set("planned_rows_per_s", planned_rows_per_s.into());
     root.set("planned_speedup", speedup.into());
+    let mut nonpow2_json = Json::obj();
+    nonpow2_json.set("n", (N_NONPOW2 as u64).into());
+    nonpow2_json.set("rows_per_s", nonpow2_rows_per_s.into());
+    root.set("nonpow2", nonpow2_json);
+    let mut bluestein_json = Json::obj();
+    bluestein_json.set("n", (N_BLUESTEIN as u64).into());
+    bluestein_json.set("rows_per_s", bluestein_rows_per_s.into());
+    root.set("bluestein", bluestein_json);
+    let mut rfft_json = Json::obj();
+    rfft_json.set("n", (N_RFFT as u64).into());
+    rfft_json.set("rows_per_s", rfft_rows_per_s.into());
+    rfft_json.set("vs_complex", rfft_vs_complex.into());
+    root.set("rfft", rfft_json);
     let mut fleet_json = Json::obj();
     fleet_json.set("jobs_per_s", jobs_per_s.into());
     fleet_json.set("p50_ms", p50.into());

@@ -37,7 +37,20 @@ impl TrafficTrace {
 /// (every card supports them), deadlines 1.15–3× the boost-clock batch
 /// time — the "some slack, never infeasible" regime of paper §6.2.
 pub fn synthetic_trace(gpu: &GpuSpec, batches: usize, seed: u64) -> TrafficTrace {
-    let menu = [1024u64, 8192, 16384, 65536, 262144];
+    synthetic_trace_with_menu(gpu, batches, seed, &[1024, 8192, 16384, 65536, 262144])
+}
+
+/// [`synthetic_trace`] with a caller-chosen length menu — arbitrary
+/// lengths are allowed (the pricing model plans non-powers-of-two and
+/// Bluestein lengths), which is how `fftsweep govern --lengths 1000,1536`
+/// replays channelizer-shaped traffic.
+pub fn synthetic_trace_with_menu(
+    gpu: &GpuSpec,
+    batches: usize,
+    seed: u64,
+    menu: &[u64],
+) -> TrafficTrace {
+    assert!(!menu.is_empty(), "trace needs at least one length");
     let mut rng = Rng::new(seed ^ 0x90E7_7AFF);
     let out = (0..batches)
         .map(|_| {
@@ -226,6 +239,26 @@ mod tests {
         assert!(by("deadline").energy_saving() > 0.10);
         // the table carries one row per governor
         assert_eq!(table.rows.len(), 6);
+    }
+
+    #[test]
+    fn off_grid_menu_replays_under_every_governor() {
+        // `govern --lengths 1000,1536`: every governor must produce a
+        // feasible, fully-served outcome on non-power-of-two traffic.
+        let g = tesla_v100();
+        let trace = synthetic_trace_with_menu(&g, 12, 7, &[1000, 1536]);
+        assert!(trace.batches.iter().all(|b| !b.workload.n.is_power_of_two()));
+        let ctx = quick_ctx();
+        for kind in GovernorKind::all(945.0) {
+            let o = replay(&g, &trace, &kind, &ctx);
+            assert_eq!(o.batches, 12, "{}", o.label);
+            assert!(o.energy_j > 0.0 && o.time_s > 0.0, "{}", o.label);
+            assert!(
+                o.energy_j <= o.boost_energy_j * 1.001,
+                "{} used more energy than boost on off-grid traffic",
+                o.label
+            );
+        }
     }
 
     #[test]

@@ -11,5 +11,7 @@ pub mod roofline;
 pub mod report;
 pub mod tables;
 
-pub use govern::{comparison, synthetic_trace, GovernorOutcome, TrafficTrace};
+pub use govern::{
+    comparison, synthetic_trace, synthetic_trace_with_menu, GovernorOutcome, TrafficTrace,
+};
 pub use optimal::{at_fixed_clock, mean_optimal_mhz, optima, OptimalPoint};

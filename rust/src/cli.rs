@@ -27,18 +27,25 @@ USAGE:
   fftsweep report   [--out results] [--quick]
   fftsweep table    <1|2|3|4> [--quick]
   fftsweep figure   <2|3|4|5|6|7|8|9|13|15|17|20> [--gpu v100] [--precision fp32] [--quick]
-  fftsweep sweep    [--gpu v100] [--precision fp32] [--quick]
+  fftsweep sweep    [--gpu v100] [--precision fp32] [--quick] [--lengths 1000,1536,4096]
   fftsweep pipeline [--gpu v100] [--n 500000] [--governor fixed --clock 945]
   fftsweep selftest [--artifacts artifacts]
   fftsweep serve    [--artifacts artifacts] [--jobs 256] [--governor fixed --clock 945]
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
+                    [--lengths 1000,1536,4096]
   fftsweep govern   [--gpu v100] [--batches 96] [--seed 7] [--clock 945] [--quick]
+                    [--lengths 1000,1536,16384]
   fftsweep validate [--artifacts artifacts]
   fftsweep ablation [--gpu v100] [--n 16384]
   fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
   fftsweep roofline [--n 8192] [--precision fp32]
   fftsweep cost     [--gpu v100] [--n 16384] [--clock 945] [--gpus 500]
   fftsweep thermal  [--gpu v100] [--n 16384] [--ambient 30]
+
+LENGTHS: transform lengths are arbitrary (>= 1) — powers of two, smooth
+non-powers of two (mixed-radix 2/3/5 plans) and prime/Bluestein lengths
+all plan and serve; `serve --lengths` is admission-checked against the
+routable artifact set.
 
 GOVERNORS (the --governor values):
   boost        no DVFS: everything at the boost clock
@@ -332,7 +339,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = Engine::start(rt, fleet, cfg)?;
 
     let mut rng = Rng::new(7);
-    let lengths = engine.router().supported_lengths("f32");
+    // `--lengths` restricts traffic to the given lengths; each one is
+    // admission-checked against the router so a typo surfaces the typed
+    // error taxonomy (with the routable set) instead of 0-job silence.
+    let lengths: Vec<u64> = if let Some(ls) = args.get("lengths") {
+        let mut out = Vec::new();
+        for tok in ls.split(',') {
+            let n: u64 = tok
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad length '{}' in --lengths", tok.trim()))?;
+            engine.router().route(n, "f32")?;
+            out.push(n);
+        }
+        out
+    } else {
+        engine.router().supported_lengths("f32")
+    };
     anyhow::ensure!(!lengths.is_empty(), "no routable lengths");
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -369,7 +392,22 @@ fn cmd_govern(args: &Args) -> Result<()> {
         freq_stride: args.usize_or("freq-stride", if quick { 8 } else { 2 }),
         ..GovernorContext::default()
     };
-    let trace = govern::synthetic_trace(&gpu, batches, seed);
+    let trace = if let Some(ls) = args.get("lengths") {
+        // Same strictness as `serve --lengths`: a typo'd token is an
+        // error, not a silently smaller menu.
+        let menu: Vec<u64> = ls
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad length '{}' in --lengths", s.trim()))
+            })
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!menu.is_empty(), "--lengths parsed to an empty menu");
+        govern::synthetic_trace_with_menu(&gpu, batches, seed, &menu)
+    } else {
+        govern::synthetic_trace(&gpu, batches, seed)
+    };
     let kinds = GovernorKind::all(fixed_mhz);
     let (outcomes, table) = govern::comparison(&gpu, &trace, &kinds, &ctx);
     println!("{}", table.to_ascii());

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::job::Envelope;
+use crate::coordinator::CoordError;
 
 /// A packed batch ready for execution on one card.
 pub struct PackedBatch {
@@ -81,10 +82,14 @@ impl Batcher {
     }
 
     /// Add a job under its (route, card); returns `Ok(Some(batch))` when
-    /// the slot reached the device batch. A transform-length mismatch
-    /// against an existing slot is a hard error (in release builds it
-    /// previously survived as a `debug_assert` until `planes()` panicked
-    /// mid-copy): the job is rejected, the slot is left intact.
+    /// the slot reached the device batch. Rejections are typed
+    /// ([`CoordError`]) and happen at submit time:
+    ///   * a length with no execution-plan support is refused before it
+    ///     can reach (and panic) a worker thread,
+    ///   * a transform-length mismatch against an existing slot is a hard
+    ///     error (in release builds it previously survived as a
+    ///     `debug_assert` until `planes()` panicked mid-copy): the job is
+    ///     rejected, the slot is left intact.
     pub fn push(
         &mut self,
         artifact: &Arc<str>,
@@ -93,6 +98,9 @@ impl Batcher {
         card: usize,
         env: Envelope,
     ) -> anyhow::Result<Option<PackedBatch>> {
+        if !crate::dsp::planner::supports(n as usize) {
+            return Err(CoordError::PlanUnsupported { n }.into());
+        }
         let key = (artifact.clone(), card);
         let slot = self.pending.entry(key.clone()).or_insert_with(|| Pending {
             artifact: artifact.clone(),
@@ -102,12 +110,14 @@ impl Batcher {
             envelopes: Vec::new(),
             oldest: Instant::now(),
         });
-        anyhow::ensure!(
-            slot.n == n,
-            "batcher: artifact '{artifact}' packs n={}, got a job with n={n} \
-             (route/artifact length mismatch)",
-            slot.n
-        );
+        if slot.n != n {
+            return Err(CoordError::LengthMismatch {
+                artifact: artifact.to_string(),
+                expected: slot.n,
+                got: n,
+            }
+            .into());
+        }
         if slot.envelopes.is_empty() {
             slot.oldest = Instant::now();
         }
@@ -246,20 +256,45 @@ mod tests {
     }
 
     #[test]
-    fn length_mismatch_is_a_real_error() {
+    fn length_mismatch_is_a_typed_error() {
         // Promoted from a debug_assert: a route/artifact mismatch must be
-        // rejected in release builds too, before it can corrupt planes().
+        // rejected in release builds too, before it can corrupt planes() —
+        // and as a CoordError callers can match on.
         let mut b = Batcher::new(Duration::from_secs(10));
         let a = name("a");
         let (e1, _r1) = env(1, 8);
         assert!(b.push(&a, 8, 4, 0, e1).unwrap().is_none());
         let (e2, _r2) = env(2, 16);
-        assert!(b.push(&a, 16, 4, 0, e2).is_err(), "mismatched n must error");
+        let err = b.push(&a, 16, 4, 0, e2).expect_err("mismatched n must error");
+        match err.downcast_ref::<CoordError>() {
+            Some(CoordError::LengthMismatch { artifact, expected, got }) => {
+                assert_eq!(artifact.as_str(), "a");
+                assert_eq!((*expected, *got), (8, 16));
+            }
+            other => panic!("expected LengthMismatch, got {other:?}"),
+        }
         // The existing slot is untouched and still flushes its one job.
         assert_eq!(b.pending_jobs(), 1);
         let batches = b.flush(true);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].envelopes[0].job.id, 1);
+    }
+
+    #[test]
+    fn unplannable_length_rejected_at_submit_time() {
+        // n=0 has no execution plan: the push must refuse it with a typed
+        // error instead of letting a worker thread panic on it later.
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let (e, _rx) = env(1, 0);
+        let err = b.push(&a, 0, 4, 0, e).expect_err("n=0 must be refused");
+        match err.downcast_ref::<CoordError>() {
+            Some(CoordError::PlanUnsupported { n }) => assert_eq!(*n, 0),
+            other => panic!("expected PlanUnsupported, got {other:?}"),
+        }
+        // Nothing was queued: no slot, no pending jobs.
+        assert_eq!(b.pending_jobs(), 0);
+        assert!(b.flush(true).is_empty());
     }
 
     #[test]

@@ -39,6 +39,35 @@ use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::types::{FftWorkload, Precision};
 
+/// The serving error taxonomy: every way a job can be refused admission,
+/// as a typed error callers can match on (downcastable from the
+/// `anyhow::Error` that `submit`/`execute` surface). Jobs are rejected at
+/// submit time — an unsupported length never reaches a worker thread,
+/// so it can never surface as a worker panic.
+#[derive(Debug, thiserror::Error)]
+pub enum CoordError {
+    /// No artifact in the manifest serves this (length, dtype).
+    #[error("no artifact serves n={n} dtype={dtype} (supported: {supported:?})")]
+    UnsupportedLength {
+        n: u64,
+        dtype: String,
+        supported: Vec<u64>,
+    },
+    /// The transform length has no execution-plan support at all
+    /// (the planner serves every n >= 1, so this means n = 0 or a
+    /// corrupt manifest entry).
+    #[error("transform length {n} has no plan support")]
+    PlanUnsupported { n: u64 },
+    /// A job reached a batch slot packing a different length
+    /// (route/artifact mismatch — the slot is left intact).
+    #[error("batcher: artifact '{artifact}' packs n={expected}, got a job with n={got}")]
+    LengthMismatch {
+        artifact: String,
+        expected: u64,
+        got: u64,
+    },
+}
+
 /// One card in the fleet: a simulated GPU plus the clock policy governing it.
 #[derive(Debug, Clone)]
 pub struct CardConfig {

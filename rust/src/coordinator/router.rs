@@ -1,13 +1,13 @@
 //! Routing: map an incoming job to the AOT artifact that can serve it.
 //!
 //! Mirrors the vLLM-router shape: a static routing table derived from the
-//! manifest, plus admission checks (supported length/dtype).
+//! manifest, plus admission checks (supported length/dtype) with typed
+//! rejections ([`CoordError`]).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
+use crate::coordinator::CoordError;
 use crate::runtime::Manifest;
 
 /// Routing table: (n, dtype) → artifact name + its fixed device batch.
@@ -45,10 +45,17 @@ impl Router {
         Self { routes }
     }
 
-    pub fn route(&self, n: u64, dtype: &str) -> Result<&RouteEntry> {
+    /// Admission check: the artifact serving (n, dtype), or a typed
+    /// [`CoordError::UnsupportedLength`] naming the lengths that ARE
+    /// routable so callers can self-correct.
+    pub fn route(&self, n: u64, dtype: &str) -> Result<&RouteEntry, CoordError> {
         self.routes
             .get(&(n, dtype.to_string()))
-            .with_context(|| format!("no artifact serves n={n} dtype={dtype}"))
+            .ok_or_else(|| CoordError::UnsupportedLength {
+                n,
+                dtype: dtype.to_string(),
+                supported: self.supported_lengths(dtype),
+            })
     }
 
     pub fn supported_lengths(&self, dtype: &str) -> Vec<u64> {
@@ -103,9 +110,16 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_length_rejected() {
+    fn unsupported_length_rejected_with_taxonomy() {
         let r = Router::from_manifest(&manifest());
-        assert!(r.route(512, "f32").is_err());
+        match r.route(512, "f32") {
+            Err(CoordError::UnsupportedLength { n, dtype, supported }) => {
+                assert_eq!(n, 512);
+                assert_eq!(dtype, "f32");
+                assert_eq!(supported, vec![256, 1024], "must name the routable lengths");
+            }
+            other => panic!("expected UnsupportedLength, got {other:?}"),
+        }
         assert!(r.route(1024, "f16").is_err());
     }
 

@@ -1,22 +1,34 @@
-//! Planned FFT execution: the cuFFT-plan idea applied to the sim backend.
+//! Planned FFT execution: a general plan compiler for the sim backend.
 //!
 //! `fft_stockham` (the numerical oracle in `dsp::fft`) recomputes every
-//! twiddle with `sin`/`cos` per butterfly column per stage and allocates
-//! two fresh `Vec<C64>` per transform. That is fine for an oracle and
-//! fatal for a serving hot loop. An [`FftPlan`] hoists all of that out of
-//! the row loop, exactly the way cuFFT plans do:
+//! twiddle with `sin`/`cos` per butterfly column per stage, allocates two
+//! fresh `Vec<C64>` per transform, and only handles powers of two. An
+//! [`FftPlan`] hoists all of that out of the row loop, exactly the way
+//! cuFFT plans do, and serves **every** length:
 //!
-//!   * per-stage twiddle tables (both directions) precomputed once per
-//!     transform length and cached process-wide ([`plan_for`]),
+//!   * mixed-radix Stockham decomposition with radix-2/3/5 butterflies and
+//!     per-stage twiddle tables (both directions), precomputed once per
+//!     transform length and cached process-wide ([`plan_for`]) — the
+//!     radix-2 schedule is bit-identical to `fft_stockham`,
+//!   * Bluestein's chirp-z algorithm as the fallback for lengths with
+//!     prime factors other than 2/3/5: the length-N transform becomes a
+//!     circular convolution of padded length `m = next_pow2(2N-1)` run
+//!     through a cached power-of-two plan, with the chirp and the kernel
+//!     spectrum precomputed at plan-build time,
+//!   * a real-input path ([`RfftPlan`]): an even-N real transform packs
+//!     into an N/2 complex transform plus an O(N) unpack; odd N falls back
+//!     to the complex plan with a zero imaginary plane,
 //!   * execution in split re/im (SoA) `f64` scratch planes owned by a
 //!     reusable [`FftScratch`] — **no trig and no heap allocation inside
 //!     the per-row inner loop**,
 //!   * row-parallel batch execution over std scoped threads
-//!     ([`run_rows`]), bit-identical to the serial path because rows are
-//!     independent and each thread runs the same per-row code.
+//!     ([`run_rows`], [`run_rfft_rows`]), bit-identical to the serial path
+//!     because rows are independent and each thread runs the same
+//!     per-row code.
 //!
-//! The butterfly schedule and operation order mirror `fft_stockham`
-//! exactly, so planned output is bit-identical to the oracle in f64.
+//! For power-of-two lengths the butterfly schedule and operation order
+//! mirror `fft_stockham` exactly, so planned output is bit-identical to
+//! the oracle in f64.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -61,53 +73,136 @@ impl PlanScalar for f64 {
     }
 }
 
-/// Twiddle table for one Stockham stage: `w[p] = expi(theta0 * p)` for
-/// `p in 0..m`, split re/im.
-struct StageTwiddles {
-    re: Vec<f64>,
-    im: Vec<f64>,
+/// Which decomposition a plan compiled to (exposed for tests, docs and
+/// the pricing layer's sanity checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanAlgorithm {
+    /// Stockham mixed-radix (every prime factor in {2, 3, 5}).
+    MixedRadix,
+    /// Chirp-z convolution through a padded power-of-two plan.
+    Bluestein,
+}
+
+/// Every length >= 1 has a plan (mixed radix or the Bluestein fallback).
+/// The coordinator checks this at submit time so an unplannable job is a
+/// typed error instead of a worker-thread panic.
+pub fn supports(n: usize) -> bool {
+    n >= 1
+}
+
+/// The sign-folded butterfly constants of one stage's radix kernel.
+#[derive(Clone, Copy)]
+enum Kernel {
+    R2,
+    /// `s3 = sign * sqrt(3)/2` — the imaginary part of the radix-3 root.
+    R3 { s3: f64 },
+    /// `c1/c2 = cos(2pi/5), cos(4pi/5)`; `s1/s2` sign-folded sines.
+    R5 { c1: f64, c2: f64, s1: f64, s2: f64 },
+}
+
+/// One Stockham stage: `m` butterfly groups of `radix` inputs at `stride`
+/// columns each, with the `(radix-1)` twiddles per group precomputed as
+/// `tw[p*(radix-1) + (j-1)] = expi(theta0 * p * j)`. The radix itself is
+/// carried by the `kernel` variant.
+struct Stage {
+    m: usize,
+    stride: usize,
+    kernel: Kernel,
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
 }
 
 /// A reusable execution plan for one transform length: per-stage twiddle
-/// tables for both directions. Immutable after construction; share it
-/// freely across threads (the cache hands out `Arc<FftPlan>`).
+/// tables for both directions (mixed radix), or the precomputed chirp /
+/// kernel-spectrum pair (Bluestein). Immutable after construction; share
+/// it freely across threads (the cache hands out `Arc<FftPlan>`).
 pub struct FftPlan {
     n: usize,
-    fwd: Vec<StageTwiddles>,
-    inv: Vec<StageTwiddles>,
+    fwd: Vec<Stage>,
+    inv: Vec<Stage>,
+    bluestein: Option<Bluestein>,
 }
 
 impl FftPlan {
-    /// Build the plan for length `n` (power of two). Prefer [`plan_for`],
+    /// Build the plan for length `n` (any `n >= 1`). Prefer [`plan_for`],
     /// which caches plans process-wide.
     pub fn new(n: usize) -> Self {
-        assert!(
-            n.is_power_of_two() && n >= 1,
-            "length must be a power of two"
-        );
-        Self {
-            n,
-            fwd: Self::stages(n, -1.0),
-            inv: Self::stages(n, 1.0),
+        assert!(n >= 1, "FFT length must be >= 1");
+        let mut rem = n;
+        for r in [2usize, 3, 5] {
+            while rem % r == 0 {
+                rem /= r;
+            }
+        }
+        if rem == 1 {
+            Self {
+                n,
+                fwd: Self::stages(n, -1.0),
+                inv: Self::stages(n, 1.0),
+                bluestein: None,
+            }
+        } else {
+            Self {
+                n,
+                fwd: Vec::new(),
+                inv: Vec::new(),
+                bluestein: Some(Bluestein::new(n)),
+            }
         }
     }
 
-    fn stages(n: usize, sign: f64) -> Vec<StageTwiddles> {
+    fn stages(n: usize, sign: f64) -> Vec<Stage> {
         let mut out = Vec::new();
         let mut n_cur = n;
+        let mut stride = 1usize;
         while n_cur > 1 {
-            let m = n_cur / 2;
-            // Same expression as fft_stockham so twiddles are bit-identical.
+            // Radix 2 first keeps the power-of-two schedule identical to
+            // `fft_stockham`; remaining 3s and 5s follow.
+            let radix = if n_cur % 2 == 0 {
+                2
+            } else if n_cur % 3 == 0 {
+                3
+            } else {
+                5
+            };
+            debug_assert_eq!(n_cur % radix, 0, "stage radix must divide n_cur");
+            let m = n_cur / radix;
+            // Same expression as fft_stockham so radix-2 twiddles are
+            // bit-identical ((p * 1) as f64 == p as f64).
             let theta0 = sign * 2.0 * std::f64::consts::PI / n_cur as f64;
-            let mut re = Vec::with_capacity(m);
-            let mut im = Vec::with_capacity(m);
+            let mut tw_re = Vec::with_capacity(m * (radix - 1));
+            let mut tw_im = Vec::with_capacity(m * (radix - 1));
             for p in 0..m {
-                let theta = theta0 * p as f64;
-                re.push(theta.cos());
-                im.push(theta.sin());
+                for j in 1..radix {
+                    let theta = theta0 * (p * j) as f64;
+                    tw_re.push(theta.cos());
+                    tw_im.push(theta.sin());
+                }
             }
-            out.push(StageTwiddles { re, im });
+            let kernel = match radix {
+                2 => Kernel::R2,
+                3 => Kernel::R3 {
+                    s3: sign * (3.0f64.sqrt() / 2.0),
+                },
+                _ => {
+                    let fifth = 2.0 * std::f64::consts::PI / 5.0;
+                    Kernel::R5 {
+                        c1: fifth.cos(),
+                        c2: (2.0 * fifth).cos(),
+                        s1: sign * fifth.sin(),
+                        s2: sign * (2.0 * fifth).sin(),
+                    }
+                }
+            };
+            out.push(Stage {
+                m,
+                stride,
+                kernel,
+                tw_re,
+                tw_im,
+            });
             n_cur = m;
+            stride *= radix;
         }
         out
     }
@@ -116,44 +211,18 @@ impl FftPlan {
         self.n
     }
 
-    /// One Stockham pass (stage `k`): reads `cur`, writes `nxt`. The inner
-    /// loop is pure loads, multiplies and adds — no trig, no allocation.
-    #[inline]
-    fn stage_pass(
-        &self,
-        k: usize,
-        tw: &StageTwiddles,
-        cur_re: &[f64],
-        cur_im: &[f64],
-        nxt_re: &mut [f64],
-        nxt_im: &mut [f64],
-    ) {
-        let stride = 1usize << k;
-        let m = self.n >> (k + 1);
-        for p in 0..m {
-            let wr = tw.re[p];
-            let wi = tw.im[p];
-            let ia = p * stride;
-            let ib = (p + m) * stride;
-            let io0 = 2 * p * stride;
-            let io1 = io0 + stride;
-            for q in 0..stride {
-                let ar = cur_re[ia + q];
-                let ai = cur_im[ia + q];
-                let br = cur_re[ib + q];
-                let bi = cur_im[ib + q];
-                nxt_re[io0 + q] = ar + br;
-                nxt_im[io0 + q] = ai + bi;
-                let dr = ar - br;
-                let di = ai - bi;
-                nxt_re[io1 + q] = dr * wr - di * wi;
-                nxt_im[io1 + q] = dr * wi + di * wr;
-            }
+    /// Which decomposition this plan compiled to.
+    pub fn algorithm(&self) -> PlanAlgorithm {
+        if self.bluestein.is_some() {
+            PlanAlgorithm::Bluestein
+        } else {
+            PlanAlgorithm::MixedRadix
         }
     }
 
     /// Transform one row already loaded into `scratch`'s A planes; returns
     /// `true` when the result ended in the A planes (even stage count).
+    /// Mixed-radix plans only (Bluestein routes through `run_row`).
     fn run_loaded(&self, dir: Direction, s: &mut FftScratch) -> bool {
         let stages = match dir {
             Direction::Forward => &self.fwd,
@@ -162,11 +231,11 @@ impl FftPlan {
         let n = self.n;
         let (a_re, a_im, b_re, b_im) = s.planes(n);
         let mut in_a = true;
-        for (k, tw) in stages.iter().enumerate() {
+        for st in stages {
             if in_a {
-                self.stage_pass(k, tw, a_re, a_im, b_re, b_im);
+                st.pass(a_re, a_im, b_re, b_im);
             } else {
-                self.stage_pass(k, tw, b_re, b_im, a_re, a_im);
+                st.pass(b_re, b_im, a_re, a_im);
             }
             in_a = !in_a;
         }
@@ -191,6 +260,10 @@ impl FftPlan {
         assert_eq!(im_in.len(), n, "im input length");
         assert_eq!(out_re.len(), n, "re output length");
         assert_eq!(out_im.len(), n, "im output length");
+        if let Some(bl) = &self.bluestein {
+            bl.run_row(dir, re_in, im_in, out_re, out_im, scratch);
+            return;
+        }
         scratch.ensure(n);
         {
             let (a_re, a_im, _, _) = scratch.planes(n);
@@ -242,16 +315,353 @@ impl FftPlan {
     }
 }
 
+impl Stage {
+    /// One Stockham pass: reads `cur`, writes `nxt`. The inner loops are
+    /// pure loads, multiplies and adds — no trig, no allocation.
+    #[inline]
+    fn pass(&self, cur_re: &[f64], cur_im: &[f64], nxt_re: &mut [f64], nxt_im: &mut [f64]) {
+        match self.kernel {
+            Kernel::R2 => self.pass_r2(cur_re, cur_im, nxt_re, nxt_im),
+            Kernel::R3 { s3 } => self.pass_r3(s3, cur_re, cur_im, nxt_re, nxt_im),
+            Kernel::R5 { c1, c2, s1, s2 } => {
+                self.pass_r5(c1, c2, s1, s2, cur_re, cur_im, nxt_re, nxt_im)
+            }
+        }
+    }
+
+    /// Radix-2 butterfly — operation order identical to `fft_stockham`, so
+    /// power-of-two plans stay bit-identical to the oracle.
+    #[inline]
+    fn pass_r2(&self, cur_re: &[f64], cur_im: &[f64], nxt_re: &mut [f64], nxt_im: &mut [f64]) {
+        let stride = self.stride;
+        let m = self.m;
+        for p in 0..m {
+            let wr = self.tw_re[p];
+            let wi = self.tw_im[p];
+            let ia = p * stride;
+            let ib = (p + m) * stride;
+            let io0 = 2 * p * stride;
+            let io1 = io0 + stride;
+            for q in 0..stride {
+                let ar = cur_re[ia + q];
+                let ai = cur_im[ia + q];
+                let br = cur_re[ib + q];
+                let bi = cur_im[ib + q];
+                nxt_re[io0 + q] = ar + br;
+                nxt_im[io0 + q] = ai + bi;
+                let dr = ar - br;
+                let di = ai - bi;
+                nxt_re[io1 + q] = dr * wr - di * wi;
+                nxt_im[io1 + q] = dr * wi + di * wr;
+            }
+        }
+    }
+
+    /// Radix-3 butterfly: y0 = a+s, y1/y2 = a - s/2 ± i·s3·d with
+    /// s = b+c, d = b−c and s3 the sign-folded sqrt(3)/2.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn pass_r3(
+        &self,
+        s3: f64,
+        cur_re: &[f64],
+        cur_im: &[f64],
+        nxt_re: &mut [f64],
+        nxt_im: &mut [f64],
+    ) {
+        let stride = self.stride;
+        let m = self.m;
+        for p in 0..m {
+            let w1r = self.tw_re[2 * p];
+            let w1i = self.tw_im[2 * p];
+            let w2r = self.tw_re[2 * p + 1];
+            let w2i = self.tw_im[2 * p + 1];
+            let i0 = p * stride;
+            let i1 = (p + m) * stride;
+            let i2 = (p + 2 * m) * stride;
+            let o0 = 3 * p * stride;
+            let o1 = o0 + stride;
+            let o2 = o1 + stride;
+            for q in 0..stride {
+                let ar = cur_re[i0 + q];
+                let ai = cur_im[i0 + q];
+                let br = cur_re[i1 + q];
+                let bi = cur_im[i1 + q];
+                let cr = cur_re[i2 + q];
+                let ci = cur_im[i2 + q];
+                let sr = br + cr;
+                let si = bi + ci;
+                let dr = br - cr;
+                let di = bi - ci;
+                nxt_re[o0 + q] = ar + sr;
+                nxt_im[o0 + q] = ai + si;
+                let er = ar - 0.5 * sr;
+                let ei = ai - 0.5 * si;
+                let fr = s3 * di;
+                let fi = s3 * dr;
+                let y1r = er - fr;
+                let y1i = ei + fi;
+                let y2r = er + fr;
+                let y2i = ei - fi;
+                nxt_re[o1 + q] = y1r * w1r - y1i * w1i;
+                nxt_im[o1 + q] = y1r * w1i + y1i * w1r;
+                nxt_re[o2 + q] = y2r * w2r - y2i * w2i;
+                nxt_im[o2 + q] = y2r * w2i + y2i * w2r;
+            }
+        }
+    }
+
+    /// Radix-5 butterfly (standard 5-point DFT factorization with
+    /// t1/t2 = a1±a4-style sums and the sign folded into s1/s2).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn pass_r5(
+        &self,
+        c1: f64,
+        c2: f64,
+        s1: f64,
+        s2: f64,
+        cur_re: &[f64],
+        cur_im: &[f64],
+        nxt_re: &mut [f64],
+        nxt_im: &mut [f64],
+    ) {
+        let stride = self.stride;
+        let m = self.m;
+        for p in 0..m {
+            let tw = 4 * p;
+            let i0 = p * stride;
+            let i1 = (p + m) * stride;
+            let i2 = (p + 2 * m) * stride;
+            let i3 = (p + 3 * m) * stride;
+            let i4 = (p + 4 * m) * stride;
+            let o0 = 5 * p * stride;
+            for q in 0..stride {
+                let a0r = cur_re[i0 + q];
+                let a0i = cur_im[i0 + q];
+                let a1r = cur_re[i1 + q];
+                let a1i = cur_im[i1 + q];
+                let a2r = cur_re[i2 + q];
+                let a2i = cur_im[i2 + q];
+                let a3r = cur_re[i3 + q];
+                let a3i = cur_im[i3 + q];
+                let a4r = cur_re[i4 + q];
+                let a4i = cur_im[i4 + q];
+                let t1r = a1r + a4r;
+                let t1i = a1i + a4i;
+                let t2r = a2r + a3r;
+                let t2i = a2i + a3i;
+                let t3r = a1r - a4r;
+                let t3i = a1i - a4i;
+                let t4r = a2r - a3r;
+                let t4i = a2i - a3i;
+                nxt_re[o0 + q] = a0r + t1r + t2r;
+                nxt_im[o0 + q] = a0i + t1i + t2i;
+                let m1r = a0r + c1 * t1r + c2 * t2r;
+                let m1i = a0i + c1 * t1i + c2 * t2i;
+                let m2r = a0r + c2 * t1r + c1 * t2r;
+                let m2i = a0i + c2 * t1i + c1 * t2i;
+                let u1r = s1 * t3r + s2 * t4r;
+                let u1i = s1 * t3i + s2 * t4i;
+                let u2r = s2 * t3r - s1 * t4r;
+                let u2i = s2 * t3i - s1 * t4i;
+                // y_j = m ± i·u, then the group twiddle w_j.
+                let ys = [
+                    (m1r - u1i, m1i + u1r),
+                    (m2r - u2i, m2i + u2r),
+                    (m2r + u2i, m2i - u2r),
+                    (m1r + u1i, m1i - u1r),
+                ];
+                for (j, (yr, yi)) in ys.into_iter().enumerate() {
+                    let wr = self.tw_re[tw + j];
+                    let wi = self.tw_im[tw + j];
+                    let o = o0 + (j + 1) * stride;
+                    nxt_re[o + q] = yr * wr - yi * wi;
+                    nxt_im[o + q] = yr * wi + yi * wr;
+                }
+            }
+        }
+    }
+}
+
+/// Bluestein chirp-z state: the length-N DFT expressed as a circular
+/// convolution of padded power-of-two length `m >= 2N-1`, using the
+/// identity `kt = (k² + t² − (k−t)²) / 2`:
+///
+///   `X[k] = chirp[k] · Σ_t (x[t]·chirp[t]) · c[k−t]`,
+///   `chirp[k] = expi(sign·π·k²/N)`, `c[j] = conj(chirp)[j]`.
+///
+/// The chirp tables and the kernel spectrum `F_m(c)` are precomputed per
+/// direction at plan-build time; execution is two inner power-of-two
+/// transforms plus O(m) pointwise work, all in reused scratch planes.
+struct Bluestein {
+    m: usize,
+    inner: Arc<FftPlan>,
+    fwd: BluesteinDir,
+    inv: BluesteinDir,
+}
+
+struct BluesteinDir {
+    chirp_re: Vec<f64>,
+    chirp_im: Vec<f64>,
+    kspec_re: Vec<f64>,
+    kspec_im: Vec<f64>,
+}
+
+impl BluesteinDir {
+    fn new(n: usize, m: usize, sign: f64, inner: &FftPlan) -> Self {
+        let mut chirp_re = Vec::with_capacity(n);
+        let mut chirp_im = Vec::with_capacity(n);
+        for k in 0..n {
+            // k² mod 2N keeps the trig argument small (expi has period 2π,
+            // π·k²/N has period 2N in k²) — better accuracy for large k.
+            let theta = sign * std::f64::consts::PI * ((k * k) % (2 * n)) as f64 / n as f64;
+            chirp_re.push(theta.cos());
+            chirp_im.push(theta.sin());
+        }
+        // Kernel c[j] = conj(chirp[j]) placed at lags 0, +j and −j (index
+        // m−j). m >= 2N−1 keeps the two ranges disjoint.
+        let mut c_re = vec![0.0f64; m];
+        let mut c_im = vec![0.0f64; m];
+        c_re[0] = chirp_re[0];
+        c_im[0] = -chirp_im[0];
+        for j in 1..n {
+            c_re[j] = chirp_re[j];
+            c_im[j] = -chirp_im[j];
+            c_re[m - j] = chirp_re[j];
+            c_im[m - j] = -chirp_im[j];
+        }
+        let mut kspec_re = vec![0.0f64; m];
+        let mut kspec_im = vec![0.0f64; m];
+        let mut s = FftScratch::new();
+        inner.run_row::<f64>(
+            Direction::Forward,
+            &c_re,
+            &c_im,
+            &mut kspec_re,
+            &mut kspec_im,
+            &mut s,
+        );
+        Self {
+            chirp_re,
+            chirp_im,
+            kspec_re,
+            kspec_im,
+        }
+    }
+}
+
+impl Bluestein {
+    fn new(n: usize) -> Self {
+        let m = (2 * n - 1).next_power_of_two();
+        // The inner plan is a power of two, so this never recurses deeper
+        // (and plan_for is not holding its cache lock while we build).
+        let inner = plan_for(m);
+        let fwd = BluesteinDir::new(n, m, -1.0, &inner);
+        let inv = BluesteinDir::new(n, m, 1.0, &inner);
+        Self { m, inner, fwd, inv }
+    }
+
+    fn run_row<T: PlanScalar>(
+        &self,
+        dir: Direction,
+        re_in: &[T],
+        im_in: &[T],
+        out_re: &mut [T],
+        out_im: &mut [T],
+        scratch: &mut FftScratch,
+    ) {
+        let n = re_in.len();
+        let m = self.m;
+        let d = match dir {
+            Direction::Forward => &self.fwd,
+            Direction::Inverse => &self.inv,
+        };
+        // Take the convolution bank by value so the inner run_row can
+        // borrow the scratch again (a Vec move, no copy; put back below).
+        let mut bank = std::mem::take(&mut scratch.conv);
+        bank.ensure(m);
+        for k in 0..n {
+            let re = re_in[k].to_f64();
+            let im = im_in[k].to_f64();
+            bank.xr[k] = re * d.chirp_re[k] - im * d.chirp_im[k];
+            bank.xi[k] = re * d.chirp_im[k] + im * d.chirp_re[k];
+        }
+        bank.xr[n..m].fill(0.0);
+        bank.xi[n..m].fill(0.0);
+        self.inner.run_row::<f64>(
+            Direction::Forward,
+            &bank.xr[..m],
+            &bank.xi[..m],
+            &mut bank.yr[..m],
+            &mut bank.yi[..m],
+            scratch,
+        );
+        for k in 0..m {
+            let ar = bank.yr[k];
+            let ai = bank.yi[k];
+            bank.yr[k] = ar * d.kspec_re[k] - ai * d.kspec_im[k];
+            bank.yi[k] = ar * d.kspec_im[k] + ai * d.kspec_re[k];
+        }
+        self.inner.run_row::<f64>(
+            Direction::Inverse,
+            &bank.yr[..m],
+            &bank.yi[..m],
+            &mut bank.xr[..m],
+            &mut bank.xi[..m],
+            scratch,
+        );
+        let inv_m = 1.0 / m as f64;
+        for k in 0..n {
+            let ar = bank.xr[k] * inv_m;
+            let ai = bank.xi[k] * inv_m;
+            out_re[k] = T::from_f64(ar * d.chirp_re[k] - ai * d.chirp_im[k]);
+            out_im[k] = T::from_f64(ar * d.chirp_im[k] + ai * d.chirp_re[k]);
+        }
+        scratch.conv = bank;
+    }
+}
+
 /// Reusable split re/im scratch planes (two ping-pong buffers). One per
 /// worker/thread; grows monotonically to the largest `n` it has served and
 /// never reallocates below that — callers can rely on pointer-stable
 /// planes across executions of the same length.
+///
+/// Beyond the ping-pong pair, two side banks stage data around an inner
+/// transform: `conv` for the Bluestein convolution, `pack` for the rFFT
+/// pack/unpack. They are separate so an rFFT whose half-length plan is
+/// itself Bluestein never aliases its own staging buffers; each bank is
+/// taken by value around the inner call (a `Vec` move, no copy) so the
+/// borrow checker allows re-entering the scratch.
 #[derive(Default)]
 pub struct FftScratch {
     a_re: Vec<f64>,
     a_im: Vec<f64>,
     b_re: Vec<f64>,
     b_im: Vec<f64>,
+    conv: AuxBank,
+    pack: AuxBank,
+}
+
+/// Four staging planes usable as an (x, y) complex pair.
+#[derive(Default)]
+struct AuxBank {
+    xr: Vec<f64>,
+    xi: Vec<f64>,
+    yr: Vec<f64>,
+    yi: Vec<f64>,
+}
+
+impl AuxBank {
+    /// Grow every plane to at least `len` elements (no-op once large
+    /// enough — same monotonic-growth contract as the main planes).
+    fn ensure(&mut self, len: usize) {
+        for v in [&mut self.xr, &mut self.xi, &mut self.yr, &mut self.yi] {
+            if v.len() < len {
+                v.resize(len, 0.0);
+            }
+        }
+    }
 }
 
 impl FftScratch {
@@ -294,7 +704,7 @@ impl FftScratch {
 /// on first use. The lock guards only the map — execution never holds it.
 static PLAN_CACHE: OnceLock<Mutex<HashMap<u64, Arc<FftPlan>>>> = OnceLock::new();
 
-/// The cached plan for length `n` (power of two), building it on first use.
+/// The cached plan for length `n` (any `n >= 1`), building it on first use.
 /// A miss builds outside the lock (twiddle construction is O(n) trig) and
 /// the entry API keeps whichever plan landed first, so concurrent
 /// first-touch builds neither serialize other lengths nor diverge.
@@ -421,7 +831,8 @@ fn run_rows_impl<T: PlanScalar>(
 }
 
 /// Planned forward FFT of one `C64` row — drop-in for `dsp::fft` where the
-/// caller wants plan-cache speed with the oracle's interface.
+/// caller wants plan-cache speed with the oracle's interface (and, unlike
+/// the oracle, any transform length).
 pub fn fft_planned(x: &[C64]) -> Vec<C64> {
     let n = x.len();
     let plan = plan_for(n);
@@ -435,6 +846,260 @@ pub fn fft_planned(x: &[C64]) -> Vec<C64> {
         .zip(out_im)
         .map(|(r, i)| C64::new(r, i))
         .collect()
+}
+
+/// Number of non-redundant output bins of an N-point real transform.
+pub fn rfft_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// A real-input FFT plan: X = rfft(x) for real x, producing the
+/// `n/2 + 1` non-redundant bins (the rest are the conjugate mirror).
+///
+/// Even `n` packs the input into an `n/2`-point complex transform
+/// (`z[k] = x[2k] + i·x[2k+1]`) and unpacks with `n/2` precomputed
+/// twiddles — half the butterfly work of the complex transform. Odd `n`
+/// falls back to the full complex plan with a zero imaginary plane, so
+/// every length stays supported.
+pub struct RfftPlan {
+    n: usize,
+    kind: RfftKind,
+}
+
+enum RfftKind {
+    Half {
+        plan: Arc<FftPlan>,
+        /// Unpack twiddles: `tw[q] = expi(-π·q / (n/2))` for q in 1..n/2
+        /// (slot 0 unused).
+        tw_re: Vec<f64>,
+        tw_im: Vec<f64>,
+    },
+    Full {
+        plan: Arc<FftPlan>,
+    },
+}
+
+impl RfftPlan {
+    /// Build the plan for real-input length `n` (any `n >= 1`). Prefer
+    /// [`rfft_plan_for`], which caches plans process-wide.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "rFFT length must be >= 1");
+        if n % 2 == 0 {
+            let m = n / 2;
+            let mut tw_re = Vec::with_capacity(m);
+            let mut tw_im = Vec::with_capacity(m);
+            for q in 0..m {
+                let theta = -std::f64::consts::PI * q as f64 / m as f64;
+                tw_re.push(theta.cos());
+                tw_im.push(theta.sin());
+            }
+            Self {
+                n,
+                kind: RfftKind::Half {
+                    plan: plan_for(m),
+                    tw_re,
+                    tw_im,
+                },
+            }
+        } else {
+            Self {
+                n,
+                kind: RfftKind::Full { plan: plan_for(n) },
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Output bins per row (`n/2 + 1`).
+    pub fn out_len(&self) -> usize {
+        rfft_len(self.n)
+    }
+
+    /// Whether this plan runs through the packed half-length path.
+    pub fn half_complex(&self) -> bool {
+        matches!(self.kind, RfftKind::Half { .. })
+    }
+
+    /// Transform one real row into its `n/2 + 1` spectrum bins. `x` must
+    /// have length `n`, the outputs length `out_len()`. Steady-state this
+    /// performs zero heap allocation (scratch banks are reused).
+    pub fn run_row<T: PlanScalar>(
+        &self,
+        x: &[T],
+        out_re: &mut [T],
+        out_im: &mut [T],
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        let o = self.out_len();
+        assert_eq!(x.len(), n, "rfft input length");
+        assert_eq!(out_re.len(), o, "rfft re output length");
+        assert_eq!(out_im.len(), o, "rfft im output length");
+        match &self.kind {
+            RfftKind::Half { plan, tw_re, tw_im } => {
+                let m = n / 2;
+                let mut bank = std::mem::take(&mut scratch.pack);
+                bank.ensure(m);
+                for k in 0..m {
+                    bank.xr[k] = x[2 * k].to_f64();
+                    bank.xi[k] = x[2 * k + 1].to_f64();
+                }
+                plan.run_row::<f64>(
+                    Direction::Forward,
+                    &bank.xr[..m],
+                    &bank.xi[..m],
+                    &mut bank.yr[..m],
+                    &mut bank.yi[..m],
+                    scratch,
+                );
+                // Unpack: E[q] = (Z[q] + conj(Z[m−q]))/2 is the even-sample
+                // spectrum, O[q] = (Z[q] − conj(Z[m−q]))/(2i) the odd one;
+                // X[q] = E[q] + w_q·O[q], X[m] = E[0] − O[0]. DC and Nyquist
+                // bins are exactly real for real input.
+                let zr0 = bank.yr[0];
+                let zi0 = bank.yi[0];
+                out_re[0] = T::from_f64(zr0 + zi0);
+                out_im[0] = T::from_f64(0.0);
+                for q in 1..m {
+                    let zr = bank.yr[q];
+                    let zi = bank.yi[q];
+                    let vr = bank.yr[m - q];
+                    let vi = -bank.yi[m - q];
+                    let er = 0.5 * (zr + vr);
+                    let ei = 0.5 * (zi + vi);
+                    let dr = 0.5 * (zr - vr);
+                    let di = 0.5 * (zi - vi);
+                    let or_ = di;
+                    let oi = -dr;
+                    let wr = tw_re[q];
+                    let wi = tw_im[q];
+                    out_re[q] = T::from_f64(er + or_ * wr - oi * wi);
+                    out_im[q] = T::from_f64(ei + or_ * wi + oi * wr);
+                }
+                out_re[m] = T::from_f64(zr0 - zi0);
+                out_im[m] = T::from_f64(0.0);
+                scratch.pack = bank;
+            }
+            RfftKind::Full { plan } => {
+                let mut bank = std::mem::take(&mut scratch.pack);
+                bank.ensure(n);
+                for k in 0..n {
+                    bank.xr[k] = x[k].to_f64();
+                    bank.xi[k] = 0.0;
+                }
+                plan.run_row::<f64>(
+                    Direction::Forward,
+                    &bank.xr[..n],
+                    &bank.xi[..n],
+                    &mut bank.yr[..n],
+                    &mut bank.yi[..n],
+                    scratch,
+                );
+                for k in 0..o {
+                    out_re[k] = T::from_f64(bank.yr[k]);
+                    out_im[k] = T::from_f64(bank.yi[k]);
+                }
+                scratch.pack = bank;
+            }
+        }
+    }
+
+    /// Transform `rows` consecutive real rows serially with one scratch.
+    /// `x` is row-major `rows × n`; the outputs `rows × (n/2 + 1)`.
+    pub fn run_rows_serial<T: PlanScalar>(
+        &self,
+        x: &[T],
+        rows: usize,
+        out_re: &mut [T],
+        out_im: &mut [T],
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        let o = self.out_len();
+        assert!(x.len() >= rows * n, "rfft input plane too short");
+        assert!(
+            out_re.len() >= rows * o && out_im.len() >= rows * o,
+            "rfft output planes too short"
+        );
+        for r in 0..rows {
+            self.run_row(
+                &x[r * n..(r + 1) * n],
+                &mut out_re[r * o..(r + 1) * o],
+                &mut out_im[r * o..(r + 1) * o],
+                scratch,
+            );
+        }
+    }
+}
+
+/// Process-wide rFFT plan cache, mirroring [`plan_for`].
+static RFFT_PLAN_CACHE: OnceLock<Mutex<HashMap<u64, Arc<RfftPlan>>>> = OnceLock::new();
+
+/// The cached rFFT plan for real-input length `n`, building it on first
+/// use (same first-build-wins discipline as [`plan_for`]).
+pub fn rfft_plan_for(n: usize) -> Arc<RfftPlan> {
+    let cache = RFFT_PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(plan) = cache.lock().unwrap().get(&(n as u64)) {
+        return plan.clone();
+    }
+    let built = Arc::new(RfftPlan::new(n));
+    cache
+        .lock()
+        .unwrap()
+        .entry(n as u64)
+        .or_insert(built)
+        .clone()
+}
+
+/// Execute `rows` independent real transforms, row-parallel when the batch
+/// is large enough (same policy and bit-identity guarantee as [`run_rows`]).
+pub fn run_rfft_rows<T: PlanScalar>(
+    plan: &RfftPlan,
+    x: &[T],
+    rows: usize,
+    out_re: &mut [T],
+    out_im: &mut [T],
+) {
+    run_rfft_rows_impl(plan, x, rows, out_re, out_im, pool_threads(), PAR_MIN_ELEMS);
+}
+
+fn run_rfft_rows_impl<T: PlanScalar>(
+    plan: &RfftPlan,
+    x: &[T],
+    rows: usize,
+    out_re: &mut [T],
+    out_im: &mut [T],
+    threads: usize,
+    min_elems: usize,
+) {
+    if rows == 0 {
+        return;
+    }
+    let n = plan.n();
+    let o = plan.out_len();
+    let threads = threads.min(rows);
+    if threads <= 1 || rows < PAR_MIN_ROWS || rows * n < min_elems {
+        with_scratch(|s| plan.run_rows_serial(x, rows, out_re, out_im, s));
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let chunks = out_re[..rows * o]
+            .chunks_mut(chunk_rows * o)
+            .zip(out_im[..rows * o].chunks_mut(chunk_rows * o))
+            .enumerate();
+        for (ci, (o_re, o_im)) in chunks {
+            let start = ci * chunk_rows;
+            let rows_here = o_re.len() / o;
+            let x_chunk = &x[start * n..(start + rows_here) * n];
+            scope.spawn(move || {
+                with_scratch(|s| plan.run_rows_serial(x_chunk, rows_here, o_re, o_im, s));
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -661,9 +1326,258 @@ mod tests {
         assert_eq!(oi[0], -1.5);
     }
 
+    /// Tolerance-check one planned forward transform against the naive DFT.
+    fn check_against_naive(n: usize) {
+        let (re, im) = rand_row(n, 0xC0FFEE ^ n as u64);
+        let x: Vec<C64> = re.iter().zip(&im).map(|(&r, &i)| C64::new(r, i)).collect();
+        let want = dft_naive(&x);
+        let got = fft_planned(&x);
+        let tol = 1e-8 * n as f64;
+        for i in 0..n {
+            assert!(
+                (got[i].re - want[i].re).abs() < tol && (got[i].im - want[i].im).abs() < tol,
+                "n={n} bin {i}: ({}, {}) vs {:?}",
+                got[i].re,
+                got[i].im,
+                want[i]
+            );
+        }
+    }
+
     #[test]
-    #[should_panic(expected = "power of two")]
-    fn rejects_non_pow2() {
-        FftPlan::new(12);
+    fn every_length_2_to_128_matches_naive_dft() {
+        // Exhaustive bottom of the acceptance grid: all small lengths,
+        // covering every factor-class transition (pow2, 2^a·3^b·5^c, primes,
+        // prime squares, odd composites).
+        for n in 2..=128usize {
+            check_against_naive(n);
+        }
+    }
+
+    #[test]
+    fn every_length_129_to_320_matches_naive_dft() {
+        for n in 129..=320usize {
+            check_against_naive(n);
+        }
+    }
+
+    #[test]
+    fn targeted_large_lengths_match_naive_dft() {
+        // The acceptance grid's upper reach, one representative per factor
+        // class: primes (331, 2017, 4093), prime-square-adjacent odd smooth
+        // (729, 2187, 3125), the issue's serving lengths (1000, 1536), a
+        // 7-smooth Bluestein composite (4095 = 3²·5·7·13) and pow2 4096.
+        let lengths = [
+            331usize, 500, 625, 729, 1000, 1009, 1536, 2017, 2187, 3125, 4093, 4095, 4096,
+        ];
+        for n in lengths {
+            check_against_naive(n);
+        }
+    }
+
+    #[test]
+    fn sampled_grid_2_to_4096_roundtrips_and_spot_checks() {
+        // The rest of the 2..=4096 grid, sampled with a prime stride so no
+        // factor class is systematically skipped. Two cheap checks per
+        // length: forward→inverse/N roundtrip (O(n log n)) and the DC bin
+        // against the direct sum (catches permutation/twiddle errors the
+        // roundtrip alone could mask).
+        let mut n = 321usize;
+        while n <= 4096 {
+            let (re, im) = rand_row(n, n as u64);
+            let plan = plan_for(n);
+            let mut s = FftScratch::new();
+            let (mut fr, mut fi) = (vec![0.0f64; n], vec![0.0f64; n]);
+            plan.run_row(Direction::Forward, &re, &im, &mut fr, &mut fi, &mut s);
+            let dc_re: f64 = re.iter().sum();
+            let dc_im: f64 = im.iter().sum();
+            let tol = 1e-8 * n as f64;
+            assert!(
+                (fr[0] - dc_re).abs() < tol && (fi[0] - dc_im).abs() < tol,
+                "n={n}: DC bin ({}, {}) vs ({dc_re}, {dc_im})",
+                fr[0],
+                fi[0]
+            );
+            let (mut br, mut bi) = (vec![0.0f64; n], vec![0.0f64; n]);
+            plan.run_row(Direction::Inverse, &fr, &fi, &mut br, &mut bi, &mut s);
+            for i in 0..n {
+                assert!(
+                    (br[i] / n as f64 - re[i]).abs() < 1e-7
+                        && (bi[i] / n as f64 - im[i]).abs() < 1e-7,
+                    "n={n} roundtrip bin {i}"
+                );
+            }
+            n += 29;
+        }
+    }
+
+    #[test]
+    fn algorithm_classification() {
+        assert_eq!(plan_for(4096).algorithm(), PlanAlgorithm::MixedRadix);
+        assert_eq!(plan_for(1000).algorithm(), PlanAlgorithm::MixedRadix); // 2³·5³
+        assert_eq!(plan_for(1536).algorithm(), PlanAlgorithm::MixedRadix); // 2⁹·3
+        assert_eq!(plan_for(1009).algorithm(), PlanAlgorithm::Bluestein); // prime
+        assert_eq!(plan_for(19321).algorithm(), PlanAlgorithm::Bluestein); // 139²
+        assert_eq!(plan_for(4095).algorithm(), PlanAlgorithm::Bluestein); // 7·13 factors
+        assert!(supports(1) && supports(1009));
+        assert!(!supports(0));
+    }
+
+    #[test]
+    fn prop_mixed_radix_row_parallel_is_bit_identical_to_serial() {
+        // The non-pow2 sibling of the pow2 property test: lengths drawn
+        // from every plan class (mixed radix and Bluestein).
+        let menu = [12usize, 60, 100, 144, 243, 251, 360, 625, 1000, 1536];
+        crate::util::prop::for_all(
+            crate::util::prop::PropConfig { cases: 48, seed: 0x0FF6 },
+            "planner mixed-radix row-parallel == serial",
+            |rng| {
+                let n = menu[rng.below(menu.len() as u64) as usize];
+                let rows = rng.range_u64(1, 12) as usize;
+                let seed = rng.range_u64(0, 1 << 32);
+                (n, rows, seed)
+            },
+            |&(n, rows, seed)| {
+                let plan = plan_for(n);
+                let mut r = Rng::new(seed);
+                let re: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+                let im: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+                let mut ser_re = vec![0.0f32; rows * n];
+                let mut ser_im = vec![0.0f32; rows * n];
+                let mut s = FftScratch::new();
+                plan.run_rows_serial(
+                    Direction::Forward,
+                    &re,
+                    &im,
+                    rows,
+                    &mut ser_re,
+                    &mut ser_im,
+                    &mut s,
+                );
+                let mut par_re = vec![0.0f32; rows * n];
+                let mut par_im = vec![0.0f32; rows * n];
+                run_rows_impl(
+                    &plan,
+                    Direction::Forward,
+                    &re,
+                    &im,
+                    rows,
+                    &mut par_re,
+                    &mut par_im,
+                    4,
+                    0,
+                );
+                for i in 0..rows * n {
+                    if ser_re[i].to_bits() != par_re[i].to_bits()
+                        || ser_im[i].to_bits() != par_im[i].to_bits()
+                    {
+                        return Err(format!("n={n} rows={rows} elem {i} diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// rFFT vs the complex plan on the same real signal.
+    fn check_rfft(n: usize) {
+        let (xs, _) = rand_row(n, 0x5EED ^ n as u64);
+        let x: Vec<C64> = xs.iter().map(|&r| C64::new(r, 0.0)).collect();
+        let want = fft_planned(&x);
+        let rplan = rfft_plan_for(n);
+        let o = rplan.out_len();
+        let mut out_re = vec![0.0f64; o];
+        let mut out_im = vec![0.0f64; o];
+        let mut s = FftScratch::new();
+        rplan.run_row(&xs, &mut out_re, &mut out_im, &mut s);
+        let tol = 1e-8 * n as f64;
+        for k in 0..o {
+            assert!(
+                (out_re[k] - want[k].re).abs() < tol && (out_im[k] - want[k].im).abs() < tol,
+                "n={n} bin {k}: ({}, {}) vs {:?}",
+                out_re[k],
+                out_im[k],
+                want[k]
+            );
+        }
+    }
+
+    #[test]
+    fn rfft_matches_complex_reference() {
+        // Even lengths run the packed half-complex path (2018 = 2·1009
+        // exercises a Bluestein half-plan); odd lengths the full fallback.
+        for n in [2usize, 4, 16, 100, 256, 1000, 1536, 2018, 4096] {
+            assert!(rfft_plan_for(n).half_complex(), "n={n} should pack");
+            check_rfft(n);
+        }
+        for n in [1usize, 3, 15, 81, 1009] {
+            assert!(!rfft_plan_for(n).half_complex(), "n={n} is odd");
+            check_rfft(n);
+        }
+    }
+
+    #[test]
+    fn rfft_dc_and_nyquist_bins_are_exactly_real() {
+        let n = 1024usize;
+        let (xs, _) = rand_row(n, 77);
+        let rplan = rfft_plan_for(n);
+        let o = rplan.out_len();
+        let (mut or_, mut oi) = (vec![0.0f64; o], vec![0.0f64; o]);
+        let mut s = FftScratch::new();
+        rplan.run_row(&xs, &mut or_, &mut oi, &mut s);
+        assert_eq!(oi[0], 0.0, "DC bin must be exactly real");
+        assert_eq!(oi[n / 2], 0.0, "Nyquist bin must be exactly real");
+        let dc: f64 = xs.iter().sum();
+        assert!((or_[0] - dc).abs() < 1e-9 * n as f64);
+    }
+
+    #[test]
+    fn rfft_rows_parallel_matches_serial() {
+        let n = 1000usize;
+        let rows = 8usize;
+        let rplan = rfft_plan_for(n);
+        let o = rplan.out_len();
+        let mut r = Rng::new(31);
+        let x: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let mut ser_re = vec![0.0f32; rows * o];
+        let mut ser_im = vec![0.0f32; rows * o];
+        let mut s = FftScratch::new();
+        rplan.run_rows_serial(&x, rows, &mut ser_re, &mut ser_im, &mut s);
+        let mut par_re = vec![0.0f32; rows * o];
+        let mut par_im = vec![0.0f32; rows * o];
+        // min_elems = 0 forces the scoped-thread path.
+        run_rfft_rows_impl(&rplan, &x, rows, &mut par_re, &mut par_im, 4, 0);
+        assert_eq!(ser_re, par_re);
+        assert_eq!(ser_im, par_im);
+    }
+
+    #[test]
+    fn rfft_cache_returns_the_same_arc() {
+        let a = rfft_plan_for(640);
+        let b = rfft_plan_for(640);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn bluestein_reuses_scratch_without_reallocating() {
+        // The no-alloc contract extends to the Bluestein convolution bank:
+        // after the first run through one scratch, repeats are stable.
+        let n = 1009usize;
+        let plan = plan_for(n);
+        let (re, im) = rand_row(n, 4);
+        let (mut or_, mut oi) = (vec![0.0f64; n], vec![0.0f64; n]);
+        let mut s = FftScratch::new();
+        plan.run_row(Direction::Forward, &re, &im, &mut or_, &mut oi, &mut s);
+        let ptr = s.conv.xr.as_ptr();
+        let cap = s.conv.xr.len();
+        plan.run_row(Direction::Forward, &re, &im, &mut or_, &mut oi, &mut s);
+        assert_eq!(s.conv.xr.as_ptr(), ptr, "conv bank must be reused");
+        assert_eq!(s.conv.xr.len(), cap);
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1")]
+    fn rejects_zero_length() {
+        FftPlan::new(0);
     }
 }

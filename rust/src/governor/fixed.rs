@@ -85,7 +85,10 @@ impl CommonClock {
         let sweep = sweep_gpu(gpu, crate::types::Precision::Fp32, &cfg);
         let pts = optima(gpu, &sweep);
         let mean = mean_optimal_mhz(gpu, &pts);
-        freq_table(gpu).snap(mean)
+        // Capped snap: the mean can never legitimately exceed boost, and
+        // on cards whose boost sits between table entries a plain nearest
+        // snap could round it upward past the default envelope.
+        freq_table(gpu).snap_at_most(mean, gpu.boost_clock_mhz)
     }
 }
 
@@ -144,6 +147,26 @@ mod tests {
         // decision is length-independent and cached
         let f2 = gov.choose(&g, &wl(&g, 1024), &GovernorContext::default()).unwrap();
         assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn common_clock_sane_for_off_grid_lengths() {
+        // The common clock is length-independent, so asking at the
+        // off-grid serving lengths must neither panic nor produce a clock
+        // outside the table or above boost.
+        for g in [tesla_v100(), tesla_p4()] {
+            let mut gov = CommonClock::new();
+            for n in [1000u64, 1536] {
+                let f = gov.choose(&g, &wl(&g, n), &GovernorContext::default()).unwrap();
+                assert!(freq_table(&g).contains(f), "{} n={n}: {f} not in table", g.name);
+                assert!(
+                    f <= g.boost_clock_mhz + 1e-9,
+                    "{} n={n}: {f} above boost {}",
+                    g.name,
+                    g.boost_clock_mhz
+                );
+            }
+        }
     }
 
     #[test]

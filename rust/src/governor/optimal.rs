@@ -1,14 +1,27 @@
 //! Per-length optimal clock policy (paper §5.1, Fig 9): each FFT length
 //! runs at its own measured energy optimum, backed by `analysis::optimal`.
+//!
+//! Off-grid lengths (smooth non-powers-of-two like 1000 or 1536) derive
+//! their optimum from the interpolated time/power curves of
+//! `sim::exec_model` instead of a fresh per-length measurement sweep:
+//! two pow2-anchor model evaluations per candidate clock, snapped into
+//! the card's frequency table and capped at boost. Bluestein lengths
+//! (where interpolation between smooth anchors would be wrong — the
+//! chirp-z convolution is far more expensive than its neighbours) keep
+//! the exact sweep path.
 
 use std::collections::HashMap;
 
 use crate::analysis::optimal::optimal_for_length;
+use crate::cufft::plan::is_smooth_127;
 use crate::governor::{ClockGovernor, GovernorContext, GovernorError};
 use crate::harness::sweep::{sweep_gpu, SweepConfig};
 use crate::harness::Protocol;
+use crate::sim::exec_model::interp_time_power;
+use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::types::FftWorkload;
+use crate::util::stats::argmin;
 
 /// Per-(card, length) energy-optimal clocks, measured lazily and cached.
 pub struct PerLengthOptimal {
@@ -21,6 +34,10 @@ impl PerLengthOptimal {
     }
 
     fn derive(gpu: &GpuSpec, workload: &FftWorkload, ctx: &GovernorContext) -> f64 {
+        let n = workload.n;
+        if !n.is_power_of_two() && is_smooth_127(n) {
+            return Self::derive_interp(gpu, workload, ctx);
+        }
         let cfg = SweepConfig {
             lengths: vec![workload.n],
             freq_stride: ctx.freq_stride.max(4),
@@ -28,6 +45,26 @@ impl PerLengthOptimal {
         };
         let sweep = sweep_gpu(gpu, workload.precision, &cfg);
         optimal_for_length(gpu, &sweep.lengths[0]).f_opt_mhz
+    }
+
+    /// Off-grid optimum: argmin of the interpolated energy curve over the
+    /// table clocks at or below boost — always a supported clock, never an
+    /// above-boost snap.
+    fn derive_interp(gpu: &GpuSpec, workload: &FftWorkload, ctx: &GovernorContext) -> f64 {
+        let table = freq_table(gpu);
+        let candidates: Vec<f64> = table
+            .stride(ctx.freq_stride.max(4))
+            .into_iter()
+            .filter(|&f| f <= gpu.boost_clock_mhz + 1e-9)
+            .collect();
+        let energies: Vec<f64> = candidates
+            .iter()
+            .map(|&f| interp_time_power(gpu, workload, f).energy_j)
+            .collect();
+        match argmin(&energies) {
+            Some(i) => candidates[i],
+            None => table.snap_at_most(gpu.boost_clock_mhz, gpu.boost_clock_mhz),
+        }
     }
 }
 
@@ -94,5 +131,57 @@ mod tests {
         let f1 = gov.choose(&g, &w, &ctx).unwrap();
         let f2 = gov.choose(&g, &w, &ctx).unwrap();
         assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn off_grid_lengths_get_in_table_clocks_below_boost() {
+        // The issue's off-grid acceptance: n=1000 and n=1536 must yield a
+        // supported clock with no panic and no above-boost snap — on a card
+        // whose boost equals f_max (V100) and on one whose table extends
+        // past boost (Titan XP).
+        let ctx = GovernorContext::default();
+        for g in [tesla_v100(), crate::sim::gpu::titan_xp()] {
+            let mut gov = PerLengthOptimal::new();
+            let table = freq_table(&g);
+            for n in [1000u64, 1536] {
+                let f = gov.choose(&g, &wl(&g, n), &ctx).unwrap();
+                assert!(table.contains(f), "{} n={n}: {f} not in table", g.name);
+                assert!(
+                    f <= g.boost_clock_mhz + 1e-9,
+                    "{} n={n}: {f} above boost {}",
+                    g.name,
+                    g.boost_clock_mhz
+                );
+                assert!(f > 0.3 * g.boost_clock_mhz, "{} n={n}: {f} implausibly low", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn off_grid_optimum_saves_energy_vs_boost() {
+        let g = tesla_v100();
+        let mut gov = PerLengthOptimal::new();
+        let ctx = GovernorContext::default();
+        for n in [1000u64, 1536] {
+            let w = wl(&g, n);
+            let f = gov.choose(&g, &w, &ctx).unwrap();
+            assert!(f < 0.85 * g.boost_clock_mhz, "n={n}: {f} not below boost");
+            let e_opt = run_batch(&g, &w, f).energy_j;
+            let e_boost = run_batch(&g, &w, g.boost_clock_mhz).energy_j;
+            assert!(e_opt < 0.95 * e_boost, "n={n}: {e_opt} vs boost {e_boost}");
+        }
+    }
+
+    #[test]
+    fn bluestein_lengths_keep_the_exact_sweep_path() {
+        // 19321 = 139² is not 127-smooth: the interpolated shortcut would
+        // misprice the chirp-z convolution, so the sweep path must serve it
+        // (and still return an in-table clock).
+        let g = tesla_v100();
+        let mut gov = PerLengthOptimal::new();
+        let ctx = GovernorContext::default();
+        let f = gov.choose(&g, &wl(&g, 19321), &ctx).unwrap();
+        assert!(freq_table(&g).contains(f), "{f} not in table");
+        assert!(f > 0.0 && f <= g.boost_clock_mhz + 1e-9);
     }
 }

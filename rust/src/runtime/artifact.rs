@@ -133,10 +133,19 @@ impl Manifest {
 
     /// The standard artifact set as a synthetic manifest (no files on
     /// disk) — what the simulated runtime backend serves when `aot.py`
-    /// never ran. Mirrors the names/batches `make artifacts` produces.
+    /// never ran. Mirrors the names/batches `make artifacts` produces,
+    /// plus the non-power-of-two and real-input entries the planner's
+    /// mixed-radix/Bluestein/rFFT paths serve (channelizer-shaped traffic).
     pub fn synthetic(dir: &Path) -> Self {
         let mut entries = BTreeMap::new();
-        let mut add = |name: String, kind: &str, n: u64, batch: u64, dtype: &str, harmonics: u64, n_outputs: usize| {
+        let mut add = |name: String,
+                       kind: &str,
+                       n: u64,
+                       batch: u64,
+                       dtype: &str,
+                       harmonics: u64,
+                       inputs: String,
+                       n_outputs: usize| {
             let meta = ArtifactMeta {
                 file: dir.join(format!("{name}.hlo.txt")),
                 kind: kind.to_string(),
@@ -144,20 +153,72 @@ impl Manifest {
                 batch,
                 dtype: dtype.to_string(),
                 harmonics,
-                inputs: format!("{dtype}:{batch}x{n};{dtype}:{batch}x{n}"),
+                inputs,
                 n_outputs,
                 digest: Self::SIMULATED_DIGEST.to_string(),
                 name: name.clone(),
             };
             entries.insert(name, meta);
         };
-        for (n, batch) in [(256u64, 256u64), (1024, 64), (4096, 16), (16384, 4)] {
-            add(format!("fft_f32_n{n}_b{batch}"), "fft", n, batch, "f32", 0, 2);
+        fn c2c(dtype: &str, batch: u64, n: u64) -> String {
+            format!("{dtype}:{batch}x{n};{dtype}:{batch}x{n}")
         }
-        add("fft_f64_n1024_b64".into(), "fft", 1024, 64, "f64", 0, 2);
-        add("spectrum_f32_n4096_b16".into(), "spectrum", 4096, 16, "f32", 0, 1);
+        // n=1000 (2³·5³) and n=1536 (2⁹·3) are the issue's off-grid serving
+        // lengths: mixed-radix plans, routable like any power of two.
+        let fft_set = [
+            (256u64, 256u64),
+            (1000, 64),
+            (1024, 64),
+            (1536, 64),
+            (4096, 16),
+            (16384, 4),
+        ];
+        for (n, batch) in fft_set {
+            add(
+                format!("fft_f32_n{n}_b{batch}"),
+                "fft",
+                n,
+                batch,
+                "f32",
+                0,
+                c2c("f32", batch, n),
+                2,
+            );
+        }
+        add("fft_f64_n1024_b64".into(), "fft", 1024, 64, "f64", 0, c2c("f64", 64, 1024), 2);
+        // Real-input transform: one (batch, n) plane in, two (batch, n/2+1)
+        // spectrum planes out.
+        add(
+            "rfft_f32_n4096_b16".into(),
+            "rfft",
+            4096,
+            16,
+            "f32",
+            0,
+            "f32:16x4096".to_string(),
+            2,
+        );
+        add(
+            "spectrum_f32_n4096_b16".into(),
+            "spectrum",
+            4096,
+            16,
+            "f32",
+            0,
+            c2c("f32", 16, 4096),
+            1,
+        );
         for h in [2u64, 4, 8, 16, 32] {
-            add(format!("pipeline_n16384_h{h}"), "pipeline", 16384, 4, "f32", h, 3);
+            add(
+                format!("pipeline_n16384_h{h}"),
+                "pipeline",
+                16384,
+                4,
+                "f32",
+                h,
+                c2c("f32", 4, 16384),
+                3,
+            );
         }
         Self { dir: dir.to_path_buf(), entries }
     }
@@ -212,6 +273,24 @@ mod tests {
         assert_eq!(f.digest, Manifest::SIMULATED_DIGEST);
         assert!(m.pipeline(8).is_ok());
         assert!(m.fft(1024, "f64").is_ok());
+    }
+
+    #[test]
+    fn synthetic_manifest_has_non_pow2_and_rfft_entries() {
+        let m = Manifest::synthetic(Path::new("/nonexistent"));
+        for n in [1000u64, 1536] {
+            let f = m.fft(n, "f32").unwrap();
+            assert_eq!(f.batch, 64, "n={n}");
+            assert_eq!(f.input_shapes().len(), 2, "n={n}");
+        }
+        let r = m.get("rfft_f32_n4096_b16").unwrap();
+        assert_eq!(r.kind, "rfft");
+        assert_eq!(r.n_outputs, 2);
+        let shapes = r.input_shapes();
+        assert_eq!(shapes.len(), 1, "rfft takes one real plane");
+        assert_eq!(shapes[0], ("f32".to_string(), vec![16, 4096]));
+        // rfft entries must NOT enter the (complex) fft routing table
+        assert!(m.of_kind("fft").iter().all(|a| a.kind == "fft"));
     }
 
     #[test]

@@ -102,6 +102,29 @@ impl LoadedModule {
         Ok(())
     }
 
+    /// Serving path for `rfft` artifacts writing into caller-owned output
+    /// planes (API parity with the sim backend's real-input path: one
+    /// (batch, n) real plane in, two (batch, n/2+1) spectrum planes out).
+    pub fn run_rfft_f32_into(
+        &self,
+        x: &[f32],
+        out_re: &mut Vec<f32>,
+        out_im: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "rfft",
+            "run_rfft_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        let outputs = self.run_f32(&[x])?;
+        out_re.clear();
+        out_re.extend_from_slice(&outputs[0]);
+        out_im.clear();
+        out_im.extend_from_slice(&outputs[1]);
+        Ok(())
+    }
+
     /// Execute with f64 planes (the fp64 artifacts).
     pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
         let shapes = self.meta.input_shapes();

@@ -27,18 +27,28 @@ use crate::dsp::planner::{self, Direction};
 /// A loaded artifact plus its metadata, executed by the DSP oracle.
 pub struct LoadedModule {
     pub meta: ArtifactMeta,
-    /// The execution plan for `meta.n`, resolved once at load time so the
-    /// serving hot path never touches the global plan-cache lock.
-    /// `None` only for a non-power-of-two manifest entry (execution of
-    /// such an entry panics, as the Stockham oracle always has).
+    /// The complex execution plan for `meta.n` (fft/spectrum/pipeline
+    /// kinds), resolved once at load time so the serving hot path never
+    /// touches the global plan-cache lock. Any length is supported: the
+    /// planner compiles mixed-radix or Bluestein plans as needed.
     fft_plan: Option<std::sync::Arc<crate::dsp::planner::FftPlan>>,
+    /// The real-input plan for `rfft` artifacts.
+    rfft_plan: Option<std::sync::Arc<crate::dsp::planner::RfftPlan>>,
 }
 
 impl LoadedModule {
     fn new(meta: ArtifactMeta) -> Self {
         let n = meta.n as usize;
-        let fft_plan = n.is_power_of_two().then(|| planner::plan_for(n));
-        Self { meta, fft_plan }
+        let (fft_plan, rfft_plan) = if meta.kind == "rfft" {
+            (None, Some(planner::rfft_plan_for(n)))
+        } else {
+            (Some(planner::plan_for(n)), None)
+        };
+        Self {
+            meta,
+            fft_plan,
+            rfft_plan,
+        }
     }
 
     fn plan(&self) -> std::sync::Arc<crate::dsp::planner::FftPlan> {
@@ -48,22 +58,37 @@ impl LoadedModule {
         }
     }
 
+    fn rplan(&self) -> std::sync::Arc<crate::dsp::planner::RfftPlan> {
+        match &self.rfft_plan {
+            Some(p) => p.clone(),
+            None => planner::rfft_plan_for(self.meta.n as usize),
+        }
+    }
+
     /// Execute with f32 input planes, returning the flattened f32 outputs.
-    /// Input/outputs are row-major (batch, n).
+    /// Input/outputs are row-major (batch, n) — except `rfft`, which takes
+    /// one real plane and returns two (batch, n/2+1) spectrum planes.
     pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         self.check_inputs(inputs.len(), inputs.iter().map(|i| i.len()))?;
-        let (re, im) = (inputs[0], inputs[1]);
         let n = self.meta.n as usize;
         let batch = self.meta.batch as usize;
         match self.meta.kind.as_str() {
             "fft" => {
                 // Single fft execution path (inputs validated above).
+                let (re, im) = (inputs[0], inputs[1]);
                 let mut out_re = Vec::new();
                 let mut out_im = Vec::new();
                 self.exec_fft_into(re, im, &mut out_re, &mut out_im);
                 Ok(vec![out_re, out_im])
             }
+            "rfft" => {
+                let mut out_re = Vec::new();
+                let mut out_im = Vec::new();
+                self.exec_rfft_into(inputs[0], &mut out_re, &mut out_im);
+                Ok(vec![out_re, out_im])
+            }
             "spectrum" => {
+                let (re, im) = (inputs[0], inputs[1]);
                 let plan = self.plan();
                 let mut f_re = vec![0.0f32; batch * n];
                 let mut f_im = vec![0.0f32; batch * n];
@@ -71,6 +96,7 @@ impl LoadedModule {
                 Ok(vec![dsp::power_spectrum(&f_re, &f_im)])
             }
             "pipeline" => {
+                let (re, im) = (inputs[0], inputs[1]);
                 let plan = self.plan();
                 let mut f_re = vec![0.0f32; batch * n];
                 let mut f_im = vec![0.0f32; batch * n];
@@ -124,6 +150,37 @@ impl LoadedModule {
         out_im.resize(batch * n, 0.0);
         let plan = self.plan();
         planner::run_rows(&plan, Direction::Forward, re, im, batch, out_re, out_im);
+    }
+
+    /// Zero-copy serving path for `rfft` artifacts, mirroring
+    /// [`Self::run_fft_f32_into`]: one real input plane (batch × n) in,
+    /// two spectrum planes (batch × (n/2+1)) out, caller-owned buffers
+    /// resized (never shrunk) and fully overwritten.
+    pub fn run_rfft_f32_into(
+        &self,
+        x: &[f32],
+        out_re: &mut Vec<f32>,
+        out_im: &mut Vec<f32>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "rfft",
+            "run_rfft_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        self.check_inputs(1, [x.len()].into_iter())?;
+        self.exec_rfft_into(x, out_re, out_im);
+        Ok(())
+    }
+
+    /// The one rfft execution body (callers have validated inputs).
+    fn exec_rfft_into(&self, x: &[f32], out_re: &mut Vec<f32>, out_im: &mut Vec<f32>) {
+        let batch = self.meta.batch as usize;
+        let rplan = self.rplan();
+        let o = rplan.out_len();
+        out_re.resize(batch * o, 0.0);
+        out_im.resize(batch * o, 0.0);
+        planner::run_rfft_rows(&rplan, x, batch, out_re, out_im);
     }
 
     /// Build "input literals". The sim backend has no device buffers; this
@@ -218,6 +275,11 @@ impl Runtime {
             return Ok(m.clone());
         }
         let meta = self.manifest.get(name)?.clone();
+        anyhow::ensure!(
+            planner::supports(meta.n as usize),
+            "artifact {name}: transform length {} has no plan support",
+            meta.n
+        );
         if meta.digest != Manifest::SIMULATED_DIGEST {
             let text = std::fs::read_to_string(&meta.file)
                 .with_context(|| format!("reading HLO text {:?}", meta.file))?;
@@ -370,6 +432,73 @@ mod tests {
         let plane = vec![0.0f32; total];
         let (mut a, mut b) = (Vec::new(), Vec::new());
         assert!(m.run_fft_f32_into(&plane, &plane, &mut a, &mut b).is_err());
+        assert!(m.run_rfft_f32_into(&plane, &mut a, &mut b).is_err());
+    }
+
+    #[test]
+    fn synthetic_runtime_serves_non_pow2_ffts() {
+        // The off-grid serving lengths the issue opens: mixed-radix 1000
+        // (2³·5³) and 1536 (2⁹·3) through the standard fft path.
+        let rt = rt();
+        for name in ["fft_f32_n1000_b64", "fft_f32_n1536_b64"] {
+            let m = rt.load(name).unwrap();
+            let n = m.meta.n as usize;
+            let total = m.meta.batch as usize * n;
+            let mut rng = Rng::new(21);
+            let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+            let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+            let out = m.run_f32(&[&re, &im]).unwrap();
+            // row 0 against the naive DFT (the only oracle for non-pow2)
+            let x: Vec<crate::dsp::C64> = (0..n)
+                .map(|i| crate::dsp::C64::new(re[i] as f64, im[i] as f64))
+                .collect();
+            let want = crate::dsp::fft::dft_naive(&x);
+            for i in 0..n {
+                assert!(
+                    (out[0][i] as f64 - want[i].re).abs() < 1e-2
+                        && (out[1][i] as f64 - want[i].im).abs() < 1e-2,
+                    "{name} bin {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_runtime_serves_rfft() {
+        let rt = rt();
+        let m = rt.load("rfft_f32_n4096_b16").unwrap();
+        let n = m.meta.n as usize;
+        let o = n / 2 + 1;
+        let batch = m.meta.batch as usize;
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+        let out = m.run_f32(&[&x]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), batch * o);
+        // row 0 against the complex oracle on the same real signal
+        let xc: Vec<crate::dsp::C64> = (0..n)
+            .map(|i| crate::dsp::C64::new(x[i] as f64, 0.0))
+            .collect();
+        let want = crate::dsp::fft(&xc);
+        for k in 0..o {
+            assert!(
+                (out[0][k] as f64 - want[k].re).abs() < 1e-2
+                    && (out[1][k] as f64 - want[k].im).abs() < 1e-2,
+                "bin {k}"
+            );
+        }
+        // the zero-copy path matches and reuses buffers
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        m.run_rfft_f32_into(&x, &mut a, &mut b).unwrap();
+        assert_eq!(a, out[0]);
+        assert_eq!(b, out[1]);
+        let ptr = a.as_ptr();
+        m.run_rfft_f32_into(&x, &mut a, &mut b).unwrap();
+        assert_eq!(a.as_ptr(), ptr, "steady state must not reallocate");
+        // wrong arity/shape rejected
+        assert!(m.run_f32(&[&x, &x]).is_err(), "rfft takes one plane");
+        let short = vec![0.0f32; batch * n - 1];
+        assert!(m.run_rfft_f32_into(&short, &mut a, &mut b).is_err());
     }
 
     #[test]

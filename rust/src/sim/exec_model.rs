@@ -140,6 +140,61 @@ pub fn time_kernel(
     }
 }
 
+/// Interpolated time/power point for lengths off the power-of-two
+/// measurement grid (see [`interp_time_power`]).
+#[derive(Debug, Clone, Copy)]
+pub struct InterpPoint {
+    pub time_s: f64,
+    pub avg_power_w: f64,
+    pub energy_j: f64,
+}
+
+fn exact_time_power(gpu: &GpuSpec, workload: &FftWorkload, f_mhz: f64) -> InterpPoint {
+    let plan = crate::cufft::plan::plan(workload.n, workload.precision);
+    let timing = time_plan(gpu, workload, &plan, f_mhz);
+    let mut energy = 0.0;
+    for k in &timing.per_kernel {
+        energy += crate::sim::power::kernel_power_w(gpu, k, f_mhz) * k.t_total;
+    }
+    InterpPoint {
+        time_s: timing.total_s,
+        avg_power_w: if timing.total_s > 0.0 { energy / timing.total_s } else { 0.0 },
+        energy_j: energy,
+    }
+}
+
+/// Time/power for `workload` at clock `f_mhz`, interpolated in log₂N for
+/// lengths off the power-of-two grid: price both bracketing pow2 anchors
+/// exactly (same data volume) and blend geometrically. Power-of-two
+/// lengths return the exact model point, so the curve is continuous at
+/// the anchors. This is what lets the per-length-optimal and common-clock
+/// governors produce sane requests for off-grid lengths (n=1000, n=1536)
+/// without running a fresh measurement sweep per unseen length — and
+/// without the single-kernel-capacity staircase of the exact plan model
+/// landing between two serving lengths that differ by a few samples.
+pub fn interp_time_power(gpu: &GpuSpec, workload: &FftWorkload, f_mhz: f64) -> InterpPoint {
+    let n = workload.n;
+    if n.is_power_of_two() || n < 4 {
+        return exact_time_power(gpu, workload, f_mhz);
+    }
+    let hi = n.next_power_of_two();
+    let lo = hi / 2;
+    let w = ((n as f64).log2() - (lo as f64).log2()) / ((hi as f64).log2() - (lo as f64).log2());
+    let lo_w = FftWorkload::new(lo, workload.precision, workload.data_bytes);
+    let hi_w = FftWorkload::new(hi, workload.precision, workload.data_bytes);
+    let lo_pt = exact_time_power(gpu, &lo_w, f_mhz);
+    let hi_pt = exact_time_power(gpu, &hi_w, f_mhz);
+    // Geometric blend: times and powers are positive and roughly
+    // log-linear in N between anchors, and the blend is exact at both.
+    let time_s = lo_pt.time_s.powf(1.0 - w) * hi_pt.time_s.powf(w);
+    let avg_power_w = lo_pt.avg_power_w.powf(1.0 - w) * hi_pt.avg_power_w.powf(w);
+    InterpPoint {
+        time_s,
+        avg_power_w,
+        energy_j: time_s * avg_power_w,
+    }
+}
+
 /// Time a whole plan at one clock.
 pub fn time_plan(gpu: &GpuSpec, workload: &FftWorkload, plan: &FftPlan, f_mhz: f64) -> PlanTiming {
     let per_kernel: Vec<KernelTiming> = plan
@@ -307,6 +362,58 @@ mod tests {
         let t16384 = t(16384);
         assert!((t8192 / t32 - 1.0).abs() < 0.25, "plateau: {t32} vs {t8192}");
         assert!(t16384 > 1.6 * t8192, "staircase jump missing");
+    }
+
+    #[test]
+    fn interp_is_exact_at_pow2_anchors() {
+        let (g, w) = v100_w(4096);
+        let p = plan(w.n, w.precision);
+        let f = 945.0;
+        let exact = time_plan(&g, &w, &p, f).total_s;
+        let it = interp_time_power(&g, &w, f);
+        assert!((it.time_s - exact).abs() < 1e-15 * exact.max(1.0));
+        assert!(it.avg_power_w > 0.0 && it.energy_j > 0.0);
+    }
+
+    #[test]
+    fn interp_off_grid_lands_between_anchors() {
+        let g = tesla_v100();
+        for n in [1000u64, 1536, 3000] {
+            let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+            let lo = FftWorkload::new(n.next_power_of_two() / 2, w.precision, w.data_bytes);
+            let hi = FftWorkload::new(n.next_power_of_two(), w.precision, w.data_bytes);
+            for f in [g.boost_clock_mhz, 945.0, 600.0] {
+                let it = interp_time_power(&g, &w, f);
+                let t_lo = interp_time_power(&g, &lo, f).time_s;
+                let t_hi = interp_time_power(&g, &hi, f).time_s;
+                let (t_min, t_max) = (t_lo.min(t_hi), t_lo.max(t_hi));
+                assert!(
+                    it.time_s >= t_min * (1.0 - 1e-12) && it.time_s <= t_max * (1.0 + 1e-12),
+                    "n={n} f={f}: {} outside [{t_min}, {t_max}]",
+                    it.time_s
+                );
+                assert!(it.avg_power_w > 0.0);
+                assert!((it.energy_j - it.time_s * it.avg_power_w).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn interp_energy_curve_has_minimum_below_boost_off_grid() {
+        // The property the governors rely on: the interpolated energy
+        // curve at an off-grid length still has its optimum well below
+        // boost (the paper's headline shape).
+        let g = tesla_v100();
+        let w = FftWorkload::new(1000, Precision::Fp32, g.working_set_bytes);
+        let freqs = crate::sim::freq_table::freq_table(&g).stride(4);
+        let energies: Vec<f64> = freqs
+            .iter()
+            .map(|&f| interp_time_power(&g, &w, f).energy_j)
+            .collect();
+        let imin = crate::util::stats::argmin(&energies).unwrap();
+        let f_opt = freqs[imin];
+        assert!(f_opt < 0.85 * g.boost_clock_mhz, "optimum {f_opt} not below boost");
+        assert!(f_opt > 0.4 * g.boost_clock_mhz, "optimum {f_opt} implausibly low");
     }
 
     #[test]

@@ -49,6 +49,32 @@ impl FreqTable {
             .unwrap_or(self.f_max_mhz)
     }
 
+    /// Nearest supported clock that does not exceed `cap_mhz` — the
+    /// "snap, but never past the default/boost clock" variant. A plain
+    /// nearest-snap can land *above* the cap when the cap sits between
+    /// table entries (the P4's boost does), which would price "boost" at
+    /// an unreachable clock; governors use this to stay within both the
+    /// table and the card's default envelope.
+    ///
+    /// Edge case: if `cap_mhz` lies below the table floor there is no
+    /// clock satisfying the cap, and the floor (`f_min_mhz`, the lowest
+    /// supported clock) is returned as the closest achievable — callers
+    /// that must treat that as an error should check `cap_mhz >=
+    /// f_min_mhz` themselves. Every shipped card has boost >= f_min, so
+    /// the governor paths never hit this.
+    pub fn snap_at_most(&self, requested_mhz: f64, cap_mhz: f64) -> f64 {
+        self.frequencies()
+            .into_iter()
+            .filter(|f| *f <= cap_mhz + 1e-9)
+            .min_by(|a, b| {
+                (a - requested_mhz)
+                    .abs()
+                    .partial_cmp(&(b - requested_mhz).abs())
+                    .unwrap()
+            })
+            .unwrap_or(self.f_min_mhz)
+    }
+
     pub fn contains(&self, f_mhz: f64) -> bool {
         self.frequencies().iter().any(|f| (f - f_mhz).abs() < 1e-6)
     }
@@ -165,6 +191,27 @@ mod tests {
         let snapped = t.snap(946.0);
         assert!(t.contains(snapped));
         assert!((snapped - 946.0).abs() <= 8.0);
+    }
+
+    #[test]
+    fn snap_at_most_never_exceeds_cap() {
+        for g in all_gpus() {
+            let t = freq_table(&g);
+            // Request well above boost: plain snap may overshoot the cap
+            // (P4: boost 1063 sits between 12/13 MHz steps), snap_at_most
+            // must not.
+            let f = t.snap_at_most(t.f_max_mhz + 100.0, g.boost_clock_mhz);
+            assert!(t.contains(f), "{}: {f} not a table clock", g.name);
+            assert!(
+                f <= g.boost_clock_mhz + 1e-9,
+                "{}: {f} above boost {}",
+                g.name,
+                g.boost_clock_mhz
+            );
+            // At-or-below requests behave like plain snap.
+            let lo = t.snap_at_most(t.f_min_mhz - 50.0, g.boost_clock_mhz);
+            assert!((lo - t.f_min_mhz).abs() < 1e-9);
+        }
     }
 
     #[test]

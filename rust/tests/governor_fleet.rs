@@ -202,6 +202,68 @@ fn execute_flushes_only_its_own_slot() {
 }
 
 #[test]
+fn engine_serves_off_grid_lengths_end_to_end() {
+    // The tentpole's serving acceptance: non-power-of-two lengths flow
+    // through router → batcher → worker → planner (mixed radix) and come
+    // back numerically correct vs the naive DFT.
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::PerLengthOptimal,
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    let mut rng = Rng::new(23);
+    for n in [1000usize, 1536] {
+        let (re, im) = rand_planes(n, &mut rng);
+        let x: Vec<dsp::C64> = re
+            .iter()
+            .zip(&im)
+            .map(|(&r, &i)| dsp::C64::new(r as f64, i as f64))
+            .collect();
+        let want = dsp::fft::dft_naive(&x);
+        let res = engine.execute(re, im).expect("off-grid job");
+        assert_eq!(res.out_re.len(), n);
+        for i in 0..n {
+            assert!(
+                (res.out_re[i] as f64 - want[i].re).abs() < 1e-2
+                    && (res.out_im[i] as f64 - want[i].im).abs() < 1e-2,
+                "n={n} bin {i}"
+            );
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn unroutable_length_is_a_typed_rejection() {
+    use fftsweep::coordinator::CoordError;
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    let err = engine
+        .submit(vec![0.0; 123], vec![0.0; 123])
+        .expect_err("n=123 has no artifact");
+    match err.downcast_ref::<CoordError>() {
+        Some(CoordError::UnsupportedLength { n, dtype, supported }) => {
+            assert_eq!(*n, 123);
+            assert_eq!(dtype, "f32");
+            for want in [1000u64, 1024, 1536] {
+                assert!(supported.contains(&want), "{want} missing from {supported:?}");
+            }
+        }
+        other => panic!("expected UnsupportedLength, got {other:?}"),
+    }
+    // The rejection is accounted as a failure, not a lost job.
+    assert!(engine.drain(std::time::Duration::from_secs(10)));
+    engine.shutdown();
+}
+
+#[test]
 fn shutdown_is_deterministic_and_idempotent_per_engine() {
     // No jobs at all: shutdown must still join cleanly and report zeros.
     let engine = Engine::start_single(

@@ -4,54 +4,160 @@
 Usage: check_bench.py <fresh BENCH_serving.json> <committed baseline>
 
 Fails (exit 1) when:
-  * either file is malformed JSON or missing required fields,
-  * fleet throughput regressed more than 30% below the committed baseline.
+  * either file is malformed JSON or missing required fields (including
+    the non-pow2 / rFFT rows the plan compiler emits),
+  * fleet throughput regressed more than 30% below the committed baseline,
+  * closed-loop p99 latency regressed more than 30% above the baseline,
+  * the planned path is slower than the naive per-row path,
+  * planned rows/s or any opened-workload row (nonpow2/bluestein/rfft)
+    regressed more than 30% below its baseline rate (or is non-positive).
 
-The committed baseline is intentionally conservative: it is the floor the
-trajectory must never fall under, not the best number ever seen. Update it
-(from a `cargo bench --bench bench_serving` run on a quiet machine) when a
-PR intentionally moves serving performance.
+The committed baseline is intentionally conservative: throughputs are the
+floor the trajectory must never fall under and p99 the ceiling it must
+never rise over — not the best numbers ever seen. Update it (from a
+`cargo bench --bench bench_serving` run on a quiet machine) when a PR
+intentionally moves serving performance.
+
+The checking logic lives in pure functions (`load_doc`, `check`) so
+`test_check_bench.py` can unit-test pass/regress/malformed cases without
+spawning processes.
 """
 
 import json
 import sys
 
-REQUIRED = ["bench", "schema", "naive_rows_per_s", "planned_rows_per_s", "planned_speedup", "fleet"]
+REQUIRED = [
+    "bench",
+    "schema",
+    "naive_rows_per_s",
+    "planned_rows_per_s",
+    "planned_speedup",
+    "nonpow2",
+    "rfft",
+    "fleet",
+]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
+REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
 MAX_REGRESSION = 0.30
 
 
-def load(path):
+class BenchCheckError(Exception):
+    """A file-level problem (unreadable, malformed, missing fields)."""
+
+
+def load_doc(path):
+    """Load and structurally validate one BENCH_serving.json."""
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
-        sys.exit(f"FAIL: {path}: unreadable or malformed JSON ({e})")
+        raise BenchCheckError(f"{path}: unreadable or malformed JSON ({e})")
     if not isinstance(doc, dict) or not isinstance(doc.get("fleet"), dict):
-        sys.exit(f"FAIL: {path}: expected an object with a 'fleet' object")
+        raise BenchCheckError(f"{path}: expected an object with a 'fleet' object")
     missing = [k for k in REQUIRED if k not in doc]
     missing += [f"fleet.{k}" for k in REQUIRED_FLEET if k not in doc["fleet"]]
+    for section in ("nonpow2", "rfft", "bluestein"):
+        sub = doc.get(section)
+        if isinstance(sub, dict):
+            missing += [f"{section}.{k}" for k in REQUIRED_RATE if k not in sub]
+        elif section in REQUIRED:
+            # present-but-not-an-object counts as missing its rate key
+            missing += [f"{section}.{k}" for k in REQUIRED_RATE]
     if missing:
-        sys.exit(f"FAIL: {path}: missing fields {missing}")
+        raise BenchCheckError(f"{path}: missing fields {missing}")
     return doc
 
 
-def main():
-    if len(sys.argv) != 3:
-        sys.exit(f"usage: {sys.argv[0]} <fresh.json> <baseline.json>")
-    fresh = load(sys.argv[1])
-    base = load(sys.argv[2])
+def check(fresh, base):
+    """Compare a fresh doc against the baseline.
+
+    Returns (problems, info): problems is a list of failure strings
+    (empty = gate passes), info a list of human-readable summary lines.
+    """
+    problems = []
+    info = []
 
     got = fresh["fleet"]["jobs_per_s"]
     floor = base["fleet"]["jobs_per_s"] * (1.0 - MAX_REGRESSION)
-    print(f"fleet throughput: {got:.0f} jobs/s (baseline {base['fleet']['jobs_per_s']:.0f}, floor {floor:.0f})")
-    print(f"planned speedup vs pre-plan path: {fresh['planned_speedup']:.1f}x")
+    info.append(
+        f"fleet throughput: {got:.0f} jobs/s "
+        f"(baseline {base['fleet']['jobs_per_s']:.0f}, floor {floor:.0f})"
+    )
     if got < floor:
-        sys.exit(f"FAIL: throughput {got:.0f} jobs/s regressed >{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}")
+        problems.append(
+            f"throughput {got:.0f} jobs/s regressed >{MAX_REGRESSION:.0%} "
+            f"below baseline floor {floor:.0f}"
+        )
+
+    p99 = fresh["fleet"]["p99_ms"]
+    ceiling = base["fleet"]["p99_ms"] * (1.0 + MAX_REGRESSION)
+    info.append(
+        f"closed-loop p99: {p99:.3f} ms "
+        f"(baseline {base['fleet']['p99_ms']:.3f}, ceiling {ceiling:.3f})"
+    )
+    if p99 > ceiling:
+        problems.append(
+            f"p99 latency {p99:.3f} ms regressed >{MAX_REGRESSION:.0%} "
+            f"above baseline ceiling {ceiling:.3f} ms"
+        )
+
+    info.append(f"planned speedup vs pre-plan path: {fresh['planned_speedup']:.1f}x")
     if fresh["planned_speedup"] < 1.0:
-        sys.exit("FAIL: planned path slower than the naive per-row path — planner regression")
+        problems.append("planned path slower than the naive per-row path — planner regression")
+
+    rate_floor = base["planned_rows_per_s"] * (1.0 - MAX_REGRESSION)
+    if fresh["planned_rows_per_s"] < rate_floor:
+        problems.append(
+            f"planned_rows_per_s {fresh['planned_rows_per_s']:.0f} regressed "
+            f">{MAX_REGRESSION:.0%} below baseline floor {rate_floor:.0f}"
+        )
+
+    # Per-shape rows/s are floors too (the baseline's own contract): each
+    # opened workload path is gated against the committed rate.
+    for section in ("nonpow2", "rfft", "bluestein"):
+        sub = fresh.get(section)
+        if not isinstance(sub, dict):
+            continue
+        rate = sub.get("rows_per_s", 0)
+        info.append(f"{section} (n={sub.get('n', '?')}): {rate:.0f} rows/s")
+        if not rate > 0:
+            problems.append(f"{section}.rows_per_s is not positive ({rate})")
+            continue
+        base_sub = base.get(section)
+        if isinstance(base_sub, dict) and base_sub.get("rows_per_s", 0) > 0:
+            floor = base_sub["rows_per_s"] * (1.0 - MAX_REGRESSION)
+            if rate < floor:
+                problems.append(
+                    f"{section}.rows_per_s {rate:.0f} regressed >{MAX_REGRESSION:.0%} "
+                    f"below baseline floor {floor:.0f}"
+                )
+
+    return problems, info
+
+
+def run(fresh_path, base_path, out=print):
+    """Full gate over two files; returns the list of problems."""
+    try:
+        fresh = load_doc(fresh_path)
+        base = load_doc(base_path)
+    except BenchCheckError as e:
+        return [str(e)]
+    problems, info = check(fresh, base)
+    for line in info:
+        out(line)
+    return problems
+
+
+def main(argv):
+    if len(argv) != 3:
+        sys.exit(f"usage: {argv[0]} <fresh.json> <baseline.json>")
+    problems = run(argv[1], argv[2])
+    for p in problems:
+        print(f"FAIL: {p}")
+    if problems:
+        sys.exit(1)
     print("OK")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv)

@@ -1,0 +1,182 @@
+"""Unit tests for the bench-smoke CI gate (scripts/check_bench.py).
+
+Run with `python3 -m pytest -q scripts/test_check_bench.py` (a dedicated
+CI step): the gate that guards the perf trajectory must itself be tested,
+or a refactor could silently turn it into a yes-machine.
+"""
+
+import copy
+import json
+
+import pytest
+
+import check_bench
+
+
+def good_doc():
+    return {
+        "bench": "serving",
+        "schema": 2,
+        "quick": False,
+        "n": 1024,
+        "naive_rows_per_s": 12000.0,
+        "planned_rows_per_s": 90000.0,
+        "planned_speedup": 7.5,
+        "nonpow2": {"n": 1536, "rows_per_s": 25000.0},
+        "bluestein": {"n": 1009, "rows_per_s": 4000.0},
+        "rfft": {"n": 4096, "rows_per_s": 12000.0, "vs_complex": 1.2},
+        "fleet": {
+            "jobs_per_s": 1000.0,
+            "p50_ms": 3.0,
+            "p99_ms": 10.0,
+            "allocs_per_job": 12.0,
+        },
+    }
+
+
+def write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc) if isinstance(doc, dict) else doc)
+    return str(p)
+
+
+def test_identical_docs_pass(tmp_path):
+    fresh = write(tmp_path, "fresh.json", good_doc())
+    base = write(tmp_path, "base.json", good_doc())
+    assert check_bench.run(fresh, base, out=lambda _: None) == []
+
+
+def test_small_regression_within_budget_passes():
+    fresh = good_doc()
+    fresh["fleet"]["jobs_per_s"] = 800.0  # -20% > floor of -30%
+    fresh["fleet"]["p99_ms"] = 12.0  # +20% < ceiling of +30%
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_throughput_regression_fails():
+    fresh = good_doc()
+    fresh["fleet"]["jobs_per_s"] = 600.0  # -40%
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("throughput" in p for p in problems)
+
+
+def test_p99_regression_fails():
+    fresh = good_doc()
+    fresh["fleet"]["p99_ms"] = 14.0  # +40%
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("p99" in p for p in problems)
+
+
+def test_planned_slower_than_naive_fails():
+    fresh = good_doc()
+    fresh["planned_speedup"] = 0.9
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("planner regression" in p for p in problems)
+
+
+def test_nonpositive_offgrid_rate_fails():
+    fresh = good_doc()
+    fresh["rfft"]["rows_per_s"] = 0.0
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("rfft.rows_per_s" in p for p in problems)
+
+
+@pytest.mark.parametrize("section", ["nonpow2", "bluestein", "rfft"])
+def test_per_shape_rate_floor_is_enforced(section):
+    # The baseline's contract: per-shape rows/s are FLOORS, not presence
+    # checks — a 40% regression on any opened workload path must fail.
+    fresh = good_doc()
+    fresh[section]["rows_per_s"] = good_doc()[section]["rows_per_s"] * 0.6
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any(f"{section}.rows_per_s" in p and "regressed" in p for p in problems)
+    # ...while a 20% dip stays within budget.
+    fresh[section]["rows_per_s"] = good_doc()[section]["rows_per_s"] * 0.8
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_planned_rows_floor_is_enforced():
+    fresh = good_doc()
+    fresh["planned_rows_per_s"] = good_doc()["planned_rows_per_s"] * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("planned_rows_per_s" in p for p in problems)
+
+
+@pytest.mark.parametrize("key", ["fleet", "nonpow2", "rfft", "planned_speedup"])
+def test_missing_top_level_key_is_rejected(tmp_path, key):
+    doc = good_doc()
+    del doc[key]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="missing|fleet"):
+        check_bench.load_doc(path)
+
+
+@pytest.mark.parametrize("key", ["jobs_per_s", "p99_ms"])
+def test_missing_fleet_key_is_rejected(tmp_path, key):
+    doc = good_doc()
+    del doc["fleet"][key]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match=f"fleet.{key}"):
+        check_bench.load_doc(path)
+
+
+def test_nonpow2_without_rate_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["nonpow2"] = {"n": 1536}
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="nonpow2.rows_per_s"):
+        check_bench.load_doc(path)
+
+
+def test_malformed_json_is_rejected(tmp_path):
+    path = write(tmp_path, "fresh.json", "{not json")
+    with pytest.raises(check_bench.BenchCheckError, match="malformed"):
+        check_bench.load_doc(path)
+
+
+def test_missing_file_is_rejected(tmp_path):
+    with pytest.raises(check_bench.BenchCheckError, match="unreadable"):
+        check_bench.load_doc(str(tmp_path / "nope.json"))
+
+
+def test_non_object_document_is_rejected(tmp_path):
+    path = write(tmp_path, "fresh.json", "[1, 2, 3]")
+    with pytest.raises(check_bench.BenchCheckError, match="fleet"):
+        check_bench.load_doc(path)
+
+
+def test_run_reports_file_problems_instead_of_raising(tmp_path):
+    fresh = write(tmp_path, "fresh.json", good_doc())
+    problems = check_bench.run(fresh, str(tmp_path / "missing.json"), out=lambda _: None)
+    assert len(problems) == 1 and "unreadable" in problems[0]
+
+
+def test_main_exits_nonzero_on_regression(tmp_path, capsys):
+    fresh_doc = good_doc()
+    fresh_doc["fleet"]["jobs_per_s"] = 1.0
+    fresh = write(tmp_path, "fresh.json", fresh_doc)
+    base = write(tmp_path, "base.json", good_doc())
+    with pytest.raises(SystemExit) as e:
+        check_bench.main(["check_bench.py", fresh, base])
+    assert e.value.code == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_main_passes_on_good_docs(tmp_path, capsys):
+    fresh = write(tmp_path, "fresh.json", good_doc())
+    base = write(tmp_path, "base.json", good_doc())
+    check_bench.main(["check_bench.py", fresh, base])
+    assert "OK" in capsys.readouterr().out
+
+
+def test_committed_baseline_is_itself_valid():
+    # The repo-root baseline must always satisfy the structural gate —
+    # otherwise every CI run fails at the load step.
+    import os
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    baseline = os.path.join(here, "..", "BENCH_serving.json")
+    doc = check_bench.load_doc(baseline)
+    problems, _ = check_bench.check(copy.deepcopy(doc), doc)
+    assert problems == []
