@@ -11,7 +11,11 @@
 //!   3. fleet end-to-end throughput: jobs/s through a 2-card engine on the
 //!      n=1024 workload (open loop), plus an allocation-frequency proxy
 //!      from a counting global allocator,
-//!   4. closed-loop `execute()` latency (p50/p99 ms).
+//!   4. closed-loop `execute()` latency (p50/p99 ms),
+//!   5. power telemetry: the same seeded trace served uncapped (boost)
+//!      vs under a `--power-budget-w` cap at 70% of the measured draw —
+//!      simulated energy/job, simulated p99 and the rolling 1 s fleet
+//!      draw land in the JSON `power` section the CI gate validates.
 //!
 //! Regenerate with:
 //!   cd rust && cargo bench --bench bench_serving            # full
@@ -26,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use fftsweep::analysis::telemetry as telemetry_analysis;
 use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
 use fftsweep::dsp;
 use fftsweep::dsp::planner::{self, Direction};
@@ -242,11 +247,52 @@ fn main() {
     let p99 = percentile(&lat_ms, 99.0);
     println!("latency: p50 {p50:.3} ms, p99 {p99:.3} ms ({latency_iters} closed-loop jobs)");
     println!("{}", engine.fleet_report());
+    let rt = engine.runtime().clone();
     engine.shutdown();
+
+    // 5. Power telemetry: uncapped (boost) vs capped serving of one
+    // seeded trace on a fresh 2-card fleet. All power-section numbers are
+    // *simulated* quantities (deterministic across host machines), so the
+    // CI gate can hold them to tight internal invariants: the capped draw
+    // must sit under the budget and capped energy/job under uncapped.
+    let power_jobs = if quick { 256 } else { 1024 };
+    let specs = vec![tesla_v100(), tesla_v100()];
+    let uncapped = telemetry_analysis::serve_trace(
+        rt.clone(),
+        &specs,
+        &GovernorKind::FixedBoost,
+        power_jobs,
+        &[N as u64],
+        0xBEEF,
+        None,
+    )
+    .expect("uncapped power trace");
+    let budget_w = 0.7 * uncapped.fleet_draw_1s_w;
+    let capped = telemetry_analysis::serve_trace(
+        rt,
+        &specs,
+        &GovernorKind::FixedBoost,
+        power_jobs,
+        &[N as u64],
+        0xBEEF,
+        Some(budget_w),
+    )
+    .expect("capped power trace");
+    println!(
+        "power: budget {budget_w:.1} W — uncapped {:.1} W / {:.3e} J/job / p99 {:.4} sim ms, \
+         capped {:.1} W / {:.3e} J/job / p99 {:.4} sim ms ({} transitions)",
+        uncapped.fleet_draw_1s_w,
+        uncapped.energy_per_job_j,
+        uncapped.p99_sim_ms,
+        capped.fleet_draw_1s_w,
+        capped.energy_per_job_j,
+        capped.p99_sim_ms,
+        capped.clock_transitions,
+    );
 
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 2.0.into());
+    root.set("schema", 3.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -276,6 +322,17 @@ fn main() {
     fleet_json.set("p99_ms", p99.into());
     fleet_json.set("allocs_per_job", allocs_per_job.into());
     root.set("fleet", fleet_json);
+    let mut power_json = Json::obj();
+    power_json.set("jobs", (power_jobs as u64).into());
+    power_json.set("budget_w", budget_w.into());
+    power_json.set("uncapped_draw_1s_w", uncapped.fleet_draw_1s_w.into());
+    power_json.set("capped_draw_1s_w", capped.fleet_draw_1s_w.into());
+    power_json.set("uncapped_energy_per_job_j", uncapped.energy_per_job_j.into());
+    power_json.set("capped_energy_per_job_j", capped.energy_per_job_j.into());
+    power_json.set("uncapped_p99_sim_ms", uncapped.p99_sim_ms.into());
+    power_json.set("capped_p99_sim_ms", capped.p99_sim_ms.into());
+    power_json.set("capped_clock_transitions", capped.clock_transitions.into());
+    root.set("power", power_json);
     std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
     println!("wrote {out_path}");
 }

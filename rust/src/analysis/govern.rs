@@ -3,7 +3,7 @@
 //! that turns the paper's single-policy result into a policy menu
 //! (`fftsweep govern`).
 
-use crate::governor::{BatchFeedback, GovernorContext, GovernorKind};
+use crate::governor::{choose_with_budget, BatchFeedback, GovernorContext, GovernorKind};
 use crate::sim::freq_table::freq_table;
 use crate::sim::{run_batch, GpuSpec};
 use crate::types::{FftWorkload, Precision};
@@ -78,6 +78,12 @@ pub struct GovernorOutcome {
     pub deadlines_met: usize,
     pub batches: usize,
     pub mean_clock_mhz: f64,
+    /// Time-weighted mean batch draw, W (energy / governed time) — the
+    /// quantity a `--budget-w` cap constrains.
+    pub mean_power_w: f64,
+    /// Peak per-batch mean draw over the trace, W (must sit at or below
+    /// the cap when one is set).
+    pub peak_power_w: f64,
 }
 
 impl GovernorOutcome {
@@ -116,6 +122,8 @@ pub fn replay(
         deadlines_met: 0,
         batches: trace.len(),
         mean_clock_mhz: 0.0,
+        mean_power_w: 0.0,
+        peak_power_w: 0.0,
     };
     for b in &trace.batches {
         let batch_ctx = GovernorContext {
@@ -123,10 +131,17 @@ pub fn replay(
             ..ctx.clone()
         };
         let boost = run_batch(gpu, &b.workload, gpu.boost_clock_mhz);
-        let clock = match gov.choose(gpu, &b.workload, &batch_ctx) {
+        // `choose_with_budget` enforces the context's `power_budget_w`
+        // (the `govern --budget-w` cap) on top of whatever the policy
+        // picks; with no budget set it is a plain `choose`.
+        let clock = match choose_with_budget(gov.as_mut(), gpu, &b.workload, &batch_ctx) {
             Ok(f) => table.snap(f),
-            // An infeasible verdict still has to serve: run at boost.
-            Err(_) => gpu.boost_clock_mhz,
+            // An infeasible verdict still has to serve: run at boost —
+            // but the watt cap is a hard envelope and still binds.
+            Err(_) => match batch_ctx.budget_cap_mhz(gpu, &b.workload) {
+                Some(cap) => gpu.boost_clock_mhz.min(cap),
+                None => gpu.boost_clock_mhz,
+            },
         };
         let run = run_batch(gpu, &b.workload, clock);
         out.energy_j += run.energy_j;
@@ -134,6 +149,7 @@ pub fn replay(
         out.time_s += run.timing.total_s;
         out.boost_time_s += boost.timing.total_s;
         out.mean_clock_mhz += clock;
+        out.peak_power_w = out.peak_power_w.max(run.avg_power_w);
         if run.timing.total_s <= b.deadline_s * (1.0 + 1e-9) {
             out.deadlines_met += 1;
         }
@@ -149,6 +165,9 @@ pub fn replay(
     if !trace.is_empty() {
         out.mean_clock_mhz /= trace.len() as f64;
     }
+    if out.time_s > 0.0 {
+        out.mean_power_w = out.energy_j / out.time_s;
+    }
     out
 }
 
@@ -161,18 +180,33 @@ pub fn comparison(
 ) -> (Vec<GovernorOutcome>, Table) {
     let outcomes: Vec<GovernorOutcome> =
         kinds.iter().map(|k| replay(gpu, trace, k, ctx)).collect();
+    let budget_note = match ctx.power_budget_w {
+        Some(w) => format!(", budget {} W", fnum(w, 0)),
+        None => String::new(),
+    };
     let mut t = Table::new(
         &format!(
-            "Governor comparison: {} batches on {} (energy vs all-boost)",
+            "Governor comparison: {} batches on {} (energy vs all-boost{budget_note})",
             trace.len(),
             gpu.name
         ),
-        &["governor", "mean MHz", "energy J", "saving %", "slowdown %", "deadlines"],
+        &[
+            "governor",
+            "mean MHz",
+            "mean W",
+            "peak W",
+            "energy J",
+            "saving %",
+            "slowdown %",
+            "deadlines",
+        ],
     );
     for o in &outcomes {
         t.push_row(vec![
             o.label.clone(),
             fnum(o.mean_clock_mhz, 0),
+            fnum(o.mean_power_w, 1),
+            fnum(o.peak_power_w, 1),
             fnum(o.energy_j, 1),
             fnum(o.energy_saving() * 100.0, 1),
             fnum((o.slowdown() - 1.0) * 100.0, 1),
@@ -259,6 +293,67 @@ mod tests {
                 o.label
             );
         }
+    }
+
+    #[test]
+    fn budget_capped_replay_keeps_every_policy_under_the_cap() {
+        // `govern --budget-w`: with a watt cap in the context, every
+        // governor's peak per-batch draw sits at or below it, and the
+        // boost row's saving turns positive (the cap forces boost off its
+        // default clock). The table title advertises the cap.
+        let g = tesla_v100();
+        let trace = synthetic_trace(&g, 16, 7);
+        let budget_w = 150.0;
+        let ctx = GovernorContext {
+            power_budget_w: Some(budget_w),
+            ..quick_ctx()
+        };
+        let kinds = GovernorKind::all(945.0);
+        let (outcomes, table) = comparison(&g, &trace, &kinds, &ctx);
+        assert!(table.title.contains("budget 150 W"), "{}", table.title);
+        for o in &outcomes {
+            assert!(
+                o.peak_power_w <= budget_w + 1e-6,
+                "{}: peak {} W over the {budget_w} W cap",
+                o.label,
+                o.peak_power_w
+            );
+            assert!(o.mean_power_w <= o.peak_power_w + 1e-9);
+            assert!(o.energy_saving() > 0.0, "{} saved nothing under the cap", o.label);
+        }
+        // Uncapped boost exceeds the cap — the cap is doing real work.
+        let open = replay(&g, &trace, &GovernorKind::FixedBoost, &quick_ctx());
+        assert!(open.peak_power_w > budget_w, "boost draw {} W", open.peak_power_w);
+    }
+
+    #[test]
+    fn infeasible_deadline_fallback_still_respects_the_cap() {
+        // An unreachable deadline makes DeadlineAware error and the replay
+        // fall back to boost — the watt cap must still bind on that path.
+        let g = tesla_v100();
+        let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        let trace = TrafficTrace {
+            batches: vec![TraceBatch {
+                workload: w,
+                deadline_s: boost_t * 0.5,
+            }],
+        };
+        let budget_w = 150.0;
+        let ctx = GovernorContext {
+            power_budget_w: Some(budget_w),
+            ..quick_ctx()
+        };
+        let o = replay(&g, &trace, &GovernorKind::DeadlineAware, &ctx);
+        assert!(
+            o.peak_power_w <= budget_w + 1e-6,
+            "fallback breached the cap: {} W",
+            o.peak_power_w
+        );
+        assert_eq!(o.deadlines_met, 0, "the deadline really was infeasible");
+        // Uncapped, the same fallback runs at full boost power.
+        let open = replay(&g, &trace, &GovernorKind::DeadlineAware, &quick_ctx());
+        assert!(open.peak_power_w > budget_w);
     }
 
     #[test]

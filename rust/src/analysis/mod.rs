@@ -10,6 +10,7 @@ pub mod optimal;
 pub mod roofline;
 pub mod report;
 pub mod tables;
+pub mod telemetry;
 
 pub use govern::{
     comparison, synthetic_trace, synthetic_trace_with_menu, GovernorOutcome, TrafficTrace,

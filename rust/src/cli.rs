@@ -32,9 +32,13 @@ USAGE:
   fftsweep selftest [--artifacts artifacts]
   fftsweep serve    [--artifacts artifacts] [--jobs 256] [--governor fixed --clock 945]
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
-                    [--lengths 1000,1536,4096]
+                    [--lengths 1000,1536,4096] [--power-budget-w <W>]
+                    [--telemetry-out <file.json>] [--prom]
+  fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
+                    [--governor boost] [--power-budget-w <W>] [--seed 7]
+                    [--lengths 1024,4096] [--telemetry-out <file.json>] [--prom]
   fftsweep govern   [--gpu v100] [--batches 96] [--seed 7] [--clock 945] [--quick]
-                    [--lengths 1000,1536,16384]
+                    [--lengths 1000,1536,16384] [--budget-w <W>]
   fftsweep validate [--artifacts artifacts]
   fftsweep ablation [--gpu v100] [--n 16384]
   fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
@@ -46,6 +50,14 @@ LENGTHS: transform lengths are arbitrary (>= 1) — powers of two, smooth
 non-powers of two (mixed-radix 2/3/5 plans) and prime/Bluestein lengths
 all plan and serve; `serve --lengths` is admission-checked against the
 routable artifact set.
+
+POWER: `serve --power-budget-w W` keeps the fleet's rolling 1s simulated
+draw at or below W — an arbiter splits the cap into per-card watt shares
+(proportional to offered load, with hysteresis) and each worker's
+governor is capped through its budget hint. `fftsweep telemetry` replays
+one seeded trace uncapped vs capped and tabulates energy/job, simulated
+p50/p99 and draw; `--telemetry-out` writes the typed fleet snapshot as
+JSON and `--prom` prints Prometheus text exposition.
 
 GOVERNORS (the --governor values):
   boost        no DVFS: everything at the boost clock
@@ -69,6 +81,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "pipeline" => cmd_pipeline(args),
         "selftest" => cmd_selftest(args),
         "serve" => cmd_serve(args),
+        "telemetry" => cmd_telemetry(args),
         "govern" => cmd_govern(args),
         "validate" => cmd_validate(args),
         "ablation" => cmd_ablation(args),
@@ -297,6 +310,24 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--lengths 1000,1536,4096` strictly: a typo'd token is an error,
+/// not a silently smaller menu. `Ok(None)` when the flag is absent.
+fn lengths_arg(args: &Args) -> Result<Option<Vec<u64>>> {
+    let Some(ls) = args.get("lengths") else {
+        return Ok(None);
+    };
+    let menu: Vec<u64> = ls
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad length '{}' in --lengths", s.trim()))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!menu.is_empty(), "--lengths parsed to an empty menu");
+    Ok(Some(menu))
+}
+
 /// Fleet spec: `--gpus v100,p4,...` (heterogeneous) or `--cards N` copies
 /// of `--gpu`.
 fn fleet_arg(args: &Args, governor: &GovernorKind) -> Result<Vec<CardConfig>> {
@@ -316,24 +347,46 @@ fn fleet_arg(args: &Args, governor: &GovernorKind) -> Result<Vec<CardConfig>> {
         .collect())
 }
 
+/// Write/print telemetry for a finished engine run: `--telemetry-out`
+/// writes the typed snapshot as JSON, `--prom` prints Prometheus text.
+fn emit_telemetry(args: &Args, snapshot: &fftsweep::telemetry::FleetSnapshot) -> Result<()> {
+    if let Some(path) = args.get("telemetry-out") {
+        std::fs::write(path, fftsweep::telemetry::snapshot_json(snapshot).render() + "\n")
+            .with_context(|| format!("writing telemetry snapshot to {path}"))?;
+        println!("wrote telemetry snapshot to {path}");
+    }
+    if args.has("prom") {
+        print!("{}", fftsweep::telemetry::prometheus_text(snapshot));
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let jobs = args.usize_or("jobs", 256);
     let governor = governor_arg(args, "fixed")?;
     let fleet = fleet_arg(args, &governor)?;
     let n_cards = fleet.len();
+    let power_budget_w = args.parse_typed::<f64>("power-budget-w")?;
+    if let Some(w) = power_budget_w {
+        anyhow::ensure!(w > 0.0, "--power-budget-w must be positive, got {w}");
+    }
     let cfg = EngineConfig {
         governor_ctx: GovernorContext {
             deadline_s: args.parse_typed::<f64>("deadline-ms")?.map(|ms| ms * 1e-3),
             freq_stride: args.usize_or("freq-stride", 2),
             ..GovernorContext::default()
         },
+        power_budget_w,
         ..EngineConfig::default()
     };
     let rt = std::sync::Arc::new(Runtime::new(&dir)?);
     println!(
-        "serving on {n_cards} card(s), governor {} (runtime: {})",
+        "serving on {n_cards} card(s), governor {}{} (runtime: {})",
         governor.label(),
+        power_budget_w
+            .map(|w| format!(", power budget {w} W"))
+            .unwrap_or_default(),
         rt.platform()
     );
     let engine = Engine::start(rt, fleet, cfg)?;
@@ -342,19 +395,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `--lengths` restricts traffic to the given lengths; each one is
     // admission-checked against the router so a typo surfaces the typed
     // error taxonomy (with the routable set) instead of 0-job silence.
-    let lengths: Vec<u64> = if let Some(ls) = args.get("lengths") {
-        let mut out = Vec::new();
-        for tok in ls.split(',') {
-            let n: u64 = tok
-                .trim()
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad length '{}' in --lengths", tok.trim()))?;
-            engine.router().route(n, "f32")?;
-            out.push(n);
+    let lengths: Vec<u64> = match lengths_arg(args)? {
+        Some(menu) => {
+            for &n in &menu {
+                engine.router().route(n, "f32")?;
+            }
+            menu
         }
-        out
-    } else {
-        engine.router().supported_lengths("f32")
+        None => engine.router().supported_lengths("f32"),
     };
     anyhow::ensure!(!lengths.is_empty(), "no routable lengths");
     let t0 = std::time::Instant::now();
@@ -374,8 +422,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let dt = t0.elapsed();
     println!("served {ok}/{jobs} jobs in {:.3} s", dt.as_secs_f64());
-    println!("{}", engine.fleet_report());
+    let snapshot = engine.snapshot();
+    println!("{}", snapshot.render());
+    emit_telemetry(args, &snapshot)?;
     println!("{}", engine.shutdown());
+    Ok(())
+}
+
+/// `fftsweep telemetry`: replay one seeded job trace through an uncapped
+/// and a capped fleet and tabulate what the watt ceiling costs and buys.
+fn cmd_telemetry(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let governor = governor_arg(args, "boost")?;
+    let specs: Vec<GpuSpec> = fleet_arg(args, &governor)?
+        .into_iter()
+        .map(|c| c.spec)
+        .collect();
+    let jobs = args.usize_or("jobs", 256);
+    let seed = args.u64_or("seed", 7);
+    let lengths: Vec<u64> = lengths_arg(args)?.unwrap_or_else(|| vec![1024, 4096]);
+    // Default cap: half the fleet's aggregate TDP — deep enough to bite
+    // on any governor, feasible on every card mix.
+    let budget_w = match args.parse_typed::<f64>("power-budget-w")? {
+        Some(w) => {
+            anyhow::ensure!(w > 0.0, "--power-budget-w must be positive, got {w}");
+            w
+        }
+        None => 0.5 * specs.iter().map(|s| s.tdp_w).sum::<f64>(),
+    };
+    let rt = std::sync::Arc::new(Runtime::new(&dir)?);
+    let (stats, table) = fftsweep::analysis::telemetry::budget_comparison(
+        rt, &specs, &governor, jobs, &lengths, seed, budget_w,
+    )?;
+    println!("{}", table.to_ascii());
+    let capped = stats.last().expect("capped run present");
+    for c in &capped.snapshot.cards {
+        let share = c
+            .power_share_w
+            .map(|w| format!("{w:.0}"))
+            .unwrap_or_else(|| "inf".into());
+        println!(
+            "  capped card{} {}: share {share} W, 1s draw {:.1} W, {} transitions",
+            c.index, c.gpu, c.avg_1s_w, c.clock_transitions,
+        );
+    }
+    emit_telemetry(args, &capped.snapshot)?;
     Ok(())
 }
 
@@ -388,25 +479,18 @@ fn cmd_govern(args: &Args) -> Result<()> {
         .parse_typed::<f64>("clock")?
         .or_else(|| tables::table3_paper_mhz(gpu.name, Precision::Fp32))
         .unwrap_or(gpu.f_knee_mhz);
+    let budget_w = args.parse_typed::<f64>("budget-w")?;
+    if let Some(w) = budget_w {
+        anyhow::ensure!(w > 0.0, "--budget-w must be positive, got {w}");
+    }
     let ctx = GovernorContext {
         freq_stride: args.usize_or("freq-stride", if quick { 8 } else { 2 }),
+        power_budget_w: budget_w,
         ..GovernorContext::default()
     };
-    let trace = if let Some(ls) = args.get("lengths") {
-        // Same strictness as `serve --lengths`: a typo'd token is an
-        // error, not a silently smaller menu.
-        let menu: Vec<u64> = ls
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad length '{}' in --lengths", s.trim()))
-            })
-            .collect::<Result<_>>()?;
-        anyhow::ensure!(!menu.is_empty(), "--lengths parsed to an empty menu");
-        govern::synthetic_trace_with_menu(&gpu, batches, seed, &menu)
-    } else {
-        govern::synthetic_trace(&gpu, batches, seed)
+    let trace = match lengths_arg(args)? {
+        Some(menu) => govern::synthetic_trace_with_menu(&gpu, batches, seed, &menu),
+        None => govern::synthetic_trace(&gpu, batches, seed),
     };
     let kinds = GovernorKind::all(fixed_mhz);
     let (outcomes, table) = govern::comparison(&gpu, &trace, &kinds, &ctx);

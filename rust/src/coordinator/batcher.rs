@@ -163,6 +163,16 @@ impl Batcher {
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(|p| p.envelopes.len()).sum()
     }
+
+    /// Jobs queued in partial batches for one fleet card — the "offered
+    /// load" signal the power-budget arbiter folds into its shares.
+    pub fn pending_jobs_for_card(&self, card: usize) -> usize {
+        self.pending
+            .values()
+            .filter(|p| p.card == card)
+            .map(|p| p.envelopes.len())
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -316,6 +326,23 @@ mod tests {
         assert_eq!(b.pending_jobs(), 2);
         assert!(b.flush_slot(&a, 0).is_none(), "slot already empty");
         assert!(b.flush_slot(&name("missing"), 0).is_none());
+    }
+
+    #[test]
+    fn pending_jobs_per_card_counts_only_that_card() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let other = name("b");
+        let (e1, _r1) = env(1, 8);
+        let (e2, _r2) = env(2, 8);
+        let (e3, _r3) = env(3, 8);
+        b.push(&a, 8, 4, 0, e1).unwrap();
+        b.push(&a, 8, 4, 1, e2).unwrap();
+        b.push(&other, 8, 4, 0, e3).unwrap();
+        assert_eq!(b.pending_jobs_for_card(0), 2);
+        assert_eq!(b.pending_jobs_for_card(1), 1);
+        assert_eq!(b.pending_jobs_for_card(2), 0);
+        assert_eq!(b.pending_jobs(), 3);
     }
 
     #[test]

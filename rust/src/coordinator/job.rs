@@ -34,6 +34,10 @@ pub struct JobResult {
     /// Wall-clock microseconds the batch execution took (shared across the
     /// jobs batched together).
     pub exec_us: u64,
+    /// Simulated on-card batch time at the governed clock, s — the
+    /// latency a capped/governed clock actually costs (wall-clock here is
+    /// host compute and does not move with the simulated DVFS setting).
+    pub sim_batch_s: f64,
     /// How many jobs shared the executed batch.
     pub batch_occupancy: usize,
 }

@@ -3,6 +3,17 @@
 //! paper's DVFS result.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Full-precision energy totals, J. An `f64` pair behind a mutex instead
+/// of the old atomic-µJ counters: `(energy_j * 1e6) as u64` dropped the
+/// fractional microjoule of *every* batch, a systematic undercount that
+/// made low-power fleets look free (10k batches of 0.9 µJ summed to 0).
+#[derive(Debug, Default, Clone, Copy)]
+struct EnergyTotals {
+    j: f64,
+    boost_j: f64,
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -13,10 +24,7 @@ pub struct Metrics {
     pub batch_rows_used: AtomicU64,
     pub batch_rows_total: AtomicU64,
     pub exec_us_total: AtomicU64,
-    /// Simulated GPU energy at the coordinator's current clock, microjoules.
-    pub sim_energy_uj: AtomicU64,
-    /// Simulated GPU energy had every batch run at boost, microjoules.
-    pub sim_energy_boost_uj: AtomicU64,
+    energy: Mutex<EnergyTotals>,
 }
 
 impl Metrics {
@@ -28,10 +36,19 @@ impl Metrics {
     }
 
     pub fn record_energy(&self, energy_j: f64, boost_energy_j: f64) {
-        self.sim_energy_uj
-            .fetch_add((energy_j * 1e6) as u64, Ordering::Relaxed);
-        self.sim_energy_boost_uj
-            .fetch_add((boost_energy_j * 1e6) as u64, Ordering::Relaxed);
+        let mut e = self.energy.lock().unwrap();
+        e.j += energy_j;
+        e.boost_j += boost_energy_j;
+    }
+
+    /// Simulated GPU energy at the governed clocks, J (full precision).
+    pub fn energy_j(&self) -> f64 {
+        self.energy.lock().unwrap().j
+    }
+
+    /// Simulated GPU energy had every batch run at boost, J.
+    pub fn boost_energy_j(&self) -> f64 {
+        self.energy.lock().unwrap().boost_j
     }
 
     pub fn occupancy(&self) -> f64 {
@@ -44,11 +61,11 @@ impl Metrics {
 
     /// Energy saved by DVFS relative to boost (fraction).
     pub fn energy_saving(&self) -> f64 {
-        let boost = self.sim_energy_boost_uj.load(Ordering::Relaxed);
-        if boost == 0 {
+        let e = *self.energy.lock().unwrap();
+        if e.boost_j <= 0.0 {
             return 0.0;
         }
-        1.0 - self.sim_energy_uj.load(Ordering::Relaxed) as f64 / boost as f64
+        1.0 - e.j / e.boost_j
     }
 
     pub fn summary(&self) -> String {
@@ -90,5 +107,28 @@ mod tests {
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.energy_saving(), 0.0);
         assert!(m.summary().contains("jobs 0/0"));
+    }
+
+    #[test]
+    fn many_sub_microjoule_batches_sum_exactly() {
+        // The truncation regression: the old `(j * 1e6) as u64` counters
+        // floored every batch to whole microjoules, so 10_000 batches of
+        // 0.9 µJ (vs 1.9 µJ at boost) accounted as 0 J saved at 0 J spent.
+        let m = Metrics::default();
+        for _ in 0..10_000 {
+            m.record_energy(0.9e-6, 1.9e-6);
+        }
+        assert!((m.energy_j() - 9.0e-3).abs() < 1e-12, "{}", m.energy_j());
+        assert!((m.boost_energy_j() - 19.0e-3).abs() < 1e-12);
+        assert!((m.energy_saving() - (1.0 - 9.0 / 19.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_joules_survive_mixed_magnitudes() {
+        let m = Metrics::default();
+        m.record_energy(1234.5, 2000.25);
+        m.record_energy(0.5, 0.75);
+        assert_eq!(m.energy_j(), 1235.0);
+        assert_eq!(m.boost_energy_j(), 2001.0);
     }
 }

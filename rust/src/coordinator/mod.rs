@@ -37,6 +37,10 @@ use crate::pipeline::nvml::{ClockState, SimNvml};
 use crate::runtime::Runtime;
 use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
+use crate::telemetry::{
+    budget_key, clock_cap_for_budget, share_bounds_w, CardSnapshot, FleetSnapshot, PowerBudget,
+    PowerRecorder, RecorderConfig, ShareCell,
+};
 use crate::types::{FftWorkload, Precision};
 
 /// The serving error taxonomy: every way a job can be refused admission,
@@ -87,6 +91,15 @@ pub struct EngineConfig {
     pub max_batch_wait: Duration,
     /// Deadline/stride/tolerance knobs threaded to every governor.
     pub governor_ctx: GovernorContext,
+    /// Global fleet watt ceiling (`serve --power-budget-w`); `None` runs
+    /// uncapped. When set, the arbiter thread periodically redistributes
+    /// per-card shares proportional to offered load and every worker caps
+    /// its governor through the `GovernorContext` budget hint.
+    pub power_budget_w: Option<f64>,
+    /// How often the arbiter recomputes shares.
+    pub arbiter_period: Duration,
+    /// Per-card telemetry recorder sizing.
+    pub recorder: RecorderConfig,
 }
 
 impl Default for EngineConfig {
@@ -94,6 +107,9 @@ impl Default for EngineConfig {
         Self {
             max_batch_wait: Duration::from_millis(2),
             governor_ctx: GovernorContext::default(),
+            power_budget_w: None,
+            arbiter_period: Duration::from_millis(20),
+            recorder: RecorderConfig::default(),
         }
     }
 }
@@ -106,6 +122,11 @@ pub struct Card {
     pub nvml: Arc<SimNvml>,
     /// Per-card serving metrics.
     pub metrics: Arc<Metrics>,
+    /// Per-card power telemetry (draw series, cumulative joules,
+    /// per-length attribution, deadline misses).
+    pub recorder: Arc<PowerRecorder>,
+    /// The arbiter's current watt share for this card.
+    share: Arc<ShareCell>,
     /// Jobs routed to this card and not yet completed.
     inflight: Arc<AtomicU64>,
 }
@@ -113,6 +134,11 @@ pub struct Card {
 impl Card {
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The card's current watt share (`None` = uncapped).
+    pub fn power_share_w(&self) -> Option<f64> {
+        self.share.get()
     }
 }
 
@@ -127,6 +153,8 @@ pub struct Engine {
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     flusher: Option<JoinHandle<()>>,
+    arbiter: Option<JoinHandle<()>>,
+    power_budget_w: Option<f64>,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
     next_id: AtomicU64,
 }
@@ -142,6 +170,23 @@ impl Engine {
         let metrics = Arc::new(Metrics::default());
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
+        // Initial watt shares: an even split of the cap (clamped to each
+        // card's physical bounds) BEFORE any worker starts, so a capped
+        // fleet is capped from its very first batch — the arbiter then
+        // refines shares toward offered load.
+        let n_cards = fleet.len();
+        let initial_share = |spec: &GpuSpec| -> Arc<ShareCell> {
+            match cfg.power_budget_w {
+                Some(total) => {
+                    let (floor, ceil) = share_bounds_w(spec);
+                    Arc::new(ShareCell::with_share(
+                        (total / n_cards as f64).clamp(floor, ceil),
+                    ))
+                }
+                None => Arc::new(ShareCell::unlimited()),
+            }
+        };
+
         let mut cards = Vec::new();
         let mut batch_txs = Vec::new();
         let mut workers = Vec::new();
@@ -150,6 +195,11 @@ impl Engine {
             let card_metrics = Arc::new(Metrics::default());
             let nvml = Arc::new(SimNvml::new(&cc.spec));
             let inflight = Arc::new(AtomicU64::new(0));
+            let recorder = Arc::new(PowerRecorder::new(
+                crate::sim::power::idle_power_w(&cc.spec),
+                cfg.recorder.clone(),
+            ));
+            let share = initial_share(&cc.spec);
             let governor = cc.governor.make();
             let worker = WorkerState {
                 gpu: cc.spec.clone(),
@@ -158,6 +208,8 @@ impl Engine {
                 card_metrics: card_metrics.clone(),
                 nvml: nvml.clone(),
                 inflight: inflight.clone(),
+                recorder: recorder.clone(),
+                share: share.clone(),
                 ctx: cfg.governor_ctx.clone(),
             };
             workers.push(
@@ -170,6 +222,8 @@ impl Engine {
                 governor_label: cc.governor.label(),
                 nvml,
                 metrics: card_metrics,
+                recorder,
+                share,
                 inflight,
             });
             batch_txs.push(tx);
@@ -198,6 +252,54 @@ impl Engine {
             )?)
         };
 
+        // Power-budget arbiter: periodically resplit the global cap into
+        // per-card shares proportional to offered load, with deadband
+        // hysteresis so quiet load wobble never moves shares — and
+        // therefore never moves clocks. Offered load = inflight jobs
+        // (routed, not yet completed) + still-queued partial-batch jobs:
+        // the queued subset counts twice on purpose, pulling watts toward
+        // cards with backlog so they can clock up and drain it.
+        let arbiter = if let Some(total_w) = cfg.power_budget_w {
+            let policy = PowerBudget::new(total_w);
+            let period = cfg.arbiter_period.max(Duration::from_millis(1));
+            let stop = shutdown.clone();
+            let batcher = batcher.clone();
+            let shares: Vec<Arc<ShareCell>> = cards.iter().map(|c| c.share.clone()).collect();
+            let inflights: Vec<Arc<AtomicU64>> =
+                cards.iter().map(|c| c.inflight.clone()).collect();
+            let bounds: Vec<(f64, f64)> = cards.iter().map(|c| share_bounds_w(&c.spec)).collect();
+            Some(
+                std::thread::Builder::new()
+                    .name("fftsweep-power-arbiter".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            std::thread::sleep(period);
+                            let loads: Vec<f64> = {
+                                let b = batcher.lock().unwrap();
+                                inflights
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(i, inf)| {
+                                        inf.load(Ordering::Relaxed) as f64
+                                            + b.pending_jobs_for_card(i) as f64
+                                    })
+                                    .collect()
+                            };
+                            let prev: Vec<Option<f64>> =
+                                shares.iter().map(|s| s.get()).collect();
+                            for (cell, share) in shares
+                                .iter()
+                                .zip(policy.redistribute(&loads, &bounds, &prev))
+                            {
+                                cell.set(Some(share));
+                            }
+                        }
+                    })?,
+            )
+        } else {
+            None
+        };
+
         Ok(Self {
             runtime,
             router,
@@ -207,6 +309,8 @@ impl Engine {
             metrics,
             workers,
             flusher,
+            arbiter,
+            power_budget_w: cfg.power_budget_w,
             shutdown,
             next_id: AtomicU64::new(1),
         })
@@ -335,30 +439,67 @@ impl Engine {
         false
     }
 
-    /// Per-card + fleet-aggregate metrics report.
-    pub fn fleet_report(&self) -> String {
-        let mut out = String::new();
-        for (i, c) in self.cards.iter().enumerate() {
-            out.push_str(&format!(
-                "card{i} {} [{}]: {} (clock transitions {})\n",
-                c.spec.name,
-                c.governor_label,
-                c.metrics.summary(),
-                c.nvml.transition_count()
-            ));
-        }
-        out.push_str(&format!("fleet: {}", self.metrics.summary()));
-        out
+    /// The operator's global watt ceiling (`None` = uncapped).
+    pub fn power_budget_w(&self) -> Option<f64> {
+        self.power_budget_w
     }
 
-    /// Stop the fleet deterministically: flush, join the flusher, close
-    /// every card channel, join every worker. Returns the final fleet
-    /// summary line (all counters quiescent once this returns).
+    /// Typed fleet state: per-card serving counters + power telemetry
+    /// plus the fleet aggregate — what the exporters, benches and tests
+    /// consume (the report string is [`FleetSnapshot::render`] on top).
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let cards = self
+            .cards
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let m = &c.metrics;
+                CardSnapshot {
+                    index: i,
+                    gpu: c.spec.name.to_string(),
+                    governor: c.governor_label.clone(),
+                    jobs_submitted: m.jobs_submitted.load(Ordering::Relaxed),
+                    jobs_completed: m.jobs_completed.load(Ordering::Relaxed),
+                    jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
+                    batches: m.batches_executed.load(Ordering::Relaxed),
+                    occupancy: m.occupancy(),
+                    exec_s: m.exec_us_total.load(Ordering::Relaxed) as f64 / 1e6,
+                    energy_j: m.energy_j(),
+                    boost_energy_j: m.boost_energy_j(),
+                    energy_saving: m.energy_saving(),
+                    clock_transitions: c.nvml.transition_count() as u64,
+                    current_clock_mhz: c.nvml.current_clock_mhz(),
+                    instant_w: c.recorder.instant_w(),
+                    avg_1s_w: c.recorder.avg_short_w(),
+                    avg_10s_w: c.recorder.avg_long_w(),
+                    busy_s: c.recorder.busy_s(),
+                    energy_per_job_j: c.recorder.energy_per_job_j(),
+                    deadline_misses: c.recorder.deadline_misses(),
+                    power_share_w: c.share.get(),
+                    inflight: c.inflight(),
+                }
+            })
+            .collect();
+        FleetSnapshot::from_cards(cards, self.power_budget_w)
+    }
+
+    /// Per-card + fleet-aggregate report (the snapshot, rendered).
+    pub fn fleet_report(&self) -> String {
+        self.snapshot().render()
+    }
+
+    /// Stop the fleet deterministically: flush, join the flusher and the
+    /// power arbiter, close every card channel, join every worker.
+    /// Returns the final fleet summary line (all counters quiescent once
+    /// this returns).
     pub fn shutdown(mut self) -> String {
         self.shutdown.store(true, Ordering::Relaxed);
         self.flush();
         if let Some(f) = self.flusher.take() {
             let _ = f.join();
+        }
+        if let Some(a) = self.arbiter.take() {
+            let _ = a.join();
         }
         // Dropping every sender closes each card's channel; workers drain
         // what was already queued and then exit.
@@ -366,7 +507,7 @@ impl Engine {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        format!("final {}", self.fleet_report().lines().last().unwrap_or_default())
+        format!("final fleet: {}", self.snapshot().fleet_summary())
     }
 }
 
@@ -378,6 +519,8 @@ struct WorkerState {
     card_metrics: Arc<Metrics>,
     nvml: Arc<SimNvml>,
     inflight: Arc<AtomicU64>,
+    recorder: Arc<PowerRecorder>,
+    share: Arc<ShareCell>,
     ctx: GovernorContext,
 }
 
@@ -398,6 +541,10 @@ fn worker_loop(
     // actually changes its request.
     let mut modules: HashMap<Arc<str>, Arc<crate::runtime::LoadedModule>> = HashMap::new();
     let mut boost_runs: HashMap<(u64, u64), crate::sim::BatchRun> = HashMap::new();
+    // Memoized watt→clock inversions per (n, device_batch, quarter-watt
+    // share): the arbiter's deadband keeps shares piecewise-constant, so
+    // steady state costs one HashMap hit per batch, not a table scan.
+    let mut budget_caps: HashMap<(u64, u64, u64), f64> = HashMap::new();
     let mut in_re: Vec<f32> = Vec::new();
     let mut in_im: Vec<f32> = Vec::new();
     let mut out_re: Vec<f32> = Vec::new();
@@ -419,9 +566,26 @@ fn worker_loop(
             Precision::Fp32,
             batch.device_batch * batch.n * Precision::Fp32.complex_bytes(),
         );
-        let requested = governor
-            .choose(&w.gpu, &workload, &w.ctx)
-            .unwrap_or(boost_mhz);
+        // The arbiter's current watt share reaches the governor as the
+        // context budget hint, and — for policies that ignore the hint —
+        // is enforced here: the requested clock never prices above the
+        // share. The cap is a frequency-table clock, so it snaps to
+        // itself and share stability ⇒ request stability ⇒ no NVML
+        // re-lock (bounded transition count under the arbiter).
+        let share = w.share.get();
+        let ctx = GovernorContext {
+            power_budget_w: share,
+            ..w.ctx.clone()
+        };
+        let mut requested = governor.choose(&w.gpu, &workload, &ctx).unwrap_or(boost_mhz);
+        if let Some(budget_w) = share {
+            let cap = *budget_caps
+                .entry((batch.n, batch.device_batch, budget_key(budget_w)))
+                .or_insert_with(|| {
+                    clock_cap_for_budget(&w.gpu, &workload, budget_w, ctx.freq_stride)
+                });
+            requested = requested.min(cap);
+        }
         let clock = if requested == last_requested {
             last_clock
         } else {
@@ -471,8 +635,21 @@ fn worker_loop(
         w.fleet_metrics.record_energy(run.energy_j, boost.energy_j);
         w.card_metrics.record_energy(run.energy_j, boost.energy_j);
 
-        // Close the feedback loop for adaptive policies.
+        // Telemetry: one ring push per batch (instant draw, rolling
+        // windows, cumulative joules, per-length attribution, misses).
         let deadline = w.ctx.effective_deadline_s(boost.timing.total_s);
+        let deadline_missed = run.timing.total_s > deadline * (1.0 + 1e-9);
+        w.recorder.record_batch(
+            clock,
+            run.timing.total_s,
+            run.avg_power_w,
+            run.energy_j,
+            batch.n,
+            occupancy as u64,
+            deadline_missed,
+        );
+
+        // Close the feedback loop for adaptive policies.
         governor.observe(&BatchFeedback {
             n: batch.n,
             f_mhz: clock,
@@ -493,6 +670,7 @@ fn worker_loop(
                         out_re: out_re[off..off + n].to_vec(),
                         out_im: out_im[off..off + n].to_vec(),
                         exec_us,
+                        sim_batch_s: run.timing.total_s,
                         batch_occupancy: occupancy,
                     };
                     w.fleet_metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);

@@ -39,6 +39,10 @@ struct CardState {
     /// (some tables run past boost, e.g. the P4's f_max 1531 vs boost 1063).
     start: usize,
     lengths: HashMap<u64, LengthState>,
+    /// Memoized power-budget ceilings: (n, quarter-watt share) → index of
+    /// the fastest in-budget clock. The arbiter's hint lowers the top of
+    /// the descent range instead of fighting it from outside.
+    budget_ceilings: HashMap<(u64, u64), usize>,
 }
 
 pub struct Adaptive {
@@ -61,6 +65,7 @@ impl Adaptive {
                 freqs,
                 start,
                 lengths: HashMap::new(),
+                budget_ceilings: HashMap::new(),
             }
         })
     }
@@ -99,10 +104,47 @@ impl ClockGovernor for Adaptive {
         }
         let card = Self::card_state(&mut self.cards, gpu);
         let start = card.start;
+
+        // The power-budget hint lowers the top of the descent range: the
+        // ceiling is the fastest clock whose predicted draw fits the watt
+        // share (memoized per quarter-watt so share wobble below the
+        // arbiter's deadband never re-derives it).
+        let ceiling = match ctx.power_budget_w {
+            None => start,
+            Some(budget_w) => {
+                let key = (workload.n, crate::telemetry::budget_key(budget_w));
+                match card.budget_ceilings.get(&key).copied() {
+                    Some(i) => i,
+                    None => {
+                        let cap_mhz = crate::telemetry::clock_cap_for_budget(
+                            gpu,
+                            workload,
+                            budget_w,
+                            ctx.freq_stride.max(1),
+                        );
+                        let i = card
+                            .freqs
+                            .iter()
+                            .position(|&f| f <= cap_mhz + 1e-9)
+                            .unwrap_or(card.freqs.len() - 1)
+                            .max(start);
+                        card.budget_ceilings.insert(key, i);
+                        i
+                    }
+                }
+            }
+        };
+
         let state = card
             .lengths
             .entry(workload.n)
             .or_insert_with(|| LengthState { idx: start, ewma_slack: 0.0, observed: 0 });
+        if state.idx < ceiling {
+            // The share tightened under us: snap below the new ceiling and
+            // re-observe from there.
+            state.idx = ceiling;
+            state.ewma_slack = 0.0;
+        }
 
         // Step down one table entry when the EWMA says the slack persists,
         // but only if the next clock is predicted feasible AND cheaper.
@@ -120,8 +162,11 @@ impl ClockGovernor for Adaptive {
 
         // Feasibility clamp: retreat toward boost until the prediction fits
         // the deadline (exact under the analytic model, so deadlines are
-        // never missed by construction).
-        while state.idx > start
+        // never missed by construction) — but never above the budget
+        // ceiling: the watt share is a hard envelope, the deadline a soft
+        // one, so an over-tight share surfaces as deadline misses in the
+        // telemetry rather than as a budget breach.
+        while state.idx > ceiling
             && run_batch(gpu, workload, card.freqs[state.idx]).timing.total_s > deadline
         {
             state.idx -= 1;
@@ -283,6 +328,71 @@ mod tests {
                 energy_j: run.energy_j,
             });
         }
+    }
+
+    #[test]
+    fn budget_ceiling_bounds_the_descent_range() {
+        // Under a watt share the descent starts at the budget ceiling (not
+        // boost), every governed clock prices within the share, and
+        // deadline-pressure retreats stop at the ceiling instead of
+        // breaching the budget.
+        let g = tesla_v100();
+        let w = wl(16384);
+        let boost_t = run_batch(&g, &w, g.boost_clock_mhz).timing.total_s;
+        // Budget that admits ~80% of boost: below boost power (so the
+        // ceiling bites) but above the energy knee (so descent room
+        // remains below the ceiling — `energy_minimum_below_boost_v100`
+        // pins the optimum under 0.8×boost).
+        let budget_w = run_batch(&g, &w, 0.8 * g.boost_clock_mhz).avg_power_w + 1.0;
+        let ctx = GovernorContext {
+            deadline_s: Some(boost_t * 1.01), // tight: wants boost
+            freq_stride: 4,
+            power_budget_w: Some(budget_w),
+            ..GovernorContext::default()
+        };
+        let mut gov = Adaptive::new();
+        for _ in 0..8 {
+            let f = gov.choose(&g, &w, &ctx).expect("boost-feasible deadline");
+            let run = run_batch(&g, &w, f);
+            assert!(
+                run.avg_power_w <= budget_w + 1e-9,
+                "{f} MHz draws {} W over the {budget_w} W share",
+                run.avg_power_w
+            );
+            assert!(f < g.boost_clock_mhz, "ceiling must sit below boost");
+            gov.observe(&BatchFeedback {
+                n: w.n,
+                f_mhz: f,
+                time_s: run.timing.total_s,
+                deadline_s: boost_t * 1.01,
+                slack: 1.0 - run.timing.total_s / (boost_t * 1.01),
+                energy_j: run.energy_j,
+            });
+        }
+        // A loose deadline still lets the descent walk below the ceiling.
+        let loose = GovernorContext {
+            deadline_s: Some(boost_t * 6.0),
+            freq_stride: 4,
+            power_budget_w: Some(budget_w),
+            ..GovernorContext::default()
+        };
+        let mut gov = Adaptive::new();
+        let first = gov.choose(&g, &w, &loose).unwrap();
+        for _ in 0..40 {
+            let f = gov.choose(&g, &w, &loose).unwrap();
+            let run = run_batch(&g, &w, f);
+            assert!(run.avg_power_w <= budget_w + 1e-9);
+            gov.observe(&BatchFeedback {
+                n: w.n,
+                f_mhz: f,
+                time_s: run.timing.total_s,
+                deadline_s: boost_t * 6.0,
+                slack: 1.0 - run.timing.total_s / (boost_t * 6.0),
+                energy_j: run.energy_j,
+            });
+        }
+        let last = gov.choose(&g, &w, &loose).unwrap();
+        assert!(last < first, "descent must continue below the ceiling: {last} vs {first}");
     }
 
     #[test]

@@ -29,11 +29,47 @@ impl ClockGovernor for FixedBoost {
     }
 }
 
+/// Memoized power-budget clock cap, shared by the static policies: one
+/// watt→clock inversion per (card, length, quarter-watt share), so the
+/// per-batch cost of honoring the hint is a `HashMap` hit.
+#[derive(Default)]
+struct BudgetCaps {
+    caps: HashMap<(String, u64, u64), f64>,
+}
+
+impl BudgetCaps {
+    /// Apply the context's budget hint to a chosen clock (identity when
+    /// uncapped).
+    fn apply(
+        &mut self,
+        gpu: &GpuSpec,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
+        chosen_mhz: f64,
+    ) -> f64 {
+        let Some(budget_w) = ctx.power_budget_w else {
+            return chosen_mhz;
+        };
+        let key = (
+            gpu.name.to_string(),
+            workload.n,
+            crate::telemetry::budget_key(budget_w),
+        );
+        let cap = *self.caps.entry(key).or_insert_with(|| {
+            crate::telemetry::clock_cap_for_budget(gpu, workload, budget_w, ctx.freq_stride)
+        });
+        chosen_mhz.min(cap)
+    }
+}
+
 /// One operator-chosen locked clock, snapped to the card's frequency table
 /// (what `nvmlDeviceSetGpuLockedClocks` would do with the raw request).
+/// A power-budget hint lowers the lock to the share's fastest feasible
+/// clock.
 pub struct FixedClock {
     requested_mhz: f64,
     snapped: HashMap<String, f64>,
+    budget: BudgetCaps,
 }
 
 impl FixedClock {
@@ -41,6 +77,7 @@ impl FixedClock {
         Self {
             requested_mhz: mhz,
             snapped: HashMap::new(),
+            budget: BudgetCaps::default(),
         }
     }
 }
@@ -53,14 +90,14 @@ impl ClockGovernor for FixedClock {
     fn choose(
         &mut self,
         gpu: &GpuSpec,
-        _workload: &FftWorkload,
-        _ctx: &GovernorContext,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
     ) -> Result<f64, GovernorError> {
         let f = *self
             .snapped
             .entry(gpu.name.to_string())
             .or_insert_with(|| freq_table(gpu).snap(self.requested_mhz));
-        Ok(f)
+        Ok(self.budget.apply(gpu, workload, ctx, f))
     }
 }
 
@@ -69,11 +106,15 @@ impl ClockGovernor for FixedClock {
 /// quick measurement sweep and cached.
 pub struct CommonClock {
     cache: HashMap<String, f64>,
+    budget: BudgetCaps,
 }
 
 impl CommonClock {
     pub fn new() -> Self {
-        Self { cache: HashMap::new() }
+        Self {
+            cache: HashMap::new(),
+            budget: BudgetCaps::default(),
+        }
     }
 
     fn derive(gpu: &GpuSpec) -> f64 {
@@ -106,14 +147,14 @@ impl ClockGovernor for CommonClock {
     fn choose(
         &mut self,
         gpu: &GpuSpec,
-        _workload: &FftWorkload,
-        _ctx: &GovernorContext,
+        workload: &FftWorkload,
+        ctx: &GovernorContext,
     ) -> Result<f64, GovernorError> {
         let f = *self
             .cache
             .entry(gpu.name.to_string())
             .or_insert_with(|| Self::derive(gpu));
-        Ok(f)
+        Ok(self.budget.apply(gpu, workload, ctx, f))
     }
 }
 
@@ -167,6 +208,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn budget_hint_lowers_fixed_and_common_locks() {
+        // The paper's production policies under an arbiter share: a tight
+        // watt budget pulls the lock below the policy's own choice, and a
+        // generous one leaves it alone. The cap is memoized: repeat
+        // choices under the same share are identical.
+        let g = tesla_v100();
+        let w = wl(&g, 16384);
+        let open = GovernorContext::default();
+        let tight = GovernorContext {
+            power_budget_w: Some(110.0),
+            ..GovernorContext::default()
+        };
+        let rich = GovernorContext {
+            power_budget_w: Some(10_000.0),
+            ..GovernorContext::default()
+        };
+        let mut fixed = FixedClock::new(1400.0);
+        let f_open = fixed.choose(&g, &w, &open).unwrap();
+        let f_tight = fixed.choose(&g, &w, &tight).unwrap();
+        assert!(f_tight < f_open, "{f_tight} !< {f_open}");
+        assert!(
+            crate::sim::run_batch(&g, &w, f_tight).avg_power_w <= 110.0 + 1e-9,
+            "capped lock still over budget"
+        );
+        assert_eq!(fixed.choose(&g, &w, &tight).unwrap(), f_tight, "memoized");
+        assert_eq!(fixed.choose(&g, &w, &rich).unwrap(), f_open);
+
+        let mut common = CommonClock::new();
+        let c_open = common.choose(&g, &w, &open).unwrap();
+        let c_tight = common.choose(&g, &w, &tight).unwrap();
+        assert!(c_tight <= c_open);
+        assert!(crate::sim::run_batch(&g, &w, c_tight).avg_power_w <= 110.0 + 1e-9);
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct GovernorContext {
     /// Allowed slowdown vs boost when no explicit deadline is given
     /// (the paper's "<10%" envelope → 1.10).
     pub slack_tolerance: f64,
+    /// Power-budget hint, W: the arbiter's watt share for this card.
+    /// `None` = uncapped. Governors that keep descent/ceiling state
+    /// honor it directly; [`choose_with_budget`] enforces it for all.
+    pub power_budget_w: Option<f64>,
 }
 
 impl Default for GovernorContext {
@@ -54,6 +58,7 @@ impl Default for GovernorContext {
             deadline_s: None,
             freq_stride: 2,
             slack_tolerance: 1.10,
+            power_budget_w: None,
         }
     }
 }
@@ -64,6 +69,32 @@ impl GovernorContext {
     pub fn effective_deadline_s(&self, boost_time_s: f64) -> f64 {
         self.deadline_s.unwrap_or(boost_time_s * self.slack_tolerance)
     }
+
+    /// The fastest clock the power-budget hint permits for `workload`
+    /// (`None` when uncapped). A table scan over the analytic model —
+    /// callers on hot paths memoize by [`crate::telemetry::budget_key`].
+    pub fn budget_cap_mhz(&self, gpu: &GpuSpec, workload: &FftWorkload) -> Option<f64> {
+        self.power_budget_w
+            .map(|w| crate::telemetry::clock_cap_for_budget(gpu, workload, w, self.freq_stride))
+    }
+}
+
+/// Governor choice with the power budget enforced: whatever policy
+/// `gov` runs, the returned clock never draws more than the context's
+/// watt share. This is the single enforcement point the replay table
+/// (`analysis::govern`) and any budget-unaware policy rely on; the
+/// engine's workers apply the same cap with a memoized watt→clock map.
+pub fn choose_with_budget(
+    gov: &mut dyn ClockGovernor,
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    ctx: &GovernorContext,
+) -> Result<f64, GovernorError> {
+    let f = gov.choose(gpu, workload, ctx)?;
+    Ok(match ctx.budget_cap_mhz(gpu, workload) {
+        Some(cap) => f.min(cap),
+        None => f,
+    })
 }
 
 /// Outcome of one governed batch, fed back to the governor.
@@ -232,6 +263,51 @@ mod tests {
             assert_eq!(via_gov.energy_j, via_boost.energy_j, "N={n}");
             assert_eq!(via_gov.timing.total_s, via_boost.timing.total_s, "N={n}");
         }
+    }
+
+    #[test]
+    fn budget_hint_caps_every_policy() {
+        // choose_with_budget: under a tight watt share, every governor's
+        // chosen clock prices at or below the share.
+        let g = tesla_v100();
+        let w = wl(16384);
+        let ctx = GovernorContext {
+            power_budget_w: Some(130.0),
+            freq_stride: 4,
+            ..GovernorContext::default()
+        };
+        for kind in GovernorKind::all(945.0) {
+            let mut gov = kind.make();
+            let f = choose_with_budget(gov.as_mut(), &g, &w, &ctx).expect("feasible");
+            let p = run_batch(&g, &w, f).avg_power_w;
+            assert!(
+                p <= 130.0 + 1e-9,
+                "{}: {f} MHz draws {p} W over the 130 W share",
+                gov.name()
+            );
+        }
+        // an uncapped context changes nothing
+        let open = GovernorContext { freq_stride: 4, ..GovernorContext::default() };
+        let mut gov = GovernorKind::FixedBoost.make();
+        assert_eq!(
+            choose_with_budget(gov.as_mut(), &g, &w, &open).unwrap(),
+            g.boost_clock_mhz
+        );
+    }
+
+    #[test]
+    fn generous_budget_leaves_choices_alone() {
+        let g = tesla_v100();
+        let w = wl(16384);
+        let rich = GovernorContext {
+            power_budget_w: Some(10_000.0),
+            ..GovernorContext::default()
+        };
+        let mut gov = GovernorKind::FixedClock(945.0).make();
+        let capped = choose_with_budget(gov.as_mut(), &g, &w, &rich).unwrap();
+        let mut gov2 = GovernorKind::FixedClock(945.0).make();
+        let open = gov2.choose(&g, &w, &GovernorContext::default()).unwrap();
+        assert_eq!(capped, open);
     }
 
     #[test]

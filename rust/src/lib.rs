@@ -23,5 +23,6 @@ pub mod harness;
 pub mod pipeline;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod types;
 pub mod util;

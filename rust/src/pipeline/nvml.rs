@@ -96,6 +96,14 @@ impl SimNvml {
         self.transitions.lock().unwrap().len()
     }
 
+    /// The full transition trace: every lock/reset with the effective
+    /// clock after it (the Fig 19 series; telemetry renders it so an
+    /// operator can see that a budget arbiter settles instead of
+    /// thrashing).
+    pub fn transition_trace(&self) -> Vec<(ClockState, f64)> {
+        self.transitions.lock().unwrap().clone()
+    }
+
     /// Whether this board accepts `set_gpu_locked_clocks` (Tesla-class).
     /// Single source of truth for the check — consumers should ask the
     /// handle instead of re-matching on the GPU name.
@@ -138,6 +146,19 @@ mod tests {
         nv.reset_gpu_locked_clocks();
         assert_eq!(nv.current_clock_mhz(), 1530.0);
         assert_eq!(nv.transition_count(), 2);
+    }
+
+    #[test]
+    fn transition_trace_records_states_and_clocks() {
+        let nv = SimNvml::new(&tesla_v100());
+        nv.set_gpu_locked_clocks(945.0, 945.0).unwrap();
+        nv.reset_gpu_locked_clocks();
+        let trace = nv.transition_trace();
+        assert_eq!(trace.len(), nv.transition_count());
+        assert!(matches!(trace[0].0, ClockState::Locked { .. }));
+        assert!((trace[0].1 - 945.0).abs() <= 8.0);
+        assert_eq!(trace[1].0, ClockState::Default);
+        assert_eq!(trace[1].1, 1530.0);
     }
 
     #[test]

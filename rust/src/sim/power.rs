@@ -103,6 +103,35 @@ mod tests {
     }
 
     #[test]
+    fn avg_batch_power_monotone_across_full_table() {
+        // The telemetry watt→clock inversion
+        // (`telemetry::clock_cap_for_budget`) walks the frequency table
+        // from the top and stops at the first clock whose mean batch draw
+        // fits the budget — which is only the *fastest* feasible clock if
+        // mean draw never rises as the clock falls. Pin that invariant
+        // over every in-envelope table entry of every card.
+        for g in all_gpus() {
+            let w = FftWorkload::new(16384, Precision::Fp32, g.working_set_bytes);
+            let mut last = f64::MAX;
+            for f in freq_table(&g)
+                .stride(2)
+                .into_iter()
+                .filter(|&f| f <= g.boost_clock_mhz + 1e-9)
+            {
+                let p = crate::sim::run_batch(&g, &w, f).avg_power_w;
+                // Sub-watt model wiggle is tolerable (the cap search
+                // re-checks the budget per clock); a real rise is not.
+                assert!(
+                    p <= last + 0.5,
+                    "{}: avg power rose {last} → {p} W at {f} MHz",
+                    g.name
+                );
+                last = p.min(last);
+            }
+        }
+    }
+
+    #[test]
     fn nonlinear_drop_around_knee() {
         // Fig 8: the power-vs-clock curve is non-linear — per MHz it falls
         // faster on the voltage ramp (above the knee) than on the voltage

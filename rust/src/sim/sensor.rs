@@ -41,8 +41,16 @@ impl PowerTimeline {
         self.segments.iter().filter(|s| s.2).map(|s| s.0).sum()
     }
 
-    /// Power at absolute time t (None past the end).
+    /// Power at absolute time t (None before t=0 or past the end).
+    /// Segment edges belong to the *following* segment: a boundary
+    /// timestamp reads the segment that starts there, and the final
+    /// end-time reads None — the same half-open `[start, end)` convention
+    /// as [`TimelineIndex::power_at`], which the telemetry sampler leans
+    /// on (boundary-tested below).
     pub fn power_at(&self, t: f64) -> Option<(f64, bool)> {
+        if t < 0.0 {
+            return None;
+        }
         let mut acc = 0.0;
         for &(d, p, c) in &self.segments {
             if t < acc + d {
@@ -188,6 +196,66 @@ mod tests {
         assert_eq!(t.power_at(0.5), Some((10.0, true)));
         assert_eq!(t.power_at(1.5), Some((20.0, false)));
         assert_eq!(t.power_at(2.5), None);
+    }
+
+    #[test]
+    fn power_at_exact_segment_edges_and_past_the_end() {
+        // Boundary contract the telemetry sampler leans on: edges belong
+        // to the following segment ([start, end) per segment), the total
+        // duration itself is past-the-end, and negative time is None —
+        // identically for the linear scan and the binary-search index.
+        let mut t = PowerTimeline::default();
+        t.push(1.0, 10.0, true);
+        t.push(1.0, 20.0, false);
+        t.push(0.5, 30.0, true);
+        let idx = t.index();
+        // t = 0 reads the first segment
+        assert_eq!(t.power_at(0.0), Some((10.0, true)));
+        assert_eq!(idx.power_at(0.0), Some((10.0, true)));
+        // exact interior edges read the segment that starts there
+        assert_eq!(t.power_at(1.0), Some((20.0, false)));
+        assert_eq!(idx.power_at(1.0), Some((20.0, false)));
+        assert_eq!(t.power_at(2.0), Some((30.0, true)));
+        assert_eq!(idx.power_at(2.0), Some((30.0, true)));
+        // the final end-time and beyond are None
+        assert_eq!(t.power_at(2.5), None);
+        assert_eq!(idx.power_at(2.5), None);
+        assert_eq!(t.power_at(1e9), None);
+        assert_eq!(idx.power_at(1e9), None);
+        // negative time is None on both paths (the scan used to return
+        // the first segment here, diverging from the index)
+        assert_eq!(t.power_at(-0.25), None);
+        assert_eq!(idx.power_at(-0.25), None);
+    }
+
+    #[test]
+    fn index_matches_scan_on_a_dense_grid() {
+        let mut t = PowerTimeline::default();
+        t.push(0.3, 100.0, true);
+        t.push(0.7, 40.0, false);
+        t.push(0.2, 150.0, true);
+        t.push(0.8, 60.0, true);
+        let idx = t.index();
+        let mut x = -0.1;
+        while x < 2.2 {
+            assert_eq!(t.power_at(x), idx.power_at(x), "diverged at t={x}");
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_length_segments_lookup_none() {
+        let empty = PowerTimeline::default();
+        assert_eq!(empty.power_at(0.0), None);
+        assert_eq!(empty.index().power_at(0.0), None);
+        // zero/negative-duration pushes are dropped entirely
+        let mut t = PowerTimeline::default();
+        t.push(0.0, 99.0, true);
+        t.push(-1.0, 99.0, true);
+        assert!(t.segments.is_empty());
+        t.push(1.0, 50.0, true);
+        assert_eq!(t.power_at(0.5), Some((50.0, true)));
+        assert_eq!(t.index().power_at(1.0), None, "end of the only segment");
     }
 
     #[test]

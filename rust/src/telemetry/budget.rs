@@ -1,0 +1,338 @@
+//! Fleet power-budget arbitration.
+//!
+//! An operator cap (`serve --power-budget-w W`) is a *fleet* quantity; the
+//! DVFS knob is *per card*. The [`PowerBudget`] arbiter closes that gap:
+//! it periodically splits the global watt ceiling into per-card shares
+//! proportional to each card's offered load (inflight + queued jobs),
+//! clamped to what the card can physically do (its idle floor and TDP),
+//! with a deadband so small load wobbles do not move shares — and
+//! therefore do not move clocks (no per-batch NVML thrash; asserted
+//! against `SimNvml::transition_count` in the integration tests).
+//!
+//! Shares reach the workers through a lock-free [`ShareCell`] each, and
+//! reach the governors as the [`crate::governor::GovernorContext`]
+//! `power_budget_w` hint. [`clock_cap_for_budget`] is the shared
+//! watt→clock inversion: the fastest supported clock whose predicted
+//! batch draw fits the share (board power is monotone in clock — tested
+//! in `sim::power`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sim::freq_table::freq_table;
+use crate::sim::{run_batch, GpuSpec};
+use crate::types::FftWorkload;
+
+/// Lock-free per-card watt share: an `f64` in atomic bits, with
+/// `+inf` meaning "uncapped". Writers (the arbiter) and readers (the
+/// card worker, once per batch) never block each other.
+#[derive(Debug)]
+pub struct ShareCell(AtomicU64);
+
+impl ShareCell {
+    pub fn unlimited() -> Self {
+        Self(AtomicU64::new(f64::INFINITY.to_bits()))
+    }
+
+    pub fn with_share(w: f64) -> Self {
+        Self(AtomicU64::new(w.to_bits()))
+    }
+
+    /// The current share; `None` when uncapped.
+    pub fn get(&self) -> Option<f64> {
+        let w = f64::from_bits(self.0.load(Ordering::Relaxed));
+        if w.is_finite() {
+            Some(w)
+        } else {
+            None
+        }
+    }
+
+    pub fn set(&self, share: Option<f64>) {
+        let w = share.unwrap_or(f64::INFINITY);
+        self.0.store(w.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Quantize a watt share to quarter-watt resolution — the memoization key
+/// workers use for their watt→clock cap cache, so sub-deadband share
+/// wiggle can never grow the cache or re-derive a cap.
+pub fn budget_key(share_w: f64) -> u64 {
+    (share_w.max(0.0) * 4.0).round() as u64
+}
+
+/// Fastest supported clock (at or below boost) whose predicted mean batch
+/// draw fits `budget_w` for this workload. Board power falls monotonically
+/// with clock, so the first feasible entry of the descending table is the
+/// answer; if even the table floor exceeds the budget the floor is
+/// returned (best effort — the share was below the card's physical
+/// minimum). The returned clock is always a frequency-table entry.
+pub fn clock_cap_for_budget(
+    gpu: &GpuSpec,
+    workload: &FftWorkload,
+    budget_w: f64,
+    freq_stride: usize,
+) -> f64 {
+    let table = freq_table(gpu);
+    for f in table.stride(freq_stride.max(1)) {
+        if f > gpu.boost_clock_mhz + 1e-9 {
+            continue;
+        }
+        if run_batch(gpu, workload, f).avg_power_w <= budget_w {
+            return f;
+        }
+    }
+    table.f_min_mhz
+}
+
+/// Per-card physical share bounds: no share below the idle floor makes
+/// sense (the board draws it regardless), none above TDP is spendable.
+pub fn share_bounds_w(gpu: &GpuSpec) -> (f64, f64) {
+    (crate::sim::power::idle_power_w(gpu), gpu.tdp_w)
+}
+
+/// The fleet watt-ceiling arbiter (pure policy; the engine owns the
+/// thread that drives it).
+#[derive(Debug, Clone)]
+pub struct PowerBudget {
+    /// Global cap, W.
+    pub total_w: f64,
+    /// Relative deadband: a card's share only moves when the newly
+    /// computed share differs from the current one by more than this
+    /// fraction (hysteresis against clock thrash).
+    pub deadband_frac: f64,
+}
+
+impl PowerBudget {
+    pub fn new(total_w: f64) -> Self {
+        Self {
+            total_w,
+            deadband_frac: 0.10,
+        }
+    }
+
+    /// Split `total_w` into per-card shares proportional to `loads`
+    /// (offered jobs per card; all-idle falls back to an even split),
+    /// clamped to `bounds` (floor, ceiling) per card, then filtered
+    /// through the deadband against `prev`.
+    ///
+    /// Invariants (tested): every share is within its card's bounds; the
+    /// sum never exceeds `total_w` when the floors permit it (infeasible
+    /// budgets degrade to the floor vector — best effort); a load vector
+    /// whose proportional shares sit inside the deadband reproduces
+    /// `prev` exactly (share stability ⇒ clock stability).
+    pub fn redistribute(
+        &self,
+        loads: &[f64],
+        bounds: &[(f64, f64)],
+        prev: &[Option<f64>],
+    ) -> Vec<f64> {
+        assert_eq!(loads.len(), bounds.len());
+        assert_eq!(loads.len(), prev.len());
+        let n = loads.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let floors: f64 = bounds.iter().map(|b| b.0).sum();
+        let spend = (self.total_w - floors).max(0.0);
+
+        let total_load: f64 = loads.iter().map(|l| l.max(0.0)).sum();
+        let weight = |i: usize| {
+            if total_load > 0.0 {
+                loads[i].max(0.0) / total_load
+            } else {
+                1.0 / n as f64
+            }
+        };
+
+        // Proportional split of the spend above the floors, capped at each
+        // card's ceiling; one redistribution round hands capped overflow
+        // to the cards that still have headroom.
+        let mut shares: Vec<f64> = (0..n).map(|i| bounds[i].0 + spend * weight(i)).collect();
+        let mut overflow = 0.0;
+        let mut headroom_weight = 0.0;
+        for i in 0..n {
+            if shares[i] > bounds[i].1 {
+                overflow += shares[i] - bounds[i].1;
+                shares[i] = bounds[i].1;
+            } else {
+                headroom_weight += weight(i);
+            }
+        }
+        if overflow > 0.0 && headroom_weight > 0.0 {
+            for i in 0..n {
+                if shares[i] < bounds[i].1 {
+                    let extra = overflow * weight(i) / headroom_weight;
+                    shares[i] = (shares[i] + extra).min(bounds[i].1);
+                }
+            }
+        }
+
+        // Hysteresis: keep the previous share when the move is inside the
+        // deadband (a kept share is still clamped to the card's bounds).
+        let targets = shares.clone();
+        for i in 0..n {
+            if let Some(p) = prev[i] {
+                if (shares[i] - p).abs() <= self.deadband_frac * p {
+                    shares[i] = p.clamp(bounds[i].0, bounds[i].1);
+                }
+            }
+        }
+
+        // The cap outranks the deadband: if holding old shares while
+        // others rose pushed the sum over the total, walk the held-high
+        // shares back toward their freshly computed targets until the
+        // fleet fits again (the targets themselves sum within the total
+        // whenever the floors permit, so this always converges).
+        let mut sum: f64 = shares.iter().sum();
+        if sum > self.total_w + 1e-9 {
+            for i in 0..n {
+                if sum <= self.total_w + 1e-9 {
+                    break;
+                }
+                if shares[i] > targets[i] {
+                    let give = (shares[i] - targets[i]).min(sum - self.total_w);
+                    shares[i] -= give;
+                    sum -= give;
+                }
+            }
+        }
+        shares
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::{tesla_p4, tesla_v100};
+    use crate::types::Precision;
+
+    fn wl(gpu: &GpuSpec, n: u64) -> FftWorkload {
+        FftWorkload::new(n, Precision::Fp32, gpu.working_set_bytes)
+    }
+
+    #[test]
+    fn share_cell_roundtrips() {
+        let c = ShareCell::unlimited();
+        assert_eq!(c.get(), None);
+        c.set(Some(123.5));
+        assert_eq!(c.get(), Some(123.5));
+        c.set(None);
+        assert_eq!(c.get(), None);
+        let c2 = ShareCell::with_share(60.25);
+        assert_eq!(c2.get(), Some(60.25));
+        assert_eq!(budget_key(60.25), 241);
+        assert_eq!(budget_key(60.30), 241, "quarter-watt quantization");
+    }
+
+    #[test]
+    fn cap_is_monotone_in_budget_and_in_table() {
+        let g = tesla_v100();
+        let w = wl(&g, 16384);
+        let table = freq_table(&g);
+        let mut last = 0.0;
+        for budget in [80.0, 120.0, 160.0, 200.0, 260.0] {
+            let f = clock_cap_for_budget(&g, &w, budget, 2);
+            assert!(table.contains(f), "{f} not a table clock");
+            assert!(f >= last, "cap must rise with budget: {f} < {last}");
+            assert!(f <= g.boost_clock_mhz + 1e-9);
+            last = f;
+        }
+    }
+
+    #[test]
+    fn cap_respects_the_budget_it_was_derived_for() {
+        let g = tesla_v100();
+        let w = wl(&g, 16384);
+        for budget in [100.0, 150.0, 220.0] {
+            let f = clock_cap_for_budget(&g, &w, budget, 2);
+            let p = run_batch(&g, &w, f).avg_power_w;
+            assert!(p <= budget + 1e-9, "cap {f} MHz draws {p} W > {budget} W");
+        }
+    }
+
+    #[test]
+    fn generous_budget_caps_at_boost_tiny_budget_at_floor() {
+        let g = tesla_v100();
+        let w = wl(&g, 16384);
+        let rich = clock_cap_for_budget(&g, &w, 10_000.0, 2);
+        assert!(rich >= g.boost_clock_mhz - 13.0, "rich cap {rich}");
+        let poor = clock_cap_for_budget(&g, &w, 1.0, 2);
+        assert!(
+            (poor - freq_table(&g).f_min_mhz).abs() < 1e-9,
+            "infeasible budget degrades to the table floor, got {poor}"
+        );
+    }
+
+    #[test]
+    fn shares_proportional_to_load_within_bounds() {
+        let b = PowerBudget::new(300.0);
+        let bounds = vec![(40.0, 300.0), (12.0, 75.0)];
+        let shares = b.redistribute(&[3.0, 1.0], &bounds, &[None, None]);
+        // floors 52, spend 248: 40 + 186 = 226, 12 + 62 = 74
+        assert!((shares[0] - 226.0).abs() < 1e-9, "{shares:?}");
+        assert!((shares[1] - 74.0).abs() < 1e-9, "{shares:?}");
+        assert!(shares.iter().sum::<f64>() <= 300.0 + 1e-9);
+    }
+
+    #[test]
+    fn idle_fleet_splits_evenly_and_ceilings_redistribute() {
+        let b = PowerBudget::new(200.0);
+        // card 1's TDP ceiling (75 W) caps its even share; card 0 absorbs
+        // the overflow.
+        let bounds = vec![(40.0, 300.0), (12.0, 75.0)];
+        let shares = b.redistribute(&[0.0, 0.0], &bounds, &[None, None]);
+        assert!(shares[1] <= 75.0 + 1e-9);
+        assert!(shares[0] > 100.0, "{shares:?}");
+        assert!(shares.iter().sum::<f64>() <= 200.0 + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_budget_degrades_to_floors() {
+        let b = PowerBudget::new(10.0);
+        let bounds = vec![(40.0, 300.0), (12.0, 75.0)];
+        let shares = b.redistribute(&[1.0, 1.0], &bounds, &[None, None]);
+        assert_eq!(shares, vec![40.0, 12.0]);
+    }
+
+    #[test]
+    fn deadband_keeps_previous_shares_stable() {
+        let b = PowerBudget::new(300.0);
+        let bounds = vec![(40.0, 300.0), (12.0, 75.0)];
+        let first = b.redistribute(&[2.0, 2.0], &bounds, &[None, None]);
+        // A small load wobble (< deadband worth of share movement) must
+        // reproduce the previous shares bit-for-bit.
+        let prev: Vec<Option<f64>> = first.iter().map(|&s| Some(s)).collect();
+        let second = b.redistribute(&[2.1, 2.0], &bounds, &prev);
+        assert_eq!(first, second, "deadband must suppress share wiggle");
+        // A big swing does move them.
+        let third = b.redistribute(&[8.0, 1.0], &bounds, &prev);
+        assert!(third[0] > first[0], "{third:?} vs {first:?}");
+    }
+
+    #[test]
+    fn cap_outranks_deadband_when_shares_rise_elsewhere() {
+        // Card 0's share rises past the deadband while card 1's stays
+        // within it: keeping card 1's old (higher) share would breach the
+        // total, so it is walked back to its fresh target.
+        let b = PowerBudget::new(162.0);
+        let bounds = vec![(38.6, 300.0), (11.55, 75.0)];
+        let prev = vec![Some(81.0), Some(73.0)];
+        let shares = b.redistribute(&[1.0, 1.0], &bounds, &prev);
+        assert!(
+            shares.iter().sum::<f64>() <= 162.0 + 1e-9,
+            "hysteresis breached the cap: {shares:?}"
+        );
+        for (s, (floor, ceil)) in shares.iter().zip(&bounds) {
+            assert!(*s >= *floor - 1e-9 && *s <= *ceil + 1e-9, "{shares:?}");
+        }
+    }
+
+    #[test]
+    fn real_card_bounds_are_sane() {
+        for g in [tesla_v100(), tesla_p4()] {
+            let (floor, ceil) = share_bounds_w(&g);
+            assert!(floor > 0.0 && floor < ceil, "{}: {floor}..{ceil}", g.name);
+            assert_eq!(ceil, g.tdp_w);
+        }
+    }
+}

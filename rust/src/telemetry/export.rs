@@ -1,0 +1,236 @@
+//! Telemetry exporters: machine-readable JSON (via the crate's own
+//! `util::json` writer — no serde in the offline crate set) and
+//! Prometheus text exposition format, both rendered from the typed
+//! [`FleetSnapshot`].
+
+use std::fmt::Write as _;
+
+use crate::telemetry::snapshot::{CardSnapshot, FleetSnapshot};
+use crate::util::json::Json;
+
+/// The JSON document `serve --telemetry-out` writes.
+pub fn snapshot_json(s: &FleetSnapshot) -> Json {
+    let mut root = Json::obj();
+    root.set("schema", 1u64.into());
+    root.set(
+        "power_budget_w",
+        s.power_budget_w.map(Json::Num).unwrap_or(Json::Null),
+    );
+
+    let mut cards = Json::Arr(Vec::new());
+    for c in &s.cards {
+        cards.push(card_json(c));
+    }
+    root.set("cards", cards);
+
+    let t = &s.fleet;
+    let mut fleet = Json::obj();
+    fleet.set("jobs_submitted", t.jobs_submitted.into());
+    fleet.set("jobs_completed", t.jobs_completed.into());
+    fleet.set("jobs_failed", t.jobs_failed.into());
+    fleet.set("batches", t.batches.into());
+    fleet.set("occupancy", t.occupancy.into());
+    fleet.set("exec_s", t.exec_s.into());
+    fleet.set("energy_j", t.energy_j.into());
+    fleet.set("boost_energy_j", t.boost_energy_j.into());
+    fleet.set("energy_saving", t.energy_saving.into());
+    fleet.set("draw_1s_w", t.draw_1s_w.into());
+    fleet.set("energy_per_job_j", t.energy_per_job_j.into());
+    fleet.set("deadline_misses", t.deadline_misses.into());
+    fleet.set("clock_transitions", t.clock_transitions.into());
+    root.set("fleet", fleet);
+    root
+}
+
+fn card_json(c: &CardSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("index", (c.index as u64).into());
+    o.set("gpu", c.gpu.as_str().into());
+    o.set("governor", c.governor.as_str().into());
+    o.set("jobs_submitted", c.jobs_submitted.into());
+    o.set("jobs_completed", c.jobs_completed.into());
+    o.set("jobs_failed", c.jobs_failed.into());
+    o.set("batches", c.batches.into());
+    o.set("occupancy", c.occupancy.into());
+    o.set("exec_s", c.exec_s.into());
+    o.set("energy_j", c.energy_j.into());
+    o.set("boost_energy_j", c.boost_energy_j.into());
+    o.set("energy_saving", c.energy_saving.into());
+    o.set("clock_transitions", c.clock_transitions.into());
+    o.set("current_clock_mhz", c.current_clock_mhz.into());
+    o.set("instant_w", c.instant_w.into());
+    o.set("avg_1s_w", c.avg_1s_w.into());
+    o.set("avg_10s_w", c.avg_10s_w.into());
+    o.set("busy_s", c.busy_s.into());
+    o.set("energy_per_job_j", c.energy_per_job_j.into());
+    o.set("deadline_misses", c.deadline_misses.into());
+    o.set(
+        "power_share_w",
+        c.power_share_w.map(Json::Num).unwrap_or(Json::Null),
+    );
+    o.set("inflight", c.inflight.into());
+    o
+}
+
+/// Prometheus label values: escape backslash, quote and newline
+/// (exposition-format string rules).
+fn prom_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn prom_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "NaN".into()
+    }
+}
+
+/// Render the snapshot in Prometheus text exposition format. Gauge names
+/// are prefixed `fftsweep_`; per-card series carry `card`, `gpu` and
+/// `governor` labels.
+fn gauge(out: &mut String, name: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+}
+
+pub fn prometheus_text(s: &FleetSnapshot) -> String {
+    let mut out = String::new();
+
+    // Build (metric, per-card extractor) pairs once so every series of a
+    // metric family sits under one HELP/TYPE header, as the format requires.
+    type Get = fn(&CardSnapshot) -> f64;
+    let families: &[(&str, &str, Get)] = &[
+        ("fftsweep_card_power_watts", "Simulated draw of the last executed batch", |c| c.instant_w),
+        ("fftsweep_card_power_1s_watts", "Rolling 1s mean simulated draw", |c| c.avg_1s_w),
+        ("fftsweep_card_power_10s_watts", "Rolling 10s mean simulated draw", |c| c.avg_10s_w),
+        ("fftsweep_card_energy_joules_total", "Cumulative simulated energy", |c| c.energy_j),
+        ("fftsweep_card_energy_per_job_joules", "Mean attributed energy per job", |c| c.energy_per_job_j),
+        ("fftsweep_card_jobs_completed_total", "Jobs completed", |c| c.jobs_completed as f64),
+        ("fftsweep_card_jobs_failed_total", "Jobs failed", |c| c.jobs_failed as f64),
+        ("fftsweep_card_deadline_misses_total", "Batches that missed their effective deadline", |c| {
+            c.deadline_misses as f64
+        }),
+        ("fftsweep_card_clock_transitions_total", "NVML clock-lock state transitions", |c| {
+            c.clock_transitions as f64
+        }),
+        ("fftsweep_card_clock_mhz", "Current effective core clock", |c| c.current_clock_mhz),
+        ("fftsweep_card_power_share_watts", "Arbiter watt share (+Inf when uncapped)", |c| {
+            c.power_share_w.unwrap_or(f64::INFINITY)
+        }),
+    ];
+    for (name, help, get) in families {
+        gauge(&mut out, name, help);
+        for c in &s.cards {
+            let _ = writeln!(
+                out,
+                "{name}{{card=\"{}\",gpu=\"{}\",governor=\"{}\"}} {}",
+                c.index,
+                prom_escape(&c.gpu),
+                prom_escape(&c.governor),
+                if name.contains("share") && c.power_share_w.is_none() {
+                    "+Inf".to_string()
+                } else {
+                    prom_num(get(c))
+                }
+            );
+        }
+    }
+
+    gauge(&mut out, "fftsweep_fleet_power_1s_watts", "Fleet rolling 1s simulated draw");
+    let _ = writeln!(out, "fftsweep_fleet_power_1s_watts {}", prom_num(s.fleet.draw_1s_w));
+    gauge(&mut out, "fftsweep_fleet_power_budget_watts", "Operator power budget (+Inf when uncapped)");
+    let _ = writeln!(
+        out,
+        "fftsweep_fleet_power_budget_watts {}",
+        s.power_budget_w.map(prom_num).unwrap_or_else(|| "+Inf".into())
+    );
+    gauge(&mut out, "fftsweep_fleet_energy_joules_total", "Fleet cumulative simulated energy");
+    let _ = writeln!(out, "fftsweep_fleet_energy_joules_total {}", prom_num(s.fleet.energy_j));
+    gauge(&mut out, "fftsweep_fleet_energy_saving_ratio", "1 - energy/boost_energy");
+    let _ = writeln!(out, "fftsweep_fleet_energy_saving_ratio {}", prom_num(s.fleet.energy_saving));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::snapshot::FleetSnapshot;
+
+    fn snap(budget: Option<f64>) -> FleetSnapshot {
+        let card = CardSnapshot {
+            index: 0,
+            gpu: "Tesla \"V100\"".into(),
+            governor: "common".into(),
+            jobs_submitted: 8,
+            jobs_completed: 8,
+            jobs_failed: 0,
+            batches: 2,
+            occupancy: 1.0,
+            exec_s: 0.01,
+            energy_j: 0.5,
+            boost_energy_j: 1.0,
+            energy_saving: 0.5,
+            clock_transitions: 1,
+            current_clock_mhz: 945.0,
+            instant_w: 120.0,
+            avg_1s_w: 118.5,
+            avg_10s_w: 110.0,
+            busy_s: 0.004,
+            energy_per_job_j: 0.0625,
+            deadline_misses: 0,
+            power_share_w: budget.map(|w| w / 2.0),
+            inflight: 0,
+        };
+        FleetSnapshot::from_cards(vec![card], budget)
+    }
+
+    #[test]
+    fn json_roundtrips_key_fields() {
+        let j = snapshot_json(&snap(Some(240.0))).render();
+        assert!(j.contains("\"power_budget_w\": 240"));
+        assert!(j.contains("\"avg_1s_w\": 118.5"));
+        assert!(j.contains("\"power_share_w\": 120"));
+        assert!(j.contains("\"energy_saving\": 0.5"));
+        assert!(j.contains("\"gpu\": \"Tesla \\\"V100\\\"\""));
+        // fleet aggregate present
+        assert!(j.contains("\"draw_1s_w\": 118.5"));
+    }
+
+    #[test]
+    fn uncapped_budget_serializes_as_null() {
+        let j = snapshot_json(&snap(None)).render();
+        assert!(j.contains("\"power_budget_w\": null"));
+        assert!(j.contains("\"power_share_w\": null"));
+    }
+
+    #[test]
+    fn prometheus_format_is_well_formed() {
+        let text = prometheus_text(&snap(Some(240.0)));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "bad exposition line: {line}"
+            );
+        }
+        // every family has HELP + TYPE, every TYPE is a gauge
+        let helps = text.lines().filter(|l| l.starts_with("# HELP")).count();
+        let types = text.lines().filter(|l| l.starts_with("# TYPE")).count();
+        assert_eq!(helps, types);
+        assert!(text.lines().filter(|l| l.starts_with("# TYPE")).all(|l| l.ends_with("gauge")));
+        assert!(text.contains("fftsweep_fleet_power_budget_watts 240"));
+        assert!(text.contains("fftsweep_card_power_1s_watts{card=\"0\",gpu=\"Tesla \\\"V100\\\"\",governor=\"common\"} 118.5"));
+    }
+
+    #[test]
+    fn uncapped_prometheus_reports_inf() {
+        let text = prometheus_text(&snap(None));
+        assert!(text.contains("fftsweep_fleet_power_budget_watts +Inf"));
+        assert!(text.contains("fftsweep_card_power_share_watts{card=\"0\"") );
+        let share_line = text
+            .lines()
+            .find(|l| l.starts_with("fftsweep_card_power_share_watts{"))
+            .unwrap();
+        assert!(share_line.ends_with("+Inf"), "{share_line}");
+    }
+}

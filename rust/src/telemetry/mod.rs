@@ -1,0 +1,44 @@
+//! Fleet power telemetry & power-budget enforcement — the operator layer
+//! between the DVFS simulator and the serving coordinator.
+//!
+//! The paper proves the per-card knob (lock one clock, save 50-60% energy
+//! for <10% slowdown); running that result as a *fleet* needs two things
+//! the governors alone cannot provide: visibility (what is every card
+//! drawing right now, what does a job cost in joules) and control (keep
+//! the whole fleet under an operator watt ceiling). This subsystem adds
+//! both:
+//!
+//!   * [`recorder::PowerRecorder`] — lock-light per-card time series of
+//!     simulated draw (instant / rolling 1 s / rolling 10 s), cumulative
+//!     full-precision joules, per-length energy attribution, deadline
+//!     misses; the retained window replays through the paper's sensor
+//!     model unchanged ([`crate::sim::sensor::PowerTimeline`]).
+//!   * [`budget::PowerBudget`] — the fleet watt-ceiling arbiter:
+//!     load-proportional per-card shares with deadband hysteresis,
+//!     delivered to workers via lock-free [`budget::ShareCell`]s and to
+//!     governors as the `GovernorContext::power_budget_w` hint;
+//!     [`budget::clock_cap_for_budget`] inverts watts → fastest feasible
+//!     clock.
+//!   * [`snapshot::FleetSnapshot`] — the typed fleet state every consumer
+//!     (CLI report, benches, tests) reads; the old human report string is
+//!     now a renderer on top of it.
+//!   * [`export`] — JSON (`serve --telemetry-out`) and Prometheus text
+//!     exposition renderings of a snapshot.
+//!
+//! Consumers: `coordinator::Engine` (per-card recorders + the arbiter
+//! thread), `analysis::telemetry` (capped-vs-uncapped comparison table),
+//! `fftsweep serve --power-budget-w/--telemetry-out` and `fftsweep
+//! telemetry` in the CLI, and `benches/bench_serving.rs` (the `power`
+//! section of `BENCH_serving.json`).
+
+pub mod budget;
+pub mod export;
+pub mod recorder;
+pub mod ring;
+pub mod snapshot;
+
+pub use budget::{budget_key, clock_cap_for_budget, share_bounds_w, PowerBudget, ShareCell};
+pub use export::{prometheus_text, snapshot_json};
+pub use recorder::{BatchSample, PowerRecorder, RecorderConfig};
+pub use ring::Ring;
+pub use snapshot::{CardSnapshot, FleetSnapshot, FleetTotals};

@@ -1,0 +1,408 @@
+//! Per-card power telemetry recorder.
+//!
+//! Every governed batch the worker executes is priced by the simulator
+//! (`sim::run_batch` → average draw + energy at the governed clock, the
+//! same numbers `SimNvml`/`sim::power` produce for the paper's figures).
+//! The recorder turns that stream into operator-facing time series:
+//!
+//!   * instant draw (last executed batch, W),
+//!   * rolling averages over the trailing 1 s / 10 s of *simulated busy
+//!     time* (the card's time axis is the sum of simulated batch
+//!     durations — wall-clock on the host says nothing about what the
+//!     simulated card dissipates),
+//!   * cumulative energy in full-precision joules (an `f64` behind the
+//!     lock — never the truncating µJ counters of `Metrics`),
+//!   * per-length energy attribution (energy/job by transform length),
+//!   * deadline misses and observed clock changes.
+//!
+//! Storage is one fixed-capacity [`Ring`] of batch samples behind a single
+//! short-held mutex ("lock-light": one lock per batch on the worker side,
+//! one per read on the exporter side; the hot counters that dashboards
+//! poll are atomics outside the lock). The retained window can be
+//! materialized as a [`PowerTimeline`] so everything built for the paper's
+//! sensor model — `power_at`, `TimelineIndex`, `sample_timeline` — works
+//! unchanged on live serving telemetry (that is what the `fftsweep
+//! telemetry` replay renders).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::sensor::{sample_timeline, PowerSample, PowerTimeline, SensorConfig};
+use crate::telemetry::ring::Ring;
+use crate::util::rng::Rng;
+
+/// Recorder sizing knobs.
+#[derive(Debug, Clone)]
+pub struct RecorderConfig {
+    /// Retained batch samples per card (ring capacity).
+    pub capacity: usize,
+    /// Short rolling window, seconds of simulated busy time.
+    pub short_window_s: f64,
+    /// Long rolling window, seconds of simulated busy time.
+    pub long_window_s: f64,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 1024,
+            short_window_s: 1.0,
+            long_window_s: 10.0,
+        }
+    }
+}
+
+/// One executed batch as the recorder retains it.
+#[derive(Debug, Clone)]
+pub struct BatchSample {
+    /// Start of the batch on the card's simulated busy-time axis, s.
+    pub t_start_s: f64,
+    pub duration_s: f64,
+    /// Mean simulated board draw over the batch, W.
+    pub power_w: f64,
+    pub energy_j: f64,
+    pub clock_mhz: f64,
+    pub n: u64,
+    /// Jobs packed into the batch (occupancy).
+    pub jobs: u64,
+    pub deadline_missed: bool,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct LengthEnergy {
+    jobs: u64,
+    energy_j: f64,
+}
+
+struct Inner {
+    ring: Ring<BatchSample>,
+    /// Cumulative simulated busy time, s (the time axis).
+    now_s: f64,
+    /// Cumulative energy, full-precision joules.
+    energy_j: f64,
+    jobs: u64,
+    per_length: BTreeMap<u64, LengthEnergy>,
+    clock_changes: u64,
+    last_clock_mhz: f64,
+}
+
+impl Inner {
+    /// Retained samples as a ground-truth timeline (all segments compute),
+    /// re-based so t=0 is the oldest retained sample — the single
+    /// materialization both the exact-lookup and noisy-sampler paths use.
+    fn timeline(&self) -> PowerTimeline {
+        let mut tl = PowerTimeline::default();
+        for s in self.ring.iter() {
+            tl.push(s.duration_s, s.power_w, true);
+        }
+        tl
+    }
+}
+
+/// Per-card power telemetry (see module docs).
+pub struct PowerRecorder {
+    cfg: RecorderConfig,
+    /// Draw reported when no batch ran yet (the card's idle floor, W).
+    idle_w: f64,
+    inner: Mutex<Inner>,
+    batches: AtomicU64,
+    deadline_misses: AtomicU64,
+}
+
+impl PowerRecorder {
+    pub fn new(idle_w: f64, cfg: RecorderConfig) -> Self {
+        Self {
+            idle_w,
+            inner: Mutex::new(Inner {
+                ring: Ring::new(cfg.capacity),
+                now_s: 0.0,
+                energy_j: 0.0,
+                jobs: 0,
+                per_length: BTreeMap::new(),
+                clock_changes: 0,
+                last_clock_mhz: f64::NAN,
+            }),
+            cfg,
+            batches: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one executed batch (worker hot path: one short lock).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        clock_mhz: f64,
+        duration_s: f64,
+        power_w: f64,
+        energy_j: f64,
+        n: u64,
+        jobs: u64,
+        deadline_missed: bool,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if deadline_missed {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.last_clock_mhz != clock_mhz {
+            if !inner.last_clock_mhz.is_nan() {
+                inner.clock_changes += 1;
+            }
+            inner.last_clock_mhz = clock_mhz;
+        }
+        let sample = BatchSample {
+            t_start_s: inner.now_s,
+            duration_s,
+            power_w,
+            energy_j,
+            clock_mhz,
+            n,
+            jobs,
+            deadline_missed,
+        };
+        inner.now_s += duration_s;
+        inner.energy_j += energy_j;
+        inner.jobs += jobs;
+        let slot = inner.per_length.entry(n).or_default();
+        slot.jobs += jobs;
+        slot.energy_j += energy_j;
+        inner.ring.push(sample);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses.load(Ordering::Relaxed)
+    }
+
+    /// Observed clock *changes* across recorded batches (a proxy for DVFS
+    /// churn; the authoritative NVML transition trace lives on `SimNvml`).
+    pub fn clock_changes(&self) -> u64 {
+        self.inner.lock().unwrap().clock_changes
+    }
+
+    /// Cumulative simulated busy time, s.
+    pub fn busy_s(&self) -> f64 {
+        self.inner.lock().unwrap().now_s
+    }
+
+    /// Cumulative energy, J (full precision — no µJ truncation).
+    pub fn cumulative_energy_j(&self) -> f64 {
+        self.inner.lock().unwrap().energy_j
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.inner.lock().unwrap().jobs
+    }
+
+    /// Mean attributed energy per job over everything recorded, J
+    /// (batch energy split evenly across the jobs packed into it; padding
+    /// rows bill to the jobs that caused the batch).
+    pub fn energy_per_job_j(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.jobs == 0 {
+            return 0.0;
+        }
+        inner.energy_j / inner.jobs as f64
+    }
+
+    /// Per-transform-length attribution: (n, jobs, energy J), ascending n.
+    pub fn per_length_energy(&self) -> Vec<(u64, u64, f64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .per_length
+            .iter()
+            .map(|(&n, e)| (n, e.jobs, e.energy_j))
+            .collect()
+    }
+
+    /// Draw of the most recently executed batch, W (idle floor before any).
+    pub fn instant_w(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner.ring.newest().map(|s| s.power_w).unwrap_or(self.idle_w)
+    }
+
+    /// Energy-weighted mean draw over the trailing `window_s` of simulated
+    /// busy time (partial windows average what is covered; the idle floor
+    /// before anything ran).
+    pub fn rolling_avg_w(&self, window_s: f64) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        let mut energy = 0.0;
+        let mut covered = 0.0;
+        for s in inner.ring.iter().rev() {
+            if covered >= window_s {
+                break;
+            }
+            // Clip the oldest contributing sample at the window edge.
+            let take = s.duration_s.min(window_s - covered);
+            let frac = if s.duration_s > 0.0 { take / s.duration_s } else { 0.0 };
+            energy += s.energy_j * frac;
+            covered += take;
+        }
+        if covered <= 0.0 {
+            return self.idle_w;
+        }
+        energy / covered
+    }
+
+    /// The short (1 s) rolling average, W.
+    pub fn avg_short_w(&self) -> f64 {
+        self.rolling_avg_w(self.cfg.short_window_s)
+    }
+
+    /// The long (10 s) rolling average, W.
+    pub fn avg_long_w(&self) -> f64 {
+        self.rolling_avg_w(self.cfg.long_window_s)
+    }
+
+    /// Materialize the retained window as a ground-truth [`PowerTimeline`].
+    /// Everything written for the paper's sensor path — exact `power_at`
+    /// lookups, `TimelineIndex`, noisy `sample_timeline` — runs unchanged
+    /// on it.
+    pub fn window_timeline(&self) -> PowerTimeline {
+        self.inner.lock().unwrap().timeline()
+    }
+
+    /// Replay the retained window through the noisy driver-sampling model
+    /// (nvidia-smi emulation) — what `fftsweep telemetry` renders.
+    pub fn sample_window(
+        &self,
+        sensor: &SensorConfig,
+        mem_clock_mhz: f64,
+        rng: &mut Rng,
+    ) -> Vec<PowerSample> {
+        let (tl, clock) = {
+            let inner = self.inner.lock().unwrap();
+            let clock = inner.ring.newest().map(|s| s.clock_mhz).unwrap_or(0.0);
+            (inner.timeline(), clock)
+        };
+        sample_timeline(&tl, sensor, clock, mem_clock_mhz, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recorder() -> PowerRecorder {
+        PowerRecorder::new(
+            38.0,
+            RecorderConfig {
+                capacity: 8,
+                short_window_s: 1.0,
+                long_window_s: 10.0,
+            },
+        )
+    }
+
+    #[test]
+    fn empty_recorder_reports_idle_floor() {
+        let r = recorder();
+        assert_eq!(r.instant_w(), 38.0);
+        assert_eq!(r.avg_short_w(), 38.0);
+        assert_eq!(r.cumulative_energy_j(), 0.0);
+        assert_eq!(r.energy_per_job_j(), 0.0);
+        assert_eq!(r.batches(), 0);
+        assert!(r.window_timeline().segments.is_empty());
+    }
+
+    #[test]
+    fn cumulative_energy_keeps_sub_microjoule_batches() {
+        // The `Metrics` truncation bug this subsystem must not share:
+        // 10_000 batches of 0.3 µJ must sum to 3 mJ, not zero.
+        let r = recorder();
+        for _ in 0..10_000 {
+            r.record_batch(945.0, 1e-6, 0.3, 0.3e-6, 1024, 1, false);
+        }
+        assert!((r.cumulative_energy_j() - 3.0e-3).abs() < 1e-12);
+        assert_eq!(r.jobs(), 10_000);
+        assert!((r.energy_per_job_j() - 0.3e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn rolling_average_windows_over_busy_time() {
+        let r = recorder();
+        // 0.6 s at 100 W, then 0.6 s at 200 W of simulated busy time.
+        r.record_batch(945.0, 0.6, 100.0, 60.0, 1024, 4, false);
+        r.record_batch(945.0, 0.6, 200.0, 120.0, 1024, 4, false);
+        assert_eq!(r.instant_w(), 200.0);
+        // 1 s window: all of the newest batch + 0.4 s of the older one.
+        let want = (120.0 + 60.0 * (0.4 / 0.6)) / 1.0;
+        assert!((r.rolling_avg_w(1.0) - want).abs() < 1e-9, "{}", r.rolling_avg_w(1.0));
+        // 10 s window covers everything: plain mean power.
+        assert!((r.rolling_avg_w(10.0) - 150.0).abs() < 1e-9);
+        // Tiny window: just the newest batch.
+        assert!((r.rolling_avg_w(0.1) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_eviction_bounds_the_window_not_the_totals() {
+        let r = recorder();
+        for i in 0..20 {
+            r.record_batch(945.0, 0.1, 100.0 + i as f64, 1.0, 1024, 2, false);
+        }
+        // capacity 8: the timeline window holds only the newest 8 …
+        let tl = r.window_timeline();
+        assert_eq!(tl.segments.len(), 8);
+        assert!((tl.total_duration() - 0.8).abs() < 1e-12);
+        // … but cumulative accounting saw everything.
+        assert_eq!(r.batches(), 20);
+        assert_eq!(r.jobs(), 40);
+        assert!((r.cumulative_energy_j() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_length_attribution_splits_energy_by_n() {
+        let r = recorder();
+        r.record_batch(945.0, 0.1, 100.0, 10.0, 1024, 2, false);
+        r.record_batch(945.0, 0.1, 100.0, 10.0, 1024, 2, false);
+        r.record_batch(945.0, 0.2, 120.0, 24.0, 4096, 3, false);
+        let by_len = r.per_length_energy();
+        assert_eq!(by_len.len(), 2);
+        assert_eq!(by_len[0], (1024, 4, 20.0));
+        assert_eq!(by_len[1], (4096, 3, 24.0));
+        // fleet-level mean energy/job
+        assert!((r.energy_per_job_j() - 44.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_misses_and_clock_changes_counted() {
+        let r = recorder();
+        r.record_batch(1530.0, 0.1, 200.0, 20.0, 1024, 1, false);
+        r.record_batch(1530.0, 0.1, 200.0, 20.0, 1024, 1, true);
+        r.record_batch(945.0, 0.1, 120.0, 12.0, 1024, 1, false);
+        r.record_batch(945.0, 0.1, 120.0, 12.0, 1024, 1, false);
+        assert_eq!(r.deadline_misses(), 1);
+        // one observed change (1530 → 945); the first batch sets the
+        // baseline and counts no transition
+        assert_eq!(r.clock_changes(), 1);
+    }
+
+    #[test]
+    fn window_timeline_supports_sensor_sampling() {
+        // The retained window flows through the paper's sensor model
+        // unchanged: integrate the noisy samples and land near truth.
+        let r = recorder();
+        for _ in 0..4 {
+            r.record_batch(945.0, 0.5, 150.0, 75.0, 1024, 2, false);
+        }
+        let tl = r.window_timeline();
+        assert_eq!(tl.true_compute_energy(), 300.0);
+        // exact lookups at an interior point and past the end
+        assert_eq!(tl.power_at(0.25), Some((150.0, true)));
+        assert_eq!(tl.power_at(2.0), None);
+        let cfg = SensorConfig {
+            requested_interval_s: 0.010,
+            achieved_interval_s: 0.0142,
+            noise_sd: 0.02,
+        };
+        let samples = r.sample_window(&cfg, 877.0, &mut Rng::new(11));
+        assert!(samples.len() > 100);
+        let e = crate::sim::sensor::integrate_energy(&samples);
+        assert!((e - 300.0).abs() / 300.0 < 0.05, "sampled {e} vs 300");
+    }
+}

@@ -1,0 +1,151 @@
+//! Fixed-capacity ring buffer — the storage primitive every telemetry
+//! time series sits on.
+//!
+//! A `Ring<T>` never reallocates after construction: pushes past capacity
+//! overwrite the oldest entry. That keeps the per-card recorder's memory
+//! bounded no matter how long the fleet serves, and keeps `push` O(1) with
+//! no amortized spikes (no `Vec` growth) on the worker hot path.
+
+/// Fixed-capacity overwrite-oldest ring buffer.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Next write position (wraps at `cap` once full).
+    head: usize,
+    /// Total pushes ever — `total - len()` is the dropped count.
+    total: u64,
+}
+
+impl<T> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        Self {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            total: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// How many entries were ever pushed (retained + overwritten).
+    pub fn total_pushed(&self) -> u64 {
+        self.total
+    }
+
+    /// How many entries fell off the back.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+
+    /// Append, overwriting the oldest entry once at capacity.
+    pub fn push(&mut self, value: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(value);
+        } else {
+            self.buf[self.head] = value;
+        }
+        self.head = (self.head + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// The most recently pushed entry.
+    pub fn newest(&self) -> Option<&T> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let idx = (self.head + self.cap - 1) % self.cap;
+        // Before the first wrap `head` trails `len`, so clamp into the
+        // initialized prefix.
+        self.buf.get(if idx < self.buf.len() { idx } else { self.buf.len() - 1 })
+    }
+
+    /// Iterate oldest → newest. Double-ended, so `.rev()` walks newest →
+    /// oldest (how the rolling-window scans run).
+    pub fn iter(&self) -> impl DoubleEndedIterator<Item = &T> {
+        let split = if self.buf.len() < self.cap { 0 } else { self.head };
+        let (tail, head_part) = self.buf.split_at(split);
+        head_part.iter().chain(tail.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut r = Ring::new(3);
+        assert!(r.is_empty());
+        for v in 0..5 {
+            r.push(v);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.total_pushed(), 5);
+        assert_eq!(r.dropped(), 2);
+        let got: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(got, vec![2, 3, 4], "oldest → newest after overwrite");
+        assert_eq!(r.newest(), Some(&4));
+    }
+
+    #[test]
+    fn partial_fill_iterates_in_order() {
+        let mut r = Ring::new(8);
+        r.push(10);
+        r.push(20);
+        let got: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(got, vec![10, 20]);
+        assert_eq!(r.newest(), Some(&20));
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn rev_iteration_is_newest_first() {
+        let mut r = Ring::new(4);
+        for v in 0..9 {
+            r.push(v);
+        }
+        let got: Vec<i32> = r.iter().rev().copied().collect();
+        assert_eq!(got, vec![8, 7, 6, 5]);
+    }
+
+    #[test]
+    fn capacity_one_keeps_only_newest() {
+        let mut r = Ring::new(1);
+        for v in 0..4 {
+            r.push(v);
+            assert_eq!(r.newest(), Some(&v));
+            assert_eq!(r.len(), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = Ring::<u8>::new(0);
+    }
+
+    #[test]
+    fn never_reallocates_past_construction() {
+        let mut r = Ring::new(16);
+        r.push(0u64);
+        let ptr = r.buf.as_ptr();
+        for v in 1..100 {
+            r.push(v);
+        }
+        assert_eq!(r.buf.as_ptr(), ptr, "ring storage must stay in place");
+    }
+}

@@ -1,0 +1,247 @@
+//! Typed fleet state — what used to be the human-only
+//! `Engine::fleet_report()` string, as structured data.
+//!
+//! `FleetSnapshot` is the single source the JSON/Prometheus exporters,
+//! the `fftsweep telemetry` tables, the benches and the tests all
+//! consume; the old report string is now just [`FleetSnapshot::render`]
+//! on top of it.
+
+use crate::util::table::fnum;
+
+/// One card's full serving + power state at snapshot time.
+#[derive(Debug, Clone)]
+pub struct CardSnapshot {
+    pub index: usize,
+    pub gpu: String,
+    pub governor: String,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub batches: u64,
+    /// Mean batch occupancy, 0..1.
+    pub occupancy: f64,
+    /// Wall-clock execution time spent in batches, s.
+    pub exec_s: f64,
+    /// Simulated energy at the governed clocks, J (full precision).
+    pub energy_j: f64,
+    /// Simulated energy had every batch run at boost, J.
+    pub boost_energy_j: f64,
+    /// 1 - energy/boost_energy.
+    pub energy_saving: f64,
+    /// NVML clock-lock state transitions (the Fig 19 trace length).
+    pub clock_transitions: u64,
+    /// The clock the card would run a kernel at right now, MHz.
+    pub current_clock_mhz: f64,
+    /// Draw of the last executed batch, W.
+    pub instant_w: f64,
+    /// Rolling mean draw over the trailing 1 s of simulated busy time, W.
+    pub avg_1s_w: f64,
+    /// Rolling mean draw over the trailing 10 s of simulated busy time, W.
+    pub avg_10s_w: f64,
+    /// Cumulative simulated busy time, s.
+    pub busy_s: f64,
+    /// Mean attributed energy per job, J.
+    pub energy_per_job_j: f64,
+    pub deadline_misses: u64,
+    /// The arbiter's current watt share (None = uncapped).
+    pub power_share_w: Option<f64>,
+    pub inflight: u64,
+}
+
+/// Fleet-aggregate counters (sums/means over the cards).
+#[derive(Debug, Clone, Default)]
+pub struct FleetTotals {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub batches: u64,
+    pub occupancy: f64,
+    pub exec_s: f64,
+    pub energy_j: f64,
+    pub boost_energy_j: f64,
+    pub energy_saving: f64,
+    /// Σ over cards of the 1 s rolling draw, W — the quantity a
+    /// `--power-budget-w` cap constrains.
+    pub draw_1s_w: f64,
+    pub energy_per_job_j: f64,
+    pub deadline_misses: u64,
+    pub clock_transitions: u64,
+}
+
+/// The whole fleet, typed.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub cards: Vec<CardSnapshot>,
+    pub fleet: FleetTotals,
+    /// The operator's global cap (None = uncapped serving).
+    pub power_budget_w: Option<f64>,
+}
+
+impl FleetSnapshot {
+    /// Derive the fleet aggregate from per-card snapshots.
+    pub fn from_cards(cards: Vec<CardSnapshot>, power_budget_w: Option<f64>) -> Self {
+        let mut t = FleetTotals::default();
+        for c in &cards {
+            t.jobs_submitted += c.jobs_submitted;
+            t.jobs_completed += c.jobs_completed;
+            t.jobs_failed += c.jobs_failed;
+            t.batches += c.batches;
+            t.exec_s += c.exec_s;
+            t.energy_j += c.energy_j;
+            t.boost_energy_j += c.boost_energy_j;
+            t.draw_1s_w += c.avg_1s_w;
+            t.deadline_misses += c.deadline_misses;
+            t.clock_transitions += c.clock_transitions;
+        }
+        let occ_weight: f64 = cards.iter().map(|c| c.batches as f64).sum();
+        if occ_weight > 0.0 {
+            t.occupancy = cards
+                .iter()
+                .map(|c| c.occupancy * c.batches as f64)
+                .sum::<f64>()
+                / occ_weight;
+        }
+        if t.boost_energy_j > 0.0 {
+            t.energy_saving = 1.0 - t.energy_j / t.boost_energy_j;
+        }
+        if t.jobs_completed > 0 {
+            t.energy_per_job_j = t.energy_j / t.jobs_completed as f64;
+        }
+        Self {
+            cards,
+            fleet: t,
+            power_budget_w,
+        }
+    }
+
+    /// One-line fleet summary (the trailer of the rendered report and of
+    /// `Engine::shutdown`).
+    pub fn fleet_summary(&self) -> String {
+        let t = &self.fleet;
+        let budget = match self.power_budget_w {
+            Some(w) => format!(", budget {} W (1s draw {} W)", fnum(w, 0), fnum(t.draw_1s_w, 1)),
+            None => String::new(),
+        };
+        format!(
+            "jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}%{}",
+            t.jobs_completed,
+            t.jobs_submitted,
+            t.jobs_failed,
+            t.batches,
+            t.occupancy * 100.0,
+            t.exec_s,
+            t.energy_saving * 100.0,
+            budget,
+        )
+    }
+
+    /// The human report the CLI prints: one line per card, one fleet
+    /// trailer — the renderer sits *on top of* the typed data.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.cards {
+            let share = match c.power_share_w {
+                Some(w) => format!(", share {} W", fnum(w, 0)),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "card{} {} [{}]: jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}% (clock transitions {}, draw {}/{} W inst/1s{}, {} misses)\n",
+                c.index,
+                c.gpu,
+                c.governor,
+                c.jobs_completed,
+                c.jobs_submitted,
+                c.jobs_failed,
+                c.batches,
+                c.occupancy * 100.0,
+                c.exec_s,
+                c.energy_saving * 100.0,
+                c.clock_transitions,
+                fnum(c.instant_w, 1),
+                fnum(c.avg_1s_w, 1),
+                share,
+                c.deadline_misses,
+            ));
+        }
+        out.push_str(&format!("fleet: {}", self.fleet_summary()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn card(index: usize, completed: u64, energy: f64, boost: f64, draw: f64) -> CardSnapshot {
+        CardSnapshot {
+            index,
+            gpu: "Tesla V100".into(),
+            governor: "common".into(),
+            jobs_submitted: completed,
+            jobs_completed: completed,
+            jobs_failed: 0,
+            batches: completed / 2,
+            occupancy: 0.5,
+            exec_s: 0.1,
+            energy_j: energy,
+            boost_energy_j: boost,
+            energy_saving: 1.0 - energy / boost,
+            clock_transitions: 1,
+            current_clock_mhz: 945.0,
+            instant_w: draw,
+            avg_1s_w: draw,
+            avg_10s_w: draw,
+            busy_s: 0.5,
+            energy_per_job_j: energy / completed as f64,
+            deadline_misses: 0,
+            power_share_w: Some(150.0),
+            inflight: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates_sum_and_weight_correctly() {
+        let s = FleetSnapshot::from_cards(
+            vec![card(0, 10, 6.0, 10.0, 120.0), card(1, 30, 12.0, 30.0, 60.0)],
+            Some(250.0),
+        );
+        assert_eq!(s.fleet.jobs_completed, 40);
+        assert_eq!(s.fleet.batches, 20);
+        assert!((s.fleet.energy_j - 18.0).abs() < 1e-12);
+        assert!((s.fleet.energy_saving - (1.0 - 18.0 / 40.0)).abs() < 1e-12);
+        assert!((s.fleet.draw_1s_w - 180.0).abs() < 1e-12);
+        assert!((s.fleet.energy_per_job_j - 18.0 / 40.0).abs() < 1e-12);
+        assert_eq!(s.fleet.clock_transitions, 2);
+    }
+
+    #[test]
+    fn render_keeps_the_report_shape() {
+        let s = FleetSnapshot::from_cards(
+            vec![card(0, 4, 1.0, 2.0, 100.0), card(1, 4, 1.0, 2.0, 100.0)],
+            None,
+        );
+        let r = s.render();
+        assert_eq!(r.lines().count(), 3, "2 card lines + 1 fleet line");
+        assert!(r.contains("card0 Tesla V100 [common]"));
+        assert!(r.contains("card1"));
+        assert!(r.lines().last().unwrap().starts_with("fleet: jobs 8/8 ok"));
+    }
+
+    #[test]
+    fn budget_appears_in_fleet_summary_when_capped() {
+        let capped =
+            FleetSnapshot::from_cards(vec![card(0, 2, 1.0, 2.0, 90.0)], Some(120.0));
+        assert!(capped.fleet_summary().contains("budget 120 W"));
+        let open = FleetSnapshot::from_cards(vec![card(0, 2, 1.0, 2.0, 90.0)], None);
+        assert!(!open.fleet_summary().contains("budget"));
+    }
+
+    #[test]
+    fn empty_fleet_is_all_zero() {
+        let s = FleetSnapshot::from_cards(Vec::new(), None);
+        assert_eq!(s.fleet.jobs_completed, 0);
+        assert_eq!(s.fleet.occupancy, 0.0);
+        assert_eq!(s.fleet.energy_saving, 0.0);
+        assert!(s.fleet_summary().contains("jobs 0/0"));
+    }
+}

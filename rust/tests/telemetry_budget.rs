@@ -1,0 +1,183 @@
+//! Power telemetry & budget-enforcement integration tests — the issue's
+//! acceptance criterion, end to end on the sim backend:
+//!
+//! `serve --power-budget-w W` on a 2-card heterogeneous fleet keeps the
+//! rolling 1 s fleet draw at or below W, while the uncapped run of the
+//! same trace draws more and has equal-or-better simulated p99; the NVML
+//! clock-transition count under the arbiter stays bounded (no per-batch
+//! thrash).
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
+use fftsweep::governor::GovernorKind;
+use fftsweep::runtime::Runtime;
+use fftsweep::sim::gpu::{tesla_p4, tesla_v100};
+use fftsweep::telemetry::FleetSnapshot;
+use fftsweep::util::rng::Rng;
+use fftsweep::util::stats::percentile;
+
+fn sim_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"))
+}
+
+/// Serve `jobs` seeded n=1024 transforms on a V100+P4 fleet, optionally
+/// capped; returns (snapshot, per-job simulated batch ms).
+fn serve_hetero(budget_w: Option<f64>, jobs: usize, seed: u64) -> (FleetSnapshot, Vec<f64>) {
+    let fleet = vec![
+        CardConfig::new(tesla_v100(), GovernorKind::FixedBoost),
+        CardConfig::new(tesla_p4(), GovernorKind::FixedBoost),
+    ];
+    let cfg = EngineConfig {
+        power_budget_w: budget_w,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start(sim_runtime(), fleet, cfg).expect("engine");
+    let mut rng = Rng::new(seed);
+    let mut rxs = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let re: Vec<f32> = (0..1024).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..1024).map(|_| rng.gauss() as f32).collect();
+        rxs.push(engine.submit(re, im).expect("submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(120)), "drain timed out");
+    let mut sim_ms = Vec::with_capacity(jobs);
+    for rx in rxs {
+        let res = rx.recv().expect("recv").expect("job ok");
+        sim_ms.push(res.sim_batch_s * 1e3);
+    }
+    let snapshot = engine.snapshot();
+    engine.shutdown();
+    (snapshot, sim_ms)
+}
+
+#[test]
+fn power_budget_caps_fleet_draw_without_thrash() {
+    let jobs = 1024;
+    // Baseline: the same trace uncapped (boost everywhere, no DVFS).
+    let (open, open_ms) = serve_hetero(None, jobs, 42);
+    assert_eq!(open.fleet.jobs_completed, jobs as u64);
+    let open_draw = open.fleet.draw_1s_w;
+    assert!(open_draw > 0.0);
+    // no governor ever asked for a lock: zero transitions uncapped
+    assert_eq!(open.fleet.clock_transitions, 0, "uncapped boost must not lock clocks");
+
+    // Capped at 60% of the measured uncapped draw.
+    let budget_w = 0.6 * open_draw;
+    let (capped, capped_ms) = serve_hetero(Some(budget_w), jobs, 42);
+    assert_eq!(capped.fleet.jobs_completed, jobs as u64);
+    assert_eq!(capped.power_budget_w, Some(budget_w));
+
+    // 1. The rolling 1 s fleet draw sits at or below the cap…
+    assert!(
+        capped.fleet.draw_1s_w <= budget_w + 1e-6,
+        "capped fleet draw {} W over the {budget_w} W budget",
+        capped.fleet.draw_1s_w
+    );
+    // …every card within its own share, and the shares within the cap.
+    let mut share_sum = 0.0;
+    for c in &capped.cards {
+        let share = c.power_share_w.expect("capped fleet publishes shares");
+        assert!(
+            c.avg_1s_w <= share + 1e-6,
+            "card{} draw {} W over its {share} W share",
+            c.index,
+            c.avg_1s_w
+        );
+        share_sum += share;
+    }
+    assert!(share_sum <= budget_w + 1e-6, "shares {share_sum} W exceed the cap");
+
+    // 2. The uncapped run draws strictly more on the same trace.
+    assert!(
+        open_draw > capped.fleet.draw_1s_w,
+        "uncapped draw {open_draw} W not above capped {} W",
+        capped.fleet.draw_1s_w
+    );
+
+    // 3. Uncapped p99 (simulated batch latency) is equal or better.
+    let open_p99 = percentile(&open_ms, 99.0);
+    let capped_p99 = percentile(&capped_ms, 99.0);
+    assert!(
+        open_p99 <= capped_p99 + 1e-9,
+        "uncapped p99 {open_p99} ms worse than capped {capped_p99} ms"
+    );
+
+    // 4. Bounded transitions: the arbiter's hysteresis + the quantized
+    // watt→clock cap mean each card locks once and holds — nothing
+    // remotely like one transition per batch.
+    assert!(capped.fleet.batches >= 12, "trace too small to judge thrash");
+    for c in &capped.cards {
+        assert!(
+            c.clock_transitions <= 4,
+            "card{} made {} transitions over {} batches — clock thrash",
+            c.index,
+            c.clock_transitions,
+            c.batches
+        );
+    }
+    assert!(
+        capped.fleet.clock_transitions * 2 < capped.fleet.batches,
+        "{} transitions over {} batches is per-batch churn",
+        capped.fleet.clock_transitions,
+        capped.fleet.batches
+    );
+    // At least one card had to actually lock below boost to meet the cap.
+    assert!(
+        capped.cards.iter().any(|c| c.clock_transitions >= 1),
+        "no card ever locked: the budget did not bite"
+    );
+
+    // 5. Telemetry coherence: cumulative energy matches the metrics' view
+    // (both are full-precision now) and per-job attribution is populated.
+    for c in &capped.cards {
+        assert!(c.energy_j > 0.0);
+        assert!(c.busy_s > 0.0);
+        assert!(c.energy_per_job_j > 0.0);
+    }
+    let recorder_total: f64 = capped.cards.iter().map(|c| c.energy_per_job_j * c.jobs_completed as f64).sum();
+    assert!(
+        (recorder_total - capped.fleet.energy_j).abs() <= 1e-6 * capped.fleet.energy_j.max(1.0),
+        "per-job attribution {recorder_total} J diverges from fleet energy {} J",
+        capped.fleet.energy_j
+    );
+}
+
+#[test]
+fn capped_snapshot_exports_and_renders() {
+    let (open, _) = serve_hetero(None, 128, 7);
+    let budget_w = 0.7 * open.fleet.draw_1s_w;
+    let (snap, _) = serve_hetero(Some(budget_w), 128, 7);
+
+    // Typed data drives all three renderings.
+    let report = snap.render();
+    assert_eq!(report.lines().count(), 3, "2 card lines + fleet trailer");
+    assert!(report.contains("Tesla V100") && report.contains("Tesla P4"));
+    assert!(report.contains("share"), "capped report shows watt shares");
+    assert!(report.lines().last().unwrap().contains("budget"));
+
+    let json = fftsweep::telemetry::snapshot_json(&snap).render();
+    assert!(json.contains("\"power_budget_w\""));
+    assert!(json.contains("\"avg_1s_w\""));
+    assert!(json.contains("Tesla P4"));
+
+    let prom = fftsweep::telemetry::prometheus_text(&snap);
+    assert!(prom.contains("fftsweep_fleet_power_budget_watts"));
+    assert!(prom.contains("gpu=\"Tesla P4\""));
+}
+
+#[test]
+fn uncapped_engine_reports_no_budget_state() {
+    let (snap, _) = serve_hetero(None, 64, 3);
+    assert_eq!(snap.power_budget_w, None);
+    for c in &snap.cards {
+        assert_eq!(c.power_share_w, None);
+    }
+    assert!(!snap.fleet_summary().contains("budget"));
+    // deadline misses: boost meets the tolerance deadline by construction
+    assert_eq!(snap.fleet.deadline_misses, 0);
+}

@@ -5,12 +5,18 @@ Usage: check_bench.py <fresh BENCH_serving.json> <committed baseline>
 
 Fails (exit 1) when:
   * either file is malformed JSON or missing required fields (including
-    the non-pow2 / rFFT rows the plan compiler emits),
+    the non-pow2 / rFFT rows the plan compiler emits and the telemetry
+    `power` section),
   * fleet throughput regressed more than 30% below the committed baseline,
   * closed-loop p99 latency regressed more than 30% above the baseline,
   * the planned path is slower than the naive per-row path,
   * planned rows/s or any opened-workload row (nonpow2/bluestein/rfft)
-    regressed more than 30% below its baseline rate (or is non-positive).
+    regressed more than 30% below its baseline rate (or is non-positive),
+  * the power section breaks an internal invariant of the fresh doc —
+    capped 1s draw above the budget, or capped energy/job above the
+    uncapped run's (the cap must actually cap, and must save energy) —
+    or capped energy/job / capped simulated p99 rose more than 30% above
+    the committed baseline ceilings.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -35,10 +41,22 @@ REQUIRED = [
     "nonpow2",
     "rfft",
     "fleet",
+    "power",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
+REQUIRED_POWER = [
+    "budget_w",
+    "uncapped_draw_1s_w",
+    "capped_draw_1s_w",
+    "uncapped_energy_per_job_j",
+    "capped_energy_per_job_j",
+    "capped_p99_sim_ms",
+]
 MAX_REGRESSION = 0.30
+# Internal-invariant slack: simulated quantities are deterministic, so the
+# capped run only gets rounding headroom, not a regression budget.
+POWER_SLACK = 0.02
 
 
 class BenchCheckError(Exception):
@@ -56,6 +74,10 @@ def load_doc(path):
         raise BenchCheckError(f"{path}: expected an object with a 'fleet' object")
     missing = [k for k in REQUIRED if k not in doc]
     missing += [f"fleet.{k}" for k in REQUIRED_FLEET if k not in doc["fleet"]]
+    if isinstance(doc.get("power"), dict):
+        missing += [f"power.{k}" for k in REQUIRED_POWER if k not in doc["power"]]
+    elif "power" in doc:
+        missing += [f"power.{k}" for k in REQUIRED_POWER]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -131,6 +153,39 @@ def check(fresh, base):
                     f"{section}.rows_per_s {rate:.0f} regressed >{MAX_REGRESSION:.0%} "
                     f"below baseline floor {floor:.0f}"
                 )
+
+    # Power section: internal invariants of the fresh doc first — the cap
+    # must actually cap, and capping must not cost energy per job …
+    power = fresh["power"]
+    base_power = base["power"]
+    info.append(
+        f"power: capped {power['capped_draw_1s_w']:.1f} W vs budget "
+        f"{power['budget_w']:.1f} W (uncapped {power['uncapped_draw_1s_w']:.1f} W), "
+        f"energy/job {power['capped_energy_per_job_j']:.3e} J capped vs "
+        f"{power['uncapped_energy_per_job_j']:.3e} J uncapped"
+    )
+    if power["capped_draw_1s_w"] > power["budget_w"] * (1.0 + POWER_SLACK):
+        problems.append(
+            f"power: capped 1s draw {power['capped_draw_1s_w']:.1f} W exceeds the "
+            f"{power['budget_w']:.1f} W budget — the cap is not enforced"
+        )
+    if power["capped_energy_per_job_j"] > power["uncapped_energy_per_job_j"] * (
+        1.0 + POWER_SLACK
+    ):
+        problems.append(
+            "power: capped energy/job "
+            f"{power['capped_energy_per_job_j']:.3e} J above uncapped "
+            f"{power['uncapped_energy_per_job_j']:.3e} J — capping must save energy"
+        )
+    # … then trajectory ceilings vs the committed baseline (simulated
+    # quantities, so 30% headroom is generous).
+    for key, unit in (("capped_energy_per_job_j", "J"), ("capped_p99_sim_ms", "ms")):
+        ceiling = base_power[key] * (1.0 + MAX_REGRESSION)
+        if fresh["power"][key] > ceiling:
+            problems.append(
+                f"power.{key} {fresh['power'][key]:.4g} {unit} rose "
+                f">{MAX_REGRESSION:.0%} above baseline ceiling {ceiling:.4g} {unit}"
+            )
 
     return problems, info
 

@@ -16,7 +16,7 @@ import check_bench
 def good_doc():
     return {
         "bench": "serving",
-        "schema": 2,
+        "schema": 3,
         "quick": False,
         "n": 1024,
         "naive_rows_per_s": 12000.0,
@@ -30,6 +30,17 @@ def good_doc():
             "p50_ms": 3.0,
             "p99_ms": 10.0,
             "allocs_per_job": 12.0,
+        },
+        "power": {
+            "jobs": 1024,
+            "budget_w": 350.0,
+            "uncapped_draw_1s_w": 500.0,
+            "capped_draw_1s_w": 340.0,
+            "uncapped_energy_per_job_j": 1.0e-3,
+            "capped_energy_per_job_j": 8.0e-4,
+            "uncapped_p99_sim_ms": 0.05,
+            "capped_p99_sim_ms": 0.1,
+            "capped_clock_transitions": 4,
         },
     }
 
@@ -103,7 +114,63 @@ def test_planned_rows_floor_is_enforced():
     assert any("planned_rows_per_s" in p for p in problems)
 
 
-@pytest.mark.parametrize("key", ["fleet", "nonpow2", "rfft", "planned_speedup"])
+def test_capped_draw_over_budget_fails():
+    # Internal invariant of the fresh doc: a capped run whose rolling 1s
+    # draw exceeds the budget means enforcement is broken, regardless of
+    # what the baseline says.
+    fresh = good_doc()
+    fresh["power"]["capped_draw_1s_w"] = fresh["power"]["budget_w"] * 1.1
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("not enforced" in p for p in problems)
+
+
+def test_capping_that_costs_energy_fails():
+    fresh = good_doc()
+    fresh["power"]["capped_energy_per_job_j"] = (
+        fresh["power"]["uncapped_energy_per_job_j"] * 1.2
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("must save energy" in p for p in problems)
+
+
+@pytest.mark.parametrize("key", ["capped_energy_per_job_j", "capped_p99_sim_ms"])
+def test_power_ceilings_vs_baseline_enforced(key):
+    # Trajectory gates: capped energy/job and simulated p99 are ceilings
+    # relative to the committed baseline.
+    fresh = good_doc()
+    fresh["power"][key] = good_doc()["power"][key] * 1.5
+    if key == "capped_energy_per_job_j":
+        # keep the internal capped<=uncapped invariant satisfied so only
+        # the baseline ceiling trips
+        fresh["power"]["uncapped_energy_per_job_j"] = fresh["power"][key] * 2
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any(f"power.{key}" in p for p in problems)
+    # a 20% rise stays inside the 30% ceiling
+    fresh = good_doc()
+    fresh["power"][key] = good_doc()["power"][key] * 1.2
+    if key == "capped_energy_per_job_j":
+        fresh["power"]["uncapped_energy_per_job_j"] = fresh["power"][key] * 2
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_power_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["power"]["capped_draw_1s_w"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="power.capped_draw_1s_w"):
+        check_bench.load_doc(path)
+
+
+def test_power_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["power"] = 42
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="power.budget_w"):
+        check_bench.load_doc(path)
+
+
+@pytest.mark.parametrize("key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power"])
 def test_missing_top_level_key_is_rejected(tmp_path, key):
     doc = good_doc()
     del doc[key]
