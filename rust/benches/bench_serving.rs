@@ -8,6 +8,12 @@
 //!      row-parallel) on the identical workload in rows/s,
 //!   2b. the opened workload shapes: mixed-radix non-pow2 (n=1536),
 //!      Bluestein prime (n=1009) and real-input rFFT (n=4096) rows/s,
+//!   2c. native precision & persistent pool (schema 4): f32-native vs
+//!      f64-convert rows/s on the n=1024 workload (the f64-convert leg
+//!      reproduces the pre-PR cost structure: widen, run f64 kernels,
+//!      narrow), a plane-inspection proof that the f32 path allocates no
+//!      f64 planes, and pool vs scoped-spawn batches/s at the standard
+//!      device batch (the smallest batch the serial cutoff parallelizes),
 //!   3. fleet end-to-end throughput: jobs/s through a 2-card engine on the
 //!      n=1024 workload (open loop), plus an allocation-frequency proxy
 //!      from a counting global allocator,
@@ -200,6 +206,122 @@ fn main() {
          ({rfft_vs_complex:.2}x vs complex)"
     );
 
+    // 2c. Native precision: f32-native vs f64-convert rows/s on the
+    // standard workload. The f64-convert leg reproduces the pre-PR cost
+    // structure exactly — widen both f32 input planes to f64, run the f64
+    // kernels, narrow the outputs back — so the delta is the tentpole's
+    // win (half the plane traffic + f32 SIMD width), measured honestly
+    // with the conversion cost inside the timed region.
+    let t0 = Instant::now();
+    planner::run_rows(&plan, Direction::Forward, &re, &im, dft_rows, &mut out_re, &mut out_im);
+    let f32_native_rows_per_s = dft_rows as f64 / t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+
+    let mut cvt_re = vec![0.0f64; dft_rows * N];
+    let mut cvt_im = vec![0.0f64; dft_rows * N];
+    let mut cvt_out_re = vec![0.0f64; dft_rows * N];
+    let mut cvt_out_im = vec![0.0f64; dft_rows * N];
+    // warm the f64 planes/scratch so both legs measure steady state
+    planner::run_rows(&plan, Direction::Forward, &cvt_re, &cvt_im, DEVICE_BATCH, &mut cvt_out_re, &mut cvt_out_im);
+    let t0 = Instant::now();
+    for (dst, src) in cvt_re.iter_mut().zip(&re) {
+        *dst = *src as f64;
+    }
+    for (dst, src) in cvt_im.iter_mut().zip(&im) {
+        *dst = *src as f64;
+    }
+    planner::run_rows(&plan, Direction::Forward, &cvt_re, &cvt_im, dft_rows, &mut cvt_out_re, &mut cvt_out_im);
+    for (dst, src) in out_re.iter_mut().zip(&cvt_out_re) {
+        *dst = *src as f32;
+    }
+    for (dst, src) in out_im.iter_mut().zip(&cvt_out_im) {
+        *dst = *src as f32;
+    }
+    let f64_convert_rows_per_s = dft_rows as f64 / t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+    let f32_vs_f64_convert = f32_native_rows_per_s / f64_convert_rows_per_s;
+
+    // Plane inspection: a fresh scratch serving only f32 work must never
+    // allocate an f64 plane — the structural no-conversion proof the CI
+    // gate checks (any nonzero value here fails the bench gate).
+    let f32_f64_plane_bytes = {
+        let mut inspect = planner::FftScratch::new();
+        plan.run_rows_serial(
+            Direction::Forward,
+            &re,
+            &im,
+            DEVICE_BATCH,
+            &mut out_re,
+            &mut out_im,
+            &mut inspect,
+        );
+        inspect.capacity_of::<f64>() * std::mem::size_of::<f64>()
+    };
+    assert_eq!(f32_f64_plane_bytes, 0, "f32 serving path grew f64 planes");
+
+    // Persistent pool vs per-call scoped spawns, in batches/s at the
+    // standard device batch (64×1024 = the smallest shape the serial
+    // cutoff parallelizes — exactly where per-call spawn overhead bites).
+    let spawn_rows = |plan: &planner::FftPlan,
+                      re: &[f32],
+                      im: &[f32],
+                      out_re: &mut [f32],
+                      out_im: &mut [f32]| {
+        // The pre-PR execution shape: scoped std threads spawned per call.
+        let threads = planner::pool_threads().min(DEVICE_BATCH);
+        let chunk_rows = DEVICE_BATCH.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let chunks = out_re[..DEVICE_BATCH * N]
+                .chunks_mut(chunk_rows * N)
+                .zip(out_im[..DEVICE_BATCH * N].chunks_mut(chunk_rows * N))
+                .enumerate();
+            for (ci, (o_re, o_im)) in chunks {
+                let start = ci * chunk_rows;
+                let rows_here = o_re.len() / N;
+                let re_chunk = &re[start * N..(start + rows_here) * N];
+                let im_chunk = &im[start * N..(start + rows_here) * N];
+                scope.spawn(move || {
+                    planner::with_scratch(|s| {
+                        plan.run_rows_serial(
+                            Direction::Forward,
+                            re_chunk,
+                            im_chunk,
+                            rows_here,
+                            o_re,
+                            o_im,
+                            s,
+                        )
+                    });
+                });
+            }
+        });
+    };
+    let pool_iters = if quick { 200 } else { 800 };
+    planner::run_rows(&plan, Direction::Forward, &re, &im, DEVICE_BATCH, &mut out_re, &mut out_im);
+    let t0 = Instant::now();
+    for _ in 0..pool_iters {
+        planner::run_rows(&plan, Direction::Forward, &re, &im, DEVICE_BATCH, &mut out_re, &mut out_im);
+    }
+    let pool_batches_per_s = pool_iters as f64 / t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+    spawn_rows(&plan, &re, &im, &mut out_re, &mut out_im);
+    let t0 = Instant::now();
+    for _ in 0..pool_iters {
+        spawn_rows(&plan, &re, &im, &mut out_re, &mut out_im);
+    }
+    let spawn_batches_per_s = pool_iters as f64 / t0.elapsed().as_secs_f64();
+    black_box(&out_re);
+    let pool_vs_spawn = pool_batches_per_s / spawn_batches_per_s;
+    let pool = planner::pool_stats();
+
+    println!(
+        "native: f32 {f32_native_rows_per_s:.0} rows/s vs f64-convert \
+         {f64_convert_rows_per_s:.0} rows/s ({f32_vs_f64_convert:.2}x), f64 plane bytes on f32 \
+         path: {f32_f64_plane_bytes}; pool {pool_batches_per_s:.0} vs scoped-spawn \
+         {spawn_batches_per_s:.0} batches/s ({pool_vs_spawn:.2}x, {} workers, {} spawned)",
+        pool.workers, pool.spawned_total
+    );
+
     // 3. Fleet end to end: open-loop throughput + allocation proxy.
     let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
     let fleet = (0..CARDS)
@@ -292,7 +414,7 @@ fn main() {
 
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 3.0.into());
+    root.set("schema", 4.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -316,6 +438,17 @@ fn main() {
     rfft_json.set("rows_per_s", rfft_rows_per_s.into());
     rfft_json.set("vs_complex", rfft_vs_complex.into());
     root.set("rfft", rfft_json);
+    let mut native_json = Json::obj();
+    native_json.set("f32_rows_per_s", f32_native_rows_per_s.into());
+    native_json.set("f64_convert_rows_per_s", f64_convert_rows_per_s.into());
+    native_json.set("f32_vs_f64_convert", f32_vs_f64_convert.into());
+    native_json.set("f32_f64_plane_bytes", (f32_f64_plane_bytes as u64).into());
+    native_json.set("pool_batches_per_s", pool_batches_per_s.into());
+    native_json.set("spawn_batches_per_s", spawn_batches_per_s.into());
+    native_json.set("pool_vs_spawn", pool_vs_spawn.into());
+    native_json.set("pool_workers", (pool.workers as u64).into());
+    native_json.set("pool_threads_spawned", pool.spawned_total.into());
+    root.set("native", native_json);
     let mut fleet_json = Json::obj();
     fleet_json.set("jobs_per_s", jobs_per_s.into());
     fleet_json.set("p50_ms", p50.into());

@@ -395,16 +395,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `--lengths` restricts traffic to the given lengths; each one is
     // admission-checked against the router so a typo surfaces the typed
     // error taxonomy (with the routable set) instead of 0-job silence.
-    let lengths: Vec<u64> = match lengths_arg(args)? {
+    // Pre-warm the plan cache before accepting jobs (admission check
+    // included): the first batch per length pays no plan-build latency.
+    // rfft artifacts of the same lengths ride along. An explicit
+    // --lengths menu fails loud (a typo'd or corrupt length should stop
+    // the serve); the default all-supported menu warms best-effort so one
+    // bad on-disk artifact cannot take down the healthy lengths (loads
+    // stay lazy per-batch for anything that failed to warm).
+    let (lengths, warmed): (Vec<u64>, usize) = match lengths_arg(args)? {
         Some(menu) => {
-            for &n in &menu {
-                engine.router().route(n, "f32")?;
-            }
-            menu
+            let warmed = engine.prewarm(&menu, "f32")?;
+            (menu, warmed)
         }
-        None => engine.router().supported_lengths("f32"),
+        None => {
+            let menu = engine.router().supported_lengths("f32");
+            let mut warmed = 0usize;
+            for &n in &menu {
+                match engine.prewarm(&[n], "f32") {
+                    Ok(w) => warmed += w,
+                    Err(e) => eprintln!("warning: pre-warm of n={n} failed: {e:#}"),
+                }
+            }
+            (menu, warmed)
+        }
     };
     anyhow::ensure!(!lengths.is_empty(), "no routable lengths");
+    println!(
+        "plan cache pre-warmed: {warmed} artifact(s) across {} length(s)",
+        lengths.len()
+    );
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for _ in 0..jobs {

@@ -444,6 +444,30 @@ impl Engine {
         self.power_budget_w
     }
 
+    /// Pre-warm the plan cache for an admissible length menu before
+    /// accepting traffic: route each length, load (and thereby
+    /// plan-compile) its artifact, and ride along any `rfft` artifacts of
+    /// the same lengths. Loads land in the runtime's shared module cache,
+    /// so the first batch per length on every card skips both the
+    /// `runtime.load` and the plan-build latency. Returns the number of
+    /// artifacts warmed; an unroutable length surfaces the usual typed
+    /// [`CoordError::UnsupportedLength`].
+    pub fn prewarm(&self, lengths: &[u64], dtype: &str) -> Result<usize> {
+        let mut warmed = 0usize;
+        for &n in lengths {
+            let route = self.router.route(n, dtype)?.clone();
+            self.runtime.load(&route.artifact)?;
+            warmed += 1;
+        }
+        for meta in self.runtime.manifest().of_kind("rfft") {
+            if lengths.contains(&meta.n) && meta.dtype == dtype {
+                self.runtime.load(&meta.name)?;
+                warmed += 1;
+            }
+        }
+        Ok(warmed)
+    }
+
     /// Typed fleet state: per-card serving counters + power telemetry
     /// plus the fleet aggregate — what the exporters, benches and tests
     /// consume (the report string is [`FleetSnapshot::render`] on top).
@@ -687,5 +711,61 @@ fn worker_loop(
             }
         }
         w.inflight.fetch_sub(n_env, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::tesla_v100;
+    use std::path::Path;
+
+    fn engine() -> Engine {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        Engine::start_single(
+            rt,
+            tesla_v100(),
+            GovernorKind::FixedBoost,
+            EngineConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn prewarm_loads_artifacts_before_traffic() {
+        let e = engine();
+        assert!(e.runtime().loaded_names().is_empty(), "cold start");
+        let warmed = e.prewarm(&[1024], "f32").unwrap();
+        assert_eq!(warmed, 1);
+        assert!(e
+            .runtime()
+            .loaded_names()
+            .contains(&"fft_f32_n1024_b64".to_string()));
+        e.shutdown();
+    }
+
+    #[test]
+    fn prewarm_rides_rfft_artifacts_along() {
+        let e = engine();
+        // n=4096 has both an fft and an rfft artifact in the synthetic
+        // manifest: both plans compile up front.
+        let warmed = e.prewarm(&[4096], "f32").unwrap();
+        assert_eq!(warmed, 2, "fft + rfft artifact for the same length");
+        let names = e.runtime().loaded_names();
+        assert!(names.contains(&"rfft_f32_n4096_b16".to_string()));
+        e.shutdown();
+    }
+
+    #[test]
+    fn prewarm_rejects_unroutable_lengths_typed() {
+        let e = engine();
+        let err = e.prewarm(&[1234], "f32").unwrap_err();
+        assert!(
+            err.downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::UnsupportedLength { n: 1234, .. }))
+                .unwrap_or(false),
+            "expected UnsupportedLength, got {err:#}"
+        );
+        e.shutdown();
     }
 }

@@ -8,7 +8,7 @@ pub mod signal;
 
 pub use fft::{fft, harmonic_sum, ifft, moments, power_spectrum, C64};
 pub use planner::{
-    fft_planned, plan_for, rfft_len, rfft_plan_for, run_rfft_rows, Direction, FftPlan, FftScratch,
-    PlanAlgorithm, RfftPlan,
+    fft_planned, plan_for, pool_stats, rfft_len, rfft_plan_for, run_rfft_rows, run_rows, Direction,
+    FftPlan, FftScratch, PlanAlgorithm, PlanScalar, RfftPlan,
 };
 pub use signal::{detect_peak, pulsar_time_series, PulsarParams};

@@ -7,69 +7,129 @@
 //! cuFFT plans do, and serves **every** length:
 //!
 //!   * mixed-radix Stockham decomposition with radix-2/3/5 butterflies and
-//!     per-stage twiddle tables (both directions), precomputed once per
-//!     transform length and cached process-wide ([`plan_for`]) — the
-//!     radix-2 schedule is bit-identical to `fft_stockham`,
+//!     per-stage twiddle tables, precomputed once per transform length and
+//!     cached process-wide ([`plan_for`]) — only the **forward** tables are
+//!     stored; the inverse direction conjugates them at execution time
+//!     (the radix-2 forward schedule is bit-identical to `fft_stockham`),
+//!   * **native-precision kernels**: every pass is monomorphized over
+//!     [`PlanScalar`], so f32 batches execute in f32 planes end-to-end
+//!     (twiddles pre-narrowed to f32 at plan build) and f64 batches in f64
+//!     planes — no up-conversion, half the memory traffic on the dominant
+//!     f32 serving workload,
+//!   * **row-blocked batch-major execution**: a block of rows is
+//!     transposed into batch-major SoA planes (element `(row r, col c)` at
+//!     `c·bl + r`), which fuses each butterfly group's column and row
+//!     loops into one contiguous span with a constant twiddle — the inner
+//!     loop is a pure FMA stream over `stride·bl` adjacent elements, which
+//!     auto-vectorizes. The block size is chosen for L2 residency
+//!     (`FFTSWEEP_FFT_BLOCK` overrides); block = 1 degenerates to the
+//!     exact per-row loop, so f64 pow2 output stays bit-identical to the
+//!     oracle at any block size (per-element operation order never
+//!     changes),
 //!   * Bluestein's chirp-z algorithm as the fallback for lengths with
-//!     prime factors other than 2/3/5: the length-N transform becomes a
-//!     circular convolution of padded length `m = next_pow2(2N-1)` run
-//!     through a cached power-of-two plan, with the chirp and the kernel
-//!     spectrum precomputed at plan-build time,
+//!     prime factors other than 2/3/5 — executed in f64 planes regardless
+//!     of the I/O precision (the quadratic chirp phase wants the headroom;
+//!     this is the documented precision-tier exception),
 //!   * a real-input path ([`RfftPlan`]): an even-N real transform packs
-//!     into an N/2 complex transform plus an O(N) unpack; odd N falls back
-//!     to the complex plan with a zero imaginary plane,
-//!   * execution in split re/im (SoA) `f64` scratch planes owned by a
-//!     reusable [`FftScratch`] — **no trig and no heap allocation inside
-//!     the per-row inner loop**,
-//!   * row-parallel batch execution over std scoped threads
-//!     ([`run_rows`], [`run_rfft_rows`]), bit-identical to the serial path
-//!     because rows are independent and each thread runs the same
-//!     per-row code.
-//!
-//! For power-of-two lengths the butterfly schedule and operation order
-//! mirror `fft_stockham` exactly, so planned output is bit-identical to
-//! the oracle in f64.
+//!     into an N/2 complex transform plus an O(N) unpack (row-blocked and
+//!     native-precision when the half plan is mixed radix); odd N falls
+//!     back to the complex plan with a zero imaginary plane,
+//!   * batch execution through a **persistent worker pool**
+//!     ([`run_rows`], [`run_rfft_rows`]): parked idle threads sized by
+//!     cores / `FFTSWEEP_FFT_THREADS`, a row-range work queue, zero thread
+//!     spawns after pool initialization, and the same `PAR_MIN_ELEMS`
+//!     serial cutoff as before. Rows are independent and each runs the
+//!     identical per-row code, so pool output is bit-identical to serial
+//!     at equal precision.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::dsp::fft::C64;
+use crate::util::workpool::{PoolStats, WorkPool};
 
 /// Transform direction. `Forward` matches `dsp::fft` (sign −1);
 /// `Inverse` is the unnormalized adjoint (sign +1) — callers scale by
-/// 1/N themselves, as with `fft_stockham(x, 1.0)`.
+/// 1/N themselves, as with `fft_stockham(x, 1.0)`. The inverse direction
+/// carries no tables of its own: it conjugates the forward twiddles at
+/// execution time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Direction {
     Forward,
     Inverse,
 }
 
-/// Sample type a plan can execute on. The arithmetic is always f64 in the
-/// scratch planes; this only governs the load/store conversion.
-pub trait PlanScalar: Copy + Send + Sync {
-    fn to_f64(self) -> f64;
+/// Sample type a plan executes on **natively**: the butterfly kernels are
+/// monomorphized over this trait, so `f32` rows run in f32 planes with
+/// pre-narrowed f32 twiddles and `f64` rows in f64 planes. Implemented
+/// for `f32` and `f64` only.
+pub trait PlanScalar:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + std::fmt::Debug
+    + 'static
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Neg<Output = Self>
+{
+    const ZERO: Self;
     fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// This precision's pre-narrowed view of a twiddle table.
+    fn tw(table: &TwiddleTable) -> (&[Self], &[Self]);
+    /// This precision's planes inside the shared scratch.
+    fn planes_mut(s: &mut FftScratch) -> &mut PrecisionScratch<Self>;
+    fn planes_ref(s: &FftScratch) -> &PrecisionScratch<Self>;
 }
 
 impl PlanScalar for f32 {
+    const ZERO: Self = 0.0;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
     #[inline]
     fn to_f64(self) -> f64 {
         self as f64
     }
     #[inline]
-    fn from_f64(x: f64) -> Self {
-        x as f32
+    fn tw(table: &TwiddleTable) -> (&[Self], &[Self]) {
+        (&table.re32, &table.im32)
+    }
+    #[inline]
+    fn planes_mut(s: &mut FftScratch) -> &mut PrecisionScratch<Self> {
+        &mut s.s32
+    }
+    #[inline]
+    fn planes_ref(s: &FftScratch) -> &PrecisionScratch<Self> {
+        &s.s32
     }
 }
 
 impl PlanScalar for f64 {
+    const ZERO: Self = 0.0;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
     #[inline]
     fn to_f64(self) -> f64 {
         self
     }
     #[inline]
-    fn from_f64(x: f64) -> Self {
-        x
+    fn tw(table: &TwiddleTable) -> (&[Self], &[Self]) {
+        (&table.re64, &table.im64)
+    }
+    #[inline]
+    fn planes_mut(s: &mut FftScratch) -> &mut PrecisionScratch<Self> {
+        &mut s.s64
+    }
+    #[inline]
+    fn planes_ref(s: &FftScratch) -> &PrecisionScratch<Self> {
+        &s.s64
     }
 }
 
@@ -90,36 +150,60 @@ pub fn supports(n: usize) -> bool {
     n >= 1
 }
 
-/// The sign-folded butterfly constants of one stage's radix kernel.
-#[derive(Clone, Copy)]
-enum Kernel {
-    R2,
-    /// `s3 = sign * sqrt(3)/2` — the imaginary part of the radix-3 root.
-    R3 { s3: f64 },
-    /// `c1/c2 = cos(2pi/5), cos(4pi/5)`; `s1/s2` sign-folded sines.
-    R5 { c1: f64, c2: f64, s1: f64, s2: f64 },
+/// One direction's twiddle constants, stored in f64 and pre-narrowed to
+/// f32 at build time so each precision's kernel loads its native width.
+/// Only the forward direction is stored per stage — inverse execution
+/// negates the imaginary part in the kernel (exact conjugation), which
+/// halves what two stored directions used to cost.
+pub struct TwiddleTable {
+    re64: Vec<f64>,
+    im64: Vec<f64>,
+    re32: Vec<f32>,
+    im32: Vec<f32>,
+}
+
+impl TwiddleTable {
+    fn new(re64: Vec<f64>, im64: Vec<f64>) -> Self {
+        let re32 = re64.iter().map(|&v| v as f32).collect();
+        let im32 = im64.iter().map(|&v| v as f32).collect();
+        Self {
+            re64,
+            im64,
+            re32,
+            im32,
+        }
+    }
+
+    /// Entries in the table (complex constants).
+    fn entries(&self) -> usize {
+        self.re64.len()
+    }
+
+    /// Bytes held: f64 re+im plus the pre-narrowed f32 re+im.
+    fn bytes(&self) -> usize {
+        self.entries() * (2 * std::mem::size_of::<f64>() + 2 * std::mem::size_of::<f32>())
+    }
 }
 
 /// One Stockham stage: `m` butterfly groups of `radix` inputs at `stride`
-/// columns each, with the `(radix-1)` twiddles per group precomputed as
-/// `tw[p*(radix-1) + (j-1)] = expi(theta0 * p * j)`. The radix itself is
-/// carried by the `kernel` variant.
+/// columns each, with the `(radix-1)` forward twiddles per group
+/// precomputed as `tw[p*(radix-1) + (j-1)] = expi(theta0 * p * j)`,
+/// `theta0 = -2π/n_cur`.
 struct Stage {
     m: usize,
     stride: usize,
-    kernel: Kernel,
-    tw_re: Vec<f64>,
-    tw_im: Vec<f64>,
+    radix: usize,
+    tw: TwiddleTable,
 }
 
-/// A reusable execution plan for one transform length: per-stage twiddle
-/// tables for both directions (mixed radix), or the precomputed chirp /
-/// kernel-spectrum pair (Bluestein). Immutable after construction; share
-/// it freely across threads (the cache hands out `Arc<FftPlan>`).
+/// A reusable execution plan for one transform length: per-stage forward
+/// twiddle tables (mixed radix; inverse derived by conjugation), or the
+/// precomputed chirp / kernel-spectrum state (Bluestein). Immutable after
+/// construction; share it freely across threads (the cache hands out
+/// `Arc<FftPlan>`).
 pub struct FftPlan {
     n: usize,
-    fwd: Vec<Stage>,
-    inv: Vec<Stage>,
+    stages: Vec<Stage>,
     bluestein: Option<Bluestein>,
 }
 
@@ -137,21 +221,21 @@ impl FftPlan {
         if rem == 1 {
             Self {
                 n,
-                fwd: Self::stages(n, -1.0),
-                inv: Self::stages(n, 1.0),
+                stages: Self::stages(n),
                 bluestein: None,
             }
         } else {
             Self {
                 n,
-                fwd: Vec::new(),
-                inv: Vec::new(),
+                stages: Vec::new(),
                 bluestein: Some(Bluestein::new(n)),
             }
         }
     }
 
-    fn stages(n: usize, sign: f64) -> Vec<Stage> {
+    /// Forward-direction stage list (sign −1, exactly `fft_stockham`'s
+    /// twiddle expression so radix-2 tables are bit-identical).
+    fn stages(n: usize) -> Vec<Stage> {
         let mut out = Vec::new();
         let mut n_cur = n;
         let mut stride = 1usize;
@@ -167,9 +251,7 @@ impl FftPlan {
             };
             debug_assert_eq!(n_cur % radix, 0, "stage radix must divide n_cur");
             let m = n_cur / radix;
-            // Same expression as fft_stockham so radix-2 twiddles are
-            // bit-identical ((p * 1) as f64 == p as f64).
-            let theta0 = sign * 2.0 * std::f64::consts::PI / n_cur as f64;
+            let theta0 = -2.0 * std::f64::consts::PI / n_cur as f64;
             let mut tw_re = Vec::with_capacity(m * (radix - 1));
             let mut tw_im = Vec::with_capacity(m * (radix - 1));
             for p in 0..m {
@@ -179,27 +261,11 @@ impl FftPlan {
                     tw_im.push(theta.sin());
                 }
             }
-            let kernel = match radix {
-                2 => Kernel::R2,
-                3 => Kernel::R3 {
-                    s3: sign * (3.0f64.sqrt() / 2.0),
-                },
-                _ => {
-                    let fifth = 2.0 * std::f64::consts::PI / 5.0;
-                    Kernel::R5 {
-                        c1: fifth.cos(),
-                        c2: (2.0 * fifth).cos(),
-                        s1: sign * fifth.sin(),
-                        s2: sign * (2.0 * fifth).sin(),
-                    }
-                }
-            };
             out.push(Stage {
                 m,
                 stride,
-                kernel,
-                tw_re,
-                tw_im,
+                radix,
+                tw: TwiddleTable::new(tw_re, tw_im),
             });
             n_cur = m;
             stride *= radix;
@@ -220,22 +286,35 @@ impl FftPlan {
         }
     }
 
-    /// Transform one row already loaded into `scratch`'s A planes; returns
-    /// `true` when the result ended in the A planes (even stage count).
-    /// Mixed-radix plans only (Bluestein routes through `run_row`).
-    fn run_loaded(&self, dir: Direction, s: &mut FftScratch) -> bool {
-        let stages = match dir {
-            Direction::Forward => &self.fwd,
-            Direction::Inverse => &self.inv,
-        };
-        let n = self.n;
-        let (a_re, a_im, b_re, b_im) = s.planes(n);
+    /// Bytes of precomputed constants this plan holds (stage twiddles in
+    /// both precisions, plus chirp/kernel-spectrum state for Bluestein).
+    /// Only one direction is stored — the plan-size regression tests gate
+    /// this so a second direction can never silently creep back in.
+    pub fn twiddle_bytes(&self) -> usize {
+        let stages: usize = self.stages.iter().map(|s| s.tw.bytes()).sum();
+        let blue = self.bluestein.as_ref().map_or(0, |b| b.table_bytes());
+        stages + blue
+    }
+
+    /// Transform a block of `bl` rows already loaded into `s`'s A planes
+    /// in batch-major layout; returns `true` when the result ended in the
+    /// A planes (even stage count). Mixed-radix plans only (Bluestein
+    /// routes through `run_row`).
+    fn run_block<T: PlanScalar>(
+        &self,
+        dir: Direction,
+        bl: usize,
+        s: &mut PrecisionScratch<T>,
+    ) -> bool {
+        let conj = dir == Direction::Inverse;
+        let len = self.n * bl;
+        let (a_re, a_im, b_re, b_im) = s.planes(len);
         let mut in_a = true;
-        for st in stages {
+        for st in &self.stages {
             if in_a {
-                st.pass(a_re, a_im, b_re, b_im);
+                st.pass(conj, bl, a_re, a_im, b_re, b_im);
             } else {
-                st.pass(b_re, b_im, a_re, a_im);
+                st.pass(conj, bl, b_re, b_im, a_re, a_im);
             }
             in_a = !in_a;
         }
@@ -245,7 +324,9 @@ impl FftPlan {
     /// Transform one row: load `re_in`/`im_in` into scratch, run every
     /// stage, store into `out_re`/`out_im`. All slices must have length
     /// `self.n()`. Steady-state this performs zero heap allocation: the
-    /// scratch planes are grown once and reused.
+    /// scratch planes are grown once and reused. Execution is native-`T`
+    /// (no precision conversion) except through Bluestein plans, which
+    /// compute in f64 planes.
     pub fn run_row<T: PlanScalar>(
         &self,
         dir: Direction,
@@ -264,29 +345,25 @@ impl FftPlan {
             bl.run_row(dir, re_in, im_in, out_re, out_im, scratch);
             return;
         }
-        scratch.ensure(n);
+        let s = T::planes_mut(scratch);
+        s.ensure(n);
         {
-            let (a_re, a_im, _, _) = scratch.planes(n);
-            for (dst, src) in a_re.iter_mut().zip(re_in) {
-                *dst = src.to_f64();
-            }
-            for (dst, src) in a_im.iter_mut().zip(im_in) {
-                *dst = src.to_f64();
-            }
+            let (a_re, a_im, _, _) = s.planes(n);
+            a_re.copy_from_slice(re_in);
+            a_im.copy_from_slice(im_in);
         }
-        let in_a = self.run_loaded(dir, scratch);
-        let (a_re, a_im, b_re, b_im) = scratch.planes(n);
-        let (res_re, res_im): (&[f64], &[f64]) = if in_a { (a_re, a_im) } else { (b_re, b_im) };
-        for (dst, src) in out_re.iter_mut().zip(res_re) {
-            *dst = T::from_f64(*src);
-        }
-        for (dst, src) in out_im.iter_mut().zip(res_im) {
-            *dst = T::from_f64(*src);
-        }
+        let in_a = self.run_block::<T>(dir, 1, s);
+        let (a_re, a_im, b_re, b_im) = s.planes(n);
+        let (res_re, res_im): (&[T], &[T]) = if in_a { (a_re, a_im) } else { (b_re, b_im) };
+        out_re.copy_from_slice(res_re);
+        out_im.copy_from_slice(res_im);
     }
 
     /// Transform `rows` consecutive rows serially with one scratch.
-    /// `re`/`im` and the outputs are row-major `rows × n`.
+    /// `re`/`im` and the outputs are row-major `rows × n`. Mixed-radix
+    /// plans execute row-blocked: up to [`row_block`] rows are transposed
+    /// into batch-major planes and swept together, so the butterfly inner
+    /// loops stride contiguously and auto-vectorize.
     #[allow(clippy::too_many_arguments)]
     pub fn run_rows_serial<T: PlanScalar>(
         &self,
@@ -301,58 +378,119 @@ impl FftPlan {
         let n = self.n;
         assert!(re.len() >= rows * n && im.len() >= rows * n, "input planes too short");
         assert!(out_re.len() >= rows * n && out_im.len() >= rows * n, "output planes too short");
-        for r in 0..rows {
-            let off = r * n;
-            self.run_row(
-                dir,
-                &re[off..off + n],
-                &im[off..off + n],
-                &mut out_re[off..off + n],
-                &mut out_im[off..off + n],
-                scratch,
-            );
+        if self.bluestein.is_some() {
+            for r in 0..rows {
+                let off = r * n;
+                self.run_row(
+                    dir,
+                    &re[off..off + n],
+                    &im[off..off + n],
+                    &mut out_re[off..off + n],
+                    &mut out_im[off..off + n],
+                    scratch,
+                );
+            }
+            return;
+        }
+        // Never grow scratch past what this batch actually needs: a small
+        // batch under a large (possibly overridden) block size stays small.
+        let bl_max = row_block::<T>(n).min(rows.max(1));
+        let s = T::planes_mut(scratch);
+        s.ensure(n * bl_max);
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let bl = bl_max.min(rows - r0);
+            {
+                // Load transpose: row-major input → batch-major planes.
+                let (a_re, a_im, _, _) = s.planes(n * bl);
+                for r in 0..bl {
+                    let row_re = &re[(r0 + r) * n..][..n];
+                    let row_im = &im[(r0 + r) * n..][..n];
+                    for c in 0..n {
+                        a_re[c * bl + r] = row_re[c];
+                        a_im[c * bl + r] = row_im[c];
+                    }
+                }
+            }
+            let in_a = self.run_block::<T>(dir, bl, s);
+            let (a_re, a_im, b_re, b_im) = s.planes(n * bl);
+            let (res_re, res_im): (&[T], &[T]) = if in_a { (a_re, a_im) } else { (b_re, b_im) };
+            for r in 0..bl {
+                let out_r = &mut out_re[(r0 + r) * n..][..n];
+                let out_i = &mut out_im[(r0 + r) * n..][..n];
+                for c in 0..n {
+                    out_r[c] = res_re[c * bl + r];
+                    out_i[c] = res_im[c * bl + r];
+                }
+            }
+            r0 += bl;
         }
     }
 }
 
 impl Stage {
-    /// One Stockham pass: reads `cur`, writes `nxt`. The inner loops are
-    /// pure loads, multiplies and adds — no trig, no allocation.
+    /// One Stockham pass over a batch-major block: reads `cur`, writes
+    /// `nxt`. In batch-major layout a butterfly group's `stride` columns ×
+    /// `bl` rows form one contiguous span of `stride·bl` elements sharing
+    /// a single twiddle, so the inner loops below are pure contiguous
+    /// load/multiply/add streams — no trig, no allocation, no gather.
+    /// At `bl = 1` the spans and the per-element operation order are
+    /// exactly the pre-block per-row kernels (f64 pow2 stays bit-identical
+    /// to `fft_stockham`). `conj` selects the inverse direction by
+    /// negating the twiddle imaginary parts (exact conjugation).
     #[inline]
-    fn pass(&self, cur_re: &[f64], cur_im: &[f64], nxt_re: &mut [f64], nxt_im: &mut [f64]) {
-        match self.kernel {
-            Kernel::R2 => self.pass_r2(cur_re, cur_im, nxt_re, nxt_im),
-            Kernel::R3 { s3 } => self.pass_r3(s3, cur_re, cur_im, nxt_re, nxt_im),
-            Kernel::R5 { c1, c2, s1, s2 } => {
-                self.pass_r5(c1, c2, s1, s2, cur_re, cur_im, nxt_re, nxt_im)
-            }
+    fn pass<T: PlanScalar>(
+        &self,
+        conj: bool,
+        bl: usize,
+        cur_re: &[T],
+        cur_im: &[T],
+        nxt_re: &mut [T],
+        nxt_im: &mut [T],
+    ) {
+        match self.radix {
+            2 => self.pass_r2(conj, bl, cur_re, cur_im, nxt_re, nxt_im),
+            3 => self.pass_r3(conj, bl, cur_re, cur_im, nxt_re, nxt_im),
+            _ => self.pass_r5(conj, bl, cur_re, cur_im, nxt_re, nxt_im),
         }
     }
 
-    /// Radix-2 butterfly — operation order identical to `fft_stockham`, so
-    /// power-of-two plans stay bit-identical to the oracle.
+    /// Radix-2 butterfly — per-element operation order identical to
+    /// `fft_stockham`, so power-of-two f64 plans stay bit-identical to
+    /// the oracle.
     #[inline]
-    fn pass_r2(&self, cur_re: &[f64], cur_im: &[f64], nxt_re: &mut [f64], nxt_im: &mut [f64]) {
-        let stride = self.stride;
+    fn pass_r2<T: PlanScalar>(
+        &self,
+        conj: bool,
+        bl: usize,
+        cur_re: &[T],
+        cur_im: &[T],
+        nxt_re: &mut [T],
+        nxt_im: &mut [T],
+    ) {
+        let (tw_re, tw_im) = T::tw(&self.tw);
+        let span = self.stride * bl;
         let m = self.m;
         for p in 0..m {
-            let wr = self.tw_re[p];
-            let wi = self.tw_im[p];
-            let ia = p * stride;
-            let ib = (p + m) * stride;
-            let io0 = 2 * p * stride;
-            let io1 = io0 + stride;
-            for q in 0..stride {
-                let ar = cur_re[ia + q];
-                let ai = cur_im[ia + q];
-                let br = cur_re[ib + q];
-                let bi = cur_im[ib + q];
-                nxt_re[io0 + q] = ar + br;
-                nxt_im[io0 + q] = ai + bi;
+            let wr = tw_re[p];
+            let wi = if conj { -tw_im[p] } else { tw_im[p] };
+            let a_re = &cur_re[p * span..][..span];
+            let a_im = &cur_im[p * span..][..span];
+            let b_re = &cur_re[(p + m) * span..][..span];
+            let b_im = &cur_im[(p + m) * span..][..span];
+            let (o0_re, o1_re) = nxt_re[2 * p * span..][..2 * span].split_at_mut(span);
+            let (o0_im, o1_im) = nxt_im[2 * p * span..][..2 * span].split_at_mut(span);
+            for i in 0..span {
+                let ar = a_re[i];
+                let ai = a_im[i];
+                let br = b_re[i];
+                let bi = b_im[i];
+                o0_re[i] = ar + br;
+                o0_im[i] = ai + bi;
                 let dr = ar - br;
                 let di = ai - bi;
-                nxt_re[io1 + q] = dr * wr - di * wi;
-                nxt_im[io1 + q] = dr * wi + di * wr;
+                o1_re[i] = dr * wr - di * wi;
+                o1_im[i] = dr * wi + di * wr;
             }
         }
     }
@@ -360,93 +498,126 @@ impl Stage {
     /// Radix-3 butterfly: y0 = a+s, y1/y2 = a - s/2 ± i·s3·d with
     /// s = b+c, d = b−c and s3 the sign-folded sqrt(3)/2.
     #[inline]
-    #[allow(clippy::too_many_arguments)]
-    fn pass_r3(
+    fn pass_r3<T: PlanScalar>(
         &self,
-        s3: f64,
-        cur_re: &[f64],
-        cur_im: &[f64],
-        nxt_re: &mut [f64],
-        nxt_im: &mut [f64],
+        conj: bool,
+        bl: usize,
+        cur_re: &[T],
+        cur_im: &[T],
+        nxt_re: &mut [T],
+        nxt_im: &mut [T],
     ) {
-        let stride = self.stride;
+        let (tw_re, tw_im) = T::tw(&self.tw);
+        // Forward sign is −1 (as the stored tables); inverse flips it.
+        let sign = if conj { 1.0 } else { -1.0 };
+        let s3 = T::from_f64(sign * (3.0f64.sqrt() / 2.0));
+        let half = T::from_f64(0.5);
+        let span = self.stride * bl;
         let m = self.m;
         for p in 0..m {
-            let w1r = self.tw_re[2 * p];
-            let w1i = self.tw_im[2 * p];
-            let w2r = self.tw_re[2 * p + 1];
-            let w2i = self.tw_im[2 * p + 1];
-            let i0 = p * stride;
-            let i1 = (p + m) * stride;
-            let i2 = (p + 2 * m) * stride;
-            let o0 = 3 * p * stride;
-            let o1 = o0 + stride;
-            let o2 = o1 + stride;
-            for q in 0..stride {
-                let ar = cur_re[i0 + q];
-                let ai = cur_im[i0 + q];
-                let br = cur_re[i1 + q];
-                let bi = cur_im[i1 + q];
-                let cr = cur_re[i2 + q];
-                let ci = cur_im[i2 + q];
+            let w1r = tw_re[2 * p];
+            let w1i = if conj { -tw_im[2 * p] } else { tw_im[2 * p] };
+            let w2r = tw_re[2 * p + 1];
+            let w2i = if conj { -tw_im[2 * p + 1] } else { tw_im[2 * p + 1] };
+            let a_re = &cur_re[p * span..][..span];
+            let a_im = &cur_im[p * span..][..span];
+            let b_re = &cur_re[(p + m) * span..][..span];
+            let b_im = &cur_im[(p + m) * span..][..span];
+            let c_re = &cur_re[(p + 2 * m) * span..][..span];
+            let c_im = &cur_im[(p + 2 * m) * span..][..span];
+            let (o0_re, rest_re) = nxt_re[3 * p * span..][..3 * span].split_at_mut(span);
+            let (o1_re, o2_re) = rest_re.split_at_mut(span);
+            let (o0_im, rest_im) = nxt_im[3 * p * span..][..3 * span].split_at_mut(span);
+            let (o1_im, o2_im) = rest_im.split_at_mut(span);
+            for i in 0..span {
+                let ar = a_re[i];
+                let ai = a_im[i];
+                let br = b_re[i];
+                let bi = b_im[i];
+                let cr = c_re[i];
+                let ci = c_im[i];
                 let sr = br + cr;
                 let si = bi + ci;
                 let dr = br - cr;
                 let di = bi - ci;
-                nxt_re[o0 + q] = ar + sr;
-                nxt_im[o0 + q] = ai + si;
-                let er = ar - 0.5 * sr;
-                let ei = ai - 0.5 * si;
+                o0_re[i] = ar + sr;
+                o0_im[i] = ai + si;
+                let er = ar - half * sr;
+                let ei = ai - half * si;
                 let fr = s3 * di;
                 let fi = s3 * dr;
                 let y1r = er - fr;
                 let y1i = ei + fi;
                 let y2r = er + fr;
                 let y2i = ei - fi;
-                nxt_re[o1 + q] = y1r * w1r - y1i * w1i;
-                nxt_im[o1 + q] = y1r * w1i + y1i * w1r;
-                nxt_re[o2 + q] = y2r * w2r - y2i * w2i;
-                nxt_im[o2 + q] = y2r * w2i + y2i * w2r;
+                o1_re[i] = y1r * w1r - y1i * w1i;
+                o1_im[i] = y1r * w1i + y1i * w1r;
+                o2_re[i] = y2r * w2r - y2i * w2i;
+                o2_im[i] = y2r * w2i + y2i * w2r;
             }
         }
     }
 
     /// Radix-5 butterfly (standard 5-point DFT factorization with
-    /// t1/t2 = a1±a4-style sums and the sign folded into s1/s2).
+    /// t1/t2 = a1±a4-style sums and the direction sign folded into s1/s2).
     #[inline]
-    #[allow(clippy::too_many_arguments)]
-    fn pass_r5(
+    fn pass_r5<T: PlanScalar>(
         &self,
-        c1: f64,
-        c2: f64,
-        s1: f64,
-        s2: f64,
-        cur_re: &[f64],
-        cur_im: &[f64],
-        nxt_re: &mut [f64],
-        nxt_im: &mut [f64],
+        conj: bool,
+        bl: usize,
+        cur_re: &[T],
+        cur_im: &[T],
+        nxt_re: &mut [T],
+        nxt_im: &mut [T],
     ) {
-        let stride = self.stride;
+        let (tw_re, tw_im) = T::tw(&self.tw);
+        let sign = if conj { 1.0 } else { -1.0 };
+        let fifth = 2.0 * std::f64::consts::PI / 5.0;
+        let c1 = T::from_f64(fifth.cos());
+        let c2 = T::from_f64((2.0 * fifth).cos());
+        let s1 = T::from_f64(sign * fifth.sin());
+        let s2 = T::from_f64(sign * (2.0 * fifth).sin());
+        let span = self.stride * bl;
         let m = self.m;
         for p in 0..m {
             let tw = 4 * p;
-            let i0 = p * stride;
-            let i1 = (p + m) * stride;
-            let i2 = (p + 2 * m) * stride;
-            let i3 = (p + 3 * m) * stride;
-            let i4 = (p + 4 * m) * stride;
-            let o0 = 5 * p * stride;
-            for q in 0..stride {
-                let a0r = cur_re[i0 + q];
-                let a0i = cur_im[i0 + q];
-                let a1r = cur_re[i1 + q];
-                let a1i = cur_im[i1 + q];
-                let a2r = cur_re[i2 + q];
-                let a2i = cur_im[i2 + q];
-                let a3r = cur_re[i3 + q];
-                let a3i = cur_im[i3 + q];
-                let a4r = cur_re[i4 + q];
-                let a4i = cur_im[i4 + q];
+            let w1r = tw_re[tw];
+            let w1i = if conj { -tw_im[tw] } else { tw_im[tw] };
+            let w2r = tw_re[tw + 1];
+            let w2i = if conj { -tw_im[tw + 1] } else { tw_im[tw + 1] };
+            let w3r = tw_re[tw + 2];
+            let w3i = if conj { -tw_im[tw + 2] } else { tw_im[tw + 2] };
+            let w4r = tw_re[tw + 3];
+            let w4i = if conj { -tw_im[tw + 3] } else { tw_im[tw + 3] };
+            let a0_re = &cur_re[p * span..][..span];
+            let a0_im = &cur_im[p * span..][..span];
+            let a1_re = &cur_re[(p + m) * span..][..span];
+            let a1_im = &cur_im[(p + m) * span..][..span];
+            let a2_re = &cur_re[(p + 2 * m) * span..][..span];
+            let a2_im = &cur_im[(p + 2 * m) * span..][..span];
+            let a3_re = &cur_re[(p + 3 * m) * span..][..span];
+            let a3_im = &cur_im[(p + 3 * m) * span..][..span];
+            let a4_re = &cur_re[(p + 4 * m) * span..][..span];
+            let a4_im = &cur_im[(p + 4 * m) * span..][..span];
+            let (o0_re, rest_re) = nxt_re[5 * p * span..][..5 * span].split_at_mut(span);
+            let (o1_re, rest_re) = rest_re.split_at_mut(span);
+            let (o2_re, rest_re) = rest_re.split_at_mut(span);
+            let (o3_re, o4_re) = rest_re.split_at_mut(span);
+            let (o0_im, rest_im) = nxt_im[5 * p * span..][..5 * span].split_at_mut(span);
+            let (o1_im, rest_im) = rest_im.split_at_mut(span);
+            let (o2_im, rest_im) = rest_im.split_at_mut(span);
+            let (o3_im, o4_im) = rest_im.split_at_mut(span);
+            for i in 0..span {
+                let a0r = a0_re[i];
+                let a0i = a0_im[i];
+                let a1r = a1_re[i];
+                let a1i = a1_im[i];
+                let a2r = a2_re[i];
+                let a2i = a2_im[i];
+                let a3r = a3_re[i];
+                let a3i = a3_im[i];
+                let a4r = a4_re[i];
+                let a4i = a4_im[i];
                 let t1r = a1r + a4r;
                 let t1i = a1i + a4i;
                 let t2r = a2r + a3r;
@@ -455,8 +626,8 @@ impl Stage {
                 let t3i = a1i - a4i;
                 let t4r = a2r - a3r;
                 let t4i = a2i - a3i;
-                nxt_re[o0 + q] = a0r + t1r + t2r;
-                nxt_im[o0 + q] = a0i + t1i + t2i;
+                o0_re[i] = a0r + t1r + t2r;
+                o0_im[i] = a0i + t1i + t2i;
                 let m1r = a0r + c1 * t1r + c2 * t2r;
                 let m1i = a0i + c1 * t1i + c2 * t2i;
                 let m2r = a0r + c2 * t1r + c1 * t2r;
@@ -466,22 +637,49 @@ impl Stage {
                 let u2r = s2 * t3r - s1 * t4r;
                 let u2i = s2 * t3i - s1 * t4i;
                 // y_j = m ± i·u, then the group twiddle w_j.
-                let ys = [
-                    (m1r - u1i, m1i + u1r),
-                    (m2r - u2i, m2i + u2r),
-                    (m2r + u2i, m2i - u2r),
-                    (m1r + u1i, m1i - u1r),
-                ];
-                for (j, (yr, yi)) in ys.into_iter().enumerate() {
-                    let wr = self.tw_re[tw + j];
-                    let wi = self.tw_im[tw + j];
-                    let o = o0 + (j + 1) * stride;
-                    nxt_re[o + q] = yr * wr - yi * wi;
-                    nxt_im[o + q] = yr * wi + yi * wr;
-                }
+                let y1r = m1r - u1i;
+                let y1i = m1i + u1r;
+                let y2r = m2r - u2i;
+                let y2i = m2i + u2r;
+                let y3r = m2r + u2i;
+                let y3i = m2i - u2r;
+                let y4r = m1r + u1i;
+                let y4i = m1i - u1r;
+                o1_re[i] = y1r * w1r - y1i * w1i;
+                o1_im[i] = y1r * w1i + y1i * w1r;
+                o2_re[i] = y2r * w2r - y2i * w2i;
+                o2_im[i] = y2r * w2i + y2i * w2r;
+                o3_re[i] = y3r * w3r - y3i * w3i;
+                o3_im[i] = y3r * w3i + y3i * w3r;
+                o4_re[i] = y4r * w4r - y4i * w4i;
+                o4_im[i] = y4r * w4i + y4i * w4r;
             }
         }
     }
+}
+
+/// Row-block size for batch-major execution: the largest block whose
+/// working set (4 planes × n × block × element width) stays within a
+/// half-L2 budget, clamped to [1, 32]. `FFTSWEEP_FFT_BLOCK` overrides
+/// (parsed once). Block size never changes results — only the memory
+/// layout the rows are swept in.
+fn row_block<T: PlanScalar>(n: usize) -> usize {
+    const L2_BUDGET_BYTES: usize = 256 * 1024;
+    if let Some(b) = block_override() {
+        // Clamped too: an experimental override must not be able to make
+        // `ensure(n·block)` allocate unboundedly.
+        return b.clamp(1, 256);
+    }
+    (L2_BUDGET_BYTES / (4 * n * std::mem::size_of::<T>()).max(1)).clamp(1, 32)
+}
+
+fn block_override() -> Option<usize> {
+    static BLOCK: OnceLock<Option<usize>> = OnceLock::new();
+    *BLOCK.get_or_init(|| {
+        std::env::var("FFTSWEEP_FFT_BLOCK")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+    })
 }
 
 /// Bluestein chirp-z state: the length-N DFT expressed as a circular
@@ -491,64 +689,23 @@ impl Stage {
 ///   `X[k] = chirp[k] · Σ_t (x[t]·chirp[t]) · c[k−t]`,
 ///   `chirp[k] = expi(sign·π·k²/N)`, `c[j] = conj(chirp)[j]`.
 ///
-/// The chirp tables and the kernel spectrum `F_m(c)` are precomputed per
-/// direction at plan-build time; execution is two inner power-of-two
-/// transforms plus O(m) pointwise work, all in reused scratch planes.
+/// Only the **forward** chirp is stored — the inverse chirp is its exact
+/// conjugate, applied by sign flip at execution. The kernel spectra are
+/// kept per direction (they are index-reversed conjugates of each other;
+/// deriving one from the other at execution would destride the pointwise
+/// multiply). Execution is two inner power-of-two transforms plus O(m)
+/// pointwise work, in reused **f64** scratch planes regardless of the I/O
+/// precision — the quadratic chirp phase is the documented precision-tier
+/// exception to native-precision execution.
 struct Bluestein {
     m: usize,
     inner: Arc<FftPlan>,
-    fwd: BluesteinDir,
-    inv: BluesteinDir,
-}
-
-struct BluesteinDir {
     chirp_re: Vec<f64>,
     chirp_im: Vec<f64>,
-    kspec_re: Vec<f64>,
-    kspec_im: Vec<f64>,
-}
-
-impl BluesteinDir {
-    fn new(n: usize, m: usize, sign: f64, inner: &FftPlan) -> Self {
-        let mut chirp_re = Vec::with_capacity(n);
-        let mut chirp_im = Vec::with_capacity(n);
-        for k in 0..n {
-            // k² mod 2N keeps the trig argument small (expi has period 2π,
-            // π·k²/N has period 2N in k²) — better accuracy for large k.
-            let theta = sign * std::f64::consts::PI * ((k * k) % (2 * n)) as f64 / n as f64;
-            chirp_re.push(theta.cos());
-            chirp_im.push(theta.sin());
-        }
-        // Kernel c[j] = conj(chirp[j]) placed at lags 0, +j and −j (index
-        // m−j). m >= 2N−1 keeps the two ranges disjoint.
-        let mut c_re = vec![0.0f64; m];
-        let mut c_im = vec![0.0f64; m];
-        c_re[0] = chirp_re[0];
-        c_im[0] = -chirp_im[0];
-        for j in 1..n {
-            c_re[j] = chirp_re[j];
-            c_im[j] = -chirp_im[j];
-            c_re[m - j] = chirp_re[j];
-            c_im[m - j] = -chirp_im[j];
-        }
-        let mut kspec_re = vec![0.0f64; m];
-        let mut kspec_im = vec![0.0f64; m];
-        let mut s = FftScratch::new();
-        inner.run_row::<f64>(
-            Direction::Forward,
-            &c_re,
-            &c_im,
-            &mut kspec_re,
-            &mut kspec_im,
-            &mut s,
-        );
-        Self {
-            chirp_re,
-            chirp_im,
-            kspec_re,
-            kspec_im,
-        }
-    }
+    kspec_fwd_re: Vec<f64>,
+    kspec_fwd_im: Vec<f64>,
+    kspec_inv_re: Vec<f64>,
+    kspec_inv_im: Vec<f64>,
 }
 
 impl Bluestein {
@@ -557,9 +714,64 @@ impl Bluestein {
         // The inner plan is a power of two, so this never recurses deeper
         // (and plan_for is not holding its cache lock while we build).
         let inner = plan_for(m);
-        let fwd = BluesteinDir::new(n, m, -1.0, &inner);
-        let inv = BluesteinDir::new(n, m, 1.0, &inner);
-        Self { m, inner, fwd, inv }
+        let mut chirp_re = Vec::with_capacity(n);
+        let mut chirp_im = Vec::with_capacity(n);
+        for k in 0..n {
+            // k² mod 2N keeps the trig argument small (expi has period 2π,
+            // π·k²/N has period 2N in k²) — better accuracy for large k.
+            let theta = -std::f64::consts::PI * ((k * k) % (2 * n)) as f64 / n as f64;
+            chirp_re.push(theta.cos());
+            chirp_im.push(theta.sin());
+        }
+        // Kernel c[j] placed at lags 0, +j and −j (index m−j); m >= 2N−1
+        // keeps the two ranges disjoint. Forward kernel: conj(chirp).
+        // Inverse kernel: conj(inverse chirp) = the forward chirp itself.
+        let kernel_spectrum = |im_sign: f64, inner: &FftPlan| -> (Vec<f64>, Vec<f64>) {
+            let mut c_re = vec![0.0f64; m];
+            let mut c_im = vec![0.0f64; m];
+            c_re[0] = chirp_re[0];
+            c_im[0] = im_sign * chirp_im[0];
+            for j in 1..n {
+                c_re[j] = chirp_re[j];
+                c_im[j] = im_sign * chirp_im[j];
+                c_re[m - j] = c_re[j];
+                c_im[m - j] = c_im[j];
+            }
+            let mut spec_re = vec![0.0f64; m];
+            let mut spec_im = vec![0.0f64; m];
+            let mut s = FftScratch::new();
+            inner.run_row::<f64>(
+                Direction::Forward,
+                &c_re,
+                &c_im,
+                &mut spec_re,
+                &mut spec_im,
+                &mut s,
+            );
+            (spec_re, spec_im)
+        };
+        let (kspec_fwd_re, kspec_fwd_im) = kernel_spectrum(-1.0, &inner);
+        let (kspec_inv_re, kspec_inv_im) = kernel_spectrum(1.0, &inner);
+        Self {
+            m,
+            inner,
+            chirp_re,
+            chirp_im,
+            kspec_fwd_re,
+            kspec_fwd_im,
+            kspec_inv_re,
+            kspec_inv_im,
+        }
+    }
+
+    /// Bytes of precomputed state (shared chirp + per-direction spectra).
+    fn table_bytes(&self) -> usize {
+        (self.chirp_re.len() + self.chirp_im.len()
+            + self.kspec_fwd_re.len()
+            + self.kspec_fwd_im.len()
+            + self.kspec_inv_re.len()
+            + self.kspec_inv_im.len())
+            * std::mem::size_of::<f64>()
     }
 
     fn run_row<T: PlanScalar>(
@@ -573,9 +785,11 @@ impl Bluestein {
     ) {
         let n = re_in.len();
         let m = self.m;
-        let d = match dir {
-            Direction::Forward => &self.fwd,
-            Direction::Inverse => &self.inv,
+        // Direction sign: the stored chirp is forward; inverse conjugates.
+        let cs = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+        let (ks_re, ks_im) = match dir {
+            Direction::Forward => (&self.kspec_fwd_re, &self.kspec_fwd_im),
+            Direction::Inverse => (&self.kspec_inv_re, &self.kspec_inv_im),
         };
         // Take the convolution bank by value so the inner run_row can
         // borrow the scratch again (a Vec move, no copy; put back below).
@@ -584,8 +798,10 @@ impl Bluestein {
         for k in 0..n {
             let re = re_in[k].to_f64();
             let im = im_in[k].to_f64();
-            bank.xr[k] = re * d.chirp_re[k] - im * d.chirp_im[k];
-            bank.xi[k] = re * d.chirp_im[k] + im * d.chirp_re[k];
+            let cr = self.chirp_re[k];
+            let ci = cs * self.chirp_im[k];
+            bank.xr[k] = re * cr - im * ci;
+            bank.xi[k] = re * ci + im * cr;
         }
         bank.xr[n..m].fill(0.0);
         bank.xi[n..m].fill(0.0);
@@ -600,8 +816,8 @@ impl Bluestein {
         for k in 0..m {
             let ar = bank.yr[k];
             let ai = bank.yi[k];
-            bank.yr[k] = ar * d.kspec_re[k] - ai * d.kspec_im[k];
-            bank.yi[k] = ar * d.kspec_im[k] + ai * d.kspec_re[k];
+            bank.yr[k] = ar * ks_re[k] - ai * ks_im[k];
+            bank.yi[k] = ar * ks_im[k] + ai * ks_re[k];
         }
         self.inner.run_row::<f64>(
             Direction::Inverse,
@@ -615,53 +831,115 @@ impl Bluestein {
         for k in 0..n {
             let ar = bank.xr[k] * inv_m;
             let ai = bank.xi[k] * inv_m;
-            out_re[k] = T::from_f64(ar * d.chirp_re[k] - ai * d.chirp_im[k]);
-            out_im[k] = T::from_f64(ar * d.chirp_im[k] + ai * d.chirp_re[k]);
+            let cr = self.chirp_re[k];
+            let ci = cs * self.chirp_im[k];
+            out_re[k] = T::from_f64(ar * cr - ai * ci);
+            out_im[k] = T::from_f64(ar * ci + ai * cr);
         }
         scratch.conv = bank;
     }
 }
 
-/// Reusable split re/im scratch planes (two ping-pong buffers). One per
-/// worker/thread; grows monotonically to the largest `n` it has served and
-/// never reallocates below that — callers can rely on pointer-stable
-/// planes across executions of the same length.
-///
-/// Beyond the ping-pong pair, two side banks stage data around an inner
-/// transform: `conv` for the Bluestein convolution, `pack` for the rFFT
-/// pack/unpack. They are separate so an rFFT whose half-length plan is
-/// itself Bluestein never aliases its own staging buffers; each bank is
-/// taken by value around the inner call (a `Vec` move, no copy) so the
-/// borrow checker allows re-entering the scratch.
-#[derive(Default)]
-pub struct FftScratch {
-    a_re: Vec<f64>,
-    a_im: Vec<f64>,
-    b_re: Vec<f64>,
-    b_im: Vec<f64>,
-    conv: AuxBank,
-    pack: AuxBank,
+/// One precision's planes inside [`FftScratch`]: two ping-pong re/im
+/// pairs plus the rFFT pack bank. Grows monotonically; pointer-stable
+/// across executions once grown (same contract as the old f64 scratch).
+pub struct PrecisionScratch<T> {
+    a_re: Vec<T>,
+    a_im: Vec<T>,
+    b_re: Vec<T>,
+    b_im: Vec<T>,
+    pack: AuxBank<T>,
+}
+
+impl<T> Default for PrecisionScratch<T> {
+    fn default() -> Self {
+        Self {
+            a_re: Vec::new(),
+            a_im: Vec::new(),
+            b_re: Vec::new(),
+            b_im: Vec::new(),
+            pack: AuxBank::default(),
+        }
+    }
+}
+
+impl<T: PlanScalar> PrecisionScratch<T> {
+    /// Grow every plane to at least `len` elements (no-op once large
+    /// enough).
+    fn ensure(&mut self, len: usize) {
+        if self.a_re.len() < len {
+            self.a_re.resize(len, T::ZERO);
+            self.a_im.resize(len, T::ZERO);
+            self.b_re.resize(len, T::ZERO);
+            self.b_im.resize(len, T::ZERO);
+        }
+    }
+
+    /// Current plane capacity in elements (0 = this precision was never
+    /// executed through this scratch — the plane-inspection check).
+    pub fn capacity(&self) -> usize {
+        self.a_re.len()
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn planes(&mut self, len: usize) -> (&mut [T], &mut [T], &mut [T], &mut [T]) {
+        (
+            &mut self.a_re[..len],
+            &mut self.a_im[..len],
+            &mut self.b_re[..len],
+            &mut self.b_im[..len],
+        )
+    }
 }
 
 /// Four staging planes usable as an (x, y) complex pair.
-#[derive(Default)]
-struct AuxBank {
-    xr: Vec<f64>,
-    xi: Vec<f64>,
-    yr: Vec<f64>,
-    yi: Vec<f64>,
+struct AuxBank<T> {
+    xr: Vec<T>,
+    xi: Vec<T>,
+    yr: Vec<T>,
+    yi: Vec<T>,
 }
 
-impl AuxBank {
+impl<T> Default for AuxBank<T> {
+    fn default() -> Self {
+        Self {
+            xr: Vec::new(),
+            xi: Vec::new(),
+            yr: Vec::new(),
+            yi: Vec::new(),
+        }
+    }
+}
+
+impl<T: PlanScalar> AuxBank<T> {
     /// Grow every plane to at least `len` elements (no-op once large
     /// enough — same monotonic-growth contract as the main planes).
     fn ensure(&mut self, len: usize) {
         for v in [&mut self.xr, &mut self.xi, &mut self.yr, &mut self.yi] {
             if v.len() < len {
-                v.resize(len, 0.0);
+                v.resize(len, T::ZERO);
             }
         }
     }
+}
+
+/// Reusable split re/im scratch planes, one set per precision (a native
+/// f32 execution never touches — never even allocates — the f64 planes,
+/// and vice versa; [`FftScratch::capacity_of`] exposes that for the
+/// no-conversion checks). One scratch per worker/thread; each precision's
+/// planes grow monotonically to the largest `n·block` served and never
+/// reallocate below that.
+///
+/// Beyond the per-precision ping-pong pairs and rFFT `pack` banks, one
+/// shared f64 `conv` bank stages the Bluestein convolution (Bluestein
+/// always computes in the f64 tier). Banks are taken by value around
+/// inner transforms (a `Vec` move, no copy) so the borrow checker allows
+/// re-entering the scratch.
+#[derive(Default)]
+pub struct FftScratch {
+    s64: PrecisionScratch<f64>,
+    s32: PrecisionScratch<f32>,
+    conv: AuxBank<f64>,
 }
 
 impl FftScratch {
@@ -669,34 +947,24 @@ impl FftScratch {
         Self::default()
     }
 
-    /// Grow every plane to at least `n` elements (no-op once large enough).
-    pub fn ensure(&mut self, n: usize) {
-        if self.a_re.len() < n {
-            self.a_re.resize(n, 0.0);
-            self.a_im.resize(n, 0.0);
-            self.b_re.resize(n, 0.0);
-            self.b_im.resize(n, 0.0);
-        }
-    }
-
-    /// Current plane capacity in elements.
+    /// f64 plane capacity in elements (back-compat accessor; see
+    /// [`Self::capacity_of`] for the per-precision view).
     pub fn capacity(&self) -> usize {
-        self.a_re.len()
+        self.s64.capacity()
     }
 
-    /// Base pointer of the first plane — lets tests assert that repeated
-    /// executions reuse the same buffers instead of reallocating.
+    /// Base pointer of the first f64 plane — lets tests assert that
+    /// repeated executions reuse the same buffers instead of reallocating.
     pub fn base_ptr(&self) -> *const f64 {
-        self.a_re.as_ptr()
+        self.s64.a_re.as_ptr()
     }
 
-    fn planes(&mut self, n: usize) -> (&mut [f64], &mut [f64], &mut [f64], &mut [f64]) {
-        (
-            &mut self.a_re[..n],
-            &mut self.a_im[..n],
-            &mut self.b_re[..n],
-            &mut self.b_im[..n],
-        )
+    /// Plane capacity of one precision's scratch. A scratch that only
+    /// ever served native-f32 mixed-radix work reports
+    /// `capacity_of::<f64>() == 0` — the plane-inspection proof that the
+    /// f32 path performs no f32→f64 conversion.
+    pub fn capacity_of<T: PlanScalar>(&self) -> usize {
+        T::planes_ref(self).capacity()
     }
 }
 
@@ -723,8 +991,8 @@ pub fn plan_for(n: usize) -> Arc<FftPlan> {
 }
 
 /// Process-wide scratch pool so ad-hoc callers (module `run_f32`, the
-/// row-parallel workers) reuse planes instead of allocating per call.
-/// Bounded so a burst of threads cannot pin memory forever.
+/// pool workers) reuse planes instead of allocating per call. Bounded so
+/// a burst of threads cannot pin memory forever.
 static SCRATCH_POOL: OnceLock<Mutex<Vec<FftScratch>>> = OnceLock::new();
 const SCRATCH_POOL_CAP: usize = 16;
 
@@ -742,7 +1010,10 @@ pub fn with_scratch<R>(f: impl FnOnce(&mut FftScratch) -> R) -> R {
 
 /// Worker threads used for row-parallel execution: capped small (this is
 /// a simulation backend sharing the host with card worker threads).
-/// Override with `FFTSWEEP_FFT_THREADS=1` to force serial execution.
+/// `FFTSWEEP_FFT_THREADS` overrides, parsed **once** into a `OnceLock` —
+/// the serving hot path never re-reads the environment — and the same
+/// value sizes the persistent pool. `FFTSWEEP_FFT_THREADS=1` forces the
+/// fully pool-free serial path.
 pub fn pool_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
@@ -758,25 +1029,33 @@ pub fn pool_threads() -> usize {
     })
 }
 
-/// Below this much work a batch runs serially — the scoped-thread spawn
-/// (tens of µs per worker) would cost more than it saves. The threshold is
+/// The process-wide persistent FFT worker pool, created on the first
+/// parallel batch and reused for every one after — `run_rows` spawns
+/// zero threads after this initialization. Workers park on a condvar
+/// while idle and are joined cleanly if the pool is ever dropped.
+fn fft_pool() -> &'static WorkPool {
+    static POOL: OnceLock<WorkPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkPool::new("fftsweep-fft", pool_threads()))
+}
+
+/// Introspection over the persistent pool (tests, benches, telemetry).
+/// Forces pool creation on first call.
+pub fn pool_stats() -> PoolStats {
+    fft_pool().stats()
+}
+
+/// Below this much work a batch runs serially — even a pool submission
+/// (enqueue + wake + latch) costs more than it saves. The threshold is
 /// set so the standard serving batches (64×1024 and up) parallelize while
-/// small/partial batches stay on the zero-spawn serial path.
+/// small/partial batches stay on the zero-handoff serial path.
 const PAR_MIN_ROWS: usize = 2;
 const PAR_MIN_ELEMS: usize = 1 << 16;
 
-/// Execute `rows` independent transforms, row-parallel across scoped std
-/// threads when the batch is large enough, serial otherwise. Rows are
-/// independent and each runs the identical per-row code, so the parallel
-/// result is bit-identical to [`FftPlan::run_rows_serial`].
-///
-/// Deliberate tradeoff: workers are *scoped spawns per call*, not a
-/// persistent pool. A persistent pool executing borrowed row slices needs
-/// lifetime-erasing `unsafe` (no rayon/crossbeam in the offline crate
-/// set); scoped spawn is safe, and the `PAR_MIN_ELEMS` cutoff keeps the
-/// spawn cost well under the FFT work it buys. Per-row execution itself
-/// stays allocation- and trig-free either way; `FFTSWEEP_FFT_THREADS=1`
-/// forces the fully spawn-free serial path.
+/// Execute `rows` independent transforms, row-parallel through the
+/// persistent worker pool when the batch is large enough, serial
+/// otherwise. Rows are independent and each runs the identical per-row
+/// code, so the pooled result is bit-identical to
+/// [`FftPlan::run_rows_serial`] at equal precision.
 pub fn run_rows<T: PlanScalar>(
     plan: &FftPlan,
     dir: Direction,
@@ -786,11 +1065,15 @@ pub fn run_rows<T: PlanScalar>(
     out_re: &mut [T],
     out_im: &mut [T],
 ) {
-    run_rows_impl(plan, dir, re, im, rows, out_re, out_im, pool_threads(), PAR_MIN_ELEMS);
+    run_rows_with(plan, dir, re, im, rows, out_re, out_im, pool_threads(), PAR_MIN_ELEMS);
 }
 
+/// [`run_rows`] with explicit tuning knobs (`threads` = row-range count
+/// submitted to the pool, `min_elems` = serial cutoff). Exposed for tests
+/// and benches that need to force the parallel path or reproduce the
+/// serial one; serving callers use [`run_rows`].
 #[allow(clippy::too_many_arguments)]
-fn run_rows_impl<T: PlanScalar>(
+pub fn run_rows_with<T: PlanScalar>(
     plan: &FftPlan,
     dir: Direction,
     re: &[T],
@@ -811,23 +1094,23 @@ fn run_rows_impl<T: PlanScalar>(
         return;
     }
     let chunk_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let chunks = out_re[..rows * n]
-            .chunks_mut(chunk_rows * n)
-            .zip(out_im[..rows * n].chunks_mut(chunk_rows * n))
-            .enumerate();
-        for (ci, (o_re, o_im)) in chunks {
-            let start = ci * chunk_rows;
-            let rows_here = o_re.len() / n;
-            let re_chunk = &re[start * n..(start + rows_here) * n];
-            let im_chunk = &im[start * n..(start + rows_here) * n];
-            scope.spawn(move || {
-                with_scratch(|s| {
-                    plan.run_rows_serial(dir, re_chunk, im_chunk, rows_here, o_re, o_im, s)
-                });
+    let chunks = out_re[..rows * n]
+        .chunks_mut(chunk_rows * n)
+        .zip(out_im[..rows * n].chunks_mut(chunk_rows * n))
+        .enumerate();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for (ci, (o_re, o_im)) in chunks {
+        let start = ci * chunk_rows;
+        let rows_here = o_re.len() / n;
+        let re_chunk = &re[start * n..(start + rows_here) * n];
+        let im_chunk = &im[start * n..(start + rows_here) * n];
+        tasks.push(Box::new(move || {
+            with_scratch(|s| {
+                plan.run_rows_serial(dir, re_chunk, im_chunk, rows_here, o_re, o_im, s)
             });
-        }
-    });
+        }));
+    }
+    fft_pool().run_scope(tasks);
 }
 
 /// Planned forward FFT of one `C64` row — drop-in for `dsp::fft` where the
@@ -858,9 +1141,11 @@ pub fn rfft_len(n: usize) -> usize {
 ///
 /// Even `n` packs the input into an `n/2`-point complex transform
 /// (`z[k] = x[2k] + i·x[2k+1]`) and unpacks with `n/2` precomputed
-/// twiddles — half the butterfly work of the complex transform. Odd `n`
-/// falls back to the full complex plan with a zero imaginary plane, so
-/// every length stays supported.
+/// twiddles (pre-narrowed per precision) — half the butterfly work of the
+/// complex transform. When the half plan is mixed radix the whole path is
+/// row-blocked and native-`T`; a Bluestein half plan (or odd `n`, which
+/// falls back to the full complex plan with a zero imaginary plane) runs
+/// per-row. Every length stays supported.
 pub struct RfftPlan {
     n: usize,
     kind: RfftKind,
@@ -871,8 +1156,7 @@ enum RfftKind {
         plan: Arc<FftPlan>,
         /// Unpack twiddles: `tw[q] = expi(-π·q / (n/2))` for q in 1..n/2
         /// (slot 0 unused).
-        tw_re: Vec<f64>,
-        tw_im: Vec<f64>,
+        tw: TwiddleTable,
     },
     Full {
         plan: Arc<FftPlan>,
@@ -897,8 +1181,7 @@ impl RfftPlan {
                 n,
                 kind: RfftKind::Half {
                     plan: plan_for(m),
-                    tw_re,
-                    tw_im,
+                    tw: TwiddleTable::new(tw_re, tw_im),
                 },
             }
         } else {
@@ -923,9 +1206,19 @@ impl RfftPlan {
         matches!(self.kind, RfftKind::Half { .. })
     }
 
+    /// Bytes of precomputed constants (unpack twiddles; the inner complex
+    /// plan is shared through the plan cache and counted there).
+    pub fn twiddle_bytes(&self) -> usize {
+        match &self.kind {
+            RfftKind::Half { tw, .. } => tw.bytes(),
+            RfftKind::Full { .. } => 0,
+        }
+    }
+
     /// Transform one real row into its `n/2 + 1` spectrum bins. `x` must
     /// have length `n`, the outputs length `out_len()`. Steady-state this
-    /// performs zero heap allocation (scratch banks are reused).
+    /// performs zero heap allocation (scratch banks are reused); the
+    /// arithmetic is native-`T` except through Bluestein inner plans.
     pub fn run_row<T: PlanScalar>(
         &self,
         x: &[T],
@@ -939,15 +1232,16 @@ impl RfftPlan {
         assert_eq!(out_re.len(), o, "rfft re output length");
         assert_eq!(out_im.len(), o, "rfft im output length");
         match &self.kind {
-            RfftKind::Half { plan, tw_re, tw_im } => {
+            RfftKind::Half { plan, tw } => {
                 let m = n / 2;
-                let mut bank = std::mem::take(&mut scratch.pack);
+                let (tw_re, tw_im) = T::tw(tw);
+                let mut bank = std::mem::take(&mut T::planes_mut(scratch).pack);
                 bank.ensure(m);
                 for k in 0..m {
-                    bank.xr[k] = x[2 * k].to_f64();
-                    bank.xi[k] = x[2 * k + 1].to_f64();
+                    bank.xr[k] = x[2 * k];
+                    bank.xi[k] = x[2 * k + 1];
                 }
-                plan.run_row::<f64>(
+                plan.run_row::<T>(
                     Direction::Forward,
                     &bank.xr[..m],
                     &bank.xi[..m],
@@ -959,38 +1253,39 @@ impl RfftPlan {
                 // spectrum, O[q] = (Z[q] − conj(Z[m−q]))/(2i) the odd one;
                 // X[q] = E[q] + w_q·O[q], X[m] = E[0] − O[0]. DC and Nyquist
                 // bins are exactly real for real input.
+                let half = T::from_f64(0.5);
                 let zr0 = bank.yr[0];
                 let zi0 = bank.yi[0];
-                out_re[0] = T::from_f64(zr0 + zi0);
-                out_im[0] = T::from_f64(0.0);
+                out_re[0] = zr0 + zi0;
+                out_im[0] = T::ZERO;
                 for q in 1..m {
                     let zr = bank.yr[q];
                     let zi = bank.yi[q];
                     let vr = bank.yr[m - q];
                     let vi = -bank.yi[m - q];
-                    let er = 0.5 * (zr + vr);
-                    let ei = 0.5 * (zi + vi);
-                    let dr = 0.5 * (zr - vr);
-                    let di = 0.5 * (zi - vi);
+                    let er = half * (zr + vr);
+                    let ei = half * (zi + vi);
+                    let dr = half * (zr - vr);
+                    let di = half * (zi - vi);
                     let or_ = di;
                     let oi = -dr;
                     let wr = tw_re[q];
                     let wi = tw_im[q];
-                    out_re[q] = T::from_f64(er + or_ * wr - oi * wi);
-                    out_im[q] = T::from_f64(ei + or_ * wi + oi * wr);
+                    out_re[q] = er + or_ * wr - oi * wi;
+                    out_im[q] = ei + or_ * wi + oi * wr;
                 }
-                out_re[m] = T::from_f64(zr0 - zi0);
-                out_im[m] = T::from_f64(0.0);
-                scratch.pack = bank;
+                out_re[m] = zr0 - zi0;
+                out_im[m] = T::ZERO;
+                T::planes_mut(scratch).pack = bank;
             }
             RfftKind::Full { plan } => {
-                let mut bank = std::mem::take(&mut scratch.pack);
+                let mut bank = std::mem::take(&mut T::planes_mut(scratch).pack);
                 bank.ensure(n);
                 for k in 0..n {
-                    bank.xr[k] = x[k].to_f64();
-                    bank.xi[k] = 0.0;
+                    bank.xr[k] = x[k];
+                    bank.xi[k] = T::ZERO;
                 }
-                plan.run_row::<f64>(
+                plan.run_row::<T>(
                     Direction::Forward,
                     &bank.xr[..n],
                     &bank.xi[..n],
@@ -998,17 +1293,18 @@ impl RfftPlan {
                     &mut bank.yi[..n],
                     scratch,
                 );
-                for k in 0..o {
-                    out_re[k] = T::from_f64(bank.yr[k]);
-                    out_im[k] = T::from_f64(bank.yi[k]);
-                }
-                scratch.pack = bank;
+                out_re.copy_from_slice(&bank.yr[..o]);
+                out_im.copy_from_slice(&bank.yi[..o]);
+                T::planes_mut(scratch).pack = bank;
             }
         }
     }
 
     /// Transform `rows` consecutive real rows serially with one scratch.
     /// `x` is row-major `rows × n`; the outputs `rows × (n/2 + 1)`.
+    /// Even lengths with a mixed-radix half plan run row-blocked (packed
+    /// straight into batch-major planes — no staging bank, no f64
+    /// conversion); other shapes run per-row.
     pub fn run_rows_serial<T: PlanScalar>(
         &self,
         x: &[T],
@@ -1024,6 +1320,12 @@ impl RfftPlan {
             out_re.len() >= rows * o && out_im.len() >= rows * o,
             "rfft output planes too short"
         );
+        if let RfftKind::Half { plan, tw } = &self.kind {
+            if plan.bluestein.is_none() {
+                self.run_rows_half_block(plan, tw, x, rows, out_re, out_im, scratch);
+                return;
+            }
+        }
         for r in 0..rows {
             self.run_row(
                 &x[r * n..(r + 1) * n],
@@ -1031,6 +1333,77 @@ impl RfftPlan {
                 &mut out_im[r * o..(r + 1) * o],
                 scratch,
             );
+        }
+    }
+
+    /// The row-blocked even-N path: pack a block of rows directly into
+    /// batch-major planes (`z[k] = x[2k] + i·x[2k+1]` at `k·bl + r`), run
+    /// the half-length stages once over the block, and unpack each row
+    /// from the result planes. Per-element arithmetic and order are
+    /// identical to [`Self::run_row`], so the block path is bit-identical
+    /// to the per-row one at equal precision.
+    #[allow(clippy::too_many_arguments)]
+    fn run_rows_half_block<T: PlanScalar>(
+        &self,
+        plan: &FftPlan,
+        tw: &TwiddleTable,
+        x: &[T],
+        rows: usize,
+        out_re: &mut [T],
+        out_im: &mut [T],
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        let m = n / 2;
+        let o = m + 1;
+        let (tw_re, tw_im) = T::tw(tw);
+        let half = T::from_f64(0.5);
+        let bl_max = row_block::<T>(m.max(1)).min(rows.max(1));
+        let s = T::planes_mut(scratch);
+        s.ensure(m * bl_max);
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let bl = bl_max.min(rows - r0);
+            {
+                let (a_re, a_im, _, _) = s.planes(m * bl);
+                for r in 0..bl {
+                    let row = &x[(r0 + r) * n..][..n];
+                    for k in 0..m {
+                        a_re[k * bl + r] = row[2 * k];
+                        a_im[k * bl + r] = row[2 * k + 1];
+                    }
+                }
+            }
+            let in_a = plan.run_block::<T>(Direction::Forward, bl, s);
+            let (a_re, a_im, b_re, b_im) = s.planes(m * bl);
+            let (yr, yi): (&[T], &[T]) = if in_a { (a_re, a_im) } else { (b_re, b_im) };
+            for r in 0..bl {
+                let out_r = &mut out_re[(r0 + r) * o..][..o];
+                let out_i = &mut out_im[(r0 + r) * o..][..o];
+                let zr0 = yr[r];
+                let zi0 = yi[r];
+                out_r[0] = zr0 + zi0;
+                out_i[0] = T::ZERO;
+                for q in 1..m {
+                    let zr = yr[q * bl + r];
+                    let zi = yi[q * bl + r];
+                    let vr = yr[(m - q) * bl + r];
+                    let vi = -yi[(m - q) * bl + r];
+                    let er = half * (zr + vr);
+                    let ei = half * (zi + vi);
+                    let dr = half * (zr - vr);
+                    let di = half * (zi - vi);
+                    let or_ = di;
+                    let oi = -dr;
+                    let wr = tw_re[q];
+                    let wi = tw_im[q];
+                    out_r[q] = er + or_ * wr - oi * wi;
+                    out_i[q] = ei + or_ * wi + oi * wr;
+                }
+                out_r[m] = zr0 - zi0;
+                out_i[m] = T::ZERO;
+            }
+            r0 += bl;
         }
     }
 }
@@ -1054,8 +1427,9 @@ pub fn rfft_plan_for(n: usize) -> Arc<RfftPlan> {
         .clone()
 }
 
-/// Execute `rows` independent real transforms, row-parallel when the batch
-/// is large enough (same policy and bit-identity guarantee as [`run_rows`]).
+/// Execute `rows` independent real transforms through the persistent pool
+/// when the batch is large enough (same policy and bit-identity guarantee
+/// as [`run_rows`]).
 pub fn run_rfft_rows<T: PlanScalar>(
     plan: &RfftPlan,
     x: &[T],
@@ -1063,10 +1437,11 @@ pub fn run_rfft_rows<T: PlanScalar>(
     out_re: &mut [T],
     out_im: &mut [T],
 ) {
-    run_rfft_rows_impl(plan, x, rows, out_re, out_im, pool_threads(), PAR_MIN_ELEMS);
+    run_rfft_rows_with(plan, x, rows, out_re, out_im, pool_threads(), PAR_MIN_ELEMS);
 }
 
-fn run_rfft_rows_impl<T: PlanScalar>(
+/// [`run_rfft_rows`] with explicit tuning knobs (see [`run_rows_with`]).
+pub fn run_rfft_rows_with<T: PlanScalar>(
     plan: &RfftPlan,
     x: &[T],
     rows: usize,
@@ -1086,20 +1461,20 @@ fn run_rfft_rows_impl<T: PlanScalar>(
         return;
     }
     let chunk_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let chunks = out_re[..rows * o]
-            .chunks_mut(chunk_rows * o)
-            .zip(out_im[..rows * o].chunks_mut(chunk_rows * o))
-            .enumerate();
-        for (ci, (o_re, o_im)) in chunks {
-            let start = ci * chunk_rows;
-            let rows_here = o_re.len() / o;
-            let x_chunk = &x[start * n..(start + rows_here) * n];
-            scope.spawn(move || {
-                with_scratch(|s| plan.run_rows_serial(x_chunk, rows_here, o_re, o_im, s));
-            });
-        }
-    });
+    let chunks = out_re[..rows * o]
+        .chunks_mut(chunk_rows * o)
+        .zip(out_im[..rows * o].chunks_mut(chunk_rows * o))
+        .enumerate();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for (ci, (o_re, o_im)) in chunks {
+        let start = ci * chunk_rows;
+        let rows_here = o_re.len() / o;
+        let x_chunk = &x[start * n..(start + rows_here) * n];
+        tasks.push(Box::new(move || {
+            with_scratch(|s| plan.run_rows_serial(x_chunk, rows_here, o_re, o_im, s));
+        }));
+    }
+    fft_pool().run_scope(tasks);
 }
 
 #[cfg(test)]
@@ -1162,7 +1537,33 @@ mod tests {
     }
 
     #[test]
+    fn blocked_f64_rows_stay_bit_identical_to_stockham_oracle() {
+        // The row-blocked batch-major sweep must not perturb a single bit
+        // of the f64 pow2 path: block size changes memory layout only,
+        // never per-element operation order.
+        let n = 512usize;
+        let rows = 24usize; // > row_block::<f64>(512) ⇒ several full blocks
+        let (re, im) = rand_row(rows * n, 99);
+        let plan = plan_for(n);
+        let mut out_re = vec![0.0f64; rows * n];
+        let mut out_im = vec![0.0f64; rows * n];
+        let mut s = FftScratch::new();
+        plan.run_rows_serial(Direction::Forward, &re, &im, rows, &mut out_re, &mut out_im, &mut s);
+        for row in 0..rows {
+            let off = row * n;
+            let x: Vec<C64> = (0..n).map(|i| C64::new(re[off + i], im[off + i])).collect();
+            let want = fft(&x);
+            for i in 0..n {
+                assert_eq!(out_re[off + i].to_bits(), want[i].re.to_bits(), "r{row} b{i}");
+                assert_eq!(out_im[off + i].to_bits(), want[i].im.to_bits(), "r{row} b{i}");
+            }
+        }
+    }
+
+    #[test]
     fn inverse_roundtrips() {
+        // Also exercises the conjugation-derived inverse twiddles (no
+        // stored inverse tables anymore).
         let n = 256usize;
         let (re, im) = rand_row(n, 13);
         let plan = plan_for(n);
@@ -1240,6 +1641,94 @@ mod tests {
     }
 
     #[test]
+    fn f32_native_path_never_touches_f64_planes() {
+        // Plane inspection: a scratch that only served native-f32
+        // mixed-radix work must never have allocated an f64 plane — the
+        // structural proof that no f32→f64 conversion happened.
+        let n = 1024usize;
+        let rows = 4usize;
+        let plan = plan_for(n);
+        let mut r = Rng::new(17);
+        let re: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let im: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let mut o_re = vec![0.0f32; rows * n];
+        let mut o_im = vec![0.0f32; rows * n];
+        let mut s = FftScratch::new();
+        plan.run_rows_serial(Direction::Forward, &re, &im, rows, &mut o_re, &mut o_im, &mut s);
+        assert_eq!(s.capacity_of::<f64>(), 0, "f32 path must not grow f64 planes");
+        assert!(s.capacity_of::<f32>() >= n, "f32 planes must be in use");
+        // The rFFT packed path (mixed-radix half plan) is f32-native too.
+        let rplan = rfft_plan_for(n);
+        let x: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let o = rplan.out_len();
+        let mut r_re = vec![0.0f32; rows * o];
+        let mut r_im = vec![0.0f32; rows * o];
+        let mut s2 = FftScratch::new();
+        rplan.run_rows_serial(&x, rows, &mut r_re, &mut r_im, &mut s2);
+        assert_eq!(s2.capacity_of::<f64>(), 0, "rfft f32 path must stay f32");
+    }
+
+    #[test]
+    fn bluestein_f32_runs_in_the_f64_tier() {
+        // The documented precision-tier exception: Bluestein computes in
+        // f64 planes whatever the I/O precision (the quadratic chirp
+        // phase wants the headroom); the f32 planes stay untouched.
+        let n = 1009usize;
+        let plan = plan_for(n);
+        let mut r = Rng::new(23);
+        let re: Vec<f32> = (0..n).map(|_| r.gauss() as f32).collect();
+        let im: Vec<f32> = (0..n).map(|_| r.gauss() as f32).collect();
+        let mut o_re = vec![0.0f32; n];
+        let mut o_im = vec![0.0f32; n];
+        let mut s = FftScratch::new();
+        plan.run_row(Direction::Forward, &re, &im, &mut o_re, &mut o_im, &mut s);
+        assert!(s.capacity_of::<f64>() > 0, "bluestein uses the f64 tier");
+        assert_eq!(s.capacity_of::<f32>(), 0, "f32 planes unused by bluestein");
+    }
+
+    #[test]
+    fn plan_twiddle_footprint_is_single_direction() {
+        // The plan-size regression gate: stage tables are stored for ONE
+        // direction only (inverse = conjugation at execution). Each
+        // complex entry costs 24 B (f64 re+im, pre-narrowed f32 re+im);
+        // storing both directions again would double this and fail here.
+        fn expected_entries(n: usize) -> usize {
+            let mut total = 0usize;
+            let mut n_cur = n;
+            while n_cur > 1 {
+                let radix = if n_cur % 2 == 0 {
+                    2
+                } else if n_cur % 3 == 0 {
+                    3
+                } else {
+                    5
+                };
+                let m = n_cur / radix;
+                total += m * (radix - 1);
+                n_cur = m;
+            }
+            total
+        }
+        for n in [64usize, 1000, 1024, 1536, 3125] {
+            let plan = FftPlan::new(n);
+            assert_eq!(
+                plan.twiddle_bytes(),
+                expected_entries(n) * 24,
+                "n={n}: stage twiddles must be one direction only"
+            );
+        }
+        // Pow2 check spelled out: sum of m over stages = n−1.
+        assert_eq!(FftPlan::new(1024).twiddle_bytes(), 1023 * 24);
+        // rFFT unpack table: n/2 entries, one direction.
+        assert_eq!(RfftPlan::new(1024).twiddle_bytes(), 512 * 24);
+        // Bluestein: shared chirp (2·n planes) + two kernel spectra
+        // (4·m planes), all f64.
+        let b = FftPlan::new(1009);
+        let m = (2 * 1009usize - 1).next_power_of_two();
+        assert_eq!(b.twiddle_bytes(), (2 * 1009 + 4 * m) * 8);
+    }
+
+    #[test]
     fn prop_row_parallel_is_bit_identical_to_serial() {
         crate::util::prop::check(
             "planner row-parallel == serial",
@@ -1268,9 +1757,9 @@ mod tests {
                 );
                 let mut par_re = vec![0.0f32; rows * n];
                 let mut par_im = vec![0.0f32; rows * n];
-                // min_elems = 0 forces the scoped-thread path even for the
-                // small cases the generator produces.
-                run_rows_impl(
+                // min_elems = 0 forces the pool path even for the small
+                // cases the generator produces.
+                run_rows_with(
                     &plan,
                     Direction::Forward,
                     &re,
@@ -1294,6 +1783,60 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn pool_f64_rows_bit_identical_to_serial() {
+        // The satellite's equal-precision pool check, f64 flavor.
+        let n = 512usize;
+        let rows = 16usize;
+        let (re, im) = rand_row(rows * n, 77);
+        let plan = plan_for(n);
+        let mut ser_re = vec![0.0f64; rows * n];
+        let mut ser_im = vec![0.0f64; rows * n];
+        let mut s = FftScratch::new();
+        plan.run_rows_serial(Direction::Forward, &re, &im, rows, &mut ser_re, &mut ser_im, &mut s);
+        let mut par_re = vec![0.0f64; rows * n];
+        let mut par_im = vec![0.0f64; rows * n];
+        run_rows_with(&plan, Direction::Forward, &re, &im, rows, &mut par_re, &mut par_im, 4, 0);
+        for i in 0..rows * n {
+            assert_eq!(ser_re[i].to_bits(), par_re[i].to_bits(), "elem {i} re");
+            assert_eq!(ser_im[i].to_bits(), par_im[i].to_bits(), "elem {i} im");
+        }
+    }
+
+    #[test]
+    fn run_rows_reuses_the_persistent_pool_across_calls() {
+        // The zero-spawn acceptance check: after the pool exists, repeated
+        // parallel batches create no new OS threads.
+        let n = 64usize;
+        let rows = 8usize;
+        let plan = plan_for(n);
+        let mut r = Rng::new(55);
+        let re: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let im: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let mut o_re = vec![0.0f32; rows * n];
+        let mut o_im = vec![0.0f32; rows * n];
+        for _ in 0..4 {
+            run_rows_with(&plan, Direction::Forward, &re, &im, rows, &mut o_re, &mut o_im, 4, 0);
+        }
+        let s1 = pool_stats();
+        for _ in 0..4 {
+            run_rows_with(&plan, Direction::Forward, &re, &im, rows, &mut o_re, &mut o_im, 4, 0);
+        }
+        let s2 = pool_stats();
+        assert_eq!(s1.spawned_total, s2.spawned_total, "no spawns after init");
+        assert_eq!(s2.spawned_total, s2.workers as u64, "workers spawned once");
+        assert!(s2.executed_total > s1.executed_total, "pool actually ran tasks");
+    }
+
+    #[test]
+    fn row_block_is_tuned_for_cache_residency() {
+        // 4 planes × n × block × width within the 256 KiB half-L2 budget.
+        assert_eq!(row_block::<f32>(1024), 16);
+        assert_eq!(row_block::<f64>(1024), 8);
+        assert_eq!(row_block::<f32>(64), 32, "small n clamps at 32");
+        assert_eq!(row_block::<f32>(1 << 16), 1, "huge n degenerates to per-row");
     }
 
     #[test]
@@ -1381,7 +1924,8 @@ mod tests {
         // factor class is systematically skipped. Two cheap checks per
         // length: forward→inverse/N roundtrip (O(n log n)) and the DC bin
         // against the direct sum (catches permutation/twiddle errors the
-        // roundtrip alone could mask).
+        // roundtrip alone could mask). The roundtrip also exercises the
+        // conjugation-derived inverse on every plan class.
         let mut n = 321usize;
         while n <= 4096 {
             let (re, im) = rand_row(n, n as u64);
@@ -1456,7 +2000,7 @@ mod tests {
                 );
                 let mut par_re = vec![0.0f32; rows * n];
                 let mut par_im = vec![0.0f32; rows * n];
-                run_rows_impl(
+                run_rows_with(
                     &plan,
                     Direction::Forward,
                     &re,
@@ -1472,6 +2016,92 @@ mod tests {
                         || ser_im[i].to_bits() != par_im[i].to_bits()
                     {
                         return Err(format!("n={n} rows={rows} elem {i} diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Relative-L2 tolerance for native-f32 output vs the f64 oracle:
+    /// rounding accumulates with stage depth, so the bound scales with
+    /// log₂N (the tiered tolerance policy — Bluestein computes in f64 and
+    /// clears it trivially; native-f32 mixed radix sits well inside it).
+    fn f32_rel_tol(n: usize) -> f64 {
+        16.0 * (n.max(2) as f64).log2() * f32::EPSILON as f64
+    }
+
+    fn rel_l2(got: &[f32], want_re: &[f64], want_im: &[f64], got_im: &[f32]) -> f64 {
+        let mut err = 0.0f64;
+        let mut norm = 0.0f64;
+        for i in 0..want_re.len() {
+            let dr = got[i] as f64 - want_re[i];
+            let di = got_im[i] as f64 - want_im[i];
+            err += dr * dr + di * di;
+            norm += want_re[i] * want_re[i] + want_im[i] * want_im[i];
+        }
+        (err / norm.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn prop_f32_native_matches_f64_oracle_within_tiered_tolerance() {
+        // The issue's satellite property test: f32-native output vs the
+        // f64 oracle under the log₂N-scaled relative bound, across the
+        // 2..=4096 grid's plan classes — pow2, mixed radix, Bluestein —
+        // plus the rFFT path on the same lengths.
+        let mixed = [6usize, 12, 48, 100, 144, 360, 625, 1000, 1536, 2160, 3840];
+        let blue = [7usize, 11, 97, 251, 1009, 2017, 4093];
+        crate::util::prop::for_all(
+            crate::util::prop::PropConfig { cases: 48, seed: 0xF32F },
+            "f32-native within tiered tolerance of the f64 oracle",
+            |rng| {
+                let n = match rng.below(3) {
+                    0 => 1usize << rng.range_u64(1, 12), // 2..=4096
+                    1 => mixed[rng.below(mixed.len() as u64) as usize],
+                    _ => blue[rng.below(blue.len() as u64) as usize],
+                };
+                let rfft = rng.below(3) == 0;
+                let seed = rng.range_u64(0, 1 << 32);
+                (n, rfft, seed)
+            },
+            |&(n, rfft, seed)| {
+                let mut r = Rng::new(seed);
+                let tol = f32_rel_tol(n);
+                if rfft {
+                    let x64: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+                    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+                    // Widen the f32 input so both precisions see the same
+                    // signal; the oracle is the f64 execution of it.
+                    let xw: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+                    let rplan = rfft_plan_for(n);
+                    let o = rplan.out_len();
+                    let mut s = FftScratch::new();
+                    let (mut wr, mut wi) = (vec![0.0f64; o], vec![0.0f64; o]);
+                    rplan.run_row(&xw, &mut wr, &mut wi, &mut s);
+                    let (mut gr, mut gi) = (vec![0.0f32; o], vec![0.0f32; o]);
+                    rplan.run_row(&x32, &mut gr, &mut gi, &mut s);
+                    let err = rel_l2(&gr, &wr, &wi, &gi);
+                    if err > tol {
+                        return Err(format!("rfft n={n}: rel l2 {err:.3e} > tol {tol:.3e}"));
+                    }
+                } else {
+                    let (re64, im64) = rand_row(n, seed ^ 0xA5);
+                    let re32: Vec<f32> = re64.iter().map(|&v| v as f32).collect();
+                    let im32: Vec<f32> = im64.iter().map(|&v| v as f32).collect();
+                    let rew: Vec<f64> = re32.iter().map(|&v| v as f64).collect();
+                    let imw: Vec<f64> = im32.iter().map(|&v| v as f64).collect();
+                    let plan = plan_for(n);
+                    let mut s = FftScratch::new();
+                    let (mut wr, mut wi) = (vec![0.0f64; n], vec![0.0f64; n]);
+                    plan.run_row(Direction::Forward, &rew, &imw, &mut wr, &mut wi, &mut s);
+                    let (mut gr, mut gi) = (vec![0.0f32; n], vec![0.0f32; n]);
+                    plan.run_row(Direction::Forward, &re32, &im32, &mut gr, &mut gi, &mut s);
+                    let err = rel_l2(&gr, &wr, &wi, &gi);
+                    if err > tol {
+                        return Err(format!(
+                            "{:?} n={n}: rel l2 {err:.3e} > tol {tol:.3e}",
+                            plan.algorithm()
+                        ));
                     }
                 }
                 Ok(())
@@ -1532,6 +2162,38 @@ mod tests {
     }
 
     #[test]
+    fn rfft_block_path_is_bit_identical_to_per_row() {
+        // run_rows_serial takes the row-blocked batch-major path for a
+        // mixed-radix half plan; per-row run_row is the reference. Same
+        // per-element arithmetic ⇒ same bits.
+        let n = 1000usize;
+        let rows = 5usize;
+        let rplan = rfft_plan_for(n);
+        let o = rplan.out_len();
+        let mut r = Rng::new(31);
+        let x: Vec<f32> = (0..rows * n).map(|_| r.gauss() as f32).collect();
+        let mut blk_re = vec![0.0f32; rows * o];
+        let mut blk_im = vec![0.0f32; rows * o];
+        let mut s = FftScratch::new();
+        rplan.run_rows_serial(&x, rows, &mut blk_re, &mut blk_im, &mut s);
+        let mut row_re = vec![0.0f32; rows * o];
+        let mut row_im = vec![0.0f32; rows * o];
+        let mut s2 = FftScratch::new();
+        for rr in 0..rows {
+            rplan.run_row(
+                &x[rr * n..(rr + 1) * n],
+                &mut row_re[rr * o..(rr + 1) * o],
+                &mut row_im[rr * o..(rr + 1) * o],
+                &mut s2,
+            );
+        }
+        for i in 0..rows * o {
+            assert_eq!(blk_re[i].to_bits(), row_re[i].to_bits(), "elem {i} re");
+            assert_eq!(blk_im[i].to_bits(), row_im[i].to_bits(), "elem {i} im");
+        }
+    }
+
+    #[test]
     fn rfft_rows_parallel_matches_serial() {
         let n = 1000usize;
         let rows = 8usize;
@@ -1545,8 +2207,8 @@ mod tests {
         rplan.run_rows_serial(&x, rows, &mut ser_re, &mut ser_im, &mut s);
         let mut par_re = vec![0.0f32; rows * o];
         let mut par_im = vec![0.0f32; rows * o];
-        // min_elems = 0 forces the scoped-thread path.
-        run_rfft_rows_impl(&rplan, &x, rows, &mut par_re, &mut par_im, 4, 0);
+        // min_elems = 0 forces the pool path.
+        run_rfft_rows_with(&rplan, &x, rows, &mut par_re, &mut par_im, 4, 0);
         assert_eq!(ser_re, par_re);
         assert_eq!(ser_im, par_im);
     }

@@ -79,7 +79,8 @@ impl LoadedModule {
     }
 
     /// Serving path for `fft` artifacts writing into caller-owned output
-    /// planes (API parity with the sim backend's zero-copy path; PJRT
+    /// planes (API parity with the sim backend's zero-copy native-f32
+    /// path; PJRT executes f32 artifacts natively on device already, and
     /// returns owned literals, so this copies once into the buffers).
     pub fn run_fft_f32_into(
         &self,

@@ -4,10 +4,16 @@
 //! disk. API-compatible with `client::Runtime` (the `xla`-feature backend).
 //!
 //! Execution goes through the planned engine (`dsp::planner`): cached
-//! twiddle tables, reusable SoA scratch planes and row-parallel batch
-//! execution — no per-row trig or allocation, which is what makes the
-//! serving fleet's hot loop cheap. Numerics are bit-identical to the
-//! `dsp::fft` oracle (the planner mirrors its butterfly schedule).
+//! twiddle tables, reusable SoA scratch planes and batch execution
+//! through the persistent worker pool — no per-row trig, allocation or
+//! thread spawn, which is what makes the serving fleet's hot loop cheap.
+//! f32 artifacts execute **natively in f32 planes** (the planner's
+//! kernels are monomorphized per precision, twiddles pre-narrowed at
+//! plan build) — no f32→f64 plane conversion and half the memory
+//! traffic of the old always-f64 path. f64 numerics remain bit-identical
+//! to the `dsp::fft` oracle (the planner mirrors its butterfly
+//! schedule); f32 output tracks the f64 oracle within the planner's
+//! log₂N-scaled tolerance tier.
 //!
 //! Defense-in-depth is preserved: when a manifest and HLO files DO exist
 //! on disk, loads still verify the digest and the HLO-text header, so a
@@ -336,7 +342,8 @@ mod tests {
         let out = m.run_f32(&[&re, &im]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), total);
-        // row 0 matches the oracle by construction; sanity: Parseval
+        // sanity: Parseval (tolerance sized for native-f32 execution —
+        // the planner computes f32 jobs in f32 planes end-to-end now)
         let n = m.meta.n as usize;
         let e_time: f64 = (0..n)
             .map(|i| (re[i] as f64).powi(2) + (im[i] as f64).powi(2))
@@ -345,7 +352,7 @@ mod tests {
             .map(|i| (out[0][i] as f64).powi(2) + (out[1][i] as f64).powi(2))
             .sum::<f64>()
             / n as f64;
-        assert!((e_time - e_freq).abs() < 1e-6 * e_time.max(1.0));
+        assert!((e_time - e_freq).abs() < 1e-4 * e_time.max(1.0));
     }
 
     #[test]

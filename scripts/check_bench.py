@@ -16,7 +16,13 @@ Fails (exit 1) when:
     capped 1s draw above the budget, or capped energy/job above the
     uncapped run's (the cap must actually cap, and must save energy) —
     or capped energy/job / capped simulated p99 rose more than 30% above
-    the committed baseline ceilings.
+    the committed baseline ceilings,
+  * the native section (schema 4) breaks an internal invariant of the
+    fresh doc — the f32 serving path allocated f64 planes
+    (f32_f64_plane_bytes != 0), f32-native rows/s fell below the
+    f64-convert rate, or the persistent pool fell below the scoped-spawn
+    rate — or f32-native rows/s / pool batches/s regressed more than 30%
+    below their committed baseline floors.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -42,6 +48,7 @@ REQUIRED = [
     "rfft",
     "fleet",
     "power",
+    "native",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
@@ -53,10 +60,21 @@ REQUIRED_POWER = [
     "capped_energy_per_job_j",
     "capped_p99_sim_ms",
 ]
+REQUIRED_NATIVE = [
+    "f32_rows_per_s",
+    "f64_convert_rows_per_s",
+    "f32_f64_plane_bytes",
+    "pool_batches_per_s",
+    "spawn_batches_per_s",
+]
 MAX_REGRESSION = 0.30
 # Internal-invariant slack: simulated quantities are deterministic, so the
 # capped run only gets rounding headroom, not a regression budget.
 POWER_SLACK = 0.02
+# Wall-clock comparisons within one fresh doc (f32-native vs f64-convert,
+# pool vs spawn) get a little timing-noise headroom — the real deltas are
+# 1.5x+, so 10% slack never masks an actual inversion.
+NATIVE_SLACK = 0.10
 
 
 class BenchCheckError(Exception):
@@ -78,6 +96,10 @@ def load_doc(path):
         missing += [f"power.{k}" for k in REQUIRED_POWER if k not in doc["power"]]
     elif "power" in doc:
         missing += [f"power.{k}" for k in REQUIRED_POWER]
+    if isinstance(doc.get("native"), dict):
+        missing += [f"native.{k}" for k in REQUIRED_NATIVE if k not in doc["native"]]
+    elif "native" in doc:
+        missing += [f"native.{k}" for k in REQUIRED_NATIVE]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -153,6 +175,47 @@ def check(fresh, base):
                     f"{section}.rows_per_s {rate:.0f} regressed >{MAX_REGRESSION:.0%} "
                     f"below baseline floor {floor:.0f}"
                 )
+
+    # Native section (schema 4): internal invariants of the fresh doc.
+    # The f32 serving path must not have touched f64 planes, must beat the
+    # f64-convert leg, and the persistent pool must beat per-call spawns.
+    native = fresh["native"]
+    base_native = base["native"]
+    info.append(
+        f"native: f32 {native['f32_rows_per_s']:.0f} rows/s vs f64-convert "
+        f"{native['f64_convert_rows_per_s']:.0f} rows/s, pool "
+        f"{native['pool_batches_per_s']:.0f} vs spawn "
+        f"{native['spawn_batches_per_s']:.0f} batches/s, f64 plane bytes "
+        f"{native['f32_f64_plane_bytes']}"
+    )
+    if native["f32_f64_plane_bytes"] != 0:
+        problems.append(
+            f"native: f32 path allocated {native['f32_f64_plane_bytes']} bytes of "
+            "f64 planes — the no-conversion contract is broken"
+        )
+    if native["f32_rows_per_s"] < native["f64_convert_rows_per_s"] * (1.0 - NATIVE_SLACK):
+        problems.append(
+            f"native: f32-native {native['f32_rows_per_s']:.0f} rows/s below the "
+            f"f64-convert path's {native['f64_convert_rows_per_s']:.0f} — native "
+            "precision must not lose to up-conversion"
+        )
+    if native["pool_batches_per_s"] < native["spawn_batches_per_s"] * (1.0 - NATIVE_SLACK):
+        problems.append(
+            f"native: pool {native['pool_batches_per_s']:.0f} batches/s below "
+            f"scoped-spawn {native['spawn_batches_per_s']:.0f} — the persistent "
+            "pool must not lose to per-call spawns"
+        )
+    # … and trajectory floors vs the committed baseline.
+    for key, what in (
+        ("f32_rows_per_s", "rows/s"),
+        ("pool_batches_per_s", "batches/s"),
+    ):
+        floor = base_native[key] * (1.0 - MAX_REGRESSION)
+        if native[key] < floor:
+            problems.append(
+                f"native.{key} {native[key]:.0f} {what} regressed "
+                f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
+            )
 
     # Power section: internal invariants of the fresh doc first — the cap
     # must actually cap, and capping must not cost energy per job …

@@ -25,6 +25,17 @@ def good_doc():
         "nonpow2": {"n": 1536, "rows_per_s": 25000.0},
         "bluestein": {"n": 1009, "rows_per_s": 4000.0},
         "rfft": {"n": 4096, "rows_per_s": 12000.0, "vs_complex": 1.2},
+        "native": {
+            "f32_rows_per_s": 90000.0,
+            "f64_convert_rows_per_s": 40000.0,
+            "f32_vs_f64_convert": 2.25,
+            "f32_f64_plane_bytes": 0,
+            "pool_batches_per_s": 400.0,
+            "spawn_batches_per_s": 250.0,
+            "pool_vs_spawn": 1.6,
+            "pool_workers": 4,
+            "pool_threads_spawned": 4,
+        },
         "fleet": {
             "jobs_per_s": 1000.0,
             "p50_ms": 3.0,
@@ -154,6 +165,70 @@ def test_power_ceilings_vs_baseline_enforced(key):
     assert problems == []
 
 
+def test_f32_plane_bytes_nonzero_fails():
+    # Internal invariant of the fresh doc: the f32 serving path must not
+    # have allocated f64 planes, whatever the baseline says.
+    fresh = good_doc()
+    fresh["native"]["f32_f64_plane_bytes"] = 8192
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("no-conversion contract" in p for p in problems)
+
+
+def test_f32_slower_than_f64_convert_fails():
+    fresh = good_doc()
+    fresh["native"]["f32_rows_per_s"] = fresh["native"]["f64_convert_rows_per_s"] * 0.8
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("must not lose to up-conversion" in p for p in problems)
+
+
+def test_pool_slower_than_spawn_fails():
+    fresh = good_doc()
+    fresh["native"]["pool_batches_per_s"] = fresh["native"]["spawn_batches_per_s"] * 0.8
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("must not lose to per-call spawns" in p for p in problems)
+
+
+@pytest.mark.parametrize("key", ["f32_rows_per_s", "pool_batches_per_s"])
+def test_native_floors_vs_baseline_enforced(key):
+    # Trajectory gates: f32-native rows/s and pool batches/s are floors
+    # relative to the committed baseline — and a fresh value 40% under
+    # also trips the internal f32>=f64c / pool>=spawn invariants, so keep
+    # those legs proportional and only break the floor.
+    fresh = good_doc()
+    fresh["native"][key] = good_doc()["native"][key] * 0.6
+    if key == "f32_rows_per_s":
+        fresh["native"]["f64_convert_rows_per_s"] = fresh["native"][key] * 0.5
+    else:
+        fresh["native"]["spawn_batches_per_s"] = fresh["native"][key] * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any(f"native.{key}" in p and "regressed" in p for p in problems)
+    # a 20% dip stays within the 30% budget
+    fresh = good_doc()
+    fresh["native"][key] = good_doc()["native"][key] * 0.8
+    if key == "f32_rows_per_s":
+        fresh["native"]["f64_convert_rows_per_s"] = fresh["native"][key] * 0.5
+    else:
+        fresh["native"]["spawn_batches_per_s"] = fresh["native"][key] * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_native_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["native"]["f32_f64_plane_bytes"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="native.f32_f64_plane_bytes"):
+        check_bench.load_doc(path)
+
+
+def test_native_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["native"] = 1.0
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="native.f32_rows_per_s"):
+        check_bench.load_doc(path)
+
+
 def test_power_without_required_key_is_rejected(tmp_path):
     doc = good_doc()
     del doc["power"]["capped_draw_1s_w"]
@@ -170,7 +245,9 @@ def test_power_as_non_object_is_rejected(tmp_path):
         check_bench.load_doc(path)
 
 
-@pytest.mark.parametrize("key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power"])
+@pytest.mark.parametrize(
+    "key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power", "native"]
+)
 def test_missing_top_level_key_is_rejected(tmp_path, key):
     doc = good_doc()
     del doc[key]
