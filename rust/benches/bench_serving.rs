@@ -1,7 +1,7 @@
 //! Bench: the planned-FFT serving engine, end to end — the first point on
 //! the repo's committed perf trajectory (`BENCH_serving.json`).
 //!
-//! Five measurements:
+//! Six measurements:
 //!   1. pre-PR sim path (per-row `Vec<C64>` + per-butterfly trig via
 //!      `dsp::fft`) in rows/s — the baseline the planner replaces,
 //!   2. planned path (`dsp::planner`, cached twiddles, reused scratch,
@@ -18,6 +18,10 @@
 //!      n=1024 workload (open loop), plus an allocation-frequency proxy
 //!      from a counting global allocator,
 //!   4. closed-loop `execute()` latency (p50/p99 ms),
+//!   4b. large-N tier (schema 5): the cache-blocked four-step path vs a
+//!      monolithic plan at n=2^18 in rows/s, their pass counts and
+//!      twiddle-table bytes (the schedule-inspection numbers the gate
+//!      pins), and overlap-save conv jobs/s end to end through the fleet,
 //!   5. power telemetry: the same seeded trace served uncapped (boost)
 //!      vs under a `--power-budget-w` cap at 70% of the measured draw —
 //!      simulated energy/job, simulated p99 and the rolling 1 s fleet
@@ -368,6 +372,67 @@ fn main() {
     let p50 = percentile(&lat_ms, 50.0);
     let p99 = percentile(&lat_ms, 99.0);
     println!("latency: p50 {p50:.3} ms, p99 {p99:.3} ms ({latency_iters} closed-loop jobs)");
+
+    // 4b. Large-N tier: the cache-blocked four-step decomposition vs a
+    // monolithic plan at n=2^18 (both forced explicitly so the numbers
+    // are independent of the FFTSWEEP_FFT_FOURSTEP knob), plus the
+    // schedule-inspection values the gate pins, and conv jobs/s through
+    // the same 2-card fleet.
+    const N_LARGE: usize = 1 << 18;
+    let four = planner::FftPlan::new_four_step(N_LARGE).expect("2^18 has a four-step split");
+    let mono = planner::FftPlan::new_monolithic(N_LARGE);
+    let large_rows = if quick { 4 } else { 16 };
+    let (lre, lim) = rand_planes(large_rows * N_LARGE, &mut rng);
+    let mut lo_re = vec![0.0f32; large_rows * N_LARGE];
+    let mut lo_im = vec![0.0f32; large_rows * N_LARGE];
+    let mut time_large = |plan: &planner::FftPlan| -> f64 {
+        // warm plan scratch/twiddles, then measure steady state
+        planner::run_rows(plan, Direction::Forward, &lre, &lim, large_rows, &mut lo_re, &mut lo_im);
+        let t0 = Instant::now();
+        planner::run_rows(plan, Direction::Forward, &lre, &lim, large_rows, &mut lo_re, &mut lo_im);
+        let dt = t0.elapsed().as_secs_f64();
+        black_box(&lo_re);
+        large_rows as f64 / dt
+    };
+    let four_step_rows_per_s = time_large(&four);
+    let monolithic_rows_per_s = time_large(&mono);
+    let four_step_vs_monolithic = four_step_rows_per_s / monolithic_rows_per_s;
+    println!(
+        "large_n: n={N_LARGE} four-step {four_step_rows_per_s:.1} rows/s \
+         ({} passes, {} tw bytes) vs monolithic {monolithic_rows_per_s:.1} rows/s \
+         ({} passes, {} tw bytes) — {four_step_vs_monolithic:.2}x",
+        four.pass_count(),
+        four.twiddle_bytes(),
+        mono.pass_count(),
+        mono.twiddle_bytes()
+    );
+
+    let conv_jobs = if quick { 128 } else { 512 };
+    const CONV_N: usize = 4096;
+    const CONV_TAPS: u64 = 129;
+    // One closed-loop job warms the conv route, module and plan cache.
+    let x0: Vec<f32> = (0..CONV_N).map(|_| rng.gauss() as f32).collect();
+    black_box(engine.execute_conv(x0, CONV_TAPS).expect("conv warmup"));
+    let conv_payloads: Vec<Vec<f32>> = (0..conv_jobs)
+        .map(|_| (0..CONV_N).map(|_| rng.gauss() as f32).collect())
+        .collect();
+    let t0 = Instant::now();
+    let mut crxs = Vec::with_capacity(conv_jobs);
+    for x in conv_payloads {
+        crxs.push(engine.submit_conv(x, CONV_TAPS).expect("conv submit"));
+    }
+    assert!(engine.drain(Duration::from_secs(600)), "conv drain timed out");
+    for rx in crxs {
+        black_box(rx.recv().expect("conv recv").expect("conv job ok"));
+    }
+    let conv_jobs_per_s = conv_jobs as f64 / t0.elapsed().as_secs_f64();
+    let cplan = planner::conv_plan_for(CONV_N, &planner::synthetic_kernel(CONV_TAPS as usize));
+    println!(
+        "large_n: conv {conv_jobs_per_s:.0} jobs/s (n={CONV_N}, taps={CONV_TAPS}, block \
+         {}, {} passes/block)",
+        cplan.block_len(),
+        cplan.passes_per_block()
+    );
     println!("{}", engine.fleet_report());
     let rt = engine.runtime().clone();
     engine.shutdown();
@@ -414,7 +479,7 @@ fn main() {
 
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 4.0.into());
+    root.set("schema", 5.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -466,6 +531,21 @@ fn main() {
     power_json.set("capped_p99_sim_ms", capped.p99_sim_ms.into());
     power_json.set("capped_clock_transitions", capped.clock_transitions.into());
     root.set("power", power_json);
+    let mut large_json = Json::obj();
+    large_json.set("n", (N_LARGE as u64).into());
+    large_json.set("four_step_rows_per_s", four_step_rows_per_s.into());
+    large_json.set("monolithic_rows_per_s", monolithic_rows_per_s.into());
+    large_json.set("four_step_vs_monolithic", four_step_vs_monolithic.into());
+    large_json.set("four_step_passes", (four.pass_count() as u64).into());
+    large_json.set("monolithic_passes", (mono.pass_count() as u64).into());
+    large_json.set("four_step_twiddle_bytes", (four.twiddle_bytes() as u64).into());
+    large_json.set("monolithic_twiddle_bytes", (mono.twiddle_bytes() as u64).into());
+    large_json.set("conv_n", (CONV_N as u64).into());
+    large_json.set("conv_taps", CONV_TAPS.into());
+    large_json.set("conv_jobs_per_s", conv_jobs_per_s.into());
+    large_json.set("conv_block_len", (cplan.block_len() as u64).into());
+    large_json.set("conv_passes_per_block", (cplan.passes_per_block() as u64).into());
+    root.set("large_n", large_json);
     std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
     println!("wrote {out_path}");
 }

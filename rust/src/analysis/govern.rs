@@ -33,11 +33,15 @@ impl TrafficTrace {
     }
 }
 
+/// Default trace menu: pow2 lengths spanning both planner tiers — up to
+/// 65536 plans monolithic, 262144 crosses the four-step threshold.
+pub const DEFAULT_TRACE_MENU: [u64; 5] = [1024, 8192, 16384, 65536, 262144];
+
 /// Synthesize serving traffic for `gpu`: lengths drawn from a pow2 menu
 /// (every card supports them), deadlines 1.15–3× the boost-clock batch
 /// time — the "some slack, never infeasible" regime of paper §6.2.
 pub fn synthetic_trace(gpu: &GpuSpec, batches: usize, seed: u64) -> TrafficTrace {
-    synthetic_trace_with_menu(gpu, batches, seed, &[1024, 8192, 16384, 65536, 262144])
+    synthetic_trace_with_menu(gpu, batches, seed, &DEFAULT_TRACE_MENU)
 }
 
 /// [`synthetic_trace`] with a caller-chosen length menu — arbitrary

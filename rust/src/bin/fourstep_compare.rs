@@ -1,0 +1,79 @@
+//! Four-step vs monolithic plan comparison at large N.
+//!
+//! Replaces the old `debug_fourstep` sketch: instead of poking an FFT
+//! artifact, this drives the real planner paths — the cache-blocked
+//! four-step decomposition against a monolithic mixed-radix plan of the
+//! same length — and reports numeric agreement, pass counts, twiddle
+//! footprints and wall-clock rows/s for both.
+//!
+//!   cargo run --release --bin fourstep_compare -- [--n 262144] [--rows 4] [--reps 3]
+//!
+//! The default length sits past the four-step threshold, so `plan_for`
+//! would pick four-step on its own; both plans here are forced explicitly
+//! so the comparison is independent of the `FFTSWEEP_FFT_FOURSTEP` knob.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use fftsweep::dsp::{run_rows, Direction, FftPlan};
+use fftsweep::util::cliargs::Args;
+use fftsweep::util::rng::Rng;
+
+fn time_rows(plan: &FftPlan, re: &[f32], im: &[f32], rows: usize, reps: usize) -> (f64, Vec<f32>, Vec<f32>) {
+    let mut out_re = vec![0.0f32; re.len()];
+    let mut out_im = vec![0.0f32; im.len()];
+    // One untimed pass warms the pooled scratch banks and twiddle narrowing.
+    run_rows(plan, Direction::Forward, re, im, rows, &mut out_re, &mut out_im);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        run_rows(plan, Direction::Forward, re, im, rows, &mut out_re, &mut out_im);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    ((reps * rows) as f64 / dt.max(1e-12), out_re, out_im)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.u64_or("n", 1 << 18) as usize;
+    let rows = args.usize_or("rows", 4).max(1);
+    let reps = args.usize_or("reps", 3).max(1);
+
+    let four = FftPlan::new_four_step(n)
+        .with_context(|| format!("n={n} has no four-step split (needs a 2/3/5-smooth composite)"))?;
+    let mono = FftPlan::new_monolithic(n);
+    let (n1, n2) = four.four_step_split().expect("forced four-step plan");
+    println!("N = {n} = {n1} x {n2}, {rows} row(s), {reps} rep(s)");
+    println!(
+        "  monolithic: {:>2} passes, {:>10} twiddle bytes",
+        mono.pass_count(),
+        mono.twiddle_bytes()
+    );
+    println!(
+        "  four-step:  {:>2} passes, {:>10} twiddle bytes (split tables, L2-resident sub-plans)",
+        four.pass_count(),
+        four.twiddle_bytes()
+    );
+
+    let mut rng = Rng::new(0xF0C5);
+    let re: Vec<f32> = (0..rows * n).map(|_| rng.gauss() as f32).collect();
+    let im: Vec<f32> = (0..rows * n).map(|_| rng.gauss() as f32).collect();
+
+    let (mono_rps, mre, mim) = time_rows(&mono, &re, &im, rows, reps);
+    let (four_rps, fre, fim) = time_rows(&four, &re, &im, rows, reps);
+
+    // Numeric agreement: relative L2 between the two schedules.
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for i in 0..rows * n {
+        let dr = fre[i] as f64 - mre[i] as f64;
+        let di = fim[i] as f64 - mim[i] as f64;
+        num += dr * dr + di * di;
+        den += (mre[i] as f64).powi(2) + (mim[i] as f64).powi(2);
+    }
+    let rel = (num / den.max(1e-300)).sqrt();
+    println!("  rel L2 four-step vs monolithic: {rel:.3e}");
+    println!("  monolithic: {mono_rps:>10.2} rows/s");
+    println!("  four-step:  {four_rps:>10.2} rows/s ({:.2}x)", four_rps / mono_rps.max(1e-12));
+    ensure!(rel < 1e-5, "schedules disagree: rel L2 {rel:.3e}");
+    Ok(())
+}

@@ -32,13 +32,13 @@ USAGE:
   fftsweep selftest [--artifacts artifacts]
   fftsweep serve    [--artifacts artifacts] [--jobs 256] [--governor fixed --clock 945]
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
-                    [--lengths 1000,1536,4096] [--power-budget-w <W>]
-                    [--telemetry-out <file.json>] [--prom]
+                    [--lengths 1000,1536,4096] [--conv-taps <t>]
+                    [--power-budget-w <W>] [--telemetry-out <file.json>] [--prom]
   fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
                     [--governor boost] [--power-budget-w <W>] [--seed 7]
                     [--lengths 1024,4096] [--telemetry-out <file.json>] [--prom]
   fftsweep govern   [--gpu v100] [--batches 96] [--seed 7] [--clock 945] [--quick]
-                    [--lengths 1000,1536,16384] [--budget-w <W>]
+                    [--lengths 1000,1536,16384] [--conv-taps <t>] [--budget-w <W>]
   fftsweep validate [--artifacts artifacts]
   fftsweep ablation [--gpu v100] [--n 16384]
   fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
@@ -47,9 +47,20 @@ USAGE:
   fftsweep thermal  [--gpu v100] [--n 16384] [--ambient 30]
 
 LENGTHS: transform lengths are arbitrary (>= 1) — powers of two, smooth
-non-powers of two (mixed-radix 2/3/5 plans) and prime/Bluestein lengths
-all plan and serve; `serve --lengths` is admission-checked against the
-routable artifact set.
+non-powers of two (mixed-radix 2/3/5/4/8 plans) and prime/Bluestein
+lengths all plan and serve; `serve --lengths` is admission-checked
+against the routable artifact set. Past the L2-resident tier the planner
+switches to the cache-blocked four-step decomposition automatically
+(override the threshold with env FFTSWEEP_FFT_FOURSTEP=<n>; 0 disables).
+
+CONV: `serve --conv-taps t` mixes FFT-domain FIR jobs into the traffic —
+every fourth job filters a random real row through a routable (n, taps)
+conv artifact (batched overlap-save: forward FFT → pointwise kernel
+spectrum → inverse, planned once per (N, kernel)); a taps value with no
+conv artifact fails loud naming the routable (n, taps) pairs.
+`govern --conv-taps t` prices that traffic instead: each menu length is
+replaced by the overlap-save FFT block length the conv plan actually
+runs, so governors pick clocks for the filterbank's real transforms.
 
 POWER: `serve --power-budget-w W` keeps the fleet's rolling 1s simulated
 draw at or below W — an arbiter splits the cap into per-card watt shares
@@ -424,13 +435,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "plan cache pre-warmed: {warmed} artifact(s) across {} length(s)",
         lengths.len()
     );
+    // `--conv-taps t` mixes FFT-domain FIR jobs into the traffic: every
+    // fourth job filters a random real row through a conv artifact
+    // carrying those taps. Checked up front so a taps value with no
+    // routable artifact fails loud with the (n, taps) pairs that ARE
+    // servable, instead of per-job rejections.
+    let conv_taps = args.parse_typed::<u64>("conv-taps")?;
+    let conv_lengths: Vec<u64> = match conv_taps {
+        Some(t) => {
+            let pairs = engine.router().supported_kernels("f32");
+            let ns: Vec<u64> = pairs
+                .iter()
+                .filter(|&&(_, taps)| taps == t)
+                .map(|&(n, _)| n)
+                .collect();
+            anyhow::ensure!(
+                !ns.is_empty(),
+                "no conv artifact with taps={t} (routable (n, taps): {pairs:?})"
+            );
+            ns
+        }
+        None => Vec::new(),
+    };
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
-    for _ in 0..jobs {
-        let n = lengths[rng.below(lengths.len() as u64) as usize] as usize;
-        let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
-        let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
-        rxs.push(engine.submit(re, im)?);
+    let mut conv_jobs = 0usize;
+    for j in 0..jobs {
+        if !conv_lengths.is_empty() && j % 4 == 3 {
+            let n = conv_lengths[rng.below(conv_lengths.len() as u64) as usize] as usize;
+            let x: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            rxs.push(engine.submit_conv(x, conv_taps.unwrap())?);
+            conv_jobs += 1;
+        } else {
+            let n = lengths[rng.below(lengths.len() as u64) as usize] as usize;
+            let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            rxs.push(engine.submit(re, im)?);
+        }
     }
     engine.drain(Duration::from_secs(120));
     let mut ok = 0;
@@ -440,7 +481,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let dt = t0.elapsed();
-    println!("served {ok}/{jobs} jobs in {:.3} s", dt.as_secs_f64());
+    let conv_note = if conv_jobs > 0 {
+        format!(" ({conv_jobs} conv)")
+    } else {
+        String::new()
+    };
+    println!("served {ok}/{jobs} jobs{conv_note} in {:.3} s", dt.as_secs_f64());
     let snapshot = engine.snapshot();
     println!("{}", snapshot.render());
     emit_telemetry(args, &snapshot)?;
@@ -507,10 +553,25 @@ fn cmd_govern(args: &Args) -> Result<()> {
         power_budget_w: budget_w,
         ..GovernorContext::default()
     };
-    let trace = match lengths_arg(args)? {
-        Some(menu) => govern::synthetic_trace_with_menu(&gpu, batches, seed, &menu),
-        None => govern::synthetic_trace(&gpu, batches, seed),
-    };
+    let mut menu =
+        lengths_arg(args)?.unwrap_or_else(|| govern::DEFAULT_TRACE_MENU.to_vec());
+    // `--conv-taps t` prices filterbank traffic: each menu length n maps
+    // to the overlap-save FFT block length the conv plan runs for
+    // (n, t), so governors choose clocks for the transforms the conv
+    // workload actually executes rather than the nominal signal length.
+    if let Some(taps) = args.parse_typed::<u64>("conv-taps")? {
+        anyhow::ensure!(taps >= 1, "--conv-taps must be >= 1, got {taps}");
+        for n in &mut menu {
+            anyhow::ensure!(
+                taps <= *n,
+                "--conv-taps {taps} exceeds trace length {n} (kernel must fit the signal)"
+            );
+            *n = dsp::planner::conv_block_len(*n as usize, taps as usize) as u64;
+        }
+        menu.sort_unstable();
+        menu.dedup();
+    }
+    let trace = govern::synthetic_trace_with_menu(&gpu, batches, seed, &menu);
     let kinds = GovernorKind::all(fixed_mhz);
     let (outcomes, table) = govern::comparison(&gpu, &trace, &kinds, &ctx);
     println!("{}", table.to_ascii());

@@ -70,6 +70,15 @@ pub enum CoordError {
         expected: u64,
         got: u64,
     },
+    /// No conv artifact serves this (signal length, kernel taps) pair —
+    /// or the tap count itself is invalid (zero, or longer than the
+    /// signal). Names the routable kernels so callers can self-correct.
+    #[error("no conv artifact serves n={n} taps={taps} (supported (n, taps): {supported:?})")]
+    UnsupportedKernel {
+        n: u64,
+        taps: u64,
+        supported: Vec<(u64, u64)>,
+    },
 }
 
 /// One card in the fleet: a simulated GPU plus the clock policy governing it.
@@ -359,7 +368,45 @@ impl Engine {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = FftJob::new(id, re, im);
         let route = self.router.route(job.n, job.dtype)?.clone();
+        self.enqueue(job, route)
+    }
 
+    /// Submit one filterbank row (real samples) against the conv artifact
+    /// serving (len, taps); returns the receiver for its result. The
+    /// filtered row comes back in `out_re` (`out_im` is all zeros — the
+    /// workload is real-to-real).
+    pub fn submit_conv(
+        &self,
+        x: Vec<f32>,
+        taps: u64,
+    ) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        self.submit_conv_routed(x, taps).map(|(rx, ..)| rx)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn submit_conv_routed(
+        &self,
+        x: Vec<f32>,
+        taps: u64,
+    ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let n = x.len();
+        // The imaginary plane rides along zeroed: conv batches pack
+        // through the same (artifact, card) slots as fft batches, and the
+        // worker ignores the plane for conv kinds.
+        let job = FftJob::new(id, x, vec![0.0; n]);
+        let route = self.router.route_conv(job.n, taps, job.dtype)?.clone();
+        self.enqueue(job, route)
+    }
+
+    /// Route-independent tail of submission: least-loaded dispatch,
+    /// accounting, and the batcher push (shared by fft and conv jobs).
+    #[allow(clippy::type_complexity)]
+    fn enqueue(
+        &self,
+        job: FftJob,
+        route: router::RouteEntry,
+    ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
         // Least-loaded dispatch across the fleet.
         let loads: Vec<u64> = self.cards.iter().map(|c| c.inflight()).collect();
         let card = Router::least_loaded(&loads).expect("fleet is non-empty");
@@ -423,6 +470,16 @@ impl Engine {
         Ok(result)
     }
 
+    /// Submit-and-wait for one filterbank row (see [`Engine::submit_conv`]).
+    pub fn execute_conv(&self, x: Vec<f32>, taps: u64) -> Result<JobResult> {
+        let (rx, artifact, card, dispatched_full) = self.submit_conv_routed(x, taps)?;
+        if !dispatched_full {
+            self.flush_slot(&artifact, card);
+        }
+        let result = rx.recv()??;
+        Ok(result)
+    }
+
     /// Wait until every submitted job completed (or `timeout`).
     pub fn drain(&self, timeout: Duration) -> bool {
         self.flush();
@@ -446,8 +503,9 @@ impl Engine {
 
     /// Pre-warm the plan cache for an admissible length menu before
     /// accepting traffic: route each length, load (and thereby
-    /// plan-compile) its artifact, and ride along any `rfft` artifacts of
-    /// the same lengths. Loads land in the runtime's shared module cache,
+    /// plan-compile) its artifact, and ride along any `rfft` and `conv`
+    /// artifacts of the same lengths (conv loads also build their cached
+    /// kernel spectrum). Loads land in the runtime's shared module cache,
     /// so the first batch per length on every card skips both the
     /// `runtime.load` and the plan-build latency. Returns the number of
     /// artifacts warmed; an unroutable length surfaces the usual typed
@@ -459,10 +517,12 @@ impl Engine {
             self.runtime.load(&route.artifact)?;
             warmed += 1;
         }
-        for meta in self.runtime.manifest().of_kind("rfft") {
-            if lengths.contains(&meta.n) && meta.dtype == dtype {
-                self.runtime.load(&meta.name)?;
-                warmed += 1;
+        for kind in ["rfft", "conv"] {
+            for meta in self.runtime.manifest().of_kind(kind) {
+                if lengths.contains(&meta.n) && meta.dtype == dtype {
+                    self.runtime.load(&meta.name)?;
+                    warmed += 1;
+                }
             }
         }
         Ok(warmed)
@@ -638,7 +698,17 @@ fn worker_loop(
         };
         let result = module.and_then(|m| {
             batch.planes_into(&mut in_re, &mut in_im);
-            m.run_fft_f32_into(&in_re, &in_im, &mut out_re, &mut out_im)
+            if m.meta.kind == "conv" {
+                // Real-to-real filterbank rows: the zeroed imaginary
+                // plane is ignored and the output imaginary plane is
+                // pinned to zeros so result splitting stays uniform.
+                m.run_conv_f32_into(&in_re, &mut out_re).map(|()| {
+                    out_im.clear();
+                    out_im.resize(out_re.len(), 0.0);
+                })
+            } else {
+                m.run_fft_f32_into(&in_re, &in_im, &mut out_re, &mut out_im)
+            }
         });
         let exec_us = t0.elapsed().as_micros() as u64;
         w.fleet_metrics.record_batch(occupancy, rows_total, exec_us);
@@ -745,14 +815,72 @@ mod tests {
     }
 
     #[test]
-    fn prewarm_rides_rfft_artifacts_along() {
+    fn prewarm_rides_rfft_and_conv_artifacts_along() {
         let e = engine();
-        // n=4096 has both an fft and an rfft artifact in the synthetic
-        // manifest: both plans compile up front.
+        // n=4096 has an fft, an rfft and a conv artifact in the synthetic
+        // manifest: all three plans (and the conv kernel spectrum) compile
+        // up front.
         let warmed = e.prewarm(&[4096], "f32").unwrap();
-        assert_eq!(warmed, 2, "fft + rfft artifact for the same length");
+        assert_eq!(warmed, 3, "fft + rfft + conv artifacts for the same length");
         let names = e.runtime().loaded_names();
         assert!(names.contains(&"rfft_f32_n4096_b16".to_string()));
+        assert!(names.contains(&"conv_f32_n4096_t129_b16".to_string()));
+        e.shutdown();
+    }
+
+    #[test]
+    fn conv_jobs_round_trip_through_the_fleet() {
+        let e = engine();
+        let (n, taps) = (4096usize, 129u64);
+        // A unit impulse: the filtered row is the kernel itself, the
+        // sharpest possible end-to-end check of the FFT→multiply→iFFT
+        // path through routing, batching and the worker.
+        let mut x = vec![0.0f32; n];
+        x[0] = 1.0;
+        let res = e.execute_conv(x, taps).unwrap();
+        assert_eq!(res.out_re.len(), n);
+        let h = crate::dsp::planner::synthetic_kernel(taps as usize);
+        for (j, &hj) in h.iter().enumerate() {
+            assert!(
+                (res.out_re[j] as f64 - hj).abs() < 1e-6,
+                "tap {j}: {} vs {hj}",
+                res.out_re[j]
+            );
+        }
+        assert!(
+            res.out_re[taps as usize..].iter().all(|&v| v.abs() < 1e-6),
+            "impulse response must vanish past the kernel"
+        );
+        assert!(res.out_im.iter().all(|&v| v == 0.0), "conv output is real");
+        e.shutdown();
+    }
+
+    #[test]
+    fn conv_admission_rejects_unsupported_kernels_typed() {
+        let e = engine();
+        // No artifact serves taps=33 at n=4096.
+        let err = e.execute_conv(vec![0.0; 4096], 33).unwrap_err();
+        assert!(
+            err.downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::UnsupportedKernel { n: 4096, taps: 33, .. }))
+                .unwrap_or(false),
+            "expected UnsupportedKernel, got {err:#}"
+        );
+        // Invalid tap counts are refused before routing: zero taps and a
+        // kernel longer than the signal.
+        for (len, taps) in [(4096usize, 0u64), (16, 129)] {
+            let err = e.execute_conv(vec![0.0; len], taps).unwrap_err();
+            assert!(
+                err.downcast_ref::<CoordError>()
+                    .map(|c| matches!(c, CoordError::UnsupportedKernel { .. }))
+                    .unwrap_or(false),
+                "len={len} taps={taps}: expected UnsupportedKernel, got {err:#}"
+            );
+        }
+        // Admission rejections happen before any accounting: nothing was
+        // submitted, nothing lingers, the fleet drains instantly.
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+        assert!(e.drain(Duration::from_secs(1)));
         e.shutdown();
     }
 

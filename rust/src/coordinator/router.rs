@@ -10,10 +10,13 @@ use std::sync::Arc;
 use crate::coordinator::CoordError;
 use crate::runtime::Manifest;
 
-/// Routing table: (n, dtype) → artifact name + its fixed device batch.
+/// Routing table: (n, dtype) → artifact name + its fixed device batch,
+/// plus a parallel table for `conv` (filterbank) artifacts keyed by
+/// (n, taps, dtype) — one signal length can carry several kernel sizes.
 #[derive(Debug, Clone, Default)]
 pub struct Router {
     routes: BTreeMap<(u64, String), RouteEntry>,
+    conv_routes: BTreeMap<(u64, u64, String), RouteEntry>,
 }
 
 #[derive(Debug, Clone)]
@@ -29,7 +32,7 @@ pub struct RouteEntry {
 }
 
 impl Router {
-    /// Build from every `fft` artifact in the manifest.
+    /// Build from every `fft` and `conv` artifact in the manifest.
     pub fn from_manifest(manifest: &Manifest) -> Self {
         let mut routes = BTreeMap::new();
         for a in manifest.of_kind("fft") {
@@ -42,7 +45,18 @@ impl Router {
                 },
             );
         }
-        Self { routes }
+        let mut conv_routes = BTreeMap::new();
+        for a in manifest.of_kind("conv") {
+            conv_routes.insert(
+                (a.n, a.harmonics, a.dtype.clone()),
+                RouteEntry {
+                    artifact: Arc::from(a.name.as_str()),
+                    n: a.n,
+                    device_batch: a.batch,
+                },
+            );
+        }
+        Self { routes, conv_routes }
     }
 
     /// Admission check: the artifact serving (n, dtype), or a typed
@@ -58,11 +72,42 @@ impl Router {
             })
     }
 
+    /// Admission check for conv jobs: an invalid tap count (0, or longer
+    /// than the signal) is refused before any table lookup; otherwise the
+    /// artifact serving (n, taps, dtype), or a typed
+    /// [`CoordError::UnsupportedKernel`] naming the (n, taps) pairs that
+    /// ARE routable.
+    pub fn route_conv(&self, n: u64, taps: u64, dtype: &str) -> Result<&RouteEntry, CoordError> {
+        if taps == 0 || taps > n {
+            return Err(CoordError::UnsupportedKernel {
+                n,
+                taps,
+                supported: self.supported_kernels(dtype),
+            });
+        }
+        self.conv_routes
+            .get(&(n, taps, dtype.to_string()))
+            .ok_or_else(|| CoordError::UnsupportedKernel {
+                n,
+                taps,
+                supported: self.supported_kernels(dtype),
+            })
+    }
+
     pub fn supported_lengths(&self, dtype: &str) -> Vec<u64> {
         self.routes
             .keys()
             .filter(|(_, d)| d == dtype)
             .map(|(n, _)| *n)
+            .collect()
+    }
+
+    /// The (signal length, taps) pairs with a conv artifact for `dtype`.
+    pub fn supported_kernels(&self, dtype: &str) -> Vec<(u64, u64)> {
+        self.conv_routes
+            .keys()
+            .filter(|(_, _, d)| d == dtype)
+            .map(|(n, taps, _)| (*n, *taps))
             .collect()
     }
 
@@ -96,7 +141,8 @@ mod tests {
             fft_f32_n256_b256\tf1\tfft\t256\t256\tf32\t0\tf32:256x256;f32:256x256\t2\td\n\
             fft_f32_n1024_b64\tf2\tfft\t1024\t64\tf32\t0\tf32:64x1024;f32:64x1024\t2\td\n\
             fft_f64_n1024_b64\tf3\tfft\t1024\t64\tf64\t0\tf64:64x1024;f64:64x1024\t2\td\n\
-            pipeline_n16384_h8\tf4\tpipeline\t16384\t4\tf32\t8\tf32:4x16384;f32:4x16384\t3\td\n";
+            pipeline_n16384_h8\tf4\tpipeline\t16384\t4\tf32\t8\tf32:4x16384;f32:4x16384\t3\td\n\
+            conv_f32_n1024_t33_b16\tf5\tconv\t1024\t16\tf32\t33\tf32:16x1024\t1\td\n";
         Manifest::parse(Path::new("."), text).unwrap()
     }
 
@@ -121,6 +167,41 @@ mod tests {
             other => panic!("expected UnsupportedLength, got {other:?}"),
         }
         assert!(r.route(1024, "f16").is_err());
+    }
+
+    #[test]
+    fn conv_routes_by_length_and_taps() {
+        let r = Router::from_manifest(&manifest());
+        let e = r.route_conv(1024, 33, "f32").unwrap();
+        assert_eq!(&*e.artifact, "conv_f32_n1024_t33_b16");
+        assert_eq!(e.device_batch, 16);
+        assert_eq!(r.supported_kernels("f32"), vec![(1024, 33)]);
+        // conv artifacts never enter the complex-fft table
+        assert!(r.route(1024, "f32").is_ok());
+        assert_eq!(r.len(), 3, "fft routes only");
+    }
+
+    #[test]
+    fn unsupported_kernel_rejected_with_taxonomy() {
+        let r = Router::from_manifest(&manifest());
+        // No artifact for these taps.
+        match r.route_conv(1024, 65, "f32") {
+            Err(CoordError::UnsupportedKernel { n, taps, supported }) => {
+                assert_eq!((n, taps), (1024, 65));
+                assert_eq!(supported, vec![(1024, 33)], "must name routable kernels");
+            }
+            other => panic!("expected UnsupportedKernel, got {other:?}"),
+        }
+        // Invalid tap counts are refused before the lookup: zero taps and
+        // kernels longer than the signal.
+        assert!(matches!(
+            r.route_conv(1024, 0, "f32"),
+            Err(CoordError::UnsupportedKernel { taps: 0, .. })
+        ));
+        assert!(matches!(
+            r.route_conv(16, 33, "f32"),
+            Err(CoordError::UnsupportedKernel { n: 16, taps: 33, .. })
+        ));
     }
 
     #[test]

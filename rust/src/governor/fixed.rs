@@ -194,10 +194,11 @@ mod tests {
     fn common_clock_sane_for_off_grid_lengths() {
         // The common clock is length-independent, so asking at the
         // off-grid serving lengths must neither panic nor produce a clock
-        // outside the table or above boost.
+        // outside the table or above boost — including the four-step tier
+        // (3·2^20 sits off-grid between the 2^21 and 2^22 anchors).
         for g in [tesla_v100(), tesla_p4()] {
             let mut gov = CommonClock::new();
-            for n in [1000u64, 1536] {
+            for n in [1000u64, 1536, 3 << 20] {
                 let f = gov.choose(&g, &wl(&g, n), &GovernorContext::default()).unwrap();
                 assert!(freq_table(&g).contains(f), "{} n={n}: {f} not in table", g.name);
                 assert!(

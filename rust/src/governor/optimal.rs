@@ -158,6 +158,32 @@ mod tests {
     }
 
     #[test]
+    fn large_n_off_grid_clock_choice_stays_within_frequency_table() {
+        // Four-step-tier regression: now that the length grid extends to
+        // 2^22, off-grid large lengths (3·2^20 and 5·2^19 sit between the
+        // 2^21/2^22 and 2^20/2^21 pow2 anchors) must still resolve to a
+        // supported table clock at or below boost through the
+        // interpolated-curve path, and the pow2 top anchor itself must
+        // resolve through the sweep path.
+        let ctx = GovernorContext::default();
+        for g in [tesla_v100(), crate::sim::gpu::titan_xp()] {
+            let mut gov = PerLengthOptimal::new();
+            let table = freq_table(&g);
+            for n in [3u64 << 20, 5 << 19, 1 << 22] {
+                let f = gov.choose(&g, &wl(&g, n), &ctx).unwrap();
+                assert!(table.contains(f), "{} n={n}: {f} not in table", g.name);
+                assert!(
+                    f <= g.boost_clock_mhz + 1e-9,
+                    "{} n={n}: {f} above boost {}",
+                    g.name,
+                    g.boost_clock_mhz
+                );
+                assert!(f > 0.3 * g.boost_clock_mhz, "{} n={n}: {f} implausibly low", g.name);
+            }
+        }
+    }
+
+    #[test]
     fn off_grid_optimum_saves_energy_vs_boost() {
         let g = tesla_v100();
         let mut gov = PerLengthOptimal::new();

@@ -7,20 +7,22 @@ use crate::types::{FftWorkload, Precision};
 
 use super::measure::{measure_point, Measurement, Protocol};
 
-/// FFT lengths in the paper's test set: powers of two 2^5..2^21, a few
-/// smooth non-powers-of-two, and Bluestein lengths (139², a large prime
+/// FFT lengths in the paper's test set: powers of two 2^5..2^22 (the top
+/// octave covers the planner's four-step tier), a few smooth
+/// non-powers-of-two, and Bluestein lengths (139², a large prime
 /// multiple).
 pub fn paper_lengths() -> Vec<u64> {
-    let mut v: Vec<u64> = (5..=21).map(|k| 1u64 << k).collect();
-    v.extend([96, 768, 1536, 3 * 4096, 5 * 4096, 1000000]); // smooth non-pow2
+    let mut v: Vec<u64> = (5..=22).map(|k| 1u64 << k).collect();
+    v.extend([96, 768, 1536, 3 * 4096, 5 * 4096, 3 << 20, 1000000]); // smooth non-pow2
     v.extend([19321, 32771 * 2]); // Bluestein (139², 2·prime)
     v.sort_unstable();
     v
 }
 
-/// A reduced length set for quick sweeps and tests.
+/// A reduced length set for quick sweeps and tests (2^22 keeps the
+/// four-step tier represented).
 pub fn quick_lengths() -> Vec<u64> {
-    vec![256, 1024, 8192, 16384, 1 << 18, 1 << 21, 19321]
+    vec![256, 1024, 8192, 16384, 1 << 18, 1 << 22, 19321]
 }
 
 /// Only power-of-two lengths (the FP16 constraint).

@@ -11,8 +11,10 @@ use anyhow::{bail, Context, Result};
 pub struct ArtifactMeta {
     pub name: String,
     pub file: PathBuf,
-    /// "fft" | "spectrum" | "pipeline"
+    /// "fft" | "rfft" | "conv" | "spectrum" | "pipeline"
     pub kind: String,
+    /// Transform length — for `conv`, the signal length per row (the FIR
+    /// tap count rides in `harmonics`).
     pub n: u64,
     pub batch: u64,
     pub dtype: String,
@@ -121,6 +123,15 @@ impl Manifest {
             .with_context(|| format!("no fft artifact n={n} dtype={dtype}"))
     }
 
+    /// The conv (filterbank) artifact for (n, taps), if present — taps are
+    /// carried in the harmonics field.
+    pub fn conv(&self, n: u64, taps: u64) -> Result<&ArtifactMeta> {
+        self.entries
+            .values()
+            .find(|a| a.kind == "conv" && a.n == n && a.harmonics == taps)
+            .with_context(|| format!("no conv artifact n={n} taps={taps}"))
+    }
+
     /// Default artifact directory: $FFTSWEEP_ARTIFACTS or ./artifacts.
     pub fn default_dir() -> PathBuf {
         std::env::var("FFTSWEEP_ARTIFACTS")
@@ -164,7 +175,9 @@ impl Manifest {
             format!("{dtype}:{batch}x{n};{dtype}:{batch}x{n}")
         }
         // n=1000 (2³·5³) and n=1536 (2⁹·3) are the issue's off-grid serving
-        // lengths: mixed-radix plans, routable like any power of two.
+        // lengths (mixed-radix plans, routable like any power of two);
+        // n=262144 (2¹⁸) is the large-N tier — past the L2 budget the
+        // planner compiles it to the cache-blocked four-step path.
         let fft_set = [
             (256u64, 256u64),
             (1000, 64),
@@ -172,6 +185,7 @@ impl Manifest {
             (1536, 64),
             (4096, 16),
             (16384, 4),
+            (262144, 2),
         ];
         for (n, batch) in fft_set {
             add(
@@ -198,6 +212,21 @@ impl Manifest {
             "f32:16x4096".to_string(),
             2,
         );
+        // FFT-domain FIR filterbank rows (overlap-save): one (batch, n)
+        // real plane in, one filtered plane out; the Hamming tap count
+        // rides in the harmonics field (`planner::synthetic_kernel`).
+        for (n, taps, batch) in [(4096u64, 129u64, 16u64), (262144, 257, 2)] {
+            add(
+                format!("conv_f32_n{n}_t{taps}_b{batch}"),
+                "conv",
+                n,
+                batch,
+                "f32",
+                taps,
+                format!("f32:{batch}x{n}"),
+                1,
+            );
+        }
         add(
             "spectrum_f32_n4096_b16".into(),
             "spectrum",
@@ -290,6 +319,29 @@ mod tests {
         assert_eq!(shapes.len(), 1, "rfft takes one real plane");
         assert_eq!(shapes[0], ("f32".to_string(), vec![16, 4096]));
         // rfft entries must NOT enter the (complex) fft routing table
+        assert!(m.of_kind("fft").iter().all(|a| a.kind == "fft"));
+    }
+
+    #[test]
+    fn synthetic_manifest_has_large_n_and_conv_entries() {
+        let m = Manifest::synthetic(Path::new("/nonexistent"));
+        // The 2^18 four-step serving entry.
+        let big = m.fft(262144, "f32").unwrap();
+        assert_eq!(big.batch, 2);
+        assert_eq!(big.input_shapes()[0], ("f32".to_string(), vec![2, 262144]));
+        // Conv entries: one real plane in, one filtered plane out, taps in
+        // the harmonics field.
+        for (n, taps) in [(4096u64, 129u64), (262144, 257)] {
+            let c = m.conv(n, taps).unwrap();
+            assert_eq!(c.kind, "conv");
+            assert_eq!(c.harmonics, taps);
+            assert_eq!(c.n_outputs, 1);
+            let shapes = c.input_shapes();
+            assert_eq!(shapes.len(), 1, "conv takes one real plane");
+            assert_eq!(shapes[0].1, vec![c.batch, n]);
+        }
+        assert!(m.conv(4096, 9).is_err());
+        // conv entries must not leak into the complex fft routing table
         assert!(m.of_kind("fft").iter().all(|a| a.kind == "fft"));
     }
 

@@ -126,6 +126,23 @@ impl LoadedModule {
         Ok(())
     }
 
+    /// Serving path for `conv` artifacts writing into a caller-owned
+    /// output plane (API parity with the sim backend's overlap-save
+    /// filterbank path: one (batch, n) real plane in, one filtered
+    /// (batch, n) plane out).
+    pub fn run_conv_f32_into(&self, x: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "conv",
+            "run_conv_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        let outputs = self.run_f32(&[x])?;
+        out.clear();
+        out.extend_from_slice(&outputs[0]);
+        Ok(())
+    }
+
     /// Execute with f64 planes (the fp64 artifacts).
     pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
         let shapes = self.meta.input_shapes();

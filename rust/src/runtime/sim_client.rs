@@ -10,10 +10,14 @@
 //! f32 artifacts execute **natively in f32 planes** (the planner's
 //! kernels are monomorphized per precision, twiddles pre-narrowed at
 //! plan build) — no f32→f64 plane conversion and half the memory
-//! traffic of the old always-f64 path. f64 numerics remain bit-identical
-//! to the `dsp::fft` oracle (the planner mirrors its butterfly
-//! schedule); f32 output tracks the f64 oracle within the planner's
-//! log₂N-scaled tolerance tier.
+//! traffic of the old always-f64 path. The planner's radix-2 baseline
+//! schedule remains bit-identical to the `dsp::fft` oracle; the default
+//! high-radix / four-step schedules it serves are tolerance-tested
+//! against that baseline, and f32 output tracks the f64 path within the
+//! planner's log₂N-scaled tolerance tier. `conv` artifacts filter rows
+//! through the cached overlap-save plan (`dsp::planner::ConvPlan`) with
+//! the standard synthetic kernel (taps carried in the manifest's
+//! harmonics field).
 //!
 //! Defense-in-depth is preserved: when a manifest and HLO files DO exist
 //! on disk, loads still verify the digest and the HLO-text header, so a
@@ -40,20 +44,27 @@ pub struct LoadedModule {
     fft_plan: Option<std::sync::Arc<crate::dsp::planner::FftPlan>>,
     /// The real-input plan for `rfft` artifacts.
     rfft_plan: Option<std::sync::Arc<crate::dsp::planner::RfftPlan>>,
+    /// The overlap-save filtering plan for `conv` artifacts (kernel =
+    /// `synthetic_kernel(meta.harmonics)`, spectrum cached in the plan).
+    conv_plan: Option<std::sync::Arc<crate::dsp::planner::ConvPlan>>,
 }
 
 impl LoadedModule {
     fn new(meta: ArtifactMeta) -> Self {
         let n = meta.n as usize;
-        let (fft_plan, rfft_plan) = if meta.kind == "rfft" {
-            (None, Some(planner::rfft_plan_for(n)))
-        } else {
-            (Some(planner::plan_for(n)), None)
+        let (fft_plan, rfft_plan, conv_plan) = match meta.kind.as_str() {
+            "rfft" => (None, Some(planner::rfft_plan_for(n)), None),
+            "conv" => {
+                let kernel = planner::synthetic_kernel((meta.harmonics as usize).max(1));
+                (None, None, Some(planner::conv_plan_for(n, &kernel)))
+            }
+            _ => (Some(planner::plan_for(n)), None, None),
         };
         Self {
             meta,
             fft_plan,
             rfft_plan,
+            conv_plan,
         }
     }
 
@@ -68,6 +79,16 @@ impl LoadedModule {
         match &self.rfft_plan {
             Some(p) => p.clone(),
             None => planner::rfft_plan_for(self.meta.n as usize),
+        }
+    }
+
+    fn cplan(&self) -> std::sync::Arc<crate::dsp::planner::ConvPlan> {
+        match &self.conv_plan {
+            Some(p) => p.clone(),
+            None => {
+                let kernel = planner::synthetic_kernel((self.meta.harmonics as usize).max(1));
+                planner::conv_plan_for(self.meta.n as usize, &kernel)
+            }
         }
     }
 
@@ -92,6 +113,11 @@ impl LoadedModule {
                 let mut out_im = Vec::new();
                 self.exec_rfft_into(inputs[0], &mut out_re, &mut out_im);
                 Ok(vec![out_re, out_im])
+            }
+            "conv" => {
+                let mut y = Vec::new();
+                self.exec_conv_into(inputs[0], &mut y);
+                Ok(vec![y])
             }
             "spectrum" => {
                 let (re, im) = (inputs[0], inputs[1]);
@@ -177,6 +203,32 @@ impl LoadedModule {
         self.check_inputs(1, [x.len()].into_iter())?;
         self.exec_rfft_into(x, out_re, out_im);
         Ok(())
+    }
+
+    /// Zero-copy serving path for `conv` artifacts, mirroring
+    /// [`Self::run_fft_f32_into`]: one real input plane (batch × n) in,
+    /// one filtered plane (batch × n) out, caller-owned buffer resized
+    /// (never shrunk) and fully overwritten. Filtering runs natively in
+    /// f32 against the pre-narrowed kernel spectrum.
+    pub fn run_conv_f32_into(&self, x: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            self.meta.kind == "conv",
+            "run_conv_f32_into on '{}' (kind {})",
+            self.meta.name,
+            self.meta.kind
+        );
+        self.check_inputs(1, [x.len()].into_iter())?;
+        self.exec_conv_into(x, out);
+        Ok(())
+    }
+
+    /// The one conv execution body (callers have validated inputs).
+    fn exec_conv_into(&self, x: &[f32], y: &mut Vec<f32>) {
+        let n = self.meta.n as usize;
+        let batch = self.meta.batch as usize;
+        y.resize(batch * n, 0.0);
+        let plan = self.cplan();
+        planner::run_conv_rows(&plan, x, batch, y);
     }
 
     /// The one rfft execution body (callers have validated inputs).
@@ -506,6 +558,75 @@ mod tests {
         assert!(m.run_f32(&[&x, &x]).is_err(), "rfft takes one plane");
         let short = vec![0.0f32; batch * n - 1];
         assert!(m.run_rfft_f32_into(&short, &mut a, &mut b).is_err());
+    }
+
+    #[test]
+    fn synthetic_runtime_serves_conv() {
+        let rt = rt();
+        let m = rt.load("conv_f32_n4096_t129_b16").unwrap();
+        assert_eq!(m.meta.kind, "conv");
+        let n = m.meta.n as usize;
+        let taps = m.meta.harmonics as usize;
+        let batch = m.meta.batch as usize;
+        let mut rng = Rng::new(33);
+        let x: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+        let out = m.run_f32(&[&x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), batch * n);
+        // row 0 against the direct causal FIR with the same kernel
+        let h = crate::dsp::planner::synthetic_kernel(taps);
+        for t in (0..n).step_by(37) {
+            let mut want = 0.0f64;
+            for (j, &hj) in h.iter().enumerate() {
+                if t >= j {
+                    want += hj * x[t - j] as f64;
+                }
+            }
+            assert!(
+                (out[0][t] as f64 - want).abs() < 1e-4,
+                "t={t}: {} vs {want}",
+                out[0][t]
+            );
+        }
+        // the zero-copy path matches and reuses buffers
+        let mut y = Vec::new();
+        m.run_conv_f32_into(&x, &mut y).unwrap();
+        assert_eq!(y, out[0]);
+        let ptr = y.as_ptr();
+        m.run_conv_f32_into(&x, &mut y).unwrap();
+        assert_eq!(y.as_ptr(), ptr, "steady state must not reallocate");
+        // wrong kind / arity / shape rejected
+        let fft = rt.load("fft_f32_n1024_b64").unwrap();
+        assert!(fft.run_conv_f32_into(&x, &mut y).is_err(), "kind");
+        assert!(m.run_f32(&[&x, &x]).is_err(), "conv takes one plane");
+        let short = vec![0.0f32; batch * n - 1];
+        assert!(m.run_conv_f32_into(&short, &mut y).is_err(), "shape");
+    }
+
+    #[test]
+    fn synthetic_runtime_serves_large_n_four_step() {
+        // The 2^18 serving entry must route through the four-step plan and
+        // still satisfy Parseval (the cheap large-N correctness check).
+        let rt = rt();
+        let m = rt.load("fft_f32_n262144_b2").unwrap();
+        let n = m.meta.n as usize;
+        assert!(
+            crate::dsp::planner::plan_for(n).is_four_step(),
+            "2^18 must compile to the four-step path"
+        );
+        let total = m.meta.batch as usize * n;
+        let mut rng = Rng::new(64);
+        let re: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let im: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+        let out = m.run_f32(&[&re, &im]).unwrap();
+        let e_time: f64 = (0..n)
+            .map(|i| (re[i] as f64).powi(2) + (im[i] as f64).powi(2))
+            .sum();
+        let e_freq: f64 = (0..n)
+            .map(|i| (out[0][i] as f64).powi(2) + (out[1][i] as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-3 * e_time.max(1.0));
     }
 
     #[test]

@@ -399,6 +399,39 @@ mod tests {
     }
 
     #[test]
+    fn interp_anchor_grid_extends_to_2_22() {
+        // Large-N tier regression: the pow2 anchors price exactly up to
+        // 2^22 and an off-grid length between the top anchors (3·2^20 ∈
+        // (2^21, 2^22)) still lands between its brackets — so the
+        // per-length-optimal and common-clock governors stay meaningful
+        // in the planner's four-step tier.
+        let g = tesla_v100();
+        for f in [g.boost_clock_mhz, 945.0] {
+            let top = interp_time_power(
+                &g,
+                &FftWorkload::new(1 << 22, Precision::Fp32, g.working_set_bytes),
+                f,
+            );
+            assert!(top.time_s > 0.0 && top.avg_power_w > 0.0 && top.energy_j > 0.0);
+            let w = FftWorkload::new(3 << 20, Precision::Fp32, g.working_set_bytes);
+            let it = interp_time_power(&g, &w, f);
+            let t_lo = interp_time_power(
+                &g,
+                &FftWorkload::new(1 << 21, w.precision, w.data_bytes),
+                f,
+            )
+            .time_s;
+            let t_hi = top.time_s;
+            let (t_min, t_max) = (t_lo.min(t_hi), t_lo.max(t_hi));
+            assert!(
+                it.time_s >= t_min * (1.0 - 1e-12) && it.time_s <= t_max * (1.0 + 1e-12),
+                "f={f}: {} outside [{t_min}, {t_max}]",
+                it.time_s
+            );
+        }
+    }
+
+    #[test]
     fn interp_energy_curve_has_minimum_below_boost_off_grid() {
         // The property the governors rely on: the interpolated energy
         // curve at an off-grid length still has its optimum well below

@@ -22,7 +22,14 @@ Fails (exit 1) when:
     (f32_f64_plane_bytes != 0), f32-native rows/s fell below the
     f64-convert rate, or the persistent pool fell below the scoped-spawn
     rate — or f32-native rows/s / pool batches/s regressed more than 30%
-    below their committed baseline floors.
+    below their committed baseline floors,
+  * the large_n section (schema 5) breaks an internal invariant of the
+    fresh doc — the four-step path at n=2^18 fell below the monolithic
+    plan's rows/s, its twiddle-table bytes are not strictly smaller than
+    the monolithic table, or its pass count is not exactly monolithic + 1
+    (the decomposition trades one extra pass for L2-resident sub-plans
+    and a split twiddle table) — or four-step rows/s / conv jobs/s
+    regressed more than 30% below their committed baseline floors.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -49,6 +56,7 @@ REQUIRED = [
     "fleet",
     "power",
     "native",
+    "large_n",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
@@ -67,6 +75,15 @@ REQUIRED_NATIVE = [
     "pool_batches_per_s",
     "spawn_batches_per_s",
 ]
+REQUIRED_LARGE_N = [
+    "four_step_rows_per_s",
+    "monolithic_rows_per_s",
+    "four_step_passes",
+    "monolithic_passes",
+    "four_step_twiddle_bytes",
+    "monolithic_twiddle_bytes",
+    "conv_jobs_per_s",
+]
 MAX_REGRESSION = 0.30
 # Internal-invariant slack: simulated quantities are deterministic, so the
 # capped run only gets rounding headroom, not a regression budget.
@@ -75,6 +92,9 @@ POWER_SLACK = 0.02
 # pool vs spawn) get a little timing-noise headroom — the real deltas are
 # 1.5x+, so 10% slack never masks an actual inversion.
 NATIVE_SLACK = 0.10
+# Four-step vs monolithic at n=2^18: same timing-noise headroom — the
+# decomposition must at minimum hold parity with the monolithic plan.
+LARGE_N_SLACK = 0.10
 
 
 class BenchCheckError(Exception):
@@ -100,6 +120,10 @@ def load_doc(path):
         missing += [f"native.{k}" for k in REQUIRED_NATIVE if k not in doc["native"]]
     elif "native" in doc:
         missing += [f"native.{k}" for k in REQUIRED_NATIVE]
+    if isinstance(doc.get("large_n"), dict):
+        missing += [f"large_n.{k}" for k in REQUIRED_LARGE_N if k not in doc["large_n"]]
+    elif "large_n" in doc:
+        missing += [f"large_n.{k}" for k in REQUIRED_LARGE_N]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -214,6 +238,55 @@ def check(fresh, base):
         if native[key] < floor:
             problems.append(
                 f"native.{key} {native[key]:.0f} {what} regressed "
+                f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
+            )
+
+    # Large-N section (schema 5): internal invariants of the fresh doc.
+    # The four-step decomposition must hold parity with the monolithic
+    # plan at n=2^18, carry a strictly smaller twiddle table (that is the
+    # point of the split hi/lo factorization), and cost exactly one extra
+    # pass (column FFTs + row FFTs + the inter-step twiddle sweep).
+    large = fresh["large_n"]
+    base_large = base["large_n"]
+    info.append(
+        f"large_n (n={large.get('n', '?')}): four-step "
+        f"{large['four_step_rows_per_s']:.1f} rows/s "
+        f"({large['four_step_passes']} passes, "
+        f"{large['four_step_twiddle_bytes']} tw bytes) vs monolithic "
+        f"{large['monolithic_rows_per_s']:.1f} rows/s "
+        f"({large['monolithic_passes']} passes, "
+        f"{large['monolithic_twiddle_bytes']} tw bytes); conv "
+        f"{large['conv_jobs_per_s']:.0f} jobs/s"
+    )
+    if large["four_step_rows_per_s"] < large["monolithic_rows_per_s"] * (
+        1.0 - LARGE_N_SLACK
+    ):
+        problems.append(
+            f"large_n: four-step {large['four_step_rows_per_s']:.1f} rows/s below "
+            f"monolithic {large['monolithic_rows_per_s']:.1f} — the cache-blocked "
+            "decomposition must not lose to the monolithic plan at 2^18"
+        )
+    if not large["four_step_twiddle_bytes"] < large["monolithic_twiddle_bytes"]:
+        problems.append(
+            f"large_n: four-step twiddle table {large['four_step_twiddle_bytes']} B "
+            f"not smaller than monolithic {large['monolithic_twiddle_bytes']} B — "
+            "the split hi/lo factorization is broken"
+        )
+    if large["four_step_passes"] != large["monolithic_passes"] + 1:
+        problems.append(
+            f"large_n: four-step pass count {large['four_step_passes']} != "
+            f"monolithic {large['monolithic_passes']} + 1 — the decomposition "
+            "schedule changed shape"
+        )
+    # … and trajectory floors vs the committed baseline.
+    for key, what in (
+        ("four_step_rows_per_s", "rows/s"),
+        ("conv_jobs_per_s", "jobs/s"),
+    ):
+        floor = base_large[key] * (1.0 - MAX_REGRESSION)
+        if large[key] < floor:
+            problems.append(
+                f"large_n.{key} {large[key]:.0f} {what} regressed "
                 f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
             )
 

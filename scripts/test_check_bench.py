@@ -53,6 +53,21 @@ def good_doc():
             "capped_p99_sim_ms": 0.1,
             "capped_clock_transitions": 4,
         },
+        "large_n": {
+            "n": 262144,
+            "four_step_rows_per_s": 40.0,
+            "monolithic_rows_per_s": 35.0,
+            "four_step_vs_monolithic": 1.14,
+            "four_step_passes": 7,
+            "monolithic_passes": 6,
+            "four_step_twiddle_bytes": 30768,
+            "monolithic_twiddle_bytes": 6291432,
+            "conv_n": 4096,
+            "conv_taps": 129,
+            "conv_jobs_per_s": 200.0,
+            "conv_block_len": 2048,
+            "conv_passes_per_block": 9,
+        },
     }
 
 
@@ -213,6 +228,76 @@ def test_native_floors_vs_baseline_enforced(key):
     assert problems == []
 
 
+def test_four_step_losing_to_monolithic_fails():
+    # Internal invariant of the fresh doc: the four-step decomposition at
+    # n=2^18 must hold parity with the monolithic plan (10% slack),
+    # whatever the baseline says.
+    fresh = good_doc()
+    fresh["large_n"]["monolithic_rows_per_s"] = 60.0  # four-step 40 << 54 floor
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("must not lose to the monolithic plan" in p for p in problems)
+    # ...parity within the slack passes.
+    fresh["large_n"]["monolithic_rows_per_s"] = 42.0
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_four_step_twiddle_table_must_be_smaller():
+    fresh = good_doc()
+    fresh["large_n"]["four_step_twiddle_bytes"] = fresh["large_n"][
+        "monolithic_twiddle_bytes"
+    ]
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("split hi/lo factorization" in p for p in problems)
+
+
+def test_four_step_pass_count_shape_is_pinned():
+    # col + row + twiddle sweep = monolithic + 1, exactly — more means the
+    # decomposition recursed or grew a pass, fewer means it skipped one.
+    fresh = good_doc()
+    fresh["large_n"]["four_step_passes"] = fresh["large_n"]["monolithic_passes"] + 2
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("schedule changed shape" in p for p in problems)
+
+
+@pytest.mark.parametrize("key", ["four_step_rows_per_s", "conv_jobs_per_s"])
+def test_large_n_floors_vs_baseline_enforced(key):
+    # Trajectory gates: four-step rows/s and conv jobs/s are floors
+    # relative to the committed baseline — keep the internal
+    # four-step>=monolithic invariant satisfied so only the floor trips.
+    fresh = good_doc()
+    fresh["large_n"][key] = good_doc()["large_n"][key] * 0.6
+    if key == "four_step_rows_per_s":
+        fresh["large_n"]["monolithic_rows_per_s"] = fresh["large_n"][key] * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any(f"large_n.{key}" in p and "regressed" in p for p in problems)
+    # a 20% dip stays within the 30% budget
+    fresh = good_doc()
+    fresh["large_n"][key] = good_doc()["large_n"][key] * 0.8
+    if key == "four_step_rows_per_s":
+        fresh["large_n"]["monolithic_rows_per_s"] = fresh["large_n"][key] * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_large_n_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["large_n"]["four_step_rows_per_s"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(
+        check_bench.BenchCheckError, match="large_n.four_step_rows_per_s"
+    ):
+        check_bench.load_doc(path)
+
+
+def test_large_n_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["large_n"] = "fast"
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="large_n.conv_jobs_per_s"):
+        check_bench.load_doc(path)
+
+
 def test_native_without_required_key_is_rejected(tmp_path):
     doc = good_doc()
     del doc["native"]["f32_f64_plane_bytes"]
@@ -246,7 +331,7 @@ def test_power_as_non_object_is_rejected(tmp_path):
 
 
 @pytest.mark.parametrize(
-    "key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power", "native"]
+    "key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power", "native", "large_n"]
 )
 def test_missing_top_level_key_is_rejected(tmp_path, key):
     doc = good_doc()
