@@ -80,7 +80,7 @@ fn main() {
             .iter()
             .map(|(re, im)| engine.submit(re.clone(), im.clone()).unwrap())
             .collect();
-        engine.drain(Duration::from_secs(60));
+        assert!(engine.drain(Duration::from_secs(60)).complete, "bench drain timed out");
         for rx in rxs {
             black_box(rx.recv().unwrap().unwrap());
         }

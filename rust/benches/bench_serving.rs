@@ -1,7 +1,7 @@
 //! Bench: the planned-FFT serving engine, end to end — the first point on
 //! the repo's committed perf trajectory (`BENCH_serving.json`).
 //!
-//! Six measurements:
+//! Seven measurements:
 //!   1. pre-PR sim path (per-row `Vec<C64>` + per-butterfly trig via
 //!      `dsp::fft`) in rows/s — the baseline the planner replaces,
 //!   2. planned path (`dsp::planner`, cached twiddles, reused scratch,
@@ -25,7 +25,12 @@
 //!   5. power telemetry: the same seeded trace served uncapped (boost)
 //!      vs under a `--power-budget-w` cap at 70% of the measured draw —
 //!      simulated energy/job, simulated p99 and the rolling 1 s fleet
-//!      draw land in the JSON `power` section the CI gate validates.
+//!      draw land in the JSON `power` section the CI gate validates,
+//!   6. robustness (schema 6): a 3-card fleet with one card fail-stopped
+//!      a few batches in, offered 2x the fault-free job count — goodput,
+//!      shed rate, lost-job count (must be zero) and simulated p99 vs an
+//!      identical fault-free control leg, in the JSON `robustness`
+//!      section the CI gate pins.
 //!
 //! Regenerate with:
 //!   cd rust && cargo bench --bench bench_serving            # full
@@ -41,11 +46,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fftsweep::analysis::telemetry as telemetry_analysis;
-use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
+use fftsweep::coordinator::health::{HealthPolicy, HealthState};
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig, RetryPolicy};
 use fftsweep::dsp;
 use fftsweep::dsp::planner::{self, Direction};
 use fftsweep::governor::GovernorKind;
 use fftsweep::runtime::Runtime;
+use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::bench::black_box;
 use fftsweep::util::json::Json;
@@ -339,7 +346,7 @@ fn main() {
         let (re, im) = payloads[0].clone();
         engine.submit(re, im).expect("warmup submit");
     }
-    assert!(engine.drain(Duration::from_secs(120)), "warmup drain");
+    assert!(engine.drain(Duration::from_secs(120)).complete, "warmup drain");
 
     let allocs_before = ALLOC_CALLS.load(Ordering::Relaxed);
     let t0 = Instant::now();
@@ -347,7 +354,7 @@ fn main() {
     for (re, im) in payloads {
         rxs.push(engine.submit(re, im).expect("submit"));
     }
-    assert!(engine.drain(Duration::from_secs(600)), "drain timed out");
+    assert!(engine.drain(Duration::from_secs(600)).complete, "drain timed out");
     for rx in rxs {
         black_box(rx.recv().expect("recv").expect("job ok"));
     }
@@ -421,7 +428,7 @@ fn main() {
     for x in conv_payloads {
         crxs.push(engine.submit_conv(x, CONV_TAPS).expect("conv submit"));
     }
-    assert!(engine.drain(Duration::from_secs(600)), "conv drain timed out");
+    assert!(engine.drain(Duration::from_secs(600)).complete, "conv drain timed out");
     for rx in crxs {
         black_box(rx.recv().expect("conv recv").expect("conv job ok"));
     }
@@ -477,9 +484,110 @@ fn main() {
         capped.clock_transitions,
     );
 
+    // 6. Robustness: the same serving pipeline with one of three cards
+    // fail-stopped a few batches into the run, offered twice the
+    // fault-free leg's job count, vs an identical fault-free control.
+    // Both legs run on a fresh runtime (cold module cache) so they are
+    // comparable; the fault schedule is batch-sequence keyed, hence
+    // deterministic. The invariant the gate pins: zero lost jobs — every
+    // submit resolves to a result or a typed error — and the fail-stopped
+    // card lands in quarantine.
+    struct RobustLeg {
+        wall_s: f64,
+        ok: u64,
+        lost: u64,
+        shed: u64,
+        retried: u64,
+        quarantines: u64,
+        p99_sim_ms: f64,
+    }
+    let robust_leg = |jobs: usize, chaos: Option<&str>, rng: &mut Rng| -> RobustLeg {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
+        let fleet = (0..3)
+            .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
+            .collect();
+        let cfg = EngineConfig {
+            fault_plan: chaos
+                .map(|s| FaultPlan::parse(s).expect("chaos spec"))
+                .unwrap_or_default(),
+            health: HealthPolicy {
+                degraded_load_penalty: 2,
+                probe_cooldown: Duration::from_millis(10),
+                ..HealthPolicy::default()
+            },
+            retry: RetryPolicy {
+                max_retries: 4,
+                backoff_base: Duration::from_millis(1),
+                ..RetryPolicy::default()
+            },
+            ..EngineConfig::default()
+        };
+        let engine = Engine::start(rt, fleet, cfg).expect("engine");
+        let payloads: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..jobs).map(|_| rand_planes(N, rng)).collect();
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(jobs);
+        for (re, im) in payloads {
+            rxs.push(engine.submit(re, im).expect("robustness submit"));
+        }
+        assert!(engine.drain(Duration::from_secs(600)).complete, "robustness drain timed out");
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut ok = 0u64;
+        let mut resolved = 0u64;
+        let mut sim_ms = Vec::with_capacity(jobs);
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(Ok(res)) => {
+                    ok += 1;
+                    resolved += 1;
+                    sim_ms.push(res.sim_batch_s * 1e3);
+                }
+                Ok(Err(_)) => resolved += 1,
+                Err(_) => {}
+            }
+        }
+        let snap = engine.snapshot();
+        let quarantines = engine
+            .health_transitions()
+            .iter()
+            .filter(|t| t.to == HealthState::Quarantined)
+            .count() as u64;
+        engine.shutdown();
+        RobustLeg {
+            wall_s,
+            ok,
+            lost: jobs as u64 - resolved,
+            shed: snap.fleet.jobs_shed,
+            retried: snap.fleet.jobs_retried,
+            quarantines,
+            p99_sim_ms: percentile(&sim_ms, 99.0),
+        }
+    };
+    let robust_jobs = if quick { 384 } else { 1536 };
+    let fault_free = robust_leg(robust_jobs, None, &mut rng);
+    let faulted = robust_leg(2 * robust_jobs, Some("1:failstop,after=4"), &mut rng);
+    assert_eq!(fault_free.lost, 0, "fault-free leg lost jobs");
+    assert_eq!(faulted.lost, 0, "faulted leg lost accepted jobs");
+    assert!(faulted.quarantines >= 1, "fail-stopped card never quarantined");
+    let fault_free_jobs_per_s = fault_free.ok as f64 / fault_free.wall_s;
+    let faulted_goodput_jobs_per_s = faulted.ok as f64 / faulted.wall_s;
+    let goodput_frac = faulted_goodput_jobs_per_s / fault_free_jobs_per_s;
+    let shed_rate = faulted.shed as f64 / (2 * robust_jobs) as f64;
+    println!(
+        "robustness: fault-free {fault_free_jobs_per_s:.0} jobs/s vs 1-of-3 failed at 2x load \
+         {faulted_goodput_jobs_per_s:.0} goodput jobs/s ({goodput_frac:.2}x), {} lost, {} shed \
+         (rate {shed_rate:.4}), {} retried, {} quarantine(s), p99 sim {:.4} ms vs {:.4} ms",
+        faulted.lost,
+        faulted.shed,
+        faulted.retried,
+        faulted.quarantines,
+        faulted.p99_sim_ms,
+        fault_free.p99_sim_ms,
+    );
+
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 5.0.into());
+    root.set("schema", 6.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -546,6 +654,19 @@ fn main() {
     large_json.set("conv_block_len", (cplan.block_len() as u64).into());
     large_json.set("conv_passes_per_block", (cplan.passes_per_block() as u64).into());
     root.set("large_n", large_json);
+    let mut robust_json = Json::obj();
+    robust_json.set("jobs", (robust_jobs as u64).into());
+    robust_json.set("faulted_jobs", (2 * robust_jobs as u64).into());
+    robust_json.set("fault_free_jobs_per_s", fault_free_jobs_per_s.into());
+    robust_json.set("faulted_goodput_jobs_per_s", faulted_goodput_jobs_per_s.into());
+    robust_json.set("goodput_frac", goodput_frac.into());
+    robust_json.set("jobs_lost", faulted.lost.into());
+    robust_json.set("shed_rate", shed_rate.into());
+    robust_json.set("jobs_retried", faulted.retried.into());
+    robust_json.set("quarantines", faulted.quarantines.into());
+    robust_json.set("fault_free_p99_sim_ms", fault_free.p99_sim_ms.into());
+    robust_json.set("faulted_p99_sim_ms", faulted.p99_sim_ms.into());
+    root.set("robustness", robust_json);
     std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
     println!("wrote {out_path}");
 }

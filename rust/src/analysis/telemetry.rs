@@ -38,6 +38,10 @@ pub struct ServeStats {
     pub energy_saving: f64,
     pub clock_transitions: u64,
     pub deadline_misses: u64,
+    /// Jobs re-dispatched after a batch error (0 on a healthy fleet).
+    pub jobs_retried: u64,
+    /// Jobs dropped with a typed error (0 on a healthy fleet).
+    pub jobs_shed: u64,
     /// The full typed snapshot (exporters render it further).
     pub snapshot: FleetSnapshot,
 }
@@ -77,9 +81,11 @@ pub fn serve_trace(
         let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
         rxs.push(engine.submit(re, im)?);
     }
+    let report = engine.drain(std::time::Duration::from_secs(120));
     anyhow::ensure!(
-        engine.drain(std::time::Duration::from_secs(120)),
-        "telemetry trace drain timed out"
+        report.complete,
+        "telemetry trace drain timed out ({} jobs unresolved)",
+        report.remaining_total()
     );
     let mut jobs_ok = 0usize;
     let mut sim_ms = Vec::with_capacity(jobs);
@@ -106,6 +112,8 @@ pub fn serve_trace(
         energy_saving: snapshot.fleet.energy_saving,
         clock_transitions: snapshot.fleet.clock_transitions,
         deadline_misses: snapshot.fleet.deadline_misses,
+        jobs_retried: snapshot.fleet.jobs_retried,
+        jobs_shed: snapshot.fleet.jobs_shed,
         snapshot,
     })
 }
@@ -141,6 +149,7 @@ pub fn budget_comparison(
             "1s draw W",
             "transitions",
             "misses",
+            "retried/shed",
         ],
     );
     for s in [&uncapped, &capped] {
@@ -154,6 +163,7 @@ pub fn budget_comparison(
             fnum(s.fleet_draw_1s_w, 1),
             format!("{}", s.clock_transitions),
             format!("{}", s.deadline_misses),
+            format!("{}/{}", s.jobs_retried, s.jobs_shed),
         ]);
     }
     Ok((vec![uncapped, capped], t))

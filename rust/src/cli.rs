@@ -7,13 +7,15 @@ use anyhow::{bail, Context, Result};
 
 use fftsweep::analysis::report::{full_report, headline_table};
 use fftsweep::analysis::{figures, govern, optima, tables};
-use fftsweep::coordinator::{CardConfig, Engine, EngineConfig};
+use fftsweep::coordinator::health::HealthPolicy;
+use fftsweep::coordinator::{CardConfig, Engine, EngineConfig, RetryPolicy};
 use fftsweep::dsp;
 use fftsweep::governor::{GovernorContext, GovernorKind};
 use fftsweep::harness::sweep::{paper_lengths, quick_lengths, sweep_gpu, SweepConfig};
 use fftsweep::harness::Protocol;
 use fftsweep::pipeline::{run_pipeline_at, table4};
 use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::{all_gpus, gpu_by_name, GpuSpec};
 use fftsweep::types::Precision;
 use fftsweep::util::cliargs::Args;
@@ -34,6 +36,8 @@ USAGE:
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
                     [--lengths 1000,1536,4096] [--conv-taps <t>]
                     [--power-budget-w <W>] [--telemetry-out <file.json>] [--prom]
+                    [--chaos <spec>] [--retries 3] [--retry-backoff-ms 1]
+                    [--queue-bound <n>] [--quarantine-errors 3]
   fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
                     [--governor boost] [--power-budget-w <W>] [--seed 7]
                     [--lengths 1024,4096] [--telemetry-out <file.json>] [--prom]
@@ -69,6 +73,17 @@ governor is capped through its budget hint. `fftsweep telemetry` replays
 one seeded trace uncapped vs capped and tabulates energy/job, simulated
 p50/p99 and draw; `--telemetry-out` writes the typed fleet snapshot as
 JSON and `--prom` prints Prometheus text exposition.
+
+CHAOS: `serve --chaos spec` injects deterministic faults into the
+simulated fleet: semicolon-separated `card:kind[,key=val...]` clauses
+with kinds failstop (`after`), stall (`after,for,ms`), flap
+(`after,period,down`) and clocklock (`after,for`), e.g.
+`--chaos \"1:failstop,after=32;2:flap,period=8,down=2\"`. Failed batches
+retry on another card with capped exponential backoff (`--retries`,
+`--retry-backoff-ms`); cards crossing `--quarantine-errors` consecutive
+errors are quarantined and probed back in; `--queue-bound` caps per-card
+in-flight jobs, refusing excess submits with a typed QueueFull error.
+Every accepted job terminates in a result or a typed error.
 
 GOVERNORS (the --governor values):
   boost        no DVFS: everything at the boost clock
@@ -382,6 +397,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = power_budget_w {
         anyhow::ensure!(w > 0.0, "--power-budget-w must be positive, got {w}");
     }
+    // Chaos & recovery knobs: an injected fault schedule plus the retry,
+    // queue-bound and quarantine policies that keep the fleet serving
+    // through it (every accepted job resolves to a result or typed error).
+    let fault_plan = match args.get("chaos") {
+        Some(spec) => FaultPlan::parse(spec).context("parsing --chaos")?,
+        None => FaultPlan::default(),
+    };
+    let mut retry = RetryPolicy::default();
+    if let Some(r) = args.parse_typed::<u32>("retries")? {
+        retry.max_retries = r;
+    }
+    if let Some(ms) = args.parse_typed::<u64>("retry-backoff-ms")? {
+        retry.backoff_base = Duration::from_millis(ms.max(1));
+    }
+    let queue_bound = args.parse_typed::<u64>("queue-bound")?;
+    if let Some(b) = queue_bound {
+        anyhow::ensure!(b > 0, "--queue-bound must be positive, got {b}");
+    }
+    let mut health = HealthPolicy::default();
+    if let Some(k) = args.parse_typed::<u32>("quarantine-errors")? {
+        anyhow::ensure!(k > 0, "--quarantine-errors must be positive, got {k}");
+        health.errors_to_quarantine = k;
+    }
     let cfg = EngineConfig {
         governor_ctx: GovernorContext {
             deadline_s: args.parse_typed::<f64>("deadline-ms")?.map(|ms| ms * 1e-3),
@@ -389,11 +427,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..GovernorContext::default()
         },
         power_budget_w,
+        fault_plan,
+        retry,
+        queue_bound,
+        health,
         ..EngineConfig::default()
     };
     let rt = std::sync::Arc::new(Runtime::new(&dir)?);
+    let chaos_note = if cfg.fault_plan.is_empty() {
+        String::new()
+    } else {
+        format!(", chaos {} fault(s)", cfg.fault_plan.faults.len())
+    };
     println!(
-        "serving on {n_cards} card(s), governor {}{} (runtime: {})",
+        "serving on {n_cards} card(s), governor {}{}{chaos_note} (runtime: {})",
         governor.label(),
         power_budget_w
             .map(|w| format!(", power budget {w} W"))
@@ -473,7 +520,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             rxs.push(engine.submit(re, im)?);
         }
     }
-    engine.drain(Duration::from_secs(120));
+    let report = engine.drain(Duration::from_secs(120));
+    if !report.complete {
+        eprintln!(
+            "warning: drain timed out with {} job(s) unresolved (per card: {:?})",
+            report.remaining_total(),
+            report.remaining
+        );
+    }
     let mut ok = 0;
     for rx in rxs {
         if rx.recv()?.is_ok() {
@@ -527,8 +581,8 @@ fn cmd_telemetry(args: &Args) -> Result<()> {
             .map(|w| format!("{w:.0}"))
             .unwrap_or_else(|| "inf".into());
         println!(
-            "  capped card{} {}: share {share} W, 1s draw {:.1} W, {} transitions",
-            c.index, c.gpu, c.avg_1s_w, c.clock_transitions,
+            "  capped card{} {} [{}]: share {share} W, 1s draw {:.1} W, {} transitions",
+            c.index, c.gpu, c.health, c.avg_1s_w, c.clock_transitions,
         );
     }
     emit_telemetry(args, &capped.snapshot)?;

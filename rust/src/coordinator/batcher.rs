@@ -160,6 +160,19 @@ impl Batcher {
         due.iter().filter_map(|k| self.take(k)).collect()
     }
 
+    /// Flush every pending slot packed for one card, regardless of age —
+    /// the drain path: a card leaving service must not strand partial
+    /// batches in its slots. Other cards' slots keep packing.
+    pub fn flush_card(&mut self, card: usize) -> Vec<PackedBatch> {
+        let keys: Vec<(Arc<str>, usize)> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| p.card == card)
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.iter().filter_map(|k| self.take(k)).collect()
+    }
+
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(|p| p.envelopes.len()).sum()
     }
@@ -326,6 +339,27 @@ mod tests {
         assert_eq!(b.pending_jobs(), 2);
         assert!(b.flush_slot(&a, 0).is_none(), "slot already empty");
         assert!(b.flush_slot(&name("missing"), 0).is_none());
+    }
+
+    #[test]
+    fn flush_card_drains_only_that_card() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let a = name("a");
+        let other = name("b");
+        let (e1, _r1) = env(1, 8);
+        let (e2, _r2) = env(2, 8);
+        let (e3, _r3) = env(3, 8);
+        b.push(&a, 8, 4, 0, e1).unwrap();
+        b.push(&other, 8, 4, 0, e2).unwrap();
+        b.push(&a, 8, 4, 1, e3).unwrap();
+        // Card 0 drains both its artifact slots; card 1 keeps packing.
+        let drained = b.flush_card(0);
+        assert_eq!(drained.len(), 2);
+        assert!(drained.iter().all(|batch| batch.card == 0));
+        assert_eq!(b.pending_jobs(), 1);
+        assert_eq!(b.pending_jobs_for_card(1), 1);
+        assert!(b.flush_card(0).is_empty(), "already drained");
+        assert!(b.flush_card(9).is_empty(), "unknown card is a no-op");
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Per-card health tracking for the serving fleet.
+//!
+//! Workers feed the [`HealthMonitor`] batch outcomes (ok / error /
+//! stalled / clock-lock fault) and the engine's supervisor thread ticks
+//! it for probe re-admission. Each card walks a three-state machine:
+//!
+//! ```text
+//!   Healthy --batch error/stall/clock fault--> Degraded
+//!   Degraded --N consecutive errors----------> Quarantined
+//!   Degraded --M consecutive successes-------> Healthy
+//!   Quarantined --cooldown elapsed (probe)---> Degraded
+//! ```
+//!
+//! Quarantined cards are excluded from routing entirely; Degraded cards
+//! stay in rotation but carry a virtual load penalty and a clock derate
+//! (applied through the same cap machinery the power-budget arbiter
+//! uses). Each re-quarantine doubles the probe cooldown (capped), so a
+//! hard-failed card costs a geometrically shrinking probe rate instead
+//! of a steady stream of doomed batches. Every transition is recorded
+//! with a reason and surfaced through `FleetSnapshot`.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// The three health states, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    Degraded,
+    Quarantined,
+}
+
+impl HealthState {
+    /// Stable lowercase label for snapshots / JSON / the telemetry table.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+
+    /// Numeric code for the Prometheus gauge (0/1/2).
+    pub fn code(self) -> f64 {
+        match self {
+            HealthState::Healthy => 0.0,
+            HealthState::Degraded => 1.0,
+            HealthState::Quarantined => 2.0,
+        }
+    }
+}
+
+/// Thresholds and penalties for the state machine. The defaults are
+/// tuned for the sim fleet's millisecond-scale batches; `serve` exposes
+/// the quarantine threshold and probe cooldown as CLI knobs.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Consecutive batch errors that quarantine a card.
+    pub errors_to_quarantine: u32,
+    /// Consecutive stalled batches that degrade a card.
+    pub stalls_to_degrade: u32,
+    /// Consecutive successes that promote Degraded back to Healthy.
+    pub successes_to_recover: u32,
+    /// Base quarantine cooldown before a probe re-admit.
+    pub probe_cooldown: Duration,
+    /// Ceiling for the doubling cooldown.
+    pub probe_cooldown_cap: Duration,
+    /// Virtual jobs added to a Degraded card's load when routing.
+    pub degraded_load_penalty: u64,
+    /// Clock ceiling for Degraded cards, as a fraction of boost.
+    pub degraded_clock_frac: f64,
+    /// Heartbeat staleness (with work in flight) that counts as a stall.
+    pub stall_after: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            errors_to_quarantine: 3,
+            stalls_to_degrade: 2,
+            successes_to_recover: 8,
+            probe_cooldown: Duration::from_millis(50),
+            probe_cooldown_cap: Duration::from_secs(2),
+            degraded_load_penalty: 8,
+            degraded_clock_frac: 0.7,
+            stall_after: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One recorded state change, with the observation that caused it.
+#[derive(Debug, Clone)]
+pub struct HealthTransition {
+    pub card: usize,
+    pub from: HealthState,
+    pub to: HealthState,
+    pub reason: String,
+}
+
+#[derive(Debug)]
+struct CardHealth {
+    state: HealthState,
+    consecutive_errors: u32,
+    consecutive_successes: u32,
+    consecutive_stalls: u32,
+    quarantined_at: Option<Instant>,
+    cooldown: Duration,
+    transitions: u64,
+}
+
+/// Shared fleet health state: one mutexed record per card plus the
+/// transition log. All locks recover from poisoning — a panicking
+/// worker must not take the health plane down with it.
+pub struct HealthMonitor {
+    policy: HealthPolicy,
+    cards: Vec<Mutex<CardHealth>>,
+    log: Mutex<Vec<HealthTransition>>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl HealthMonitor {
+    pub fn new(policy: HealthPolicy, n_cards: usize) -> Self {
+        let base = policy.probe_cooldown;
+        Self {
+            policy,
+            cards: (0..n_cards)
+                .map(|_| {
+                    Mutex::new(CardHealth {
+                        state: HealthState::Healthy,
+                        consecutive_errors: 0,
+                        consecutive_successes: 0,
+                        consecutive_stalls: 0,
+                        quarantined_at: None,
+                        cooldown: base,
+                        transitions: 0,
+                    })
+                })
+                .collect(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn policy(&self) -> &HealthPolicy {
+        &self.policy
+    }
+
+    pub fn n_cards(&self) -> usize {
+        self.cards.len()
+    }
+
+    pub fn state(&self, card: usize) -> HealthState {
+        relock(&self.cards[card]).state
+    }
+
+    /// Routable at all? Quarantined cards are excluded from dispatch.
+    pub fn eligible(&self, card: usize) -> bool {
+        self.state(card) != HealthState::Quarantined
+    }
+
+    /// Virtual load added to this card when picking the least-loaded.
+    pub fn load_penalty(&self, card: usize) -> u64 {
+        match self.state(card) {
+            HealthState::Degraded => self.policy.degraded_load_penalty,
+            _ => 0,
+        }
+    }
+
+    /// Clock ceiling fraction (of boost) while the card is Degraded.
+    pub fn clock_frac(&self, card: usize) -> Option<f64> {
+        match self.state(card) {
+            HealthState::Degraded => Some(self.policy.degraded_clock_frac),
+            _ => None,
+        }
+    }
+
+    /// A batch on `card` completed cleanly.
+    pub fn on_batch_ok(&self, card: usize) {
+        let mut c = relock(&self.cards[card]);
+        c.consecutive_errors = 0;
+        c.consecutive_stalls = 0;
+        if c.state == HealthState::Degraded {
+            c.consecutive_successes += 1;
+            if c.consecutive_successes >= self.policy.successes_to_recover {
+                c.cooldown = self.policy.probe_cooldown;
+                self.set_state(card, &mut c, HealthState::Healthy, "recovered");
+            }
+        }
+    }
+
+    /// A batch on `card` errored (injected or genuine).
+    pub fn on_batch_error(&self, card: usize) {
+        let mut c = relock(&self.cards[card]);
+        c.consecutive_successes = 0;
+        c.consecutive_errors += 1;
+        match c.state {
+            HealthState::Quarantined => {}
+            _ if c.consecutive_errors >= self.policy.errors_to_quarantine => {
+                c.quarantined_at = Some(Instant::now());
+                let reason = format!("{} consecutive batch errors", c.consecutive_errors);
+                self.set_state(card, &mut c, HealthState::Quarantined, &reason);
+            }
+            HealthState::Healthy => {
+                self.set_state(card, &mut c, HealthState::Degraded, "batch error");
+            }
+            HealthState::Degraded => {}
+        }
+    }
+
+    /// A batch on `card` took pathologically long (injected stall or a
+    /// stale heartbeat with work in flight).
+    pub fn on_stall(&self, card: usize) {
+        let mut c = relock(&self.cards[card]);
+        c.consecutive_successes = 0;
+        c.consecutive_stalls += 1;
+        if c.state == HealthState::Healthy && c.consecutive_stalls >= self.policy.stalls_to_degrade
+        {
+            self.set_state(card, &mut c, HealthState::Degraded, "stalled batches");
+        }
+    }
+
+    /// `set_gpu_locked_clocks` failed on `card`: clock control is gone,
+    /// so degrade (the card still computes, just unmanaged).
+    pub fn on_clock_fault(&self, card: usize) {
+        let mut c = relock(&self.cards[card]);
+        c.consecutive_successes = 0;
+        if c.state == HealthState::Healthy {
+            self.set_state(card, &mut c, HealthState::Degraded, "clock-lock error");
+        }
+    }
+
+    /// Probe re-admission: a quarantined card whose cooldown has elapsed
+    /// re-enters rotation as Degraded (on probation). The next quarantine
+    /// doubles the cooldown, capped by the policy. Returns true if the
+    /// card was re-admitted by this call.
+    pub fn maybe_readmit(&self, card: usize) -> bool {
+        let mut c = relock(&self.cards[card]);
+        if c.state != HealthState::Quarantined {
+            return false;
+        }
+        let elapsed_ok = c
+            .quarantined_at
+            .map(|t| t.elapsed() >= c.cooldown)
+            .unwrap_or(true);
+        if !elapsed_ok {
+            return false;
+        }
+        c.cooldown = (c.cooldown * 2).min(self.policy.probe_cooldown_cap);
+        c.consecutive_errors = 0;
+        c.consecutive_successes = 0;
+        self.set_state(card, &mut c, HealthState::Degraded, "probe re-admit");
+        true
+    }
+
+    /// Run probe re-admission across the fleet (the supervisor's tick).
+    pub fn tick(&self) {
+        for card in 0..self.cards.len() {
+            self.maybe_readmit(card);
+        }
+    }
+
+    /// Total transitions recorded for `card`.
+    pub fn transition_count(&self, card: usize) -> u64 {
+        relock(&self.cards[card]).transitions
+    }
+
+    /// Snapshot of the full transition log.
+    pub fn transitions(&self) -> Vec<HealthTransition> {
+        relock(&self.log).clone()
+    }
+
+    /// Number of cards currently quarantined.
+    pub fn quarantined_count(&self) -> u64 {
+        (0..self.cards.len())
+            .filter(|&i| self.state(i) == HealthState::Quarantined)
+            .count() as u64
+    }
+
+    fn set_state(&self, card: usize, c: &mut CardHealth, to: HealthState, reason: &str) {
+        let from = c.state;
+        if from == to {
+            return;
+        }
+        c.state = to;
+        c.transitions += 1;
+        relock(&self.log).push(HealthTransition {
+            card,
+            from,
+            to,
+            reason: reason.to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_policy() -> HealthPolicy {
+        HealthPolicy {
+            errors_to_quarantine: 3,
+            stalls_to_degrade: 2,
+            successes_to_recover: 2,
+            probe_cooldown: Duration::from_millis(5),
+            probe_cooldown_cap: Duration::from_millis(20),
+            ..HealthPolicy::default()
+        }
+    }
+
+    #[test]
+    fn errors_escalate_to_quarantine() {
+        let m = HealthMonitor::new(fast_policy(), 2);
+        assert_eq!(m.state(0), HealthState::Healthy);
+        m.on_batch_error(0);
+        assert_eq!(m.state(0), HealthState::Degraded, "first error degrades");
+        assert_eq!(m.load_penalty(0), m.policy().degraded_load_penalty);
+        assert_eq!(m.clock_frac(0), Some(m.policy().degraded_clock_frac));
+        m.on_batch_error(0);
+        assert_eq!(m.state(0), HealthState::Degraded);
+        m.on_batch_error(0);
+        assert_eq!(m.state(0), HealthState::Quarantined, "third consecutive error");
+        assert!(!m.eligible(0));
+        assert!(m.eligible(1), "other card untouched");
+        assert_eq!(m.quarantined_count(), 1);
+        let log = m.transitions();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[1].to, HealthState::Quarantined);
+        assert_eq!(m.transition_count(0), 2);
+    }
+
+    #[test]
+    fn successes_between_errors_reset_the_streak() {
+        let m = HealthMonitor::new(fast_policy(), 1);
+        m.on_batch_error(0);
+        m.on_batch_error(0);
+        m.on_batch_ok(0);
+        m.on_batch_error(0);
+        m.on_batch_error(0);
+        assert_eq!(m.state(0), HealthState::Degraded, "streak was broken");
+    }
+
+    #[test]
+    fn degraded_recovers_after_consecutive_successes() {
+        let m = HealthMonitor::new(fast_policy(), 1);
+        m.on_batch_error(0);
+        assert_eq!(m.state(0), HealthState::Degraded);
+        m.on_batch_ok(0);
+        m.on_batch_ok(0);
+        assert_eq!(m.state(0), HealthState::Healthy);
+        assert_eq!(m.load_penalty(0), 0);
+        assert_eq!(m.clock_frac(0), None);
+    }
+
+    #[test]
+    fn probe_readmit_after_cooldown_then_requarantine_doubles() {
+        let m = HealthMonitor::new(fast_policy(), 1);
+        for _ in 0..3 {
+            m.on_batch_error(0);
+        }
+        assert_eq!(m.state(0), HealthState::Quarantined);
+        assert!(!m.maybe_readmit(0), "cooldown not elapsed yet");
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(m.maybe_readmit(0));
+        assert_eq!(m.state(0), HealthState::Degraded, "probation");
+        // the probe fails: errors re-quarantine with a doubled cooldown
+        for _ in 0..3 {
+            m.on_batch_error(0);
+        }
+        assert_eq!(m.state(0), HealthState::Quarantined);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(!m.maybe_readmit(0), "doubled cooldown (10ms) not elapsed");
+        std::thread::sleep(Duration::from_millis(6));
+        m.tick();
+        assert_eq!(m.state(0), HealthState::Degraded, "tick re-admits");
+        let kinds: Vec<&str> = m.transitions().iter().map(|t| t.reason.as_str()).collect();
+        assert!(kinds.contains(&"probe re-admit"));
+    }
+
+    #[test]
+    fn stalls_and_clock_faults_degrade_only() {
+        let m = HealthMonitor::new(fast_policy(), 2);
+        m.on_stall(0);
+        assert_eq!(m.state(0), HealthState::Healthy, "one stall tolerated");
+        m.on_stall(0);
+        assert_eq!(m.state(0), HealthState::Degraded);
+        for _ in 0..10 {
+            m.on_stall(0);
+        }
+        assert_eq!(m.state(0), HealthState::Degraded, "stalls never quarantine");
+        m.on_clock_fault(1);
+        assert_eq!(m.state(1), HealthState::Degraded);
+    }
+}

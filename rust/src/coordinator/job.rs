@@ -10,6 +10,11 @@ pub struct FftJob {
     pub dtype: &'static str,
     pub re: Vec<f32>,
     pub im: Vec<f32>,
+    /// Retries consumed so far (0 on first admission). The retry
+    /// supervisor bumps this each time a failed batch's job is re-routed,
+    /// and sheds the job with [`CoordError::RetriesExhausted`] once it
+    /// passes the policy cap.
+    pub attempts: u32,
 }
 
 impl FftJob {
@@ -21,6 +26,7 @@ impl FftJob {
             dtype: "f32",
             re,
             im,
+            attempts: 0,
         }
     }
 }
@@ -57,6 +63,7 @@ mod tests {
         let j = FftJob::new(7, vec![0.0; 256], vec![0.0; 256]);
         assert_eq!(j.n, 256);
         assert_eq!(j.dtype, "f32");
+        assert_eq!(j.attempts, 0, "fresh jobs have consumed no retries");
     }
 
     #[test]

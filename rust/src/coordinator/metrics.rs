@@ -3,7 +3,7 @@
 //! paper's DVFS result.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Full-precision energy totals, J. An `f64` pair behind a mutex instead
 /// of the old atomic-µJ counters: `(energy_j * 1e6) as u64` dropped the
@@ -20,6 +20,16 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
+    /// Jobs re-dispatched after a batch error (counted on the card the
+    /// retry landed on; the original submit keeps its one
+    /// `jobs_submitted`).
+    pub jobs_retried: AtomicU64,
+    /// Jobs dropped with a typed error — retries exhausted, no eligible
+    /// card, or shutdown — a subset of `jobs_failed`.
+    pub jobs_shed: AtomicU64,
+    /// Batches that errored (injected fault or execution failure) before
+    /// their jobs went to the retry path.
+    pub batch_errors: AtomicU64,
     pub batches_executed: AtomicU64,
     pub batch_rows_used: AtomicU64,
     pub batch_rows_total: AtomicU64,
@@ -28,6 +38,13 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Poison-recovering lock: metrics accumulation must survive a worker
+    /// panicking mid-batch — an `f64` pair is valid under any interleaving,
+    /// so the poison flag carries no information worth dying for.
+    fn energy_guard(&self) -> MutexGuard<'_, EnergyTotals> {
+        self.energy.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn record_batch(&self, rows_used: usize, rows_total: u64, exec_us: u64) {
         self.batches_executed.fetch_add(1, Ordering::Relaxed);
         self.batch_rows_used.fetch_add(rows_used as u64, Ordering::Relaxed);
@@ -36,19 +53,19 @@ impl Metrics {
     }
 
     pub fn record_energy(&self, energy_j: f64, boost_energy_j: f64) {
-        let mut e = self.energy.lock().unwrap();
+        let mut e = self.energy_guard();
         e.j += energy_j;
         e.boost_j += boost_energy_j;
     }
 
     /// Simulated GPU energy at the governed clocks, J (full precision).
     pub fn energy_j(&self) -> f64 {
-        self.energy.lock().unwrap().j
+        self.energy_guard().j
     }
 
     /// Simulated GPU energy had every batch run at boost, J.
     pub fn boost_energy_j(&self) -> f64 {
-        self.energy.lock().unwrap().boost_j
+        self.energy_guard().boost_j
     }
 
     pub fn occupancy(&self) -> f64 {
@@ -61,7 +78,7 @@ impl Metrics {
 
     /// Energy saved by DVFS relative to boost (fraction).
     pub fn energy_saving(&self) -> f64 {
-        let e = *self.energy.lock().unwrap();
+        let e = *self.energy_guard();
         if e.boost_j <= 0.0 {
             return 0.0;
         }
@@ -121,6 +138,14 @@ mod tests {
         assert!((m.energy_j() - 9.0e-3).abs() < 1e-12, "{}", m.energy_j());
         assert!((m.boost_energy_j() - 19.0e-3).abs() < 1e-12);
         assert!((m.energy_saving() - (1.0 - 9.0 / 19.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn robustness_counters_start_at_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.jobs_retried.load(Ordering::Relaxed), 0);
+        assert_eq!(m.jobs_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.batch_errors.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -14,27 +14,38 @@
 //! result (section 5.3) generalized to swappable clock policies.
 //!
 //! No tokio in the offline crate set: std threads + mpsc channels.
+//!
+//! Fault tolerance (DESIGN.md §4f): workers feed a per-card
+//! [`HealthMonitor`] with batch outcomes, a supervisor thread retries
+//! failed batches' jobs with capped exponential backoff onto healthy
+//! cards, quarantined cards leave the routing set until a probe
+//! re-admits them, and the engine invariant is that **every accepted
+//! job terminates in a `JobResult` or a typed error** under any
+//! injected [`FaultPlan`] schedule.
 
 pub mod batcher;
+pub mod health;
 pub mod job;
 pub mod metrics;
 pub mod router;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, PackedBatch};
+use crate::coordinator::health::{HealthMonitor, HealthPolicy, HealthTransition};
 use crate::coordinator::job::{Envelope, FftJob, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorKind};
 use crate::pipeline::nvml::{ClockState, SimNvml};
 use crate::runtime::Runtime;
+use crate::sim::fault::{FaultPlan, FaultState};
 use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::telemetry::{
@@ -79,6 +90,68 @@ pub enum CoordError {
         taps: u64,
         supported: Vec<(u64, u64)>,
     },
+    /// No card can take the job right now: the engine is shutting down,
+    /// every card is draining, or the whole fleet is quarantined.
+    #[error("no card available: {reason}")]
+    CardUnavailable { reason: String },
+    /// The job failed on every attempt the retry policy allows; it is
+    /// shed with the count of retries burned.
+    #[error("job {id} (n={n}): retries exhausted after {attempts} retries")]
+    RetriesExhausted { id: u64, n: u64, attempts: u32 },
+    /// Backpressure: every eligible card already has `bound` or more
+    /// jobs in flight (`inflight` is the least-loaded card's depth).
+    #[error("queue full: card {card} has {inflight} jobs in flight (bound {bound})")]
+    QueueFull { card: usize, inflight: u64, bound: u64 },
+}
+
+/// Recover a mutex guard even if a previous holder panicked: the data a
+/// poisoned coordinator mutex protects (batch slots, counters) stays
+/// structurally valid, and limping on beats aborting the whole engine.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Retry policy for jobs whose batch failed: capped exponential backoff,
+/// then a typed shed.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Re-dispatch attempts per job after its first failure.
+    pub max_retries: u32,
+    /// Backoff before retry k is `backoff_base * 2^(k-1)`, capped below.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    fn backoff_for(&self, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16);
+        (self.backoff_base * (1u32 << exp)).min(self.backoff_cap)
+    }
+}
+
+/// What [`Engine::drain`] observed: whether every accepted job reached a
+/// terminal state, and how many were still in flight per card when the
+/// call returned (all zeros on a complete drain).
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    pub complete: bool,
+    pub remaining: Vec<u64>,
+}
+
+impl DrainReport {
+    pub fn remaining_total(&self) -> u64 {
+        self.remaining.iter().sum()
+    }
 }
 
 /// One card in the fleet: a simulated GPU plus the clock policy governing it.
@@ -109,6 +182,16 @@ pub struct EngineConfig {
     pub arbiter_period: Duration,
     /// Per-card telemetry recorder sizing.
     pub recorder: RecorderConfig,
+    /// Injected-fault schedule (`serve --chaos`); empty = no faults.
+    pub fault_plan: FaultPlan,
+    /// Health state-machine thresholds and penalties.
+    pub health: HealthPolicy,
+    /// Retry/backoff policy for jobs whose batch failed.
+    pub retry: RetryPolicy,
+    /// Per-card in-flight bound; submits are refused with a typed
+    /// [`CoordError::QueueFull`] once every eligible card is at the
+    /// bound. `None` = unbounded (the pre-robustness behavior).
+    pub queue_bound: Option<u64>,
 }
 
 impl Default for EngineConfig {
@@ -119,6 +202,10 @@ impl Default for EngineConfig {
             power_budget_w: None,
             arbiter_period: Duration::from_millis(20),
             recorder: RecorderConfig::default(),
+            fault_plan: FaultPlan::default(),
+            health: HealthPolicy::default(),
+            retry: RetryPolicy::default(),
+            queue_bound: None,
         }
     }
 }
@@ -138,6 +225,11 @@ pub struct Card {
     share: Arc<ShareCell>,
     /// Jobs routed to this card and not yet completed.
     inflight: Arc<AtomicU64>,
+    /// Routable? Cleared by [`Engine::drain_card`], restored by
+    /// [`Engine::readmit_card`].
+    accepting: Arc<AtomicBool>,
+    /// Worker heartbeat: ms since engine start at the last batch start.
+    beat: Arc<AtomicU64>,
 }
 
 impl Card {
@@ -148,6 +240,11 @@ impl Card {
     /// The card's current watt share (`None` = uncapped).
     pub fn power_share_w(&self) -> Option<f64> {
         self.share.get()
+    }
+
+    /// False while the card is drained out of the routing set.
+    pub fn is_accepting(&self) -> bool {
+        self.accepting.load(Ordering::Relaxed)
     }
 }
 
@@ -163,8 +260,14 @@ pub struct Engine {
     workers: Vec<JoinHandle<()>>,
     flusher: Option<JoinHandle<()>>,
     arbiter: Option<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+    /// The engine's own clone of the retry channel (workers hold the
+    /// others); dropped at shutdown so the channel can disconnect.
+    retry_tx: Option<mpsc::Sender<FailedJob>>,
+    health: Arc<HealthMonitor>,
     power_budget_w: Option<f64>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    queue_bound: Option<u64>,
+    shutdown: Arc<AtomicBool>,
     next_id: AtomicU64,
 }
 
@@ -177,7 +280,10 @@ impl Engine {
         anyhow::ensure!(!router.is_empty(), "no fft artifacts in manifest");
         let batcher = Arc::new(Mutex::new(Batcher::new(cfg.max_batch_wait)));
         let metrics = Arc::new(Metrics::default());
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let health = Arc::new(HealthMonitor::new(cfg.health.clone(), fleet.len()));
+        let (retry_tx, retry_rx) = mpsc::channel::<FailedJob>();
+        let epoch = Instant::now();
 
         // Initial watt shares: an even split of the cap (clamped to each
         // card's physical bounds) BEFORE any worker starts, so a capped
@@ -210,8 +316,12 @@ impl Engine {
             ));
             let share = initial_share(&cc.spec);
             let governor = cc.governor.make();
+            let accepting = Arc::new(AtomicBool::new(true));
+            let beat = Arc::new(AtomicU64::new(0));
+            let fault = FaultState::for_card(&cfg.fault_plan, i);
             let worker = WorkerState {
                 gpu: cc.spec.clone(),
+                card: i,
                 runtime: runtime.clone(),
                 fleet_metrics: metrics.clone(),
                 card_metrics: card_metrics.clone(),
@@ -220,11 +330,15 @@ impl Engine {
                 recorder: recorder.clone(),
                 share: share.clone(),
                 ctx: cfg.governor_ctx.clone(),
+                health: health.clone(),
+                retry_tx: retry_tx.clone(),
+                beat: beat.clone(),
+                epoch,
             };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fftsweep-card-{i}"))
-                    .spawn(move || worker_loop(rx, worker, governor))?,
+                    .spawn(move || worker_loop(rx, worker, governor, fault))?,
             );
             cards.push(Card {
                 spec: cc.spec,
@@ -234,6 +348,8 @@ impl Engine {
                 recorder,
                 share,
                 inflight,
+                accepting,
+                beat,
             });
             batch_txs.push(tx);
         }
@@ -253,7 +369,7 @@ impl Engine {
                 move || {
                     while !stop.load(Ordering::Relaxed) {
                         std::thread::sleep(tick);
-                        for b in batcher.lock().unwrap().flush(false) {
+                        for b in lock_recover(&batcher).flush(false) {
                             let _ = txs[b.card].send(b);
                         }
                     }
@@ -284,7 +400,7 @@ impl Engine {
                         while !stop.load(Ordering::Relaxed) {
                             std::thread::sleep(period);
                             let loads: Vec<f64> = {
-                                let b = batcher.lock().unwrap();
+                                let b = lock_recover(&batcher);
                                 inflights
                                     .iter()
                                     .enumerate()
@@ -309,6 +425,31 @@ impl Engine {
             None
         };
 
+        // Retry supervisor: receives every failed batch's envelopes from
+        // the workers, re-dispatches them (capped exponential backoff,
+        // health-aware card choice) or sheds them typed, detects stalled
+        // workers via heartbeats, and drives quarantine probe re-admits.
+        let supervisor = {
+            let state = SupervisorState {
+                stop: shutdown.clone(),
+                health: health.clone(),
+                batcher: batcher.clone(),
+                txs: batch_txs.clone(),
+                inflights: cards.iter().map(|c| c.inflight.clone()).collect(),
+                acceptings: cards.iter().map(|c| c.accepting.clone()).collect(),
+                card_metrics: cards.iter().map(|c| c.metrics.clone()).collect(),
+                fleet_metrics: metrics.clone(),
+                retry: cfg.retry.clone(),
+                beats: cards.iter().map(|c| c.beat.clone()).collect(),
+                epoch,
+            };
+            Some(
+                std::thread::Builder::new()
+                    .name("fftsweep-supervisor".into())
+                    .spawn(move || supervisor_loop(state, retry_rx))?,
+            )
+        };
+
         Ok(Self {
             runtime,
             router,
@@ -319,7 +460,11 @@ impl Engine {
             workers,
             flusher,
             arbiter,
+            supervisor,
+            retry_tx: Some(retry_tx),
+            health,
             power_budget_w: cfg.power_budget_w,
+            queue_bound: cfg.queue_bound,
             shutdown,
             next_id: AtomicU64::new(1),
         })
@@ -399,17 +544,66 @@ impl Engine {
         self.enqueue(job, route)
     }
 
-    /// Route-independent tail of submission: least-loaded dispatch,
-    /// accounting, and the batcher push (shared by fft and conv jobs).
+    /// Health-aware card choice for a new submit: quarantined and
+    /// draining cards are excluded, degraded cards carry a virtual load
+    /// penalty, and (when a queue bound is set) cards at their in-flight
+    /// bound are skipped. Typed errors, never a panic: an empty or fully
+    /// unavailable fleet is [`CoordError::CardUnavailable`], a fleet
+    /// that is only *full* is [`CoordError::QueueFull`].
+    fn pick_card(&self) -> Result<usize, CoordError> {
+        let loads: Vec<u64> = self
+            .cards
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.inflight() + self.health.load_penalty(i))
+            .collect();
+        let eligible: Vec<bool> = self
+            .cards
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.is_accepting() && self.health.eligible(i))
+            .collect();
+        let routable = Router::least_loaded_among(&loads, &eligible).ok_or_else(|| {
+            CoordError::CardUnavailable {
+                reason: if self.cards.is_empty() {
+                    "fleet is empty".into()
+                } else {
+                    "every card is draining or quarantined".into()
+                },
+            }
+        })?;
+        if let Some(bound) = self.queue_bound {
+            let open: Vec<bool> = eligible
+                .iter()
+                .enumerate()
+                .map(|(i, &e)| e && self.cards[i].inflight() < bound)
+                .collect();
+            return Router::least_loaded_among(&loads, &open).ok_or(CoordError::QueueFull {
+                card: routable,
+                inflight: self.cards[routable].inflight(),
+                bound,
+            });
+        }
+        Ok(routable)
+    }
+
+    /// Route-independent tail of submission: health-aware least-loaded
+    /// dispatch, accounting, and the batcher push (shared by fft and
+    /// conv jobs). Refused typed — never queued on a dead channel —
+    /// once shutdown has begun.
     #[allow(clippy::type_complexity)]
     fn enqueue(
         &self,
         job: FftJob,
         route: router::RouteEntry,
     ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
-        // Least-loaded dispatch across the fleet.
-        let loads: Vec<u64> = self.cards.iter().map(|c| c.inflight()).collect();
-        let card = Router::least_loaded(&loads).expect("fleet is non-empty");
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(CoordError::CardUnavailable {
+                reason: "engine is shutting down".into(),
+            }
+            .into());
+        }
+        let card = self.pick_card()?;
         self.cards[card].inflight.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         self.cards[card].metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
@@ -417,7 +611,7 @@ impl Engine {
         let (tx, rx) = mpsc::channel();
         let env = Envelope { job, reply: tx };
         let pushed = {
-            let mut b = self.batcher.lock().unwrap();
+            let mut b = lock_recover(&self.batcher);
             b.push(&route.artifact, route.n, route.device_batch, card, env)
         };
         let mut dispatched_full = false;
@@ -442,7 +636,7 @@ impl Engine {
     /// Force-flush ALL pending partial batches, fleet-wide (drain/shutdown
     /// path — prefer `flush_slot` for per-request nudging).
     pub fn flush(&self) {
-        for b in self.batcher.lock().unwrap().flush(true) {
+        for b in lock_recover(&self.batcher).flush(true) {
             let _ = self.batch_txs[b.card].send(b);
         }
     }
@@ -450,7 +644,7 @@ impl Engine {
     /// Flush only one (artifact, card) slot, leaving unrelated partial
     /// batches to keep packing toward full occupancy.
     pub fn flush_slot(&self, artifact: &Arc<str>, card: usize) {
-        let batch = self.batcher.lock().unwrap().flush_slot(artifact, card);
+        let batch = lock_recover(&self.batcher).flush_slot(artifact, card);
         if let Some(b) = batch {
             let _ = self.batch_txs[b.card].send(b);
         }
@@ -480,20 +674,86 @@ impl Engine {
         Ok(result)
     }
 
-    /// Wait until every submitted job completed (or `timeout`).
-    pub fn drain(&self, timeout: Duration) -> bool {
+    /// Wait until every accepted job reached a terminal state (result,
+    /// failure, or typed shed) — or `timeout`. The report carries the
+    /// per-card in-flight counts at return; on timeout they are also
+    /// logged so a stuck card is identifiable from the console.
+    pub fn drain(&self, timeout: Duration) -> DrainReport {
         self.flush();
         let t0 = Instant::now();
-        while t0.elapsed() < timeout {
+        loop {
             let sub = self.metrics.jobs_submitted.load(Ordering::Relaxed);
             let done = self.metrics.jobs_completed.load(Ordering::Relaxed)
                 + self.metrics.jobs_failed.load(Ordering::Relaxed);
             if done >= sub {
-                return true;
+                return DrainReport {
+                    complete: true,
+                    remaining: self.cards.iter().map(|c| c.inflight()).collect(),
+                };
+            }
+            if t0.elapsed() >= timeout {
+                let remaining: Vec<u64> = self.cards.iter().map(|c| c.inflight()).collect();
+                eprintln!(
+                    "engine drain timed out after {timeout:?}: {} of {sub} jobs unresolved \
+                     (in flight per card: {remaining:?})",
+                    sub - done
+                );
+                return DrainReport {
+                    complete: false,
+                    remaining,
+                };
             }
             std::thread::sleep(Duration::from_micros(200));
         }
-        false
+    }
+
+    /// Gracefully drain one card: stop routing to it, flush its pending
+    /// batch slots to its worker, and wait (up to `timeout`) for its
+    /// in-flight jobs to resolve. No accepted job is dropped — jobs
+    /// already packed for the card still execute (or fail into the retry
+    /// path). Returns the jobs still in flight on the card at return
+    /// (0 = fully quiesced). The card stays out of the routing set until
+    /// [`Engine::readmit_card`].
+    pub fn drain_card(&self, idx: usize, timeout: Duration) -> u64 {
+        self.cards[idx].accepting.store(false, Ordering::Relaxed);
+        for b in lock_recover(&self.batcher).flush_card(idx) {
+            let _ = self.batch_txs[b.card].send(b);
+        }
+        let t0 = Instant::now();
+        while self.cards[idx].inflight() > 0 && t0.elapsed() < timeout {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let remaining = self.cards[idx].inflight();
+        if remaining > 0 {
+            eprintln!(
+                "card {idx} drain timed out after {timeout:?}: {remaining} jobs still in flight"
+            );
+        }
+        remaining
+    }
+
+    /// Return a drained card to the routing set.
+    pub fn readmit_card(&self, idx: usize) {
+        self.cards[idx].accepting.store(true, Ordering::Relaxed);
+    }
+
+    /// Refuse all further submits (typed [`CoordError::CardUnavailable`])
+    /// without joining any thread: accepted work keeps executing and can
+    /// still be drained, and the eventual [`Engine::shutdown`] call does
+    /// the joins. This is what makes submit-after-shutdown fail fast
+    /// instead of hanging on a dead worker channel.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+
+    /// The fleet health monitor (state queries, transition log).
+    pub fn health(&self) -> &HealthMonitor {
+        &self.health
+    }
+
+    /// Full health transition log (quarantines, probe re-admits, ...).
+    pub fn health_transitions(&self) -> Vec<HealthTransition> {
+        self.health.transitions()
     }
 
     /// The operator's global watt ceiling (`None` = uncapped).
@@ -561,6 +821,12 @@ impl Engine {
                     deadline_misses: c.recorder.deadline_misses(),
                     power_share_w: c.share.get(),
                     inflight: c.inflight(),
+                    health: self.health.state(i).label().to_string(),
+                    health_transitions: self.health.transition_count(i),
+                    jobs_retried: m.jobs_retried.load(Ordering::Relaxed),
+                    jobs_shed: m.jobs_shed.load(Ordering::Relaxed),
+                    batch_errors: m.batch_errors.load(Ordering::Relaxed),
+                    accepting: c.is_accepting(),
                 }
             })
             .collect();
@@ -572,18 +838,29 @@ impl Engine {
         self.snapshot().render()
     }
 
-    /// Stop the fleet deterministically: flush, join the flusher and the
-    /// power arbiter, close every card channel, join every worker.
+    /// Stop the fleet deterministically: refuse new submits, flush, join
+    /// the flusher / arbiter / retry supervisor (which sheds any retries
+    /// still waiting on backoff with a typed error), close every card
+    /// channel, join every worker. Batch failures during the final queue
+    /// drain are terminally failed by the workers themselves (the
+    /// supervisor is gone), so every accepted job still gets a reply.
     /// Returns the final fleet summary line (all counters quiescent once
     /// this returns).
     pub fn shutdown(mut self) -> String {
-        self.shutdown.store(true, Ordering::Relaxed);
+        self.begin_shutdown();
         self.flush();
         if let Some(f) = self.flusher.take() {
             let _ = f.join();
         }
         if let Some(a) = self.arbiter.take() {
             let _ = a.join();
+        }
+        // The supervisor exits on the stop flag after shedding pending
+        // retries; it must be joined BEFORE the card channels close, as
+        // it holds clones of the batch senders.
+        self.retry_tx.take();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
         // Dropping every sender closes each card's channel; workers drain
         // what was already queued and then exit.
@@ -595,9 +872,21 @@ impl Engine {
     }
 }
 
+/// A failed batch's envelope on its way through the retry supervisor,
+/// with enough routing context to re-pack it on another card.
+struct FailedJob {
+    env: Envelope,
+    artifact: Arc<str>,
+    n: u64,
+    device_batch: u64,
+    from_card: usize,
+    error: String,
+}
+
 /// Everything one card worker owns besides its governor.
 struct WorkerState {
     gpu: GpuSpec,
+    card: usize,
     runtime: Arc<Runtime>,
     fleet_metrics: Arc<Metrics>,
     card_metrics: Arc<Metrics>,
@@ -606,12 +895,46 @@ struct WorkerState {
     recorder: Arc<PowerRecorder>,
     share: Arc<ShareCell>,
     ctx: GovernorContext,
+    health: Arc<HealthMonitor>,
+    retry_tx: mpsc::Sender<FailedJob>,
+    beat: Arc<AtomicU64>,
+    epoch: Instant,
+}
+
+/// Hand a failed batch's envelopes to the retry supervisor; if it is
+/// already gone (shutdown tail), fail them terminally right here so the
+/// accounting closes and every submitter still gets a reply.
+fn forward_failed(w: &WorkerState, batch: PackedBatch, error: &str) {
+    w.fleet_metrics.batch_errors.fetch_add(1, Ordering::Relaxed);
+    w.card_metrics.batch_errors.fetch_add(1, Ordering::Relaxed);
+    w.health.on_batch_error(w.card);
+    let (artifact, n, device_batch) = (batch.artifact.clone(), batch.n, batch.device_batch);
+    for env in batch.envelopes {
+        let failed = FailedJob {
+            env,
+            artifact: artifact.clone(),
+            n,
+            device_batch,
+            from_card: w.card,
+            error: error.to_string(),
+        };
+        if let Err(mpsc::SendError(failed)) = w.retry_tx.send(failed) {
+            w.fleet_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            w.card_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = failed.env.reply.send(Err(anyhow::anyhow!(
+                "batch failed on card {} (no retry during shutdown): {}",
+                w.card,
+                failed.error
+            )));
+        }
+    }
 }
 
 fn worker_loop(
     rx: mpsc::Receiver<PackedBatch>,
     w: WorkerState,
     mut governor: Box<dyn ClockGovernor>,
+    mut fault: FaultState,
 ) {
     let table = freq_table(&w.gpu);
     let tesla_class = w.nvml.supports_locked_clocks();
@@ -635,7 +958,37 @@ fn worker_loop(
     let mut out_im: Vec<f32> = Vec::new();
     let mut last_requested = f64::NAN;
     let mut last_clock = boost_mhz;
+    let mut lock_fault_armed = false;
     while let Ok(batch) = rx.recv() {
+        // Heartbeat: the supervisor treats a stale beat with work in
+        // flight as a stall signal.
+        w.beat
+            .store(w.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+
+        // Injected-fault schedule (deterministic per-card batch sequence).
+        let injected = fault.next_batch();
+        if injected.fail {
+            // Fail-stop / flap-down window: the card does no work; its
+            // envelopes go to the retry supervisor for re-routing.
+            let n_env = batch.envelopes.len() as u64;
+            forward_failed(&w, batch, "injected fault: card offline");
+            w.inflight.fetch_sub(n_env, Ordering::Relaxed);
+            continue;
+        }
+        if injected.stall_ms > 0 {
+            // Latency inflation: the batch still completes, late.
+            w.health.on_stall(w.card);
+            std::thread::sleep(Duration::from_millis(injected.stall_ms));
+        }
+        if injected.clock_lock != lock_fault_armed {
+            // Arm/disarm the injected NVML lock error, and force the next
+            // clock decision to actually drive NVML so the fault (or the
+            // recovery) is observed instead of hiding behind the memo.
+            lock_fault_armed = injected.clock_lock;
+            w.nvml.set_lock_fault(lock_fault_armed);
+            last_requested = f64::NAN;
+        }
+
         let occupancy = batch.occupancy();
         let rows_total = batch.device_batch;
 
@@ -670,6 +1023,13 @@ fn worker_loop(
                 });
             requested = requested.min(cap);
         }
+        if let Some(frac) = w.health.clock_frac(w.card) {
+            // Degraded card: clock-derate through the same cap machinery
+            // the power budget uses — snap a ceiling at ~frac × boost so
+            // a flaky card runs cooler while it proves itself. The cap is
+            // a table clock, so request stability is preserved.
+            requested = requested.min(table.snap_at_most(boost_mhz, frac * boost_mhz));
+        }
         let clock = if requested == last_requested {
             last_clock
         } else {
@@ -680,8 +1040,17 @@ fn worker_loop(
                 }
                 boost_mhz
             } else if tesla_class {
-                let _ = w.nvml.set_gpu_locked_clocks(requested, requested);
-                w.nvml.current_clock_mhz()
+                match w.nvml.set_gpu_locked_clocks(requested, requested) {
+                    Ok(()) => w.nvml.current_clock_mhz(),
+                    Err(_) => {
+                        // Clock control is gone (injected or genuine):
+                        // degrade the card, run unmanaged at boost, and
+                        // retry the lock on the next decision.
+                        w.health.on_clock_fault(w.card);
+                        last_requested = f64::NAN;
+                        boost_mhz
+                    }
+                }
             } else {
                 table.snap(requested)
             };
@@ -756,6 +1125,7 @@ fn worker_loop(
         let n_env = batch.envelopes.len() as u64;
         match result {
             Ok(()) => {
+                w.health.on_batch_ok(w.card);
                 let n = batch.n as usize;
                 for (i, env) in batch.envelopes.into_iter().enumerate() {
                     let off = i * n;
@@ -773,14 +1143,196 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                for env in batch.envelopes {
-                    w.fleet_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    w.card_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = env.reply.send(Err(anyhow::anyhow!("{e:#}")));
-                }
+                // Genuine execution failure: same recovery path as an
+                // injected fault — the supervisor retries elsewhere.
+                forward_failed(&w, batch, &format!("{e:#}"));
             }
         }
         w.inflight.fetch_sub(n_env, Ordering::Relaxed);
+    }
+}
+
+/// Shared handles the retry supervisor works against.
+struct SupervisorState {
+    stop: Arc<AtomicBool>,
+    health: Arc<HealthMonitor>,
+    batcher: Arc<Mutex<Batcher>>,
+    txs: Vec<mpsc::Sender<PackedBatch>>,
+    inflights: Vec<Arc<AtomicU64>>,
+    acceptings: Vec<Arc<AtomicBool>>,
+    card_metrics: Vec<Arc<Metrics>>,
+    fleet_metrics: Arc<Metrics>,
+    retry: RetryPolicy,
+    beats: Vec<Arc<AtomicU64>>,
+    epoch: Instant,
+}
+
+/// One job waiting out its backoff before re-dispatch.
+struct PendingRetry {
+    due: Instant,
+    job: FailedJob,
+}
+
+/// Terminal shed: account the failure on the card the job last failed
+/// on, and reply with the typed error. This is the only place besides
+/// the workers that closes a job's accounting, so the drain invariant
+/// (`submitted == completed + failed`) always converges.
+fn shed(s: &SupervisorState, f: FailedJob, err: CoordError) {
+    s.fleet_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    s.fleet_metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    let m = &s.card_metrics[f.from_card];
+    m.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    m.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    let _ = f.env.reply.send(Err(err.into()));
+}
+
+/// Admit a failed job into the backoff queue — or shed it typed if its
+/// retries are spent or the engine is stopping.
+fn admit_retry(s: &SupervisorState, pending: &mut Vec<PendingRetry>, mut f: FailedJob, stopping: bool) {
+    if stopping {
+        let reason = format!("engine is shutting down (last error: {})", f.error);
+        shed(s, f, CoordError::CardUnavailable { reason });
+        return;
+    }
+    if f.env.job.attempts >= s.retry.max_retries {
+        let err = CoordError::RetriesExhausted {
+            id: f.env.job.id,
+            n: f.n,
+            attempts: f.env.job.attempts,
+        };
+        shed(s, f, err);
+        return;
+    }
+    f.env.job.attempts += 1;
+    let backoff = s.retry.backoff_for(f.env.job.attempts);
+    pending.push(PendingRetry {
+        due: Instant::now() + backoff,
+        job: f,
+    });
+}
+
+/// Re-dispatch one job whose backoff elapsed: health-aware least-loaded
+/// pick that prefers any card other than the one it failed on. Slots the
+/// retry lands in (without completing a batch) are collected in
+/// `touched` and flushed at the end of the tick, so retried jobs of one
+/// failed batch re-pack together instead of going out as singletons.
+fn dispatch_retry(s: &SupervisorState, f: FailedJob, touched: &mut Vec<(Arc<str>, usize)>) {
+    let loads: Vec<u64> = s
+        .inflights
+        .iter()
+        .enumerate()
+        .map(|(i, inf)| inf.load(Ordering::Relaxed) + s.health.load_penalty(i))
+        .collect();
+    let eligible: Vec<bool> = (0..loads.len())
+        .map(|i| s.acceptings[i].load(Ordering::Relaxed) && s.health.eligible(i))
+        .collect();
+    let mut not_origin = eligible.clone();
+    if f.from_card < not_origin.len() {
+        not_origin[f.from_card] = false;
+    }
+    let card = Router::least_loaded_among(&loads, &not_origin)
+        .or_else(|| Router::least_loaded_among(&loads, &eligible));
+    let Some(card) = card else {
+        let reason = format!("no healthy card for retry (last error: {})", f.error);
+        shed(s, f, CoordError::CardUnavailable { reason });
+        return;
+    };
+    s.inflights[card].fetch_add(1, Ordering::Relaxed);
+    s.fleet_metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+    s.card_metrics[card].jobs_retried.fetch_add(1, Ordering::Relaxed);
+    let artifact = f.artifact.clone();
+    let pushed = lock_recover(&s.batcher).push(&f.artifact, f.n, f.device_batch, card, f.env);
+    match pushed {
+        Ok(Some(batch)) => {
+            let _ = s.txs[batch.card].send(batch);
+        }
+        Ok(None) => touched.push((artifact, card)),
+        Err(e) => {
+            // Unreachable for an already-admitted route; keep the
+            // accounting truthful anyway.
+            s.inflights[card].fetch_sub(1, Ordering::Relaxed);
+            s.fleet_metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            s.card_metrics[card].jobs_failed.fetch_add(1, Ordering::Relaxed);
+            eprintln!("retry re-admission failed: {e:#}");
+        }
+    }
+}
+
+/// The retry supervisor: backoff queue, health probe ticks, and
+/// heartbeat stall detection. Exits when the engine stops (shedding
+/// everything still pending, typed) or when every sender is gone.
+fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
+    let mut pending: Vec<PendingRetry> = Vec::new();
+    let tick = Duration::from_millis(2);
+    let stall_ms = (s.health.policy().stall_after.as_millis() as u64).max(1);
+    loop {
+        let stopping = s.stop.load(Ordering::Relaxed);
+        match rx.recv_timeout(tick) {
+            Ok(f) => {
+                admit_retry(&s, &mut pending, f, stopping);
+                while let Ok(f) = rx.try_recv() {
+                    admit_retry(&s, &mut pending, f, stopping);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for p in pending.drain(..) {
+                    let reason = format!("engine shut down (last error: {})", p.job.error);
+                    shed(&s, p.job, CoordError::CardUnavailable { reason });
+                }
+                return;
+            }
+        }
+
+        if stopping {
+            // Shed everything and leave; workers terminally fail any
+            // later batch errors themselves once the receiver drops.
+            while let Ok(f) = rx.try_recv() {
+                admit_retry(&s, &mut pending, f, true);
+            }
+            for p in pending.drain(..) {
+                let reason = format!("engine is shutting down (last error: {})", p.job.error);
+                shed(&s, p.job, CoordError::CardUnavailable { reason });
+            }
+            return;
+        }
+
+        // Probe re-admission for quarantined cards.
+        s.health.tick();
+
+        // Heartbeat stall detection: work in flight but no batch started
+        // recently. Resetting the beat restarts the staleness window so
+        // one long stall counts once per window, not once per tick.
+        let now_ms = s.epoch.elapsed().as_millis() as u64;
+        for (i, beat) in s.beats.iter().enumerate() {
+            if s.inflights[i].load(Ordering::Relaxed) == 0 {
+                continue;
+            }
+            if now_ms.saturating_sub(beat.load(Ordering::Relaxed)) > stall_ms {
+                s.health.on_stall(i);
+                beat.store(now_ms, Ordering::Relaxed);
+            }
+        }
+
+        // Fire everything whose backoff elapsed, then flush the slots
+        // those retries landed in.
+        let now = Instant::now();
+        let mut touched: Vec<(Arc<str>, usize)> = Vec::new();
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].due <= now {
+                let p = pending.swap_remove(i);
+                dispatch_retry(&s, p.job, &mut touched);
+            } else {
+                i += 1;
+            }
+        }
+        for (artifact, card) in touched {
+            let batch = lock_recover(&s.batcher).flush_slot(&artifact, card);
+            if let Some(b) = batch {
+                let _ = s.txs[b.card].send(b);
+            }
+        }
     }
 }
 
@@ -880,8 +1432,64 @@ mod tests {
         // Admission rejections happen before any accounting: nothing was
         // submitted, nothing lingers, the fleet drains instantly.
         assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
-        assert!(e.drain(Duration::from_secs(1)));
+        assert!(e.drain(Duration::from_secs(1)).complete);
         e.shutdown();
+    }
+
+    #[test]
+    fn queue_bound_rejects_typed_before_accounting() {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        // A huge batch wait disables the flusher for the test's duration,
+        // so the first job deterministically sits in its partial slot and
+        // holds the card at the 1-job bound.
+        let cfg = EngineConfig {
+            max_batch_wait: Duration::from_secs(3600),
+            queue_bound: Some(1),
+            ..EngineConfig::default()
+        };
+        let e = Engine::start_single(rt, tesla_v100(), GovernorKind::FixedBoost, cfg).unwrap();
+        let n = 1024usize;
+        let _rx1 = e.submit(vec![0.0; n], vec![0.0; n]).unwrap();
+        let err = e.submit(vec![0.0; n], vec![0.0; n]).unwrap_err();
+        assert!(
+            err.downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::QueueFull { bound: 1, .. }))
+                .unwrap_or(false),
+            "expected QueueFull, got {err:#}"
+        );
+        // The rejection happened at admission: only the first job counts.
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 1);
+        assert!(e.drain(Duration::from_secs(5)).complete, "flush releases the held job");
+        e.shutdown();
+    }
+
+    #[test]
+    fn begin_shutdown_refuses_submits_typed() {
+        let e = engine();
+        e.begin_shutdown();
+        let err = e.submit(vec![0.0; 1024], vec![0.0; 1024]).unwrap_err();
+        assert!(
+            err.downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::CardUnavailable { .. }))
+                .unwrap_or(false),
+            "expected CardUnavailable, got {err:#}"
+        );
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+        e.shutdown();
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let p = RetryPolicy {
+            max_retries: 10,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(5),
+        };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(1));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(2));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(4));
+        assert_eq!(p.backoff_for(4), Duration::from_millis(5), "capped");
+        assert_eq!(p.backoff_for(60), Duration::from_millis(5), "shift stays bounded");
     }
 
     #[test]

@@ -129,6 +129,19 @@ impl Router {
             .min_by_key(|&(i, &load)| (load, i))
             .map(|(i, _)| i)
     }
+
+    /// Health-gated dispatch: least-loaded among the cards whose
+    /// `eligible` flag is set (accepting, not quarantined). `None` when
+    /// no card is eligible — the caller maps that to a typed
+    /// [`CoordError::CardUnavailable`] instead of panicking.
+    pub fn least_loaded_among(loads: &[u64], eligible: &[bool]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| eligible.get(i).copied().unwrap_or(false))
+            .min_by_key(|&(i, &load)| (load, i))
+            .map(|(i, _)| i)
+    }
 }
 
 #[cfg(test)]
@@ -224,5 +237,24 @@ mod tests {
             loads[i] += 1;
         }
         assert_eq!(loads, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn least_loaded_among_respects_eligibility() {
+        // the global minimum (index 1) is ineligible → next-best wins
+        assert_eq!(
+            Router::least_loaded_among(&[3, 1, 2], &[true, false, true]),
+            Some(2)
+        );
+        // ties among eligible cards break toward the lowest index
+        assert_eq!(
+            Router::least_loaded_among(&[2, 2, 2], &[false, true, true]),
+            Some(1)
+        );
+        // nobody eligible → None (typed error upstream, not a panic)
+        assert_eq!(Router::least_loaded_among(&[1, 2], &[false, false]), None);
+        assert_eq!(Router::least_loaded_among(&[], &[]), None);
+        // a short eligibility slice treats missing entries as ineligible
+        assert_eq!(Router::least_loaded_among(&[5, 0], &[true]), Some(0));
     }
 }

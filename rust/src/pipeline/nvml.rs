@@ -8,6 +8,7 @@
 //!   * requests snap to the card's supported frequency table, and the
 //!     driver may cap the effective compute clock (Titan V).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::sim::freq_table::{freq_table, FreqTable};
@@ -19,6 +20,11 @@ pub enum NvmlError {
     NotSupported(String),
     #[error("requested clock range [{0}, {1}] MHz invalid")]
     BadRange(f64, f64),
+    /// An armed fault-injection window (`sim::fault`): the driver call
+    /// fails the way a flaky board's does, while the card keeps running
+    /// at its default clocks.
+    #[error("injected clock-lock fault on {0}")]
+    FaultInjected(String),
 }
 
 /// Clock-lock state of one device.
@@ -37,6 +43,9 @@ pub struct SimNvml {
     state: Mutex<ClockState>,
     /// Every state transition, for the Fig 19 clock trace.
     transitions: Mutex<Vec<(ClockState, f64)>>,
+    /// While set, `set_gpu_locked_clocks` fails with
+    /// [`NvmlError::FaultInjected`] (chaos testing).
+    lock_fault: AtomicBool,
 }
 
 impl SimNvml {
@@ -48,11 +57,22 @@ impl SimNvml {
             tesla_class: gpu.name.starts_with("Tesla"),
             state: Mutex::new(ClockState::Default),
             transitions: Mutex::new(Vec::new()),
+            lock_fault: AtomicBool::new(false),
         }
+    }
+
+    /// Arm (or disarm) the injected clock-lock fault: while armed, every
+    /// `set_gpu_locked_clocks` call errors and the card stays at its
+    /// default clocks — the `FaultKind::ClockLock` failure mode.
+    pub fn set_lock_fault(&self, armed: bool) {
+        self.lock_fault.store(armed, Ordering::Relaxed);
     }
 
     /// nvmlDeviceSetGpuLockedClocks(min, max).
     pub fn set_gpu_locked_clocks(&self, min_mhz: f64, max_mhz: f64) -> Result<(), NvmlError> {
+        if self.lock_fault.load(Ordering::Relaxed) {
+            return Err(NvmlError::FaultInjected(self.gpu_name.clone()));
+        }
         if !self.tesla_class {
             return Err(NvmlError::NotSupported(self.gpu_name.clone()));
         }
@@ -190,6 +210,20 @@ mod tests {
             assert!(matches!(nv.state(), ClockState::Locked { .. }));
         }
         assert_eq!(nv.state(), ClockState::Default);
+    }
+
+    #[test]
+    fn injected_lock_fault_fails_then_recovers() {
+        let nv = SimNvml::new(&tesla_v100());
+        nv.set_lock_fault(true);
+        assert!(matches!(
+            nv.set_gpu_locked_clocks(945.0, 945.0),
+            Err(NvmlError::FaultInjected(_))
+        ));
+        assert_eq!(nv.state(), ClockState::Default, "failed lock leaves default clocks");
+        assert_eq!(nv.transition_count(), 0, "failed lock records no transition");
+        nv.set_lock_fault(false);
+        assert!(nv.set_gpu_locked_clocks(945.0, 945.0).is_ok(), "disarmed hook recovers");
     }
 
     #[test]

@@ -201,9 +201,16 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Poison-recovering cache lock — same contract as the sim backend: a
+    /// panicking loader must not wedge other cards' loads (worst case a
+    /// module re-compiles).
+    fn cache_guard(&self) -> std::sync::MutexGuard<'_, HashMap<String, std::sync::Arc<LoadedModule>>> {
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Load + compile an artifact (cached).
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedModule>> {
-        if let Some(m) = self.cache.lock().unwrap().get(name) {
+        if let Some(m) = self.cache_guard().get(name) {
             return Ok(m.clone());
         }
         let meta = self.manifest.get(name)?.clone();
@@ -219,17 +226,14 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("compiling artifact {name}"))?;
         let module = std::sync::Arc::new(LoadedModule { meta, exe });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), module.clone());
+        self.cache_guard().insert(name.to_string(), module.clone());
         Ok(module)
     }
 
     /// Names of all artifacts currently compiled, sorted (same contract as
     /// the sim backend: stable for logs and assertions).
     pub fn loaded_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.cache.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = self.cache_guard().keys().cloned().collect();
         names.sort();
         names
     }

@@ -328,8 +328,19 @@ impl Runtime {
 
     /// Load an artifact (cached). Real on-disk artifacts are digest- and
     /// header-checked; synthetic entries load directly.
+    /// Poison-recovering cache locks: a panic in one loader thread must
+    /// not wedge every other card's module loads — the map's contents are
+    /// valid `Arc`s under any interleaving (worst case a module re-loads).
+    fn cache_read(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, Arc<LoadedModule>>> {
+        self.cache.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn cache_write(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, Arc<LoadedModule>>> {
+        self.cache.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn load(&self, name: &str) -> Result<Arc<LoadedModule>> {
-        if let Some(m) = self.cache.read().unwrap().get(name) {
+        if let Some(m) = self.cache_read().get(name) {
             return Ok(m.clone());
         }
         let meta = self.manifest.get(name)?.clone();
@@ -357,9 +368,7 @@ impl Runtime {
         // First inserter wins: a load racing this one returns the already
         // cached module instead of installing a second copy.
         Ok(self
-            .cache
-            .write()
-            .unwrap()
+            .cache_write()
             .entry(name.to_string())
             .or_insert(module)
             .clone())
@@ -368,7 +377,7 @@ impl Runtime {
     /// Names of all artifacts currently loaded, sorted (stable for logs
     /// and assertions regardless of hash order).
     pub fn loaded_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.cache.read().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = self.cache_read().keys().cloned().collect();
         names.sort();
         names
     }

@@ -1,0 +1,263 @@
+//! Deterministic fault injection for the simulated fleet.
+//!
+//! A [`FaultPlan`] describes, per card, *when* and *how* that card
+//! misbehaves, keyed on the card's own batch sequence number — no wall
+//! clock, no RNG — so a chaos schedule replays identically run to run.
+//! The coordinator's workers consult [`FaultState::next_batch`] once per
+//! dequeued batch and act on the returned [`BatchFault`]:
+//!
+//! * **fail-stop** — every batch from `after` onwards errors (the card
+//!   never computes again until the process restarts);
+//! * **stall** — batches in `[after, after+for)` sleep `ms` milliseconds
+//!   before executing (latency inflation; jobs still complete);
+//! * **flap** — starting at `after`, the card cycles `period` batches at
+//!   a time, erroring the first `down` of each cycle;
+//! * **clock-lock** — batches in `[after, after+for)` arm the injected
+//!   NVML lock fault, so `set_gpu_locked_clocks` returns an error and the
+//!   card runs un-derated at boost.
+//!
+//! Specs parse from the CLI `--chaos` grammar: semicolon-separated
+//! `card:kind[,key=val...]` clauses, e.g.
+//! `"1:failstop,after=32;2:flap,period=8,down=2"`.
+
+use anyhow::{bail, Context, Result};
+
+/// One way a single card misbehaves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Every batch from `after` (0-based sequence number) onwards fails.
+    FailStop { after: u64 },
+    /// Batches in `[after, after + batches)` sleep `ms` before executing.
+    Stall { after: u64, batches: u64, ms: u64 },
+    /// From `after`, repeat: `down` failing batches then `period - down`
+    /// healthy ones.
+    Flap { after: u64, period: u64, down: u64 },
+    /// Batches in `[after, after + batches)` make `set_gpu_locked_clocks`
+    /// fail (the card keeps computing, unlocked at boost).
+    ClockLock { after: u64, batches: u64 },
+}
+
+/// A fault bound to one card index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CardFault {
+    pub card: usize,
+    pub kind: FaultKind,
+}
+
+/// The full injected-fault schedule for a fleet. Empty by default.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<CardFault>,
+}
+
+/// What the worker must do for one dequeued batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchFault {
+    /// The batch errors instead of executing.
+    pub fail: bool,
+    /// Sleep this long before executing (0 = no stall).
+    pub stall_ms: u64,
+    /// Arm the injected NVML clock-lock error for this batch.
+    pub clock_lock: bool,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse a `--chaos` spec: `card:kind[,key=val...]` clauses joined by
+    /// `;`. Kinds and their keys (all optional, with defaults):
+    ///
+    /// * `failstop` — `after` (default 0)
+    /// * `stall` — `after` (0), `for` (u64::MAX), `ms` (50)
+    /// * `flap` — `after` (0), `period` (8), `down` (2)
+    /// * `clocklock` — `after` (0), `for` (u64::MAX)
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            faults.push(parse_clause(clause).with_context(|| format!("chaos clause '{clause}'"))?);
+        }
+        Ok(FaultPlan { faults })
+    }
+}
+
+fn parse_clause(clause: &str) -> Result<CardFault> {
+    let (card_s, rest) = clause
+        .split_once(':')
+        .context("expected 'card:kind[,key=val...]'")?;
+    let card: usize = card_s.trim().parse().context("card index")?;
+    let mut parts = rest.split(',').map(str::trim);
+    let kind_s = parts.next().unwrap_or("");
+    let mut after = 0u64;
+    let mut batches = u64::MAX;
+    let mut ms = 50u64;
+    let mut period = 8u64;
+    let mut down = 2u64;
+    for kv in parts {
+        let (k, v) = kv.split_once('=').with_context(|| format!("'{kv}': expected key=val"))?;
+        let v: u64 = v.trim().parse().with_context(|| format!("value of '{k}'"))?;
+        match k.trim() {
+            "after" => after = v,
+            "for" => batches = v,
+            "ms" => ms = v,
+            "period" => period = v,
+            "down" => down = v,
+            other => bail!("unknown key '{other}'"),
+        }
+    }
+    let kind = match kind_s {
+        "failstop" => FaultKind::FailStop { after },
+        "stall" => FaultKind::Stall { after, batches, ms },
+        "flap" => {
+            anyhow::ensure!(period > 0 && down <= period, "flap wants 0 < down <= period");
+            FaultKind::Flap { after, period, down }
+        }
+        "clocklock" => FaultKind::ClockLock { after, batches },
+        other => bail!("unknown fault kind '{other}' (failstop|stall|flap|clocklock)"),
+    };
+    Ok(CardFault { card, kind })
+}
+
+/// Per-card runtime state: the card's faults plus its batch counter.
+/// Owned by the card's worker thread; purely sequence-driven.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    kinds: Vec<FaultKind>,
+    seq: u64,
+}
+
+impl FaultState {
+    /// Extract the faults targeting `card` from the plan.
+    pub fn for_card(plan: &FaultPlan, card: usize) -> FaultState {
+        FaultState {
+            kinds: plan
+                .faults
+                .iter()
+                .filter(|f| f.card == card)
+                .map(|f| f.kind.clone())
+                .collect(),
+            seq: 0,
+        }
+    }
+
+    /// Evaluate the schedule for the next batch and advance the counter.
+    pub fn next_batch(&mut self) -> BatchFault {
+        let s = self.seq;
+        self.seq += 1;
+        let mut out = BatchFault::default();
+        for k in &self.kinds {
+            match *k {
+                FaultKind::FailStop { after } => {
+                    if s >= after {
+                        out.fail = true;
+                    }
+                }
+                FaultKind::Stall { after, batches, ms } => {
+                    if s >= after && s - after < batches {
+                        out.stall_ms = out.stall_ms.max(ms);
+                    }
+                }
+                FaultKind::Flap { after, period, down } => {
+                    if s >= after && (s - after) % period < down {
+                        out.fail = true;
+                    }
+                }
+                FaultKind::ClockLock { after, batches } => {
+                    if s >= after && s - after < batches {
+                        out.clock_lock = true;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Batches evaluated so far.
+    pub fn batches_seen(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(state: &mut FaultState, n: usize) -> Vec<bool> {
+        (0..n).map(|_| state.next_batch().fail).collect()
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("0:failstop,after=32; 1:stall,after=8,for=16,ms=20;2:flap,period=6,down=2 ; 0:clocklock,for=4").unwrap();
+        assert_eq!(p.faults.len(), 4);
+        assert_eq!(p.faults[0], CardFault { card: 0, kind: FaultKind::FailStop { after: 32 } });
+        assert_eq!(
+            p.faults[1],
+            CardFault { card: 1, kind: FaultKind::Stall { after: 8, batches: 16, ms: 20 } }
+        );
+        assert_eq!(
+            p.faults[2],
+            CardFault { card: 2, kind: FaultKind::Flap { after: 0, period: 6, down: 2 } }
+        );
+        assert_eq!(
+            p.faults[3],
+            CardFault { card: 0, kind: FaultKind::ClockLock { after: 0, batches: 4 } }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("nocolon").is_err());
+        assert!(FaultPlan::parse("x:failstop").is_err(), "bad card index");
+        assert!(FaultPlan::parse("0:meltdown").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("0:failstop,when=3").is_err(), "unknown key");
+        assert!(FaultPlan::parse("0:flap,down=9,period=4").is_err(), "down > period");
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn failstop_is_permanent() {
+        let p = FaultPlan::parse("0:failstop,after=2").unwrap();
+        let mut s = FaultState::for_card(&p, 0);
+        assert_eq!(fails(&mut s, 5), vec![false, false, true, true, true]);
+        // other cards are untouched
+        let mut other = FaultState::for_card(&p, 1);
+        assert_eq!(fails(&mut other, 3), vec![false, false, false]);
+    }
+
+    #[test]
+    fn flap_cycles_down_then_up() {
+        let p = FaultPlan::parse("0:flap,after=1,period=3,down=1").unwrap();
+        let mut s = FaultState::for_card(&p, 0);
+        // seq 0 healthy (before `after`), then D U U D U U ...
+        assert_eq!(
+            fails(&mut s, 7),
+            vec![false, true, false, false, true, false, false]
+        );
+    }
+
+    #[test]
+    fn stall_and_clocklock_windows() {
+        let p = FaultPlan::parse("0:stall,after=1,for=2,ms=30;0:clocklock,after=2,for=1").unwrap();
+        let mut s = FaultState::for_card(&p, 0);
+        let b: Vec<BatchFault> = (0..4).map(|_| s.next_batch()).collect();
+        assert_eq!(b[0].stall_ms, 0);
+        assert_eq!(b[1].stall_ms, 30);
+        assert_eq!(b[2].stall_ms, 30);
+        assert_eq!(b[3].stall_ms, 0);
+        assert!(!b[1].clock_lock && b[2].clock_lock && !b[3].clock_lock);
+        assert!(b.iter().all(|f| !f.fail));
+        assert_eq!(s.batches_seen(), 4);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let p = FaultPlan::parse("0:flap,period=5,down=2;0:stall,after=3,for=4,ms=10").unwrap();
+        let run = |mut s: FaultState| -> Vec<BatchFault> { (0..20).map(|_| s.next_batch()).collect() };
+        let a = run(FaultState::for_card(&p, 0));
+        let b = run(FaultState::for_card(&p, 0));
+        assert_eq!(a, b, "same plan, same card, same trace");
+    }
+}

@@ -7,6 +7,7 @@
 //! noisy driver samples the harness integrates.
 
 pub mod exec_model;
+pub mod fault;
 pub mod freq_table;
 pub mod gpu;
 pub mod power;

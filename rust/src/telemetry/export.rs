@@ -38,8 +38,23 @@ pub fn snapshot_json(s: &FleetSnapshot) -> Json {
     fleet.set("energy_per_job_j", t.energy_per_job_j.into());
     fleet.set("deadline_misses", t.deadline_misses.into());
     fleet.set("clock_transitions", t.clock_transitions.into());
+    fleet.set("jobs_retried", t.jobs_retried.into());
+    fleet.set("jobs_shed", t.jobs_shed.into());
+    fleet.set("batch_errors", t.batch_errors.into());
+    fleet.set("health_transitions", t.health_transitions.into());
+    fleet.set("cards_quarantined", t.cards_quarantined.into());
     root.set("fleet", fleet);
     root
+}
+
+/// Numeric health code for dashboards: healthy 0, degraded 1,
+/// quarantined 2 (unknown labels clamp to quarantined — fail loud).
+fn health_code(label: &str) -> f64 {
+    match label {
+        "healthy" => 0.0,
+        "degraded" => 1.0,
+        _ => 2.0,
+    }
 }
 
 fn card_json(c: &CardSnapshot) -> Json {
@@ -69,6 +84,12 @@ fn card_json(c: &CardSnapshot) -> Json {
         c.power_share_w.map(Json::Num).unwrap_or(Json::Null),
     );
     o.set("inflight", c.inflight.into());
+    o.set("health", c.health.as_str().into());
+    o.set("health_transitions", c.health_transitions.into());
+    o.set("jobs_retried", c.jobs_retried.into());
+    o.set("jobs_shed", c.jobs_shed.into());
+    o.set("batch_errors", c.batch_errors.into());
+    o.set("accepting", c.accepting.into());
     o
 }
 
@@ -118,6 +139,24 @@ pub fn prometheus_text(s: &FleetSnapshot) -> String {
         ("fftsweep_card_power_share_watts", "Arbiter watt share (+Inf when uncapped)", |c| {
             c.power_share_w.unwrap_or(f64::INFINITY)
         }),
+        ("fftsweep_card_health_state", "Health state: 0 healthy, 1 degraded, 2 quarantined", |c| {
+            health_code(&c.health)
+        }),
+        ("fftsweep_card_health_transitions_total", "Health state-machine transitions", |c| {
+            c.health_transitions as f64
+        }),
+        ("fftsweep_card_jobs_retried_total", "Jobs re-dispatched onto this card after failing elsewhere", |c| {
+            c.jobs_retried as f64
+        }),
+        ("fftsweep_card_jobs_shed_total", "Jobs dropped with a typed error", |c| {
+            c.jobs_shed as f64
+        }),
+        ("fftsweep_card_batch_errors_total", "Batches that errored on this card", |c| {
+            c.batch_errors as f64
+        }),
+        ("fftsweep_card_accepting", "1 while the card accepts new work, 0 while draining", |c| {
+            if c.accepting { 1.0 } else { 0.0 }
+        }),
     ];
     for (name, help, get) in families {
         gauge(&mut out, name, help);
@@ -149,6 +188,14 @@ pub fn prometheus_text(s: &FleetSnapshot) -> String {
     let _ = writeln!(out, "fftsweep_fleet_energy_joules_total {}", prom_num(s.fleet.energy_j));
     gauge(&mut out, "fftsweep_fleet_energy_saving_ratio", "1 - energy/boost_energy");
     let _ = writeln!(out, "fftsweep_fleet_energy_saving_ratio {}", prom_num(s.fleet.energy_saving));
+    gauge(&mut out, "fftsweep_fleet_cards_quarantined", "Cards currently quarantined");
+    let _ = writeln!(
+        out,
+        "fftsweep_fleet_cards_quarantined {}",
+        prom_num(s.fleet.cards_quarantined as f64)
+    );
+    gauge(&mut out, "fftsweep_fleet_jobs_shed_total", "Jobs dropped fleet-wide with a typed error");
+    let _ = writeln!(out, "fftsweep_fleet_jobs_shed_total {}", prom_num(s.fleet.jobs_shed as f64));
     out
 }
 
@@ -181,6 +228,12 @@ mod tests {
             deadline_misses: 0,
             power_share_w: budget.map(|w| w / 2.0),
             inflight: 0,
+            health: "degraded".into(),
+            health_transitions: 2,
+            jobs_retried: 3,
+            jobs_shed: 1,
+            batch_errors: 4,
+            accepting: true,
         };
         FleetSnapshot::from_cards(vec![card], budget)
     }
@@ -195,6 +248,13 @@ mod tests {
         assert!(j.contains("\"gpu\": \"Tesla \\\"V100\\\"\""));
         // fleet aggregate present
         assert!(j.contains("\"draw_1s_w\": 118.5"));
+        // robustness fields round-trip on card and fleet
+        assert!(j.contains("\"health\": \"degraded\""));
+        assert!(j.contains("\"jobs_retried\": 3"));
+        assert!(j.contains("\"jobs_shed\": 1"));
+        assert!(j.contains("\"batch_errors\": 4"));
+        assert!(j.contains("\"accepting\": true"));
+        assert!(j.contains("\"cards_quarantined\": 0"));
     }
 
     #[test]
@@ -220,6 +280,28 @@ mod tests {
         assert!(text.lines().filter(|l| l.starts_with("# TYPE")).all(|l| l.ends_with("gauge")));
         assert!(text.contains("fftsweep_fleet_power_budget_watts 240"));
         assert!(text.contains("fftsweep_card_power_1s_watts{card=\"0\",gpu=\"Tesla \\\"V100\\\"\",governor=\"common\"} 118.5"));
+    }
+
+    #[test]
+    fn health_gauges_exported() {
+        let text = prometheus_text(&snap(None));
+        let state_line = text
+            .lines()
+            .find(|l| l.starts_with("fftsweep_card_health_state{"))
+            .unwrap();
+        assert!(state_line.ends_with(" 1"), "degraded maps to 1: {state_line}");
+        let accepting_line = text
+            .lines()
+            .find(|l| l.starts_with("fftsweep_card_accepting{"))
+            .unwrap();
+        assert!(accepting_line.ends_with(" 1"), "{accepting_line}");
+        assert!(text.contains("fftsweep_card_jobs_retried_total{"));
+        assert!(text.contains("fftsweep_card_batch_errors_total{"));
+        assert!(text.contains("fftsweep_fleet_cards_quarantined 0"));
+        assert!(text.contains("fftsweep_fleet_jobs_shed_total 1"));
+        assert_eq!(health_code("healthy"), 0.0);
+        assert_eq!(health_code("quarantined"), 2.0);
+        assert_eq!(health_code("???"), 2.0, "unknown labels clamp loud");
     }
 
     #[test]

@@ -46,6 +46,19 @@ pub struct CardSnapshot {
     /// The arbiter's current watt share (None = uncapped).
     pub power_share_w: Option<f64>,
     pub inflight: u64,
+    /// Health-state label: "healthy" | "degraded" | "quarantined".
+    pub health: String,
+    /// Health state-machine transitions so far (quarantines, probe
+    /// re-admits, recoveries).
+    pub health_transitions: u64,
+    /// Jobs re-dispatched onto this card after failing elsewhere.
+    pub jobs_retried: u64,
+    /// Jobs shed with a typed error (subset of `jobs_failed`).
+    pub jobs_shed: u64,
+    /// Batches that errored on this card.
+    pub batch_errors: u64,
+    /// Whether the card is accepting new work (false while draining).
+    pub accepting: bool,
 }
 
 /// Fleet-aggregate counters (sums/means over the cards).
@@ -66,6 +79,12 @@ pub struct FleetTotals {
     pub energy_per_job_j: f64,
     pub deadline_misses: u64,
     pub clock_transitions: u64,
+    pub jobs_retried: u64,
+    pub jobs_shed: u64,
+    pub batch_errors: u64,
+    pub health_transitions: u64,
+    /// Cards currently in the `quarantined` health state.
+    pub cards_quarantined: u64,
 }
 
 /// The whole fleet, typed.
@@ -92,6 +111,13 @@ impl FleetSnapshot {
             t.draw_1s_w += c.avg_1s_w;
             t.deadline_misses += c.deadline_misses;
             t.clock_transitions += c.clock_transitions;
+            t.jobs_retried += c.jobs_retried;
+            t.jobs_shed += c.jobs_shed;
+            t.batch_errors += c.batch_errors;
+            t.health_transitions += c.health_transitions;
+            if c.health == "quarantined" {
+                t.cards_quarantined += 1;
+            }
         }
         let occ_weight: f64 = cards.iter().map(|c| c.batches as f64).sum();
         if occ_weight > 0.0 {
@@ -122,8 +148,17 @@ impl FleetSnapshot {
             Some(w) => format!(", budget {} W (1s draw {} W)", fnum(w, 0), fnum(t.draw_1s_w, 1)),
             None => String::new(),
         };
+        // Robustness counters only appear once something went wrong, so a
+        // healthy fleet's summary is byte-identical to the pre-chaos one.
+        let mut chaos = String::new();
+        if t.jobs_retried > 0 || t.jobs_shed > 0 {
+            chaos.push_str(&format!(", {} retried / {} shed", t.jobs_retried, t.jobs_shed));
+        }
+        if t.cards_quarantined > 0 {
+            chaos.push_str(&format!(", {} card(s) quarantined", t.cards_quarantined));
+        }
         format!(
-            "jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}%{}",
+            "jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}%{}{}",
             t.jobs_completed,
             t.jobs_submitted,
             t.jobs_failed,
@@ -132,6 +167,7 @@ impl FleetSnapshot {
             t.exec_s,
             t.energy_saving * 100.0,
             budget,
+            chaos,
         )
     }
 
@@ -144,8 +180,17 @@ impl FleetSnapshot {
                 Some(w) => format!(", share {} W", fnum(w, 0)),
                 None => String::new(),
             };
+            // Shown only off the happy path: the healthy, accepting card's
+            // line keeps its established shape (and line count).
+            let mut health = String::new();
+            if c.health != "healthy" {
+                health.push_str(&format!(" <{}>", c.health));
+            }
+            if !c.accepting {
+                health.push_str(" <draining>");
+            }
             out.push_str(&format!(
-                "card{} {} [{}]: jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}% (clock transitions {}, draw {}/{} W inst/1s{}, {} misses)\n",
+                "card{}{health} {} [{}]: jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}% (clock transitions {}, draw {}/{} W inst/1s{}, {} misses)\n",
                 c.index,
                 c.gpu,
                 c.governor,
@@ -196,6 +241,12 @@ mod tests {
             deadline_misses: 0,
             power_share_w: Some(150.0),
             inflight: 0,
+            health: "healthy".into(),
+            health_transitions: 0,
+            jobs_retried: 0,
+            jobs_shed: 0,
+            batch_errors: 0,
+            accepting: true,
         }
     }
 
@@ -234,6 +285,38 @@ mod tests {
         assert!(capped.fleet_summary().contains("budget 120 W"));
         let open = FleetSnapshot::from_cards(vec![card(0, 2, 1.0, 2.0, 90.0)], None);
         assert!(!open.fleet_summary().contains("budget"));
+    }
+
+    #[test]
+    fn health_aggregates_and_markers() {
+        let mut sick = card(0, 10, 6.0, 10.0, 120.0);
+        sick.health = "quarantined".into();
+        sick.health_transitions = 3;
+        sick.jobs_retried = 4;
+        sick.jobs_shed = 1;
+        sick.batch_errors = 5;
+        sick.accepting = false;
+        let ok = card(1, 30, 12.0, 30.0, 60.0);
+        let s = FleetSnapshot::from_cards(vec![sick, ok], None);
+        assert_eq!(s.fleet.cards_quarantined, 1);
+        assert_eq!(s.fleet.health_transitions, 3);
+        assert_eq!(s.fleet.jobs_retried, 4);
+        assert_eq!(s.fleet.jobs_shed, 1);
+        assert_eq!(s.fleet.batch_errors, 5);
+        let r = s.render();
+        assert_eq!(r.lines().count(), 3, "markers never add lines");
+        assert!(r.contains("card0 <quarantined> <draining>"));
+        assert!(!r.contains("card1 <"), "healthy card line unchanged");
+        assert!(s.fleet_summary().contains("4 retried / 1 shed"));
+        assert!(s.fleet_summary().contains("1 card(s) quarantined"));
+    }
+
+    #[test]
+    fn healthy_fleet_summary_has_no_chaos_noise() {
+        let s = FleetSnapshot::from_cards(vec![card(0, 4, 1.0, 2.0, 100.0)], None);
+        assert!(!s.fleet_summary().contains("retried"));
+        assert!(!s.fleet_summary().contains("quarantined"));
+        assert!(!s.render().contains('<'));
     }
 
     #[test]

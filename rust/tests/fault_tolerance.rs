@@ -1,0 +1,313 @@
+//! Fault-tolerance acceptance tests: seeded chaos schedules against the
+//! simulated fleet (issue 7's end-to-end invariant).
+//!
+//! The contract under test: **every accepted job terminates** — as a
+//! `JobResult` or a typed `CoordError` — under any injected fault
+//! schedule. Fail-stopped cards get quarantined and their jobs complete
+//! on the survivors via the retry path; quarantined cards are probed
+//! back in after a cooldown; drained cards quiesce without dropping
+//! accepted work. Fault injection is keyed on per-card batch sequence
+//! numbers (no wall clock, no RNG), so these schedules replay
+//! identically run to run.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fftsweep::coordinator::health::{HealthPolicy, HealthState};
+use fftsweep::coordinator::{CardConfig, CoordError, Engine, EngineConfig, RetryPolicy};
+use fftsweep::governor::GovernorKind;
+use fftsweep::runtime::Runtime;
+use fftsweep::sim::fault::FaultPlan;
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::rng::Rng;
+
+fn sim_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"))
+}
+
+fn rand_planes(n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+    )
+}
+
+/// The headline chaos test: a 3-card fleet under sustained load with one
+/// card fail-stopped mid-run and another flapping. Zero accepted jobs
+/// may be lost, the survivors must absorb the failed card's work, and
+/// the health plane must record both the quarantine and the later probe
+/// re-admission.
+#[test]
+fn chaos_schedule_loses_no_accepted_jobs() {
+    let fleet = (0..3)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
+        .collect();
+    let cfg = EngineConfig {
+        // card 1 dies for good after 3 batches; card 2 errors the first
+        // batch of every cycle of 8 from the start.
+        fault_plan: FaultPlan::parse("1:failstop,after=3;2:flap,after=0,period=8,down=1")
+            .expect("chaos spec"),
+        health: HealthPolicy {
+            // keep degraded cards attractive enough to collect the
+            // consecutive errors that prove the quarantine path, and
+            // probe quickly so the re-admit shows up within the test.
+            degraded_load_penalty: 2,
+            probe_cooldown: Duration::from_millis(10),
+            ..HealthPolicy::default()
+        },
+        retry: RetryPolicy {
+            max_retries: 6,
+            backoff_base: Duration::from_millis(1),
+            ..RetryPolicy::default()
+        },
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start(sim_runtime(), fleet, cfg).expect("engine");
+
+    let jobs = 600usize;
+    let mut rng = Rng::new(42);
+    let mut rxs = Vec::with_capacity(jobs);
+    for _ in 0..40 {
+        for _ in 0..15 {
+            let (re, im) = rand_planes(1024, &mut rng);
+            rxs.push(engine.submit(re, im).expect("submit accepted"));
+        }
+        // pace the waves so every card sees many batches (and the
+        // timeout flusher emits partials, multiplying the batch count).
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    assert!(
+        engine.drain(Duration::from_secs(120)).complete,
+        "drain must resolve every accepted job under chaos"
+    );
+
+    // Zero lost jobs: every reply channel resolves, and every failure is
+    // a typed CoordError (never a dropped sender, never a bare string).
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("job reply must arrive") {
+            Ok(res) => {
+                assert_eq!(res.out_re.len(), 1024);
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<CoordError>().is_some(),
+                    "failed job must carry a typed CoordError, got: {e:#}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + failed, jobs as u64, "accounting: every submit resolved exactly once");
+    assert!(
+        ok >= (jobs as u64) * 9 / 10,
+        "retries should complete the vast majority of jobs: ok={ok} failed={failed}"
+    );
+
+    let snap = engine.snapshot();
+    assert_eq!(snap.fleet.jobs_submitted, jobs as u64);
+    assert_eq!(snap.fleet.jobs_completed, ok);
+    assert_eq!(snap.fleet.jobs_failed, failed);
+    assert!(snap.fleet.batch_errors > 0, "injected faults must surface as batch errors");
+    assert!(snap.fleet.jobs_retried > 0, "failed batches must re-dispatch through retry");
+    assert!(snap.fleet.health_transitions >= 2, "quarantine + probe must be recorded");
+
+    // The survivors absorbed the fail-stopped card's work.
+    assert!(snap.cards[0].jobs_completed > 0, "card0 (healthy) must serve");
+    assert!(snap.cards[2].jobs_completed > 0, "card2 (flapping) must still serve");
+    assert!(
+        snap.cards[0].jobs_completed + snap.cards[2].jobs_completed
+            > snap.cards[1].jobs_completed,
+        "survivors must out-serve the fail-stopped card: {:?}",
+        snap.cards.iter().map(|c| c.jobs_completed).collect::<Vec<_>>()
+    );
+    assert!(snap.cards[1].health_transitions >= 1);
+
+    // Health plane: card 1 was quarantined, and (after its cooldown,
+    // via the supervisor's tick) probed back in as Degraded. The probe
+    // is time-driven, so poll briefly for the re-admit transition.
+    let log = engine.health_transitions();
+    assert!(
+        log.iter().any(|t| t.card == 1 && t.to == HealthState::Quarantined),
+        "fail-stopped card must be quarantined: {log:?}"
+    );
+    let t0 = Instant::now();
+    let readmitted = loop {
+        if engine
+            .health_transitions()
+            .iter()
+            .any(|t| t.card == 1 && t.reason == "probe re-admit")
+        {
+            break true;
+        }
+        if t0.elapsed() > Duration::from_secs(5) {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert!(readmitted, "quarantined card must be probed back in after its cooldown");
+
+    engine.shutdown();
+}
+
+/// `drain_card` quiesces one card without dropping accepted work: its
+/// pending slots flush, its in-flight count reaches zero, and it stays
+/// out of the routing set until `readmit_card`.
+#[test]
+fn drain_card_quiesces_and_readmit_restores_routing() {
+    let fleet = (0..2)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
+        .collect();
+    let engine = Engine::start(sim_runtime(), fleet, EngineConfig::default()).expect("engine");
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::new();
+    for _ in 0..32 {
+        let (re, im) = rand_planes(1024, &mut rng);
+        rxs.push(engine.submit(re, im).expect("submit"));
+    }
+
+    let remaining = engine.drain_card(0, Duration::from_secs(30));
+    assert_eq!(remaining, 0, "drained card must fully quiesce");
+    let snap = engine.snapshot();
+    assert!(!snap.cards[0].accepting, "drained card must report not-accepting");
+    assert!(snap.cards[1].accepting);
+
+    // While card 0 is draining, new submits route exclusively to card 1.
+    let before = snap.cards[0].jobs_submitted;
+    for _ in 0..8 {
+        let (re, im) = rand_planes(1024, &mut rng);
+        rxs.push(engine.submit(re, im).expect("submit during drain"));
+    }
+    assert_eq!(
+        engine.snapshot().cards[0].jobs_submitted,
+        before,
+        "no new jobs may land on a draining card"
+    );
+
+    engine.readmit_card(0);
+    assert!(engine.snapshot().cards[0].accepting, "readmit must restore the card");
+
+    assert!(engine.drain(Duration::from_secs(60)).complete);
+    for rx in rxs {
+        assert!(rx.recv().expect("recv").is_ok(), "no accepted job may be lost by a drain");
+    }
+    engine.shutdown();
+}
+
+/// Submitting while every card is draining fails fast with a typed
+/// `CardUnavailable` — no hang, no panic — and readmitting recovers.
+#[test]
+fn submit_during_full_drain_is_typed_and_prompt() {
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    assert_eq!(engine.drain_card(0, Duration::from_secs(1)), 0);
+
+    let t0 = Instant::now();
+    let err = engine
+        .submit(vec![0.0; 1024], vec![0.0; 1024])
+        .expect_err("the only card is draining");
+    assert!(t0.elapsed() < Duration::from_secs(1), "rejection must be prompt");
+    match err.downcast_ref::<CoordError>() {
+        Some(CoordError::CardUnavailable { reason }) => {
+            assert!(
+                reason.contains("draining or quarantined"),
+                "reason should name the cause: {reason}"
+            );
+        }
+        other => panic!("expected CardUnavailable, got {other:?}"),
+    }
+    // Rejected at admission: nothing was accounted as accepted.
+    assert_eq!(engine.snapshot().fleet.jobs_submitted, 0);
+
+    engine.readmit_card(0);
+    let res = engine.execute(vec![0.0; 1024], vec![0.0; 1024]).expect("serves after readmit");
+    assert_eq!(res.out_re.len(), 1024);
+    engine.shutdown();
+}
+
+/// The drain-timeout path (satellite b): with an injected stall holding
+/// a job in flight, a too-short drain reports `complete == false` plus
+/// the per-card remaining counts, and a patient drain then finishes.
+#[test]
+fn drain_timeout_reports_per_card_remaining() {
+    let cfg = EngineConfig {
+        fault_plan: FaultPlan::parse("0:stall,after=0,for=1000000,ms=300").expect("chaos spec"),
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start_single(sim_runtime(), tesla_v100(), GovernorKind::FixedBoost, cfg)
+        .expect("engine");
+    let rx = engine.submit(vec![0.0; 1024], vec![0.0; 1024]).expect("submit");
+
+    let report = engine.drain(Duration::from_millis(30));
+    assert!(!report.complete, "stalled card cannot drain in 30ms");
+    assert_eq!(report.remaining.len(), 1);
+    assert!(report.remaining_total() >= 1, "the stalled job must be reported in flight");
+
+    let report = engine.drain(Duration::from_secs(30));
+    assert!(report.complete, "patient drain outlasts the stall");
+    assert_eq!(report.remaining_total(), 0);
+    assert!(rx.recv().expect("recv").is_ok(), "stalled jobs complete, never drop");
+    engine.shutdown();
+}
+
+/// A job that fails on every attempt the policy allows is shed with a
+/// typed `RetriesExhausted` carrying the burned attempt count, the shed
+/// is accounted, and the hard-failed card lands in quarantine.
+#[test]
+fn retries_exhausted_is_typed_and_accounted() {
+    let cfg = EngineConfig {
+        fault_plan: FaultPlan::parse("0:failstop,after=0").expect("chaos spec"),
+        retry: RetryPolicy {
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            ..RetryPolicy::default()
+        },
+        health: HealthPolicy {
+            // keep the card quarantined for the duration of the test so
+            // the snapshot assertion below is deterministic.
+            probe_cooldown: Duration::from_secs(60),
+            ..HealthPolicy::default()
+        },
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start_single(sim_runtime(), tesla_v100(), GovernorKind::FixedBoost, cfg)
+        .expect("engine");
+    let rx = engine.submit(vec![0.0; 1024], vec![0.0; 1024]).expect("submit");
+    engine.flush();
+
+    let err = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("shed job must still resolve its reply channel")
+        .expect_err("every attempt fail-stops");
+    match err.downcast_ref::<CoordError>() {
+        Some(CoordError::RetriesExhausted { n, attempts, .. }) => {
+            assert_eq!(*n, 1024);
+            assert_eq!(*attempts, 2, "both allowed retries were burned");
+        }
+        other => panic!("expected RetriesExhausted, got {other:?}"),
+    }
+
+    assert!(engine.drain(Duration::from_secs(10)).complete, "shed job is accounted");
+    let snap = engine.snapshot();
+    assert_eq!(snap.fleet.jobs_submitted, 1);
+    assert_eq!(snap.fleet.jobs_completed, 0);
+    assert_eq!(snap.fleet.jobs_failed, 1);
+    assert_eq!(snap.fleet.jobs_shed, 1);
+    assert_eq!(snap.fleet.jobs_retried, 2);
+    assert_eq!(snap.fleet.batch_errors, 3, "original attempt + 2 retries all errored");
+    assert_eq!(snap.cards[0].health, "quarantined");
+    assert_eq!(snap.fleet.cards_quarantined, 1);
+    assert_eq!(engine.health().state(0), HealthState::Quarantined);
+    engine.shutdown();
+}

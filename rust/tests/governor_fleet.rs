@@ -71,7 +71,7 @@ fn fleet_spreads_load_and_aggregates_metrics() {
         let (re, im) = rand_planes(n, &mut rng);
         rxs.push(engine.submit(re, im).expect("submit"));
     }
-    assert!(engine.drain(Duration::from_secs(60)), "drain timed out");
+    assert!(engine.drain(Duration::from_secs(60)).complete, "drain timed out");
     for rx in rxs {
         assert!(rx.recv().expect("recv").is_ok());
     }
@@ -123,7 +123,7 @@ fn heterogeneous_fleet_reports_per_card_specs() {
         let (re, im) = rand_planes(1024, &mut rng);
         rxs.push(engine.submit(re, im).expect("submit"));
     }
-    assert!(engine.drain(Duration::from_secs(60)));
+    assert!(engine.drain(Duration::from_secs(60)).complete);
     for rx in rxs {
         assert!(rx.recv().expect("recv").is_ok());
     }
@@ -149,7 +149,7 @@ fn fleet_governors_are_per_card_instances() {
             let (re, im) = rand_planes(4096, &mut rng);
             rxs.push(engine.submit(re, im).expect("submit"));
         }
-        assert!(engine.drain(Duration::from_secs(60)));
+        assert!(engine.drain(Duration::from_secs(60)).complete);
         for rx in rxs {
             assert!(rx.recv().expect("recv").is_ok());
         }
@@ -196,7 +196,7 @@ fn execute_flushes_only_its_own_slot() {
 
     // A fleet-wide flush (the drain/shutdown primitive) releases it.
     engine.flush();
-    assert!(engine.drain(Duration::from_secs(60)));
+    assert!(engine.drain(Duration::from_secs(60)).complete);
     assert!(pending_rx.recv().expect("recv").is_ok());
     engine.shutdown();
 }
@@ -259,7 +259,7 @@ fn unroutable_length_is_a_typed_rejection() {
         other => panic!("expected UnsupportedLength, got {other:?}"),
     }
     // The rejection is accounted as a failure, not a lost job.
-    assert!(engine.drain(std::time::Duration::from_secs(10)));
+    assert!(engine.drain(std::time::Duration::from_secs(10)).complete);
     engine.shutdown();
 }
 

@@ -179,7 +179,7 @@ fn engine_serves_batched_jobs_correctly() {
     for (re, im) in payloads {
         jobs.push(engine.submit(re, im).expect("submit"));
     }
-    assert!(engine.drain(Duration::from_secs(120)), "drain timed out");
+    assert!(engine.drain(Duration::from_secs(120)).complete, "drain timed out");
     for (rx, want) in jobs.into_iter().zip(want) {
         let res = rx.recv().expect("recv").expect("job ok");
         assert_eq!(res.out_re.len(), n);
@@ -297,7 +297,7 @@ fn engine_survives_mixed_good_and_bad_submissions() {
             good.push(engine.submit(re, im).expect("good submit"));
         }
     }
-    assert!(engine.drain(Duration::from_secs(60)));
+    assert!(engine.drain(Duration::from_secs(60)).complete);
     for rx in good {
         assert!(rx.recv().expect("recv").is_ok());
     }

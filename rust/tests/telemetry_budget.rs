@@ -44,7 +44,7 @@ fn serve_hetero(budget_w: Option<f64>, jobs: usize, seed: u64) -> (FleetSnapshot
         let im: Vec<f32> = (0..1024).map(|_| rng.gauss() as f32).collect();
         rxs.push(engine.submit(re, im).expect("submit"));
     }
-    assert!(engine.drain(Duration::from_secs(120)), "drain timed out");
+    assert!(engine.drain(Duration::from_secs(120)).complete, "drain timed out");
     let mut sim_ms = Vec::with_capacity(jobs);
     for rx in rxs {
         let res = rx.recv().expect("recv").expect("job ok");

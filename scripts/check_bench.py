@@ -29,7 +29,14 @@ Fails (exit 1) when:
     the monolithic table, or its pass count is not exactly monolithic + 1
     (the decomposition trades one extra pass for L2-resident sub-plans
     and a split twiddle table) — or four-step rows/s / conv jobs/s
-    regressed more than 30% below their committed baseline floors.
+    regressed more than 30% below their committed baseline floors,
+  * the robustness section (schema 6) breaks an internal invariant of
+    the fresh doc — any accepted job was lost under the injected fault
+    (jobs_lost != 0: the fault-tolerance contract is every submit
+    resolves to a result or a typed error), or the fail-stopped card was
+    never quarantined — or the faulted-fleet goodput regressed more than
+    30% below the committed baseline floor, or the shed rate rose above
+    the baseline plus a small absolute allowance.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -57,6 +64,7 @@ REQUIRED = [
     "power",
     "native",
     "large_n",
+    "robustness",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
@@ -84,6 +92,13 @@ REQUIRED_LARGE_N = [
     "monolithic_twiddle_bytes",
     "conv_jobs_per_s",
 ]
+REQUIRED_ROBUSTNESS = [
+    "fault_free_jobs_per_s",
+    "faulted_goodput_jobs_per_s",
+    "jobs_lost",
+    "shed_rate",
+    "quarantines",
+]
 MAX_REGRESSION = 0.30
 # Internal-invariant slack: simulated quantities are deterministic, so the
 # capped run only gets rounding headroom, not a regression budget.
@@ -95,6 +110,10 @@ NATIVE_SLACK = 0.10
 # Four-step vs monolithic at n=2^18: same timing-noise headroom — the
 # decomposition must at minimum hold parity with the monolithic plan.
 LARGE_N_SLACK = 0.10
+# Absolute allowance on the faulted-fleet shed rate above the committed
+# baseline: retries make sheds rare, but a shed is a typed, accounted
+# outcome, so a tiny scheduling-dependent drift is not a gate failure.
+SHED_SLACK = 0.02
 
 
 class BenchCheckError(Exception):
@@ -124,6 +143,12 @@ def load_doc(path):
         missing += [f"large_n.{k}" for k in REQUIRED_LARGE_N if k not in doc["large_n"]]
     elif "large_n" in doc:
         missing += [f"large_n.{k}" for k in REQUIRED_LARGE_N]
+    if isinstance(doc.get("robustness"), dict):
+        missing += [
+            f"robustness.{k}" for k in REQUIRED_ROBUSTNESS if k not in doc["robustness"]
+        ]
+    elif "robustness" in doc:
+        missing += [f"robustness.{k}" for k in REQUIRED_ROBUSTNESS]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -289,6 +314,46 @@ def check(fresh, base):
                 f"large_n.{key} {large[key]:.0f} {what} regressed "
                 f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
             )
+
+    # Robustness section (schema 6): internal invariants of the fresh doc
+    # first. Zero lost jobs is the fault-tolerance contract itself —
+    # every accepted submit resolves to a result or a typed error, even
+    # with a card fail-stopped mid-run — and the fail-stopped card must
+    # have been quarantined by the health plane.
+    robust = fresh["robustness"]
+    base_robust = base["robustness"]
+    info.append(
+        f"robustness: faulted goodput {robust['faulted_goodput_jobs_per_s']:.0f} jobs/s "
+        f"(fault-free {robust['fault_free_jobs_per_s']:.0f}), "
+        f"{robust['jobs_lost']} lost, shed rate {robust['shed_rate']:.4f}, "
+        f"{robust['quarantines']} quarantine(s)"
+    )
+    if robust["jobs_lost"] != 0:
+        problems.append(
+            f"robustness: {robust['jobs_lost']} accepted job(s) lost under the "
+            "injected fault — every submit must resolve to a result or a typed error"
+        )
+    if robust["quarantines"] < 1:
+        problems.append(
+            "robustness: the fail-stopped card was never quarantined — the health "
+            "state machine is not isolating hard failures"
+        )
+    # … then the trajectory floor/ceiling vs the committed baseline: the
+    # degraded-but-alive fleet must keep its goodput, and must not shed a
+    # larger fraction of the offered load than the baseline run did.
+    floor = base_robust["faulted_goodput_jobs_per_s"] * (1.0 - MAX_REGRESSION)
+    if robust["faulted_goodput_jobs_per_s"] < floor:
+        problems.append(
+            f"robustness.faulted_goodput_jobs_per_s "
+            f"{robust['faulted_goodput_jobs_per_s']:.0f} regressed "
+            f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
+        )
+    shed_ceiling = base_robust["shed_rate"] + SHED_SLACK
+    if robust["shed_rate"] > shed_ceiling:
+        problems.append(
+            f"robustness.shed_rate {robust['shed_rate']:.4f} above the baseline "
+            f"ceiling {shed_ceiling:.4f} — the retry path is shedding too much load"
+        )
 
     # Power section: internal invariants of the fresh doc first — the cap
     # must actually cap, and capping must not cost energy per job …

@@ -68,6 +68,19 @@ def good_doc():
             "conv_block_len": 2048,
             "conv_passes_per_block": 9,
         },
+        "robustness": {
+            "jobs": 1536,
+            "faulted_jobs": 3072,
+            "fault_free_jobs_per_s": 900.0,
+            "faulted_goodput_jobs_per_s": 450.0,
+            "goodput_frac": 0.5,
+            "jobs_lost": 0,
+            "shed_rate": 0.0,
+            "jobs_retried": 50,
+            "quarantines": 1,
+            "fault_free_p99_sim_ms": 0.1,
+            "faulted_p99_sim_ms": 0.2,
+        },
     }
 
 
@@ -280,6 +293,71 @@ def test_large_n_floors_vs_baseline_enforced(key):
     assert problems == []
 
 
+def test_lost_jobs_fail_regardless_of_baseline():
+    # The fault-tolerance contract is absolute: one lost accepted job
+    # fails the gate even if the baseline somehow recorded losses too.
+    fresh = good_doc()
+    fresh["robustness"]["jobs_lost"] = 1
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("lost under the injected fault" in p for p in problems)
+
+
+def test_missing_quarantine_fails():
+    # Internal invariant of the fresh doc: the fail-stopped card must
+    # have been quarantined by the health plane.
+    fresh = good_doc()
+    fresh["robustness"]["quarantines"] = 0
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("never quarantined" in p for p in problems)
+
+
+def test_faulted_goodput_floor_is_enforced():
+    fresh = good_doc()
+    fresh["robustness"]["faulted_goodput_jobs_per_s"] = (
+        good_doc()["robustness"]["faulted_goodput_jobs_per_s"] * 0.6
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("robustness.faulted_goodput_jobs_per_s" in p for p in problems)
+    # a 20% dip stays within the 30% budget
+    fresh["robustness"]["faulted_goodput_jobs_per_s"] = (
+        good_doc()["robustness"]["faulted_goodput_jobs_per_s"] * 0.8
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_shed_rate_ceiling_is_enforced():
+    # Shed rate is a ceiling: baseline + the small absolute allowance.
+    fresh = good_doc()
+    fresh["robustness"]["shed_rate"] = (
+        good_doc()["robustness"]["shed_rate"] + check_bench.SHED_SLACK + 0.01
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("shedding too much load" in p for p in problems)
+    # ... within the allowance passes.
+    fresh["robustness"]["shed_rate"] = (
+        good_doc()["robustness"]["shed_rate"] + check_bench.SHED_SLACK / 2
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_robustness_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["robustness"]["jobs_lost"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="robustness.jobs_lost"):
+        check_bench.load_doc(path)
+
+
+def test_robustness_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["robustness"] = "fine"
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="robustness.shed_rate"):
+        check_bench.load_doc(path)
+
+
 def test_large_n_without_required_key_is_rejected(tmp_path):
     doc = good_doc()
     del doc["large_n"]["four_step_rows_per_s"]
@@ -331,7 +409,17 @@ def test_power_as_non_object_is_rejected(tmp_path):
 
 
 @pytest.mark.parametrize(
-    "key", ["fleet", "nonpow2", "rfft", "planned_speedup", "power", "native", "large_n"]
+    "key",
+    [
+        "fleet",
+        "nonpow2",
+        "rfft",
+        "planned_speedup",
+        "power",
+        "native",
+        "large_n",
+        "robustness",
+    ],
 )
 def test_missing_top_level_key_is_rejected(tmp_path, key):
     doc = good_doc()
