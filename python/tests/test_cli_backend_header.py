@@ -1,0 +1,87 @@
+"""Snapshot test for the CLI's backend capability header.
+
+`fftsweep telemetry` and `fftsweep govern` print the active backend's
+`BackendCaps::summary()` line before their tables, so every report names
+the backend that produced it (DESIGN.md §4g). This pins the header's
+shape from the outside — the rust-side contract suite checks the same
+string via `summary()`, this checks the operator actually sees it.
+
+Runs only when a release binary exists (the python CI job has no cargo);
+`cd rust && cargo build --release` first.
+"""
+
+import re
+import subprocess
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+BINARY = REPO / "rust" / "target" / "release" / "fftsweep"
+
+HEADER_RE = re.compile(
+    r"^backend (?P<name>[a-z0-9-]+): kinds \[[a-z,]+\], "
+    r"n \d+\.\.=(?:\d+|inf)( \(pow2 only\))?, "
+    r"precisions \[[a-z0-9,]+\], "
+    r"locked-clocks (?:true|false), nvml (?:true|false), l2 \d+ KiB$",
+    re.MULTILINE,
+)
+
+
+def run_cli(*args: str) -> str:
+    out = subprocess.run(
+        [str(BINARY), *args],
+        capture_output=True,
+        text=True,
+        timeout=300,
+        check=True,
+    )
+    return out.stdout
+
+
+@pytest.fixture(autouse=True)
+def require_binary():
+    if not BINARY.exists():
+        pytest.skip("rust release binary not built (cargo build --release)")
+
+
+@pytest.mark.parametrize(
+    "argv",
+    [
+        ("telemetry", "--jobs", "16", "--lengths", "1024"),
+        ("govern", "--quick"),
+    ],
+    ids=["telemetry", "govern"],
+)
+def test_header_names_backend_and_envelope(argv):
+    stdout = run_cli(*argv)
+    m = HEADER_RE.search(stdout)
+    assert m, f"no capability header in output:\n{stdout[:2000]}"
+    # The default build resolves --backend default to the sim oracle.
+    assert m.group("name") == "sim"
+    # The header precedes the report body, not trails it.
+    body = stdout.index(m.group(0))
+    assert body == stdout.find("backend "), "header must lead the report"
+
+
+def test_cufft_profile_header_is_fft_only():
+    stdout = run_cli(
+        "telemetry", "--backend", "cufft-profile", "--jobs", "16", "--lengths", "1024"
+    )
+    m = HEADER_RE.search(stdout)
+    assert m, f"no capability header in output:\n{stdout[:2000]}"
+    assert m.group("name") == "cufft-profile"
+    assert "kinds [fft]" in m.group(0)
+
+
+def test_unknown_backend_is_refused_listing_compiled_names():
+    proc = subprocess.run(
+        [str(BINARY), "telemetry", "--backend", "warp-drive"],
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    assert proc.returncode != 0
+    err = proc.stderr
+    assert "unknown backend" in err
+    assert "cufft-profile" in err

@@ -42,7 +42,6 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fftsweep::analysis::telemetry as telemetry_analysis;
@@ -51,7 +50,7 @@ use fftsweep::coordinator::{CardConfig, Engine, EngineConfig, RetryPolicy};
 use fftsweep::dsp;
 use fftsweep::dsp::planner::{self, Direction};
 use fftsweep::governor::GovernorKind;
-use fftsweep::runtime::Runtime;
+use fftsweep::runtime::default_backend;
 use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::tesla_v100;
 use fftsweep::util::bench::black_box;
@@ -334,11 +333,11 @@ fn main() {
     );
 
     // 3. Fleet end to end: open-loop throughput + allocation proxy.
-    let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
+    let backend = default_backend(Path::new("/nonexistent-artifacts")).expect("sim backend");
     let fleet = (0..CARDS)
         .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedClock(945.0)))
         .collect();
-    let engine = Engine::start(rt, fleet, EngineConfig::default()).expect("engine");
+    let engine = Engine::start(backend, fleet, EngineConfig::default()).expect("engine");
     let payloads: Vec<(Vec<f32>, Vec<f32>)> =
         (0..fleet_jobs).map(|_| rand_planes(N, &mut rng)).collect();
     // Warmup: one round trip per card so module/plan/scratch caches are hot.
@@ -441,7 +440,7 @@ fn main() {
         cplan.passes_per_block()
     );
     println!("{}", engine.fleet_report());
-    let rt = engine.runtime().clone();
+    let backend = engine.backend().clone();
     engine.shutdown();
 
     // 5. Power telemetry: uncapped (boost) vs capped serving of one
@@ -452,7 +451,7 @@ fn main() {
     let power_jobs = if quick { 256 } else { 1024 };
     let specs = vec![tesla_v100(), tesla_v100()];
     let uncapped = telemetry_analysis::serve_trace(
-        rt.clone(),
+        backend.clone(),
         &specs,
         &GovernorKind::FixedBoost,
         power_jobs,
@@ -463,7 +462,7 @@ fn main() {
     .expect("uncapped power trace");
     let budget_w = 0.7 * uncapped.fleet_draw_1s_w;
     let capped = telemetry_analysis::serve_trace(
-        rt,
+        backend,
         &specs,
         &GovernorKind::FixedBoost,
         power_jobs,
@@ -502,7 +501,7 @@ fn main() {
         p99_sim_ms: f64,
     }
     let robust_leg = |jobs: usize, chaos: Option<&str>, rng: &mut Rng| -> RobustLeg {
-        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"));
+        let backend = default_backend(Path::new("/nonexistent-artifacts")).expect("sim backend");
         let fleet = (0..3)
             .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
             .collect();
@@ -522,7 +521,7 @@ fn main() {
             },
             ..EngineConfig::default()
         };
-        let engine = Engine::start(rt, fleet, cfg).expect("engine");
+        let engine = Engine::start(backend, fleet, cfg).expect("engine");
         let payloads: Vec<(Vec<f32>, Vec<f32>)> =
             (0..jobs).map(|_| rand_planes(N, rng)).collect();
         let t0 = Instant::now();

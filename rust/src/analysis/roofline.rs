@@ -1,10 +1,101 @@
-//! L1 hardware-adaptation accounting (DESIGN.md §2): VMEM footprint and
-//! MXU/VPU utilization estimates for the Pallas Stockham kernel's
-//! BlockSpec, per TPU generation. `interpret=True` CPU timings say nothing
-//! about TPU performance; this is the structural analysis EXPERIMENTS.md
-//! §Perf records instead.
+//! Roofline accounting, two targets:
+//!
+//! * **GPU plans** ([`classify_plan`]): price each compiled FFT plan's
+//!   issue cycles against the bandwidth tier its working set actually
+//!   streams from, and classify it compute- vs memory-bound. This is the
+//!   DESIGN.md §4g planner input — the governors derive off-grid clock
+//!   choices from the regime (memory-bound plans tolerate deep downclock,
+//!   compute-bound plans are floored at the voltage knee) instead of pure
+//!   log₂N interpolation.
+//! * **TPU kernels** ([`estimate_fft_kernel`]): L1 hardware-adaptation
+//!   accounting (DESIGN.md §2) — VMEM footprint and MXU/VPU utilization
+//!   for the Pallas Stockham kernel's BlockSpec, per TPU generation.
+//!   `interpret=True` CPU timings say nothing about TPU performance; this
+//!   is the structural analysis EXPERIMENTS.md §Perf records instead.
 
+use crate::dsp::planner::{plan_for, PlanAlgorithm};
+use crate::sim::gpu::GpuSpec;
 use crate::types::Precision;
+
+/// Which side of the roofline a compiled plan sits on, on a given card.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanRegime {
+    ComputeBound,
+    MemoryBound,
+}
+
+/// Per-plan roofline analysis on one card at boost clock. Times are per
+/// complex element (batch-invariant — both sides scale linearly in rows).
+#[derive(Debug, Clone)]
+pub struct PlanRoofline {
+    pub n: u64,
+    pub algorithm: PlanAlgorithm,
+    /// Demand bytes one transform moves ([`crate::dsp::planner::FftPlan::bytes_moved`],
+    /// tables included) — the reporting figure.
+    pub bytes_moved: u64,
+    /// Equivalent radix-2 stages the schedule issues per element.
+    pub radix2_stages: f64,
+    /// Full-plane sweeps per transform.
+    pub passes: usize,
+    /// Issue-cycle time per complex element at boost, seconds.
+    pub t_compute_s: f64,
+    /// Plane-traffic time per complex element against the plan's
+    /// bandwidth tier, seconds.
+    pub t_memory_s: f64,
+    pub regime: PlanRegime,
+}
+
+/// The residency budget deciding a plan's bandwidth tier: a monolithic
+/// plan whose 4 live planes fit in this many bytes streams from
+/// shared/L2, everything else pays device-memory bandwidth. Matches the
+/// planner's own L2 blocking budget (`FFTSWEEP_FFT_BLOCK` docs).
+pub const RESIDENCY_BYTES: u64 = 256 * 1024;
+
+/// Classify the compiled plan for length `n` on `gpu` at boost clock.
+///
+/// Compute side: the sim's issue-cost model — `cycles_per_stage` per
+/// equivalent radix-2 stage plus `cycles_base` per plane pass, per
+/// complex element, over `cuda_cores` at boost. Memory side: each pass
+/// reads and writes the complex plane once; monolithic mixed-radix plans
+/// whose working set sits within [`RESIDENCY_BYTES`] stream at shared
+/// bandwidth, four-step/Bluestein/oversized plans at device bandwidth.
+/// Twiddle-table traffic is excluded from the regime decision (it is
+/// broadcast-friendly and cache-resident per stage) but included in the
+/// reported `bytes_moved`.
+pub fn classify_plan(gpu: &GpuSpec, n: u64, precision: Precision) -> PlanRoofline {
+    let plan = plan_for(n as usize);
+    let r2e = plan.radix2_equiv_stages();
+    let passes = plan.pass_count();
+    let fp_ratio = match precision {
+        Precision::Fp64 => gpu.fp64_ratio,
+        Precision::Fp16 => gpu.fp16_ratio.unwrap_or(1.0),
+        Precision::Fp32 => 1.0,
+    };
+    let issue_cycles = (gpu.cycles_per_stage * r2e + gpu.cycles_base * passes as f64) / fp_ratio;
+    let t_compute = issue_cycles / (gpu.cuda_cores as f64 * gpu.boost_clock_mhz * 1e6);
+    let resident = plan.algorithm() == PlanAlgorithm::MixedRadix
+        && 4 * n * precision.real_bytes() <= RESIDENCY_BYTES;
+    let bw_gbs = if resident {
+        gpu.shared_bw_gbs
+    } else {
+        gpu.dev_bw_gbs
+    };
+    let t_memory = passes as f64 * 2.0 * precision.complex_bytes() as f64 / (bw_gbs * 1e9);
+    PlanRoofline {
+        n,
+        algorithm: plan.algorithm(),
+        bytes_moved: plan.bytes_moved(precision),
+        radix2_stages: r2e,
+        passes,
+        t_compute_s: t_compute,
+        t_memory_s: t_memory,
+        regime: if t_memory > t_compute {
+            PlanRegime::MemoryBound
+        } else {
+            PlanRegime::ComputeBound
+        },
+    }
+}
 
 /// A TPU-like target for the estimate.
 #[derive(Debug, Clone)]
@@ -93,6 +184,63 @@ pub fn max_tile_b(n: u64, precision: Precision, target: &TpuTarget, budget_frac:
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::gpu::{jetson_nano, tesla_p4, tesla_v100, titan_v, titan_xp};
+
+    #[test]
+    fn small_pow2_plans_are_compute_bound_on_every_card() {
+        // Cache-resident monolithic plans stream at shared bandwidth —
+        // the paper's single-kernel lengths are issue-limited, which is
+        // why their energy optimum sits at/above the voltage knee.
+        for gpu in [tesla_v100(), tesla_p4(), titan_xp(), titan_v(), jetson_nano()] {
+            for n in [256u64, 1024, 4096] {
+                let r = classify_plan(&gpu, n, Precision::Fp32);
+                assert_eq!(
+                    r.regime,
+                    PlanRegime::ComputeBound,
+                    "{} n={n}: t_c {:.3e} t_m {:.3e}",
+                    gpu.name,
+                    r.t_compute_s,
+                    r.t_memory_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn four_step_and_bluestein_plans_are_memory_bound() {
+        // Past the residency budget the plan pays device bandwidth for
+        // every pass — 2^18 compiles to four-step, 2^22 likewise, and
+        // Bluestein's padded double-transform is pure streaming.
+        let gpu = tesla_v100();
+        for n in [1u64 << 18, 1 << 22, 19321] {
+            let r = classify_plan(&gpu, n, Precision::Fp32);
+            assert_eq!(
+                r.regime,
+                PlanRegime::MemoryBound,
+                "n={n}: t_c {:.3e} t_m {:.3e}",
+                r.t_compute_s,
+                r.t_memory_s
+            );
+        }
+        let big = classify_plan(&gpu, 1 << 18, Precision::Fp32);
+        assert_eq!(big.algorithm, PlanAlgorithm::FourStep);
+        assert!(big.bytes_moved > 0);
+    }
+
+    #[test]
+    fn residency_tier_flips_the_regime_at_the_l2_boundary() {
+        // n=16384 fp32: 4 planes × 4 B × 16384 = 256 KiB exactly — the
+        // last resident length on the V100; the next monolithic size up
+        // would stream from device memory.
+        let gpu = tesla_v100();
+        let r = classify_plan(&gpu, 16384, Precision::Fp32);
+        assert_eq!(r.regime, PlanRegime::ComputeBound);
+        // Same length in fp64 doubles the working set past the budget
+        // AND halves issue throughput; the V100's 1:2 fp64 keeps it
+        // compute-heavy enough that only the bandwidth tier changes.
+        let r64 = classify_plan(&gpu, 16384, Precision::Fp64);
+        assert!(r64.t_memory_s > r.t_memory_s * 10.0, "tier must drop to device BW");
+    }
 
     #[test]
     fn default_tile_fits_vmem() {

@@ -9,13 +9,11 @@
 //! the SKA-style "power monitoring and control" loop closed over the
 //! paper's DVFS result: see the watts, cap the watts, read what it cost.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use crate::coordinator::{CardConfig, Engine, EngineConfig};
 use crate::governor::GovernorKind;
-use crate::runtime::Runtime;
+use crate::runtime::IntoBackend;
 use crate::sim::GpuSpec;
 use crate::telemetry::FleetSnapshot;
 use crate::util::rng::Rng;
@@ -51,7 +49,7 @@ pub struct ServeStats {
 /// `budget_w`. The same `seed` reproduces the identical payload stream,
 /// which is what makes the capped/uncapped rows comparable.
 pub fn serve_trace(
-    rt: Arc<Runtime>,
+    backend: impl IntoBackend,
     specs: &[GpuSpec],
     governor: &GovernorKind,
     jobs: usize,
@@ -68,7 +66,7 @@ pub fn serve_trace(
         power_budget_w: budget_w,
         ..EngineConfig::default()
     };
-    let engine = Engine::start(rt, fleet, cfg)?;
+    let engine = Engine::start(backend, fleet, cfg)?;
     for &n in lengths {
         engine.router().route(n, "f32")?;
     }
@@ -121,7 +119,7 @@ pub fn serve_trace(
 /// Run the same trace uncapped and capped and build the comparison table.
 #[allow(clippy::too_many_arguments)]
 pub fn budget_comparison(
-    rt: Arc<Runtime>,
+    backend: impl IntoBackend,
     specs: &[GpuSpec],
     governor: &GovernorKind,
     jobs: usize,
@@ -129,8 +127,9 @@ pub fn budget_comparison(
     seed: u64,
     budget_w: f64,
 ) -> Result<(Vec<ServeStats>, Table)> {
-    let uncapped = serve_trace(rt.clone(), specs, governor, jobs, lengths, seed, None)?;
-    let capped = serve_trace(rt, specs, governor, jobs, lengths, seed, Some(budget_w))?;
+    let backend = backend.into_backend();
+    let uncapped = serve_trace(backend.clone(), specs, governor, jobs, lengths, seed, None)?;
+    let capped = serve_trace(backend, specs, governor, jobs, lengths, seed, Some(budget_w))?;
     let cards: Vec<&str> = specs.iter().map(|s| s.name).collect();
     let mut t = Table::new(
         &format!(
@@ -172,8 +171,10 @@ pub fn budget_comparison(
 #[cfg(all(test, not(feature = "xla")))]
 mod tests {
     use super::*;
+    use crate::runtime::Runtime;
     use crate::sim::gpu::tesla_v100;
     use std::path::Path;
+    use std::sync::Arc;
 
     fn sim_runtime() -> Arc<Runtime> {
         Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"))

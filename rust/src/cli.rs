@@ -14,7 +14,7 @@ use fftsweep::governor::{GovernorContext, GovernorKind};
 use fftsweep::harness::sweep::{paper_lengths, quick_lengths, sweep_gpu, SweepConfig};
 use fftsweep::harness::Protocol;
 use fftsweep::pipeline::{run_pipeline_at, table4};
-use fftsweep::runtime::{Manifest, Runtime};
+use fftsweep::runtime::{backend_by_name, compiled_backend_names, ExecBackend, Manifest, Runtime};
 use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::{all_gpus, gpu_by_name, GpuSpec};
 use fftsweep::types::Precision;
@@ -32,21 +32,24 @@ USAGE:
   fftsweep sweep    [--gpu v100] [--precision fp32] [--quick] [--lengths 1000,1536,4096]
   fftsweep pipeline [--gpu v100] [--n 500000] [--governor fixed --clock 945]
   fftsweep selftest [--artifacts artifacts]
-  fftsweep serve    [--artifacts artifacts] [--jobs 256] [--governor fixed --clock 945]
+  fftsweep serve    [--artifacts artifacts] [--backend default] [--jobs 256]
+                    [--governor fixed --clock 945]
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
                     [--lengths 1000,1536,4096] [--conv-taps <t>]
                     [--power-budget-w <W>] [--telemetry-out <file.json>] [--prom]
                     [--chaos <spec>] [--retries 3] [--retry-backoff-ms 1]
                     [--queue-bound <n>] [--quarantine-errors 3]
   fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
-                    [--governor boost] [--power-budget-w <W>] [--seed 7]
-                    [--lengths 1024,4096] [--telemetry-out <file.json>] [--prom]
-  fftsweep govern   [--gpu v100] [--batches 96] [--seed 7] [--clock 945] [--quick]
-                    [--lengths 1000,1536,16384] [--conv-taps <t>] [--budget-w <W>]
+                    [--backend default] [--governor boost] [--power-budget-w <W>]
+                    [--seed 7] [--lengths 1024,4096] [--telemetry-out <file.json>]
+                    [--prom]
+  fftsweep govern   [--gpu v100] [--backend default] [--batches 96] [--seed 7]
+                    [--clock 945] [--quick] [--lengths 1000,1536,16384]
+                    [--conv-taps <t>] [--budget-w <W>]
   fftsweep validate [--artifacts artifacts]
   fftsweep ablation [--gpu v100] [--n 16384]
   fftsweep schedule [--gpu v100] [--n 16384] [--deadline-mult 1.5]
-  fftsweep roofline [--n 8192] [--precision fp32]
+  fftsweep roofline [--n 8192] [--precision fp32] [--gpu v100]
   fftsweep cost     [--gpu v100] [--n 16384] [--clock 945] [--gpus 500]
   fftsweep thermal  [--gpu v100] [--n 16384] [--ambient 30]
 
@@ -84,6 +87,13 @@ retry on another card with capped exponential backoff (`--retries`,
 errors are quarantined and probed back in; `--queue-bound` caps per-card
 in-flight jobs, refusing excess submits with a typed QueueFull error.
 Every accepted job terminates in a result or a typed error.
+
+BACKENDS (the --backend values): `default` is the build's native backend
+(the bit-exact sim runtime, or PJRT-CPU when built with `--features
+xla`); `sim` / `xla` name them explicitly; `cufft-profile` replays the
+paper's cuFFT kernel-sequence traces (fft only — rfft/conv jobs are
+refused with a typed capability error). `fftsweep telemetry` and
+`fftsweep govern` print the active backend's capability summary header.
 
 GOVERNORS (the --governor values):
   boost        no DVFS: everything at the boost clock
@@ -147,6 +157,19 @@ fn gpu_arg(args: &Args) -> Result<GpuSpec> {
 fn precision_arg(args: &Args) -> Result<Precision> {
     let p = args.str_or("precision", "fp32");
     Precision::parse(p).with_context(|| format!("unknown precision '{p}'"))
+}
+
+/// `--backend <name>` resolved against the `--artifacts` dir; unknown
+/// names fail loud listing what this build compiled in.
+fn backend_arg(args: &Args) -> Result<std::sync::Arc<dyn ExecBackend>> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let name = args.str_or("backend", "default");
+    backend_by_name(name, &dir).with_context(|| {
+        format!(
+            "resolving --backend '{name}' (compiled in: default, {})",
+            compiled_backend_names().join(", ")
+        )
+    })
 }
 
 /// `--governor <name>` with `fixed` (the default) reading `--clock`.
@@ -388,7 +411,6 @@ fn emit_telemetry(args: &Args, snapshot: &fftsweep::telemetry::FleetSnapshot) ->
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let jobs = args.usize_or("jobs", 256);
     let governor = governor_arg(args, "fixed")?;
     let fleet = fleet_arg(args, &governor)?;
@@ -433,21 +455,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         health,
         ..EngineConfig::default()
     };
-    let rt = std::sync::Arc::new(Runtime::new(&dir)?);
+    let backend = backend_arg(args)?;
     let chaos_note = if cfg.fault_plan.is_empty() {
         String::new()
     } else {
         format!(", chaos {} fault(s)", cfg.fault_plan.faults.len())
     };
     println!(
-        "serving on {n_cards} card(s), governor {}{}{chaos_note} (runtime: {})",
+        "serving on {n_cards} card(s), governor {}{}{chaos_note} (backend {}: {})",
         governor.label(),
         power_budget_w
             .map(|w| format!(", power budget {w} W"))
             .unwrap_or_default(),
-        rt.platform()
+        backend.name(),
+        backend.platform()
     );
-    let engine = Engine::start(rt, fleet, cfg)?;
+    let engine = Engine::start(backend, fleet, cfg)?;
 
     let mut rng = Rng::new(7);
     // `--lengths` restricts traffic to the given lengths; each one is
@@ -551,7 +574,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `fftsweep telemetry`: replay one seeded job trace through an uncapped
 /// and a capped fleet and tabulate what the watt ceiling costs and buys.
 fn cmd_telemetry(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let governor = governor_arg(args, "boost")?;
     let specs: Vec<GpuSpec> = fleet_arg(args, &governor)?
         .into_iter()
@@ -569,9 +591,10 @@ fn cmd_telemetry(args: &Args) -> Result<()> {
         }
         None => 0.5 * specs.iter().map(|s| s.tdp_w).sum::<f64>(),
     };
-    let rt = std::sync::Arc::new(Runtime::new(&dir)?);
+    let backend = backend_arg(args)?;
+    println!("{}", backend.capabilities().summary());
     let (stats, table) = fftsweep::analysis::telemetry::budget_comparison(
-        rt, &specs, &governor, jobs, &lengths, seed, budget_w,
+        backend, &specs, &governor, jobs, &lengths, seed, budget_w,
     )?;
     println!("{}", table.to_ascii());
     let capped = stats.last().expect("capped run present");
@@ -591,6 +614,11 @@ fn cmd_telemetry(args: &Args) -> Result<()> {
 
 fn cmd_govern(args: &Args) -> Result<()> {
     let gpu = gpu_arg(args)?;
+    // The governor comparison prices batches through the sim's exec
+    // model, but the serving stack it stands in for is backend-scoped:
+    // print which backend (and capability envelope) the comparison
+    // applies to, so replayed output is attributable.
+    println!("{}", backend_arg(args)?.capabilities().summary());
     let quick = args.has("quick");
     let batches = args.usize_or("batches", if quick { 24 } else { 96 });
     let seed = args.u64_or("seed", 7);
@@ -692,6 +720,25 @@ fn cmd_roofline(args: &Args) -> Result<()> {
     println!("  intensity {:.2} ops/byte → {}", e.intensity, if e.hbm_bound { "HBM-bound" } else { "VPU-bound (→ MXU formulation on real TPUs)" });
     println!("  roofline time per step: {:.2} µs", e.t_roofline_s * 1e6);
     println!("  max tile_b at 50% VMEM: {}", max_tile_b(n, precision, &target, 0.5));
+
+    // GPU-side plan roofline: what the governors' regime rule sees for
+    // this length on the chosen card (DESIGN.md §4g).
+    let gpu = gpu_arg(args)?;
+    let pr = fftsweep::analysis::roofline::classify_plan(&gpu, n, precision);
+    println!("GPU plan roofline on {} (N={n}, {precision}):", gpu.name);
+    println!(
+        "  algorithm {:?}: {} radix-2-equivalent stages in {} pass(es), {} KiB moved",
+        pr.algorithm,
+        fnum(pr.radix2_stages, 1),
+        pr.passes,
+        pr.bytes_moved / 1024
+    );
+    println!(
+        "  t_compute {:.3} µs vs t_memory {:.3} µs → {:?}",
+        pr.t_compute_s * 1e6,
+        pr.t_memory_s * 1e6,
+        pr.regime
+    );
     Ok(())
 }
 

@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::job::Envelope;
 use crate::coordinator::CoordError;
+use crate::runtime::BackendCaps;
 
 /// A packed batch ready for execution on one card.
 pub struct PackedBatch {
@@ -70,13 +71,17 @@ struct Pending {
 /// The batcher. Not thread-safe by itself; the engine owns it behind a lock.
 pub struct Batcher {
     pending: BTreeMap<(Arc<str>, usize), Pending>,
+    /// The serving backend's advertised envelope: admission is gated on
+    /// what the backend says it can execute, not on planner internals.
+    caps: BackendCaps,
     pub max_wait: Duration,
 }
 
 impl Batcher {
-    pub fn new(max_wait: Duration) -> Self {
+    pub fn new(max_wait: Duration, caps: BackendCaps) -> Self {
         Self {
             pending: BTreeMap::new(),
+            caps,
             max_wait,
         }
     }
@@ -84,8 +89,8 @@ impl Batcher {
     /// Add a job under its (route, card); returns `Ok(Some(batch))` when
     /// the slot reached the device batch. Rejections are typed
     /// ([`CoordError`]) and happen at submit time:
-    ///   * a length with no execution-plan support is refused before it
-    ///     can reach (and panic) a worker thread,
+    ///   * a length outside the backend's advertised capability envelope
+    ///     is refused before it can reach (and panic) a worker thread,
     ///   * a transform-length mismatch against an existing slot is a hard
     ///     error (in release builds it previously survived as a
     ///     `debug_assert` until `planes()` panicked mid-copy): the job is
@@ -98,7 +103,7 @@ impl Batcher {
         card: usize,
         env: Envelope,
     ) -> anyhow::Result<Option<PackedBatch>> {
-        if !crate::dsp::planner::supports(n as usize) {
+        if !self.caps.supports_len(n) {
             return Err(CoordError::PlanUnsupported { n }.into());
         }
         let key = (artifact.clone(), card);
@@ -209,9 +214,29 @@ mod tests {
         Arc::from(s)
     }
 
+    /// A wide-open capability envelope (every n >= 1), matching what the
+    /// sim backend advertises — the admission behaviour these tests pin.
+    fn caps() -> BackendCaps {
+        BackendCaps {
+            backend: "test",
+            kinds: vec!["fft", "rfft", "conv"],
+            min_n: 1,
+            max_n: u64::MAX,
+            pow2_only: false,
+            precisions: vec![crate::types::Precision::Fp32],
+            split_complex_planes: true,
+            locked_clocks: true,
+            nvml: false,
+            device_mem_bytes: 0,
+            l2_bytes: 256 * 1024,
+            dev_bw_gbs: 0.0,
+            shared_bw_gbs: 0.0,
+        }
+    }
+
     #[test]
     fn fills_batch_at_device_capacity() {
-        let mut b = Batcher::new(Duration::from_millis(5));
+        let mut b = Batcher::new(Duration::from_millis(5), caps());
         let a = name("a");
         let mut got = None;
         for i in 0..4 {
@@ -226,7 +251,7 @@ mod tests {
 
     #[test]
     fn partial_batch_flushes_on_force() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let (e, _rx) = env(0, 8);
         assert!(b.push(&a, 8, 4, 0, e).unwrap().is_none());
@@ -238,7 +263,7 @@ mod tests {
 
     #[test]
     fn timeout_flush() {
-        let mut b = Batcher::new(Duration::from_millis(1));
+        let mut b = Batcher::new(Duration::from_millis(1), caps());
         let a = name("a");
         let (e, _rx) = env(0, 8);
         b.push(&a, 8, 4, 0, e).unwrap();
@@ -248,7 +273,7 @@ mod tests {
 
     #[test]
     fn separate_artifacts_never_mix() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let (e1, _r1) = env(1, 8);
         let (e2, _r2) = env(2, 16);
         b.push(&name("a8"), 8, 4, 0, e1).unwrap();
@@ -263,7 +288,7 @@ mod tests {
 
     #[test]
     fn separate_cards_never_mix() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let (e1, _r1) = env(1, 8);
         let (e2, _r2) = env(2, 8);
@@ -283,7 +308,7 @@ mod tests {
         // Promoted from a debug_assert: a route/artifact mismatch must be
         // rejected in release builds too, before it can corrupt planes() —
         // and as a CoordError callers can match on.
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let (e1, _r1) = env(1, 8);
         assert!(b.push(&a, 8, 4, 0, e1).unwrap().is_none());
@@ -307,7 +332,7 @@ mod tests {
     fn unplannable_length_rejected_at_submit_time() {
         // n=0 has no execution plan: the push must refuse it with a typed
         // error instead of letting a worker thread panic on it later.
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let (e, _rx) = env(1, 0);
         let err = b.push(&a, 0, 4, 0, e).expect_err("n=0 must be refused");
@@ -322,7 +347,7 @@ mod tests {
 
     #[test]
     fn flush_slot_is_targeted() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let other = name("other");
         let (e1, _r1) = env(1, 8);
@@ -343,7 +368,7 @@ mod tests {
 
     #[test]
     fn flush_card_drains_only_that_card() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let other = name("b");
         let (e1, _r1) = env(1, 8);
@@ -364,7 +389,7 @@ mod tests {
 
     #[test]
     fn pending_jobs_per_card_counts_only_that_card() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let other = name("b");
         let (e1, _r1) = env(1, 8);
@@ -381,7 +406,7 @@ mod tests {
 
     #[test]
     fn planes_zero_padded() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let (e, _rx) = env(3, 4);
         b.push(&name("a"), 4, 3, 0, e).unwrap();
         let batch = b.flush(true).pop().unwrap();
@@ -394,7 +419,7 @@ mod tests {
 
     #[test]
     fn planes_into_reuses_and_rezeroes_buffers() {
-        let mut b = Batcher::new(Duration::from_secs(10));
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
         let a = name("a");
         let (e, _rx) = env(7, 4);
         b.push(&a, 4, 3, 0, e).unwrap();
@@ -425,7 +450,7 @@ mod tests {
                 (jobs, device_batch, cards)
             },
             |&(jobs, device_batch, cards)| {
-                let mut b = Batcher::new(Duration::from_secs(100));
+                let mut b = Batcher::new(Duration::from_secs(100), caps());
                 let a = name("a");
                 let mut seen = Vec::new();
                 let mut rxs = Vec::new();

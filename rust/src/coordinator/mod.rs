@@ -4,7 +4,8 @@
 //! their (length, dtype), dispatched least-loaded across N simulated cards
 //! (heterogeneous specs allowed), packed by the dynamic batcher into the
 //! artifact's fixed device batch per card, executed on per-card worker
-//! threads through the runtime, and split back per request.
+//! threads through the [`ExecBackend`] the engine was started with, and
+//! split back per request.
 //!
 //! Every worker owns its own simulated NVML handle and its own
 //! [`crate::governor::ClockGovernor`] instance: the governor picks the
@@ -44,7 +45,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::governor::{BatchFeedback, ClockGovernor, GovernorContext, GovernorKind};
 use crate::pipeline::nvml::{ClockState, SimNvml};
-use crate::runtime::Runtime;
+use crate::runtime::{ExecBackend, ExecModule, IntoBackend};
 use crate::sim::fault::{FaultPlan, FaultState};
 use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
@@ -250,7 +251,7 @@ impl Card {
 
 /// The serving engine: a fleet of N governed cards behind one router.
 pub struct Engine {
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn ExecBackend>,
     router: Router,
     batcher: Arc<Mutex<Batcher>>,
     cards: Vec<Card>,
@@ -274,11 +275,15 @@ pub struct Engine {
 impl Engine {
     /// Start a fleet: one worker thread per card, each owning its own
     /// `SimNvml` and governor instance, plus the batch-timeout flusher.
-    pub fn start(runtime: Arc<Runtime>, fleet: Vec<CardConfig>, cfg: EngineConfig) -> Result<Self> {
+    pub fn start(backend: impl IntoBackend, fleet: Vec<CardConfig>, cfg: EngineConfig) -> Result<Self> {
+        let backend = backend.into_backend();
         anyhow::ensure!(!fleet.is_empty(), "fleet needs at least one card");
-        let router = Router::from_manifest(runtime.manifest());
+        let router = Router::from_manifest(backend.manifest());
         anyhow::ensure!(!router.is_empty(), "no fft artifacts in manifest");
-        let batcher = Arc::new(Mutex::new(Batcher::new(cfg.max_batch_wait)));
+        let batcher = Arc::new(Mutex::new(Batcher::new(
+            cfg.max_batch_wait,
+            backend.capabilities(),
+        )));
         let metrics = Arc::new(Metrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
         let health = Arc::new(HealthMonitor::new(cfg.health.clone(), fleet.len()));
@@ -322,7 +327,7 @@ impl Engine {
             let worker = WorkerState {
                 gpu: cc.spec.clone(),
                 card: i,
-                runtime: runtime.clone(),
+                backend: backend.clone(),
                 fleet_metrics: metrics.clone(),
                 card_metrics: card_metrics.clone(),
                 nvml: nvml.clone(),
@@ -451,7 +456,7 @@ impl Engine {
         };
 
         Ok(Self {
-            runtime,
+            backend,
             router,
             batcher,
             cards,
@@ -472,20 +477,20 @@ impl Engine {
 
     /// Single-card convenience (the pre-fleet call shape).
     pub fn start_single(
-        runtime: Arc<Runtime>,
+        backend: impl IntoBackend,
         spec: GpuSpec,
         governor: GovernorKind,
         cfg: EngineConfig,
     ) -> Result<Self> {
-        Self::start(runtime, vec![CardConfig::new(spec, governor)], cfg)
+        Self::start(backend, vec![CardConfig::new(spec, governor)], cfg)
     }
 
     pub fn router(&self) -> &Router {
         &self.router
     }
 
-    pub fn runtime(&self) -> &Arc<Runtime> {
-        &self.runtime
+    pub fn backend(&self) -> &Arc<dyn ExecBackend> {
+        &self.backend
     }
 
     pub fn cards(&self) -> &[Card] {
@@ -774,13 +779,13 @@ impl Engine {
         let mut warmed = 0usize;
         for &n in lengths {
             let route = self.router.route(n, dtype)?.clone();
-            self.runtime.load(&route.artifact)?;
+            self.backend.load(&route.artifact)?;
             warmed += 1;
         }
         for kind in ["rfft", "conv"] {
-            for meta in self.runtime.manifest().of_kind(kind) {
+            for meta in self.backend.manifest().of_kind(kind) {
                 if lengths.contains(&meta.n) && meta.dtype == dtype {
-                    self.runtime.load(&meta.name)?;
+                    self.backend.load(&meta.name)?;
                     warmed += 1;
                 }
             }
@@ -887,7 +892,7 @@ struct FailedJob {
 struct WorkerState {
     gpu: GpuSpec,
     card: usize,
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn ExecBackend>,
     fleet_metrics: Arc<Metrics>,
     card_metrics: Arc<Metrics>,
     nvml: Arc<SimNvml>,
@@ -940,13 +945,13 @@ fn worker_loop(
     let tesla_class = w.nvml.supports_locked_clocks();
     let boost_mhz = w.gpu.boost_clock_mhz;
     // Worker-owned steady-state caches: loaded modules per artifact (no
-    // runtime.load() per batch), reusable input/output planes (no per-batch
+    // backend.load() per batch), reusable input/output planes (no per-batch
     // plane allocation), the boost-clock pricing baseline per
     // (n, device_batch) so energy accounting costs one model evaluation
     // per batch instead of two, and the last governed clock so NVML is
     // only driven (and the transition trace only grows) when the governor
     // actually changes its request.
-    let mut modules: HashMap<Arc<str>, Arc<crate::runtime::LoadedModule>> = HashMap::new();
+    let mut modules: HashMap<Arc<str>, Arc<ExecModule>> = HashMap::new();
     let mut boost_runs: HashMap<(u64, u64), crate::sim::BatchRun> = HashMap::new();
     // Memoized watt→clock inversions per (n, device_batch, quarter-watt
     // share): the arbiter's deadband keeps shares piecewise-constant, so
@@ -1060,7 +1065,7 @@ fn worker_loop(
         let t0 = Instant::now();
         let module = match modules.get(&batch.artifact) {
             Some(m) => Ok(m.clone()),
-            None => w.runtime.load(&batch.artifact).map(|m| {
+            None => w.backend.load(&batch.artifact).map(|m| {
                 modules.insert(batch.artifact.clone(), m.clone());
                 m
             }),
@@ -1071,12 +1076,13 @@ fn worker_loop(
                 // Real-to-real filterbank rows: the zeroed imaginary
                 // plane is ignored and the output imaginary plane is
                 // pinned to zeros so result splitting stays uniform.
-                m.run_conv_f32_into(&in_re, &mut out_re).map(|()| {
+                w.backend.run_conv_into(&m, &in_re, &mut out_re).map(|()| {
                     out_im.clear();
                     out_im.resize(out_re.len(), 0.0);
                 })
             } else {
-                m.run_fft_f32_into(&in_re, &in_im, &mut out_re, &mut out_im)
+                w.backend
+                    .run_fft_into(&m, &in_re, &in_im, &mut out_re, &mut out_im)
             }
         });
         let exec_us = t0.elapsed().as_micros() as u64;
@@ -1339,6 +1345,7 @@ fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Runtime;
     use crate::sim::gpu::tesla_v100;
     use std::path::Path;
 
@@ -1356,11 +1363,11 @@ mod tests {
     #[test]
     fn prewarm_loads_artifacts_before_traffic() {
         let e = engine();
-        assert!(e.runtime().loaded_names().is_empty(), "cold start");
+        assert!(e.backend().loaded_names().is_empty(), "cold start");
         let warmed = e.prewarm(&[1024], "f32").unwrap();
         assert_eq!(warmed, 1);
         assert!(e
-            .runtime()
+            .backend()
             .loaded_names()
             .contains(&"fft_f32_n1024_b64".to_string()));
         e.shutdown();
@@ -1374,7 +1381,7 @@ mod tests {
         // up front.
         let warmed = e.prewarm(&[4096], "f32").unwrap();
         assert_eq!(warmed, 3, "fft + rfft + conv artifacts for the same length");
-        let names = e.runtime().loaded_names();
+        let names = e.backend().loaded_names();
         assert!(names.contains(&"rfft_f32_n4096_b16".to_string()));
         assert!(names.contains(&"conv_f32_n4096_t129_b16".to_string()));
         e.shutdown();

@@ -430,6 +430,51 @@ impl FftPlan {
         stages + blue + four
     }
 
+    /// Equivalent radix-2 butterfly stages one transform issues per
+    /// element — the compute-side input to the roofline classifier
+    /// (`analysis::roofline::classify_plan`). A radix-8 pass does the
+    /// work of three radix-2 stages in a single plane sweep, so this is
+    /// Σ log₂(radix) over the schedule; sub-plans recurse (Bluestein
+    /// runs its inner transform twice, four-step runs its column and row
+    /// schedules once each per element).
+    pub fn radix2_equiv_stages(&self) -> f64 {
+        if let Some(b) = &self.bluestein {
+            return 2.0 * b.inner.radix2_equiv_stages();
+        }
+        if let Some(fs) = &self.four_step {
+            return fs.col.radix2_equiv_stages() + fs.row.radix2_equiv_stages();
+        }
+        self.stages.iter().map(|s| (s.radix as f64).log2()).sum()
+    }
+
+    /// Total bytes one transform moves through the memory system at the
+    /// given execution precision: each plane sweep reads and writes the
+    /// full complex plane, plus the precomputed tables streamed
+    /// alongside. Four-step charges its sub-plans per column/row
+    /// transform plus the inter-step twiddle sweep; Bluestein charges
+    /// two inner length-m transforms and its three O(m) pointwise sweeps
+    /// at f64 (the documented accuracy tier it executes in regardless of
+    /// the requested precision). This is the demand-traffic measure the
+    /// roofline reports — actual DRAM traffic is lower when a plan is
+    /// cache-resident, which the classifier models via its bandwidth
+    /// tier, not here.
+    pub fn bytes_moved(&self, precision: crate::types::Precision) -> u64 {
+        let cb = precision.complex_bytes();
+        if let Some(b) = &self.bluestein {
+            let cb64 = crate::types::Precision::Fp64.complex_bytes();
+            return 2 * b.inner.bytes_moved(crate::types::Precision::Fp64)
+                + 3 * 2 * cb64 * b.m as u64
+                + b.table_bytes() as u64;
+        }
+        if let Some(fs) = &self.four_step {
+            return fs.n1 as u64 * fs.col.bytes_moved(precision)
+                + fs.n2 as u64 * fs.row.bytes_moved(precision)
+                + 2 * cb * self.n as u64
+                + fs.table_bytes() as u64;
+        }
+        self.stages.len() as u64 * 2 * cb * self.n as u64 + self.twiddle_bytes() as u64
+    }
+
     /// Transform a block of `bl` rows already loaded into `s`'s A planes
     /// in batch-major layout; returns `true` when the result ended in the
     /// A planes (even stage count). Mixed-radix plans only (Bluestein
@@ -2306,6 +2351,53 @@ mod tests {
             (0..n).map(|_| r.gauss()).collect(),
             (0..n).map(|_| r.gauss()).collect(),
         )
+    }
+
+    #[test]
+    fn radix2_equiv_stages_telescopes_to_log2n_for_smooth_lengths() {
+        // Σ log₂(radix) over any smooth schedule is log₂(N) exactly,
+        // monolithic or four-step; Bluestein pays two inner transforms of
+        // the padded power of two instead.
+        for n in [256usize, 1000, 1024, 1536, 16384, 1 << 18] {
+            let plan = plan_for(n);
+            let want = (n as f64).log2();
+            assert!(
+                (plan.radix2_equiv_stages() - want).abs() < 1e-9,
+                "n={n}: {} vs log2 {}",
+                plan.radix2_equiv_stages(),
+                want
+            );
+        }
+        let blue = plan_for(19321); // 139², non-smooth
+        assert_eq!(blue.algorithm(), PlanAlgorithm::Bluestein);
+        let m = (2 * 19321 - 1usize).next_power_of_two();
+        assert!((blue.radix2_equiv_stages() - 2.0 * (m as f64).log2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_moved_tracks_plane_sweeps_and_precision() {
+        use crate::types::Precision;
+        // Monolithic: stage-count plane sweeps plus the twiddle stream.
+        let p1024 = plan_for(1024);
+        let stages = p1024.stage_radices().len() as u64;
+        assert_eq!(
+            p1024.bytes_moved(Precision::Fp32),
+            stages * 2 * 8 * 1024 + p1024.twiddle_bytes() as u64
+        );
+        // f64 planes double the plane traffic, not the table bytes.
+        assert!(p1024.bytes_moved(Precision::Fp64) > p1024.bytes_moved(Precision::Fp32));
+        // Four-step at 2^18 moves more bytes than a same-length
+        // monolithic *per sweep* accounting would suggest is free: both
+        // are within 2x of each other, and both dwarf the 1024 plan.
+        let big = plan_for(1 << 18);
+        assert_eq!(big.algorithm(), PlanAlgorithm::FourStep);
+        assert!(big.bytes_moved(Precision::Fp32) > 100 * p1024.bytes_moved(Precision::Fp32));
+        // Bluestein executes in f64 regardless of the requested tier.
+        let blue = plan_for(19321);
+        assert_eq!(
+            blue.bytes_moved(Precision::Fp32),
+            blue.bytes_moved(Precision::Fp64)
+        );
     }
 
     #[test]

@@ -124,7 +124,21 @@ impl CommonClock {
             protocol: Protocol::quick(),
         };
         let sweep = sweep_gpu(gpu, crate::types::Precision::Fp32, &cfg);
-        let pts = optima(gpu, &sweep);
+        let mut pts = optima(gpu, &sweep);
+        // Roofline regime rule (DESIGN.md §4g): before averaging, floor the
+        // compute-bound lengths' per-length optima at the voltage knee —
+        // below it their energy can only get worse (voltage stops falling,
+        // time keeps rising), so a sweep artifact on one of them must not
+        // drag the fleet-wide common clock down for every length.
+        let knee = freq_table(gpu).snap_at_most(gpu.f_knee_mhz, gpu.boost_clock_mhz);
+        for p in &mut pts {
+            let regime =
+                crate::analysis::roofline::classify_plan(gpu, p.n, crate::types::Precision::Fp32)
+                    .regime;
+            if regime == crate::analysis::roofline::PlanRegime::ComputeBound {
+                p.f_opt_mhz = p.f_opt_mhz.max(knee);
+            }
+        }
         let mean = mean_optimal_mhz(gpu, &pts);
         // Capped snap: the mean can never legitimately exceed boost, and
         // on cards whose boost sits between table entries a plain nearest

@@ -13,6 +13,7 @@
 use std::collections::HashMap;
 
 use crate::analysis::optimal::optimal_for_length;
+use crate::analysis::roofline::{classify_plan, PlanRegime};
 use crate::cufft::plan::is_smooth_127;
 use crate::governor::{ClockGovernor, GovernorContext, GovernorError};
 use crate::harness::sweep::{sweep_gpu, SweepConfig};
@@ -50,13 +51,31 @@ impl PerLengthOptimal {
     /// Off-grid optimum: argmin of the interpolated energy curve over the
     /// table clocks at or below boost — always a supported clock, never an
     /// above-boost snap.
+    ///
+    /// The candidate set is roofline-informed (DESIGN.md §4g): memory-bound
+    /// plans (four-step, Bluestein, anything past the residency budget)
+    /// tolerate deep downclock — execution time is flat above the
+    /// memory-saturation clock, so the unrestricted argmin finds the paper's
+    /// near-knee optimum. Compute-bound plans slow down linearly with the
+    /// clock, so their candidates are floored at the voltage knee (below
+    /// it, voltage — and power — stop falling while time keeps rising:
+    /// energy can only get worse).
     fn derive_interp(gpu: &GpuSpec, workload: &FftWorkload, ctx: &GovernorContext) -> f64 {
         let table = freq_table(gpu);
-        let candidates: Vec<f64> = table
+        let mut candidates: Vec<f64> = table
             .stride(ctx.freq_stride.max(4))
             .into_iter()
             .filter(|&f| f <= gpu.boost_clock_mhz + 1e-9)
             .collect();
+        let regime = classify_plan(gpu, workload.n, workload.precision).regime;
+        if regime == PlanRegime::ComputeBound {
+            let knee = table.snap_at_most(gpu.f_knee_mhz, gpu.boost_clock_mhz);
+            let floored: Vec<f64> =
+                candidates.iter().copied().filter(|&f| f >= knee - 1e-9).collect();
+            if !floored.is_empty() {
+                candidates = floored;
+            }
+        }
         let energies: Vec<f64> = candidates
             .iter()
             .map(|&f| interp_time_power(gpu, workload, f).energy_j)
@@ -196,6 +215,37 @@ mod tests {
             let e_boost = run_batch(&g, &w, g.boost_clock_mhz).energy_j;
             assert!(e_opt < 0.95 * e_boost, "n={n}: {e_opt} vs boost {e_boost}");
         }
+    }
+
+    #[test]
+    fn clock_choice_differs_by_roofline_regime() {
+        // The §4g acceptance: a resident compute-bound plan (1536,
+        // mixed-radix in L2) is floored at the voltage knee, while a
+        // memory-bound four-step plan (3·2^20) downclocks past it — the
+        // two regimes must produce different clocks on the same card.
+        use crate::analysis::roofline::{classify_plan, PlanRegime};
+        let g = tesla_v100();
+        assert_eq!(
+            classify_plan(&g, 1536, Precision::Fp32).regime,
+            PlanRegime::ComputeBound
+        );
+        assert_eq!(
+            classify_plan(&g, 3 << 20, Precision::Fp32).regime,
+            PlanRegime::MemoryBound
+        );
+        let mut gov = PerLengthOptimal::new();
+        let ctx = GovernorContext::default();
+        let knee = freq_table(&g).snap_at_most(g.f_knee_mhz, g.boost_clock_mhz);
+        let f_compute = gov.choose(&g, &wl(&g, 1536), &ctx).unwrap();
+        let f_memory = gov.choose(&g, &wl(&g, 3 << 20), &ctx).unwrap();
+        assert!(
+            f_compute >= knee - 1e-9,
+            "compute-bound choice {f_compute} dipped below the knee {knee}"
+        );
+        assert!(
+            f_memory < f_compute,
+            "memory-bound choice {f_memory} should downclock past the compute-bound {f_compute}"
+        );
     }
 
     #[test]

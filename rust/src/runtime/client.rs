@@ -214,6 +214,9 @@ impl Runtime {
             return Ok(m.clone());
         }
         let meta = self.manifest.get(name)?.clone();
+        // Same load-time gate as the sim backend (hoisted so the two can
+        // never drift again): digest + HLO-header check before compiling.
+        super::validation::check_artifact_on_load(&meta)?;
         let proto = xla::HloModuleProto::from_text_file(
             meta.file
                 .to_str()

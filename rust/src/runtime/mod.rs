@@ -1,15 +1,21 @@
 //! L3 runtime: load AOT artifacts (HLO text) and execute them from rust.
 //! Python never runs here.
 //!
-//! Two interchangeable backends behind one API:
+//! Interchangeable backends behind one capability-discovering trait
+//! ([`backend::ExecBackend`] — the surface the coordinator, governors,
+//! CLI and benches program against):
 //!   * `client` (feature `xla`): compile-once PJRT CPU execution of the
 //!     real HLO text — requires the native `xla_extension` binding (see
 //!     Cargo.toml header note),
 //!   * `sim_client` (default): a pure-rust backend that executes artifacts
 //!     with the DSP oracle and synthesizes a manifest when none is on
-//!     disk, so the serving stack runs in hermetic environments.
+//!     disk, so the serving stack runs in hermetic environments,
+//!   * `backend::CufftProfileBackend` (all feature sets): replays the
+//!     paper-calibrated cuFFT plan model for timing while executing
+//!     numerics through the planned DSP engine.
 
 pub mod artifact;
+pub mod backend;
 #[cfg(feature = "xla")]
 pub mod client;
 #[cfg(not(feature = "xla"))]
@@ -17,6 +23,14 @@ pub mod sim_client;
 pub mod validation;
 
 pub use artifact::{ArtifactMeta, Manifest};
+pub use backend::{
+    backend_by_name, compiled_backend_names, default_backend, BackendCaps, BackendError,
+    CufftProfileBackend, ExecBackend, ExecModule, IntoBackend,
+};
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use backend::SimBackend;
 #[cfg(feature = "xla")]
 pub use client::{LoadedModule, Runtime};
 #[cfg(not(feature = "xla"))]

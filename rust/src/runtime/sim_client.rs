@@ -27,10 +27,11 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, RwLock};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::artifact::{ArtifactMeta, Manifest};
-use super::validation::sha256_16;
+use super::backend::resize_for_overwrite;
+use super::validation::check_artifact_on_load;
 use crate::dsp;
 use crate::dsp::planner::{self, Direction};
 
@@ -178,8 +179,9 @@ impl LoadedModule {
     fn exec_fft_into(&self, re: &[f32], im: &[f32], out_re: &mut Vec<f32>, out_im: &mut Vec<f32>) {
         let n = self.meta.n as usize;
         let batch = self.meta.batch as usize;
-        out_re.resize(batch * n, 0.0);
-        out_im.resize(batch * n, 0.0);
+        // No zero-fill: run_rows overwrites every element of both planes.
+        resize_for_overwrite(out_re, batch * n);
+        resize_for_overwrite(out_im, batch * n);
         let plan = self.plan();
         planner::run_rows(&plan, Direction::Forward, re, im, batch, out_re, out_im);
     }
@@ -226,7 +228,8 @@ impl LoadedModule {
     fn exec_conv_into(&self, x: &[f32], y: &mut Vec<f32>) {
         let n = self.meta.n as usize;
         let batch = self.meta.batch as usize;
-        y.resize(batch * n, 0.0);
+        // No zero-fill: run_conv_rows overwrites every element of `y`.
+        resize_for_overwrite(y, batch * n);
         let plan = self.cplan();
         planner::run_conv_rows(&plan, x, batch, y);
     }
@@ -236,8 +239,10 @@ impl LoadedModule {
         let batch = self.meta.batch as usize;
         let rplan = self.rplan();
         let o = rplan.out_len();
-        out_re.resize(batch * o, 0.0);
-        out_im.resize(batch * o, 0.0);
+        // No zero-fill: run_rfft_rows overwrites every element out to
+        // batch × (n/2+1) of both spectrum planes.
+        resize_for_overwrite(out_re, batch * o);
+        resize_for_overwrite(out_im, batch * o);
         planner::run_rfft_rows(&rplan, x, batch, out_re, out_im);
     }
 
@@ -349,21 +354,7 @@ impl Runtime {
             "artifact {name}: transform length {} has no plan support",
             meta.n
         );
-        if meta.digest != Manifest::SIMULATED_DIGEST {
-            let text = std::fs::read_to_string(&meta.file)
-                .with_context(|| format!("reading HLO text {:?}", meta.file))?;
-            anyhow::ensure!(
-                text.starts_with("HloModule"),
-                "artifact {name}: {:?} is not HLO text",
-                meta.file
-            );
-            let actual = sha256_16(text.as_bytes());
-            anyhow::ensure!(
-                actual == meta.digest,
-                "artifact {name}: digest mismatch ({actual} vs manifest {})",
-                meta.digest
-            );
-        }
+        check_artifact_on_load(&meta)?;
         let module = Arc::new(LoadedModule::new(meta));
         // First inserter wins: a load racing this one returns the already
         // cached module instead of installing a second copy.
@@ -386,6 +377,7 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::validation::sha256_16;
     use crate::util::rng::Rng;
 
     fn rt() -> Runtime {

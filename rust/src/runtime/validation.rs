@@ -5,9 +5,9 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use super::artifact::Manifest;
+use super::artifact::{ArtifactMeta, Manifest};
 
 /// A validation finding for one artifact.
 #[derive(Debug, Clone)]
@@ -103,6 +103,33 @@ fn sha256(data: &[u8]) -> [u8; 32] {
         out[4 * i..4 * i + 4].copy_from_slice(&v.to_be_bytes());
     }
     out
+}
+
+/// Load-time artifact gate — the one digest/header check both runtime
+/// backends call before trusting an on-disk artifact (the two used to
+/// carry private copies that drifted on error wording; the PJRT side
+/// then lost the check entirely). Synthetic manifest entries (digest
+/// `Manifest::SIMULATED_DIGEST`) have nothing on disk to verify and pass
+/// through; real entries must be HLO text whose digest matches the
+/// manifest.
+pub fn check_artifact_on_load(meta: &ArtifactMeta) -> Result<()> {
+    if meta.digest == Manifest::SIMULATED_DIGEST {
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(&meta.file)
+        .with_context(|| format!("reading HLO text {:?}", meta.file))?;
+    if !text.starts_with("HloModule") {
+        bail!("artifact {}: {:?} is not HLO text", meta.name, meta.file);
+    }
+    let actual = sha256_16(text.as_bytes());
+    if actual != meta.digest {
+        bail!(
+            "artifact {}: digest mismatch ({actual} vs manifest {})",
+            meta.name,
+            meta.digest
+        );
+    }
+    Ok(())
 }
 
 /// Validate every artifact in a manifest. Empty vec == all good.

@@ -1,0 +1,209 @@
+//! Backend conformance suite: every `ExecBackend` the build carries must
+//! honor the same contract — honest capability discovery, typed refusals
+//! for out-of-envelope requests, shape-correct typed batch entry points,
+//! and a time estimator that is monotone in N across kernel-count
+//! boundaries (the paper's execution-time staircase, Figs 4/5).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fftsweep::runtime::{
+    backend_by_name, compiled_backend_names, default_backend, BackendError, CufftProfileBackend,
+    ExecBackend,
+};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::types::{FftWorkload, Precision};
+use fftsweep::util::rng::Rng;
+
+fn dir() -> &'static Path {
+    Path::new("/nonexistent-artifacts")
+}
+
+/// Every backend the build compiled in, by name, through the same
+/// construction path the CLI uses.
+fn all_backends() -> Vec<Arc<dyn ExecBackend>> {
+    let mut backends = vec![default_backend(dir()).expect("default backend")];
+    for name in compiled_backend_names() {
+        backends.push(backend_by_name(name, dir()).expect(name));
+    }
+    backends
+}
+
+#[test]
+fn capabilities_are_honest_for_every_backend() {
+    for b in all_backends() {
+        let caps = b.capabilities();
+        assert_eq!(caps.backend, b.name(), "caps must name their backend");
+        assert!(caps.summary().starts_with(&format!("backend {}", b.name())));
+        // Every artifact the backend's own manifest advertises for an
+        // executable kind sits inside the envelope and actually loads.
+        for meta in b.manifest().entries.values() {
+            if !caps.kinds.iter().any(|k| *k == meta.kind) {
+                continue;
+            }
+            assert!(
+                caps.supports_len(meta.n),
+                "{}: manifest advertises {} (n={}) outside the claimed envelope",
+                b.name(),
+                meta.name,
+                meta.n
+            );
+            let m = b.load(&meta.name).unwrap_or_else(|e| {
+                panic!("{}: advertised artifact {} failed to load: {e:#}", b.name(), meta.name)
+            });
+            assert_eq!(m.meta.name, meta.name);
+        }
+        // Off-envelope lengths are refused by the same caps admission
+        // check the Batcher consults.
+        assert!(!caps.supports_len(0), "{}: n=0 must stay refused", b.name());
+    }
+}
+
+#[test]
+fn typed_entry_points_produce_correct_shapes() {
+    for b in all_backends() {
+        let caps = b.capabilities();
+        let mut rng = Rng::new(11);
+        for meta in b.manifest().entries.values() {
+            // Keep the suite fast: exercise the numerics on the small and
+            // mid lengths; the large-N tier is covered by planner tests.
+            if meta.n > 16384 || !caps.kinds.iter().any(|k| *k == meta.kind) {
+                continue;
+            }
+            let (n, batch) = (meta.n as usize, meta.batch as usize);
+            let m = b.load(&meta.name).expect("load");
+            match meta.kind.as_str() {
+                "fft" => {
+                    let re: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+                    let im: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+                    let (mut o_re, mut o_im) = (Vec::new(), Vec::new());
+                    b.run_fft_into(&m, &re, &im, &mut o_re, &mut o_im)
+                        .unwrap_or_else(|e| panic!("{}: {} run: {e:#}", b.name(), meta.name));
+                    assert_eq!(o_re.len(), batch * n, "{}: {}", b.name(), meta.name);
+                    assert_eq!(o_im.len(), batch * n, "{}: {}", b.name(), meta.name);
+                    // Parseval on row 0: the transform is a real FFT, not
+                    // a resize that happened to return.
+                    let e_time: f64 = (0..n)
+                        .map(|i| (re[i] as f64).powi(2) + (im[i] as f64).powi(2))
+                        .sum();
+                    let e_freq: f64 = (0..n)
+                        .map(|i| (o_re[i] as f64).powi(2) + (o_im[i] as f64).powi(2))
+                        .sum::<f64>()
+                        / n as f64;
+                    assert!(
+                        (e_time - e_freq).abs() < 1e-3 * e_time.max(1.0),
+                        "{}: {} violates Parseval: {e_time} vs {e_freq}",
+                        b.name(),
+                        meta.name
+                    );
+                }
+                "rfft" => {
+                    let x: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+                    let (mut o_re, mut o_im) = (Vec::new(), Vec::new());
+                    b.run_rfft_into(&m, &x, &mut o_re, &mut o_im)
+                        .unwrap_or_else(|e| panic!("{}: {} run: {e:#}", b.name(), meta.name));
+                    let bins = n / 2 + 1;
+                    assert_eq!(o_re.len(), batch * bins, "{}: {}", b.name(), meta.name);
+                    assert_eq!(o_im.len(), batch * bins, "{}: {}", b.name(), meta.name);
+                }
+                "conv" => {
+                    let x: Vec<f32> = (0..batch * n).map(|_| rng.gauss() as f32).collect();
+                    let mut out = Vec::new();
+                    b.run_conv_into(&m, &x, &mut out)
+                        .unwrap_or_else(|e| panic!("{}: {} run: {e:#}", b.name(), meta.name));
+                    assert_eq!(out.len(), batch * n, "{}: {}", b.name(), meta.name);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn cufft_profile_refuses_unsupported_kinds_typed() {
+    let b = CufftProfileBackend::new(dir()).expect("cufft-profile backend");
+    let caps = b.capabilities();
+    assert_eq!(caps.kinds, vec!["fft"], "replay backend prices C2C only");
+    // The filtered manifest carries no rfft/conv entries at all.
+    assert!(b.manifest().entries.values().all(|a| a.kind == "fft"));
+    // And the typed entry points refuse those kinds with BackendError,
+    // not a panic or a stringly error.
+    let m = b.load("fft_f32_n1024_b64").expect("fft module");
+    let x = vec![0.0f32; (m.meta.batch * m.meta.n) as usize];
+    let (mut o_re, mut o_im) = (Vec::new(), Vec::new());
+    for err in [
+        b.run_rfft_into(&m, &x, &mut o_re, &mut o_im).unwrap_err(),
+        b.run_conv_into(&m, &x, &mut o_re).unwrap_err(),
+    ] {
+        match err.downcast_ref::<BackendError>() {
+            Some(BackendError::Unsupported { backend, n, .. }) => {
+                assert_eq!(*backend, "cufft-profile");
+                assert_eq!(*n, 1024);
+            }
+            other => panic!("expected BackendError::Unsupported, got {other:?} ({err:#})"),
+        }
+    }
+}
+
+#[test]
+fn estimates_are_monotone_in_n_across_kernel_boundaries() {
+    // 1024 / 2^14 / 2^21 straddle the plan model's kernel-count
+    // boundaries (1, 2 and 3 kernels); estimates must rise strictly —
+    // and never plateau — for every backend, so admission heuristics can
+    // rely on "bigger transform, longer batch" regardless of target.
+    let g = tesla_v100();
+    for b in all_backends() {
+        let t: Vec<f64> = [1024u64, 1 << 14, 1 << 21]
+            .iter()
+            .map(|&n| {
+                let w = FftWorkload::new(n, Precision::Fp32, g.working_set_bytes);
+                b.estimate_time_s(&g, &w)
+            })
+            .collect();
+        assert!(
+            t.iter().all(|x| x.is_finite() && *x > 0.0),
+            "{}: degenerate estimates {t:?}",
+            b.name()
+        );
+        assert!(
+            t[0] < t[1] && t[1] < t[2],
+            "{}: estimate not monotone across kernel boundaries: {t:?}",
+            b.name()
+        );
+    }
+}
+
+#[test]
+fn backend_by_name_fails_loud_on_unknown_names() {
+    let err = backend_by_name("warp-drive", dir()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown backend"), "got: {msg}");
+    for name in compiled_backend_names() {
+        assert!(msg.contains(name), "error must list compiled backend '{name}': {msg}");
+    }
+}
+
+#[test]
+fn engine_serves_end_to_end_through_an_erased_backend() {
+    use fftsweep::coordinator::{Engine, EngineConfig};
+    use fftsweep::governor::GovernorKind;
+    // The coordinator's only runtime dependency is `dyn ExecBackend`: a
+    // type-erased default backend drives a single-card fleet end to end.
+    let backend = default_backend(dir()).expect("default backend");
+    let engine = Engine::start_single(
+        backend,
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine over dyn backend");
+    let n = 1024usize;
+    let mut rng = Rng::new(3);
+    let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+    let res = engine.execute(re, im).expect("execute");
+    assert_eq!(res.out_re.len(), n);
+    assert_eq!(res.out_im.len(), n);
+    assert_eq!(engine.backend().name(), engine.backend().capabilities().backend);
+    engine.shutdown();
+}
