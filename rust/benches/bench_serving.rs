@@ -1,7 +1,7 @@
 //! Bench: the planned-FFT serving engine, end to end — the first point on
 //! the repo's committed perf trajectory (`BENCH_serving.json`).
 //!
-//! Seven measurements:
+//! The measurements:
 //!   1. pre-PR sim path (per-row `Vec<C64>` + per-butterfly trig via
 //!      `dsp::fft`) in rows/s — the baseline the planner replaces,
 //!   2. planned path (`dsp::planner`, cached twiddles, reused scratch,
@@ -30,7 +30,15 @@
 //!      a few batches in, offered 2x the fault-free job count — goodput,
 //!      shed rate, lost-job count (must be zero) and simulated p99 vs an
 //!      identical fault-free control leg, in the JSON `robustness`
-//!      section the CI gate pins.
+//!      section the CI gate pins,
+//!   7. observability (schema 7): the identical open-loop serve measured
+//!      with request tracing off, then on — the tracing-overhead budget
+//!      (<5%) the CI gate pins — plus the cost of one full histogram
+//!      summary readout, in the JSON `observability` section.
+//!
+//! All latency percentiles here come from the serving stack's one
+//! histogram implementation (`telemetry::histogram::LogHistogram`), not
+//! a sort — the same readout the tracer and the exporters use.
 //!
 //! Regenerate with:
 //!   cd rust && cargo bench --bench bench_serving            # full
@@ -53,10 +61,10 @@ use fftsweep::governor::GovernorKind;
 use fftsweep::runtime::default_backend;
 use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::telemetry::{LogHistogram, TraceConfig};
 use fftsweep::util::bench::black_box;
 use fftsweep::util::json::Json;
 use fftsweep::util::rng::Rng;
-use fftsweep::util::stats::percentile;
 
 /// Counting allocator: the "allocs-frequency proxy". Counts every alloc and
 /// realloc so a serving phase can report allocations per job served.
@@ -368,15 +376,16 @@ fn main() {
     );
 
     // 4. Closed-loop execute() latency.
-    let mut lat_ms = Vec::with_capacity(latency_iters);
+    let lat_ms = LogHistogram::new();
     for _ in 0..latency_iters {
         let (re, im) = rand_planes(N, &mut rng);
         let t0 = Instant::now();
         black_box(engine.execute(re, im).expect("execute"));
-        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        lat_ms.record(t0.elapsed().as_secs_f64() * 1e3);
     }
-    let p50 = percentile(&lat_ms, 50.0);
-    let p99 = percentile(&lat_ms, 99.0);
+    let lat_ms = lat_ms.snapshot();
+    let p50 = lat_ms.percentile(50.0);
+    let p99 = lat_ms.percentile(99.0);
     println!("latency: p50 {p50:.3} ms, p99 {p99:.3} ms ({latency_iters} closed-loop jobs)");
 
     // 4b. Large-N tier: the cache-blocked four-step decomposition vs a
@@ -533,13 +542,13 @@ fn main() {
         let wall_s = t0.elapsed().as_secs_f64();
         let mut ok = 0u64;
         let mut resolved = 0u64;
-        let mut sim_ms = Vec::with_capacity(jobs);
+        let sim_ms = LogHistogram::new();
         for rx in rxs {
             match rx.recv_timeout(Duration::from_secs(60)) {
                 Ok(Ok(res)) => {
                     ok += 1;
                     resolved += 1;
-                    sim_ms.push(res.sim_batch_s * 1e3);
+                    sim_ms.record(res.sim_batch_s * 1e3);
                 }
                 Ok(Err(_)) => resolved += 1,
                 Err(_) => {}
@@ -559,7 +568,7 @@ fn main() {
             shed: snap.fleet.jobs_shed,
             retried: snap.fleet.jobs_retried,
             quarantines,
-            p99_sim_ms: percentile(&sim_ms, 99.0),
+            p99_sim_ms: sim_ms.snapshot().percentile(99.0),
         }
     };
     let robust_jobs = if quick { 384 } else { 1536 };
@@ -584,9 +593,80 @@ fn main() {
         fault_free.p99_sim_ms,
     );
 
+    // 7. Observability: the identical open-loop serve on a fresh 2-card
+    // fleet, measured twice — request tracing disabled, then enabled
+    // (span recording + histogram updates + ring writes on every job).
+    // The gate pins traced >= untraced * 0.95: per-job tracing must stay
+    // inside a 5% throughput budget. The readout number prices one full
+    // trace summary (per-card + per-artifact histogram snapshots) plus
+    // the four fleet e2e percentile reads — the cost a scrape pays.
+    let obs_jobs = if quick { 512 } else { 2048 };
+    let obs_leg = |traced: bool, rng: &mut Rng| -> (f64, u64, f64) {
+        let backend = default_backend(Path::new("/nonexistent-artifacts")).expect("sim backend");
+        let fleet = (0..CARDS)
+            .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedClock(945.0)))
+            .collect();
+        let cfg = EngineConfig {
+            trace: TraceConfig {
+                enabled: traced,
+                ..TraceConfig::default()
+            },
+            ..EngineConfig::default()
+        };
+        let engine = Engine::start(backend, fleet, cfg).expect("engine");
+        let payloads: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..obs_jobs).map(|_| rand_planes(N, rng)).collect();
+        for _ in 0..2 * DEVICE_BATCH {
+            let (re, im) = payloads[0].clone();
+            engine.submit(re, im).expect("obs warmup submit");
+        }
+        assert!(engine.drain(Duration::from_secs(120)).complete, "obs warmup drain");
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(obs_jobs);
+        for (re, im) in payloads {
+            rxs.push(engine.submit(re, im).expect("obs submit"));
+        }
+        assert!(engine.drain(Duration::from_secs(600)).complete, "obs drain timed out");
+        for rx in rxs {
+            black_box(rx.recv().expect("obs recv").expect("obs job ok"));
+        }
+        let jobs_per_s = obs_jobs as f64 / t0.elapsed().as_secs_f64();
+        let spans = engine.tracer().ok_spans();
+        let reads = if quick { 50 } else { 200 };
+        let t0 = Instant::now();
+        for _ in 0..reads {
+            let summary = engine.tracer().summary();
+            let e2e = summary.fleet().e2e_s;
+            black_box((
+                e2e.percentile(50.0),
+                e2e.percentile(95.0),
+                e2e.percentile(99.0),
+                e2e.percentile(99.9),
+            ));
+        }
+        let readout_us = t0.elapsed().as_secs_f64() * 1e6 / reads as f64;
+        engine.shutdown();
+        (jobs_per_s, spans, readout_us)
+    };
+    let (untraced_jobs_per_s, untraced_spans, _) = obs_leg(false, &mut rng);
+    let (traced_jobs_per_s, spans_recorded, hist_readout_us) = obs_leg(true, &mut rng);
+    assert_eq!(untraced_spans, 0, "disabled tracer recorded spans");
+    assert_eq!(
+        spans_recorded,
+        (obs_jobs + 2 * DEVICE_BATCH) as u64,
+        "traced leg lost spans (warmup included)"
+    );
+    let trace_overhead_frac = 1.0 - traced_jobs_per_s / untraced_jobs_per_s;
+    println!(
+        "observability: untraced {untraced_jobs_per_s:.0} jobs/s vs traced \
+         {traced_jobs_per_s:.0} jobs/s (overhead {:.1}%), {spans_recorded} spans, summary \
+         readout {hist_readout_us:.1} us",
+        trace_overhead_frac * 100.0
+    );
+
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 6.0.into());
+    root.set("schema", 7.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -666,6 +746,14 @@ fn main() {
     robust_json.set("fault_free_p99_sim_ms", fault_free.p99_sim_ms.into());
     robust_json.set("faulted_p99_sim_ms", faulted.p99_sim_ms.into());
     root.set("robustness", robust_json);
+    let mut obs_json = Json::obj();
+    obs_json.set("jobs", (obs_jobs as u64).into());
+    obs_json.set("untraced_jobs_per_s", untraced_jobs_per_s.into());
+    obs_json.set("traced_jobs_per_s", traced_jobs_per_s.into());
+    obs_json.set("trace_overhead_frac", trace_overhead_frac.into());
+    obs_json.set("hist_readout_us", hist_readout_us.into());
+    obs_json.set("spans_recorded", spans_recorded.into());
+    root.set("observability", obs_json);
     std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
     println!("wrote {out_path}");
 }

@@ -11,6 +11,7 @@ pub mod roofline;
 pub mod report;
 pub mod tables;
 pub mod telemetry;
+pub mod trace;
 
 pub use govern::{
     comparison, synthetic_trace, synthetic_trace_with_menu, GovernorOutcome, TrafficTrace,

@@ -15,9 +15,8 @@ use crate::coordinator::{CardConfig, Engine, EngineConfig};
 use crate::governor::GovernorKind;
 use crate::runtime::IntoBackend;
 use crate::sim::GpuSpec;
-use crate::telemetry::FleetSnapshot;
+use crate::telemetry::{FleetSnapshot, LogHistogram};
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
 use crate::util::table::{fnum, Table};
 
 /// Outcome of serving one trace on one fleet configuration.
@@ -86,13 +85,17 @@ pub fn serve_trace(
         report.remaining_total()
     );
     let mut jobs_ok = 0usize;
-    let mut sim_ms = Vec::with_capacity(jobs);
+    // Percentiles come from the serving stack's one histogram
+    // implementation (log-bucketed, ~2.2% worst-case read error) rather
+    // than a sort — same readout path as the tracer and the exporters.
+    let sim_ms = LogHistogram::new();
     for rx in rxs {
         if let Ok(res) = rx.recv()? {
             jobs_ok += 1;
-            sim_ms.push(res.sim_batch_s * 1e3);
+            sim_ms.record(res.sim_batch_s * 1e3);
         }
     }
+    let sim_ms = sim_ms.snapshot();
     let snapshot = engine.snapshot();
     engine.shutdown();
 
@@ -105,8 +108,8 @@ pub fn serve_trace(
         jobs_ok,
         energy_per_job_j: snapshot.fleet.energy_per_job_j,
         fleet_draw_1s_w: snapshot.fleet.draw_1s_w,
-        p50_sim_ms: percentile(&sim_ms, 50.0),
-        p99_sim_ms: percentile(&sim_ms, 99.0),
+        p50_sim_ms: sim_ms.percentile(50.0),
+        p99_sim_ms: sim_ms.percentile(99.0),
         energy_saving: snapshot.fleet.energy_saving,
         clock_transitions: snapshot.fleet.clock_transitions,
         deadline_misses: snapshot.fleet.deadline_misses,

@@ -1,0 +1,250 @@
+//! Trace-journal replay — the analysis behind `fftsweep trace`.
+//!
+//! `serve --trace-out journal.jsonl` streams one [`Span`] per completed
+//! job; this module loads the journal back and tabulates where the
+//! latency went (queue vs batch-wait vs exec) and what each job cost in
+//! joules, per percentile, split capped vs uncapped — the request-level
+//! view of the paper's "what does a capped clock actually cost" question
+//! that the fleet-aggregate `fftsweep telemetry` table cannot show.
+//!
+//! Percentiles come from the same [`LogHistogram`] the live tracer uses,
+//! so an offline replay of a journal reads the same numbers a scrape of
+//! the live histograms would have.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::telemetry::histogram::LogHistogram;
+use crate::telemetry::{Span, SpanOutcome};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Load every span from a JSONL trace journal. Blank lines are skipped;
+/// a malformed line fails loud with its line number.
+pub fn load_spans(path: &Path) -> Result<Vec<Span>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace journal {}", path.display()))?;
+    let mut spans = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}: malformed JSON", path.display(), i + 1))?;
+        spans.push(
+            Span::from_json(&j)
+                .with_context(|| format!("{}:{}: not a span", path.display(), i + 1))?,
+        );
+    }
+    Ok(spans)
+}
+
+/// The latency/energy distributions of one span group.
+struct Dists {
+    queue_s: LogHistogram,
+    batch_wait_s: LogHistogram,
+    exec_s: LogHistogram,
+    e2e_s: LogHistogram,
+    energy_j: LogHistogram,
+    count: usize,
+}
+
+impl Dists {
+    fn new() -> Self {
+        Self {
+            queue_s: LogHistogram::new(),
+            batch_wait_s: LogHistogram::new(),
+            exec_s: LogHistogram::new(),
+            e2e_s: LogHistogram::new(),
+            energy_j: LogHistogram::new(),
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, s: &Span) {
+        self.queue_s.record(s.queue_wait_s());
+        self.batch_wait_s.record(s.batch_wait_s());
+        self.exec_s.record(s.exec_s());
+        self.e2e_s.record(s.e2e_s());
+        self.energy_j.record(s.energy_j);
+        self.count += 1;
+    }
+}
+
+const PERCENTILES: [f64; 4] = [50.0, 95.0, 99.0, 99.9];
+
+/// Build the per-percentile latency/energy breakdown over the journal:
+/// one block of rows per group (`all`, and `uncapped`/`capped` whenever
+/// both occur), percentiles p50/p95/p99/p99.9, columns splitting the
+/// end-to-end latency into its pre-exec and exec parts. Shed spans are
+/// counted in the title but excluded from the distributions (they never
+/// executed).
+pub fn breakdown_table(spans: &[Span], source: &str) -> Table {
+    let ok: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.outcome == SpanOutcome::Ok)
+        .collect();
+    let shed = spans.len() - ok.len();
+    let capped_n = ok.iter().filter(|s| s.capped()).count();
+
+    let mut groups: Vec<(&str, Dists)> = vec![("all", Dists::new())];
+    // The capped/uncapped split only clarifies when the journal holds
+    // both kinds; an all-capped or all-uncapped run keeps one block.
+    let split = capped_n > 0 && capped_n < ok.len();
+    if split {
+        groups.push(("uncapped", Dists::new()));
+        groups.push(("capped", Dists::new()));
+    }
+    for s in &ok {
+        groups[0].1.observe(s);
+        if split {
+            let idx = if s.capped() { 2 } else { 1 };
+            groups[idx].1.observe(s);
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Trace replay: {} ok spans ({} shed, {} capped) from {}",
+            ok.len(),
+            shed,
+            capped_n,
+            source
+        ),
+        &[
+            "group",
+            "spans",
+            "pct",
+            "queue ms",
+            "batch-wait ms",
+            "exec ms",
+            "e2e ms",
+            "energy mJ",
+        ],
+    );
+    for (label, d) in &groups {
+        let (queue, wait, exec, e2e, energy) = (
+            d.queue_s.snapshot(),
+            d.batch_wait_s.snapshot(),
+            d.exec_s.snapshot(),
+            d.e2e_s.snapshot(),
+            d.energy_j.snapshot(),
+        );
+        for p in PERCENTILES {
+            t.push_row(vec![
+                label.to_string(),
+                format!("{}", d.count),
+                format!("p{p}"),
+                fnum(queue.percentile(p) * 1e3, 3),
+                fnum(wait.percentile(p) * 1e3, 3),
+                fnum(exec.percentile(p) * 1e3, 3),
+                fnum(e2e.percentile(p) * 1e3, 3),
+                fnum(energy.percentile(p) * 1e3, 4),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(job_id: u64, e2e_us: u64, capped: bool) -> Span {
+        Span {
+            job_id,
+            artifact: "fft_f32_n1024_b64".into(),
+            n: 1024,
+            card: 0,
+            enqueue_us: 0,
+            admit_us: 5,
+            seal_us: 100,
+            dispatch_us: 110,
+            exec_start_us: 150,
+            exec_end_us: e2e_us.saturating_sub(10),
+            complete_us: e2e_us,
+            requested_mhz: 945.0,
+            granted_mhz: if capped { 700.0 } else { 945.0 },
+            batch_occupancy: 64,
+            attempts: 1,
+            energy_j: if capped { 1.5e-4 } else { 2.5e-4 },
+            sim_batch_s: 8.0e-4,
+            outcome: SpanOutcome::Ok,
+        }
+    }
+
+    #[test]
+    fn journal_round_trips_through_a_file() {
+        let path = std::env::temp_dir().join(format!(
+            "fftsweep_trace_replay_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut text = String::new();
+        for i in 0..6 {
+            text.push_str(&span(i, 2000 + 100 * i, i % 2 == 0).to_jsonl_line());
+            text.push('\n');
+        }
+        text.push('\n'); // trailing blank line is fine
+        std::fs::write(&path, &text).unwrap();
+        let spans = load_spans(&path).unwrap();
+        assert_eq!(spans.len(), 6);
+        assert_eq!(spans[5].job_id, 5);
+        assert!(spans[0].capped() && !spans[1].capped());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_journal_lines_fail_with_line_numbers() {
+        let path = std::env::temp_dir().join(format!(
+            "fftsweep_trace_bad_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let good = span(1, 2000, false).to_jsonl_line();
+        std::fs::write(&path, format!("{good}\nnot json\n")).unwrap();
+        let err = format!("{:#}", load_spans(&path).unwrap_err());
+        assert!(err.contains(":2"), "error names the bad line: {err}");
+        // valid JSON that is not a span also fails, naming its line
+        std::fs::write(&path, format!("{good}\n{good}\n{{\"x\":1}}\n")).unwrap();
+        let err = format!("{:#}", load_spans(&path).unwrap_err());
+        assert!(err.contains(":3"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn breakdown_splits_capped_from_uncapped() {
+        let mut spans: Vec<Span> = (0..8).map(|i| span(i, 2000, i < 3)).collect();
+        let mut dead = span(99, 3000, false);
+        dead.outcome = SpanOutcome::Shed;
+        spans.push(dead);
+
+        let t = breakdown_table(&spans, "test.jsonl");
+        assert!(t.title.contains("8 ok spans (1 shed, 3 capped)"));
+        assert_eq!(t.rows.len(), 3 * PERCENTILES.len(), "all + uncapped + capped");
+        let capped_row = t.rows.iter().find(|r| r[0] == "capped").unwrap();
+        assert_eq!(capped_row[1], "3");
+        let uncapped_row = t.rows.iter().find(|r| r[0] == "uncapped").unwrap();
+        assert_eq!(uncapped_row[1], "5");
+        // energy split: capped jobs cost 0.15 mJ, uncapped 0.25 mJ — the
+        // groups' p50 readouts stay within the histogram's bucket error
+        let e_capped: f64 = capped_row[7].parse().unwrap();
+        let e_uncapped: f64 = uncapped_row[7].parse().unwrap();
+        assert!((e_capped / 0.15 - 1.0).abs() < 0.025, "{e_capped}");
+        assert!((e_uncapped / 0.25 - 1.0).abs() < 0.025, "{e_uncapped}");
+    }
+
+    #[test]
+    fn homogeneous_journals_keep_one_group() {
+        let spans: Vec<Span> = (0..4).map(|i| span(i, 2000, false)).collect();
+        let t = breakdown_table(&spans, "u.jsonl");
+        assert_eq!(t.rows.len(), PERCENTILES.len(), "no capped/uncapped split");
+        assert!(t.rows.iter().all(|r| r[0] == "all"));
+        // stage sanity at p50: queue + exec ≈ e2e (reply tail is tiny)
+        let q: f64 = t.rows[0][3].parse().unwrap();
+        let x: f64 = t.rows[0][5].parse().unwrap();
+        let e: f64 = t.rows[0][6].parse().unwrap();
+        assert!(q + x <= e * 1.05 && q + x > e * 0.8, "q={q} x={x} e={e}");
+    }
+}

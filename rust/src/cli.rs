@@ -17,6 +17,7 @@ use fftsweep::pipeline::{run_pipeline_at, table4};
 use fftsweep::runtime::{backend_by_name, compiled_backend_names, ExecBackend, Manifest, Runtime};
 use fftsweep::sim::fault::FaultPlan;
 use fftsweep::sim::gpu::{all_gpus, gpu_by_name, GpuSpec};
+use fftsweep::telemetry::TraceConfig;
 use fftsweep::types::Precision;
 use fftsweep::util::cliargs::Args;
 use fftsweep::util::rng::Rng;
@@ -37,8 +38,10 @@ USAGE:
                     [--cards 1 | --gpus v100,p4,...] [--deadline-ms <ms>]
                     [--lengths 1000,1536,4096] [--conv-taps <t>]
                     [--power-budget-w <W>] [--telemetry-out <file.json>] [--prom]
+                    [--trace-out <file.jsonl>] [--no-trace]
                     [--chaos <spec>] [--retries 3] [--retry-backoff-ms 1]
                     [--queue-bound <n>] [--quarantine-errors 3]
+  fftsweep trace    <journal.jsonl>
   fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
                     [--backend default] [--governor boost] [--power-budget-w <W>]
                     [--seed 7] [--lengths 1024,4096] [--telemetry-out <file.json>]
@@ -76,6 +79,16 @@ governor is capped through its budget hint. `fftsweep telemetry` replays
 one seeded trace uncapped vs capped and tabulates energy/job, simulated
 p50/p99 and draw; `--telemetry-out` writes the typed fleet snapshot as
 JSON and `--prom` prints Prometheus text exposition.
+
+TRACE: every served job carries a request span (enqueue → admit →
+batch-seal → dispatch → exec → complete stamps plus the governor's clock
+decision, batch occupancy, retries and attributed joules); completed
+spans feed per-card/per-artifact latency+energy histograms exported in
+the telemetry JSON and as Prometheus histogram families. `serve
+--trace-out f.jsonl` streams one span per line; `fftsweep trace
+f.jsonl` replays a journal into the queue/batch-wait/exec percentile
+breakdown, split capped vs uncapped. `--no-trace` disables tracing
+(overhead is gated <5% in the bench, so on is the default).
 
 CHAOS: `serve --chaos spec` injects deterministic faults into the
 simulated fleet: semicolon-separated `card:kind[,key=val...]` clauses
@@ -118,6 +131,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "selftest" => cmd_selftest(args),
         "serve" => cmd_serve(args),
         "telemetry" => cmd_telemetry(args),
+        "trace" => cmd_trace(args),
         "govern" => cmd_govern(args),
         "validate" => cmd_validate(args),
         "ablation" => cmd_ablation(args),
@@ -453,6 +467,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         retry,
         queue_bound,
         health,
+        trace: TraceConfig {
+            enabled: !args.has("no-trace"),
+            jsonl_out: args.get("trace-out").map(PathBuf::from),
+            ..TraceConfig::default()
+        },
         ..EngineConfig::default()
     };
     let backend = backend_arg(args)?;
@@ -567,7 +586,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let snapshot = engine.snapshot();
     println!("{}", snapshot.render());
     emit_telemetry(args, &snapshot)?;
+    if let Some(tr) = &snapshot.trace {
+        if tr.enabled {
+            println!(
+                "trace: {} ok span(s), {} shed, ring holds {}",
+                tr.ok_spans, tr.shed_spans, tr.ring_len
+            );
+        }
+    }
     println!("{}", engine.shutdown());
+    if let Some(path) = args.get("trace-out") {
+        println!("wrote trace journal to {path}");
+    }
+    Ok(())
+}
+
+/// `fftsweep trace`: replay a `serve --trace-out` JSONL journal into the
+/// per-percentile queue/batch-wait/exec latency+energy breakdown, split
+/// capped vs uncapped when the journal holds both.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: fftsweep trace <journal.jsonl>")?;
+    let spans = fftsweep::analysis::trace::load_spans(std::path::Path::new(path))?;
+    anyhow::ensure!(!spans.is_empty(), "trace journal {path} holds no spans");
+    println!("{}", fftsweep::analysis::trace::breakdown_table(&spans, path).to_ascii());
     Ok(())
 }
 

@@ -134,13 +134,21 @@ impl Batcher {
     }
 
     /// Remove and return the pending batch for an (artifact, card) slot.
+    /// This is the batch-seal point: every member job's `seal` trace
+    /// stamp is set here, whether the batch closed full or was flushed.
     fn take(&mut self, key: &(Arc<str>, usize)) -> Option<PackedBatch> {
-        self.pending.remove(key).map(|p| PackedBatch {
-            artifact: p.artifact,
-            n: p.n,
-            device_batch: p.device_batch,
-            card: p.card,
-            envelopes: p.envelopes,
+        self.pending.remove(key).map(|mut p| {
+            let sealed = Instant::now();
+            for env in &mut p.envelopes {
+                env.stamps.seal = sealed;
+            }
+            PackedBatch {
+                artifact: p.artifact,
+                n: p.n,
+                device_batch: p.device_batch,
+                card: p.card,
+                envelopes: p.envelopes,
+            }
         })
     }
 
@@ -202,10 +210,7 @@ mod tests {
     fn env(id: u64, n: usize) -> (Envelope, mpsc::Receiver<anyhow::Result<crate::coordinator::job::JobResult>>) {
         let (tx, rx) = mpsc::channel();
         (
-            Envelope {
-                job: FftJob::new(id, vec![id as f32; n], vec![0.0; n]),
-                reply: tx,
-            },
+            Envelope::new(FftJob::new(id, vec![id as f32; n], vec![0.0; n]), tx),
             rx,
         )
     }
@@ -437,6 +442,22 @@ mod tests {
         batch2.planes_into(&mut re, &mut im);
         assert_eq!(re.as_ptr(), ptr, "reused buffers must not reallocate");
         assert!(re[4..].iter().all(|&x| x == 0.0), "padding re-zeroed");
+    }
+
+    #[test]
+    fn take_stamps_batch_seal_on_every_member() {
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
+        let a = name("a");
+        let (e, _rx) = env(1, 8);
+        let enqueue = e.stamps.enqueue;
+        b.push(&a, 8, 4, 0, e).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let batch = b.flush(true).pop().unwrap();
+        let stamps = batch.envelopes[0].stamps;
+        assert!(
+            stamps.seal.duration_since(enqueue) >= Duration::from_millis(2),
+            "seal must be stamped at take time, not submit time"
+        );
     }
 
     #[test]

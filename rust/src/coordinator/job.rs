@@ -2,6 +2,8 @@
 
 use std::sync::mpsc;
 
+use crate::telemetry::Stamps;
+
 /// A single C2C FFT request: one transform of length `n` (re/im planes).
 #[derive(Debug, Clone)]
 pub struct FftJob {
@@ -48,10 +50,24 @@ pub struct JobResult {
     pub batch_occupancy: usize,
 }
 
-/// A job paired with its reply channel.
+/// A job paired with its reply channel and its trace stamps.
 pub struct Envelope {
     pub job: FftJob,
     pub reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    /// Stage timestamps the coordinator fills as the job moves through
+    /// admit → batch-seal → dispatch (see `telemetry::trace`).
+    pub stamps: Stamps,
+}
+
+impl Envelope {
+    /// Wrap a job at submit time: all stamps start at "now".
+    pub fn new(job: FftJob, reply: mpsc::Sender<anyhow::Result<JobResult>>) -> Self {
+        Self {
+            job,
+            reply,
+            stamps: Stamps::now(),
+        }
+    }
 }
 
 #[cfg(test)]

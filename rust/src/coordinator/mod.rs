@@ -51,7 +51,7 @@ use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::telemetry::{
     budget_key, clock_cap_for_budget, share_bounds_w, CardSnapshot, FleetSnapshot, PowerBudget,
-    PowerRecorder, RecorderConfig, ShareCell,
+    PowerRecorder, RecorderConfig, ShareCell, Span, SpanOutcome, TraceConfig, Tracer,
 };
 use crate::types::{FftWorkload, Precision};
 
@@ -193,6 +193,10 @@ pub struct EngineConfig {
     /// [`CoordError::QueueFull`] once every eligible card is at the
     /// bound. `None` = unbounded (the pre-robustness behavior).
     pub queue_bound: Option<u64>,
+    /// Per-job request tracing (span ring, latency/energy histograms,
+    /// optional JSONL journal via `serve --trace-out`). On by default;
+    /// the bench `observability` section gates its overhead at <5%.
+    pub trace: TraceConfig,
 }
 
 impl Default for EngineConfig {
@@ -207,6 +211,7 @@ impl Default for EngineConfig {
             health: HealthPolicy::default(),
             retry: RetryPolicy::default(),
             queue_bound: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -266,10 +271,23 @@ pub struct Engine {
     /// others); dropped at shutdown so the channel can disconnect.
     retry_tx: Option<mpsc::Sender<FailedJob>>,
     health: Arc<HealthMonitor>,
+    tracer: Arc<Tracer>,
     power_budget_w: Option<f64>,
     queue_bound: Option<u64>,
     shutdown: Arc<AtomicBool>,
     next_id: AtomicU64,
+}
+
+/// Stamp every member job's `dispatch` trace time and hand the batch to
+/// its card's channel — the single chokepoint every dispatch site
+/// (enqueue, flushes, the timeout flusher, retry re-dispatch) goes
+/// through, so no span can miss its dispatch stamp.
+fn send_batch(tx: &mpsc::Sender<PackedBatch>, mut batch: PackedBatch) {
+    let now = Instant::now();
+    for env in &mut batch.envelopes {
+        env.stamps.dispatch = now;
+    }
+    let _ = tx.send(batch);
 }
 
 impl Engine {
@@ -289,6 +307,7 @@ impl Engine {
         let health = Arc::new(HealthMonitor::new(cfg.health.clone(), fleet.len()));
         let (retry_tx, retry_rx) = mpsc::channel::<FailedJob>();
         let epoch = Instant::now();
+        let tracer = Arc::new(Tracer::new(&cfg.trace, fleet.len(), epoch)?);
 
         // Initial watt shares: an even split of the cap (clamped to each
         // card's physical bounds) BEFORE any worker starts, so a capped
@@ -339,6 +358,7 @@ impl Engine {
                 retry_tx: retry_tx.clone(),
                 beat: beat.clone(),
                 epoch,
+                tracer: tracer.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -375,7 +395,7 @@ impl Engine {
                     while !stop.load(Ordering::Relaxed) {
                         std::thread::sleep(tick);
                         for b in lock_recover(&batcher).flush(false) {
-                            let _ = txs[b.card].send(b);
+                            send_batch(&txs[b.card], b);
                         }
                     }
                 },
@@ -447,6 +467,7 @@ impl Engine {
                 retry: cfg.retry.clone(),
                 beats: cards.iter().map(|c| c.beat.clone()).collect(),
                 epoch,
+                tracer: tracer.clone(),
             };
             Some(
                 std::thread::Builder::new()
@@ -468,6 +489,7 @@ impl Engine {
             supervisor,
             retry_tx: Some(retry_tx),
             health,
+            tracer,
             power_budget_w: cfg.power_budget_w,
             queue_bound: cfg.queue_bound,
             shutdown,
@@ -614,7 +636,9 @@ impl Engine {
         self.cards[card].metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
 
         let (tx, rx) = mpsc::channel();
-        let env = Envelope { job, reply: tx };
+        let mut env = Envelope::new(job, tx);
+        // Routing succeeded and accounting is done: the job is admitted.
+        env.stamps.admit = Instant::now();
         let pushed = {
             let mut b = lock_recover(&self.batcher);
             b.push(&route.artifact, route.n, route.device_batch, card, env)
@@ -622,7 +646,7 @@ impl Engine {
         let mut dispatched_full = false;
         match pushed {
             Ok(Some(batch)) => {
-                let _ = self.batch_txs[card].send(batch);
+                send_batch(&self.batch_txs[card], batch);
                 dispatched_full = true;
             }
             Ok(None) => {}
@@ -642,7 +666,7 @@ impl Engine {
     /// path — prefer `flush_slot` for per-request nudging).
     pub fn flush(&self) {
         for b in lock_recover(&self.batcher).flush(true) {
-            let _ = self.batch_txs[b.card].send(b);
+            send_batch(&self.batch_txs[b.card], b);
         }
     }
 
@@ -651,7 +675,7 @@ impl Engine {
     pub fn flush_slot(&self, artifact: &Arc<str>, card: usize) {
         let batch = lock_recover(&self.batcher).flush_slot(artifact, card);
         if let Some(b) = batch {
-            let _ = self.batch_txs[b.card].send(b);
+            send_batch(&self.batch_txs[b.card], b);
         }
     }
 
@@ -722,7 +746,7 @@ impl Engine {
     pub fn drain_card(&self, idx: usize, timeout: Duration) -> u64 {
         self.cards[idx].accepting.store(false, Ordering::Relaxed);
         for b in lock_recover(&self.batcher).flush_card(idx) {
-            let _ = self.batch_txs[b.card].send(b);
+            send_batch(&self.batch_txs[b.card], b);
         }
         let t0 = Instant::now();
         while self.cards[idx].inflight() > 0 && t0.elapsed() < timeout {
@@ -764,6 +788,12 @@ impl Engine {
     /// The operator's global watt ceiling (`None` = uncapped).
     pub fn power_budget_w(&self) -> Option<f64> {
         self.power_budget_w
+    }
+
+    /// The fleet's request tracer: span ring, latency/energy histograms,
+    /// optional JSONL journal.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Pre-warm the plan cache for an admissible length menu before
@@ -835,7 +865,9 @@ impl Engine {
                 }
             })
             .collect();
-        FleetSnapshot::from_cards(cards, self.power_budget_w)
+        let mut snap = FleetSnapshot::from_cards(cards, self.power_budget_w);
+        snap.trace = Some(self.tracer.summary());
+        snap
     }
 
     /// Per-card + fleet-aggregate report (the snapshot, rendered).
@@ -873,6 +905,9 @@ impl Engine {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Every recorder is quiescent now: flush the trace journal so a
+        // `--trace-out` file is complete the moment shutdown returns.
+        self.tracer.flush();
         format!("final fleet: {}", self.snapshot().fleet_summary())
     }
 }
@@ -904,6 +939,7 @@ struct WorkerState {
     retry_tx: mpsc::Sender<FailedJob>,
     beat: Arc<AtomicU64>,
     epoch: Instant,
+    tracer: Arc<Tracer>,
 }
 
 /// Hand a failed batch's envelopes to the retry supervisor; if it is
@@ -1019,7 +1055,11 @@ fn worker_loop(
             power_budget_w: share,
             ..w.ctx.clone()
         };
-        let mut requested = governor.choose(&w.gpu, &workload, &ctx).unwrap_or(boost_mhz);
+        // The governor's own choice is kept apart from the budget/health
+        // caps below: a span is "capped" iff the granted clock ended up
+        // below what the policy itself wanted.
+        let governor_choice = governor.choose(&w.gpu, &workload, &ctx).unwrap_or(boost_mhz);
+        let mut requested = governor_choice;
         if let Some(budget_w) = share {
             let cap = *budget_caps
                 .entry((batch.n, batch.device_batch, budget_key(budget_w)))
@@ -1085,7 +1125,8 @@ fn worker_loop(
                     .run_fft_into(&m, &in_re, &in_im, &mut out_re, &mut out_im)
             }
         });
-        let exec_us = t0.elapsed().as_micros() as u64;
+        let exec_end = Instant::now();
+        let exec_us = exec_end.duration_since(t0).as_micros() as u64;
         w.fleet_metrics.record_batch(occupancy, rows_total, exec_us);
         w.card_metrics.record_batch(occupancy, rows_total, exec_us);
 
@@ -1146,6 +1187,30 @@ fn worker_loop(
                     w.fleet_metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     w.card_metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                     let _ = env.reply.send(Ok(res));
+                    if w.tracer.enabled() {
+                        w.tracer.record(Span {
+                            job_id: env.job.id,
+                            artifact: batch.artifact.to_string(),
+                            n: batch.n,
+                            card: w.card,
+                            enqueue_us: w.tracer.micros(env.stamps.enqueue),
+                            admit_us: w.tracer.micros(env.stamps.admit),
+                            seal_us: w.tracer.micros(env.stamps.seal),
+                            dispatch_us: w.tracer.micros(env.stamps.dispatch),
+                            exec_start_us: w.tracer.micros(t0),
+                            exec_end_us: w.tracer.micros(exec_end),
+                            complete_us: w.tracer.micros(Instant::now()),
+                            requested_mhz: governor_choice,
+                            granted_mhz: clock,
+                            batch_occupancy: occupancy as u64,
+                            attempts: env.job.attempts,
+                            // The job's share of the batch joules — the
+                            // same attribution PowerRecorder totals use.
+                            energy_j: run.energy_j / occupancy.max(1) as f64,
+                            sim_batch_s: run.timing.total_s,
+                            outcome: SpanOutcome::Ok,
+                        });
+                    }
                 }
             }
             Err(e) => {
@@ -1171,6 +1236,7 @@ struct SupervisorState {
     retry: RetryPolicy,
     beats: Vec<Arc<AtomicU64>>,
     epoch: Instant,
+    tracer: Arc<Tracer>,
 }
 
 /// One job waiting out its backoff before re-dispatch.
@@ -1189,6 +1255,34 @@ fn shed(s: &SupervisorState, f: FailedJob, err: CoordError) {
     let m = &s.card_metrics[f.from_card];
     m.jobs_failed.fetch_add(1, Ordering::Relaxed);
     m.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    if s.tracer.enabled() {
+        // Shed spans carry the stamps the job accumulated before it died
+        // (so queue time up to the shed is visible in the journal), with
+        // the never-reached exec stages pinned to "now". They count in
+        // the shed counter but not the latency/energy histograms.
+        let now = Instant::now();
+        let st = &f.env.stamps;
+        s.tracer.record(Span {
+            job_id: f.env.job.id,
+            artifact: f.artifact.to_string(),
+            n: f.n,
+            card: f.from_card,
+            enqueue_us: s.tracer.micros(st.enqueue),
+            admit_us: s.tracer.micros(st.admit),
+            seal_us: s.tracer.micros(st.seal),
+            dispatch_us: s.tracer.micros(st.dispatch),
+            exec_start_us: s.tracer.micros(now),
+            exec_end_us: s.tracer.micros(now),
+            complete_us: s.tracer.micros(now),
+            requested_mhz: 0.0,
+            granted_mhz: 0.0,
+            batch_occupancy: 0,
+            attempts: f.env.job.attempts,
+            energy_j: 0.0,
+            sim_batch_s: 0.0,
+            outcome: SpanOutcome::Shed,
+        });
+    }
     let _ = f.env.reply.send(Err(err.into()));
 }
 
@@ -1250,7 +1344,7 @@ fn dispatch_retry(s: &SupervisorState, f: FailedJob, touched: &mut Vec<(Arc<str>
     let pushed = lock_recover(&s.batcher).push(&f.artifact, f.n, f.device_batch, card, f.env);
     match pushed {
         Ok(Some(batch)) => {
-            let _ = s.txs[batch.card].send(batch);
+            send_batch(&s.txs[batch.card], batch);
         }
         Ok(None) => touched.push((artifact, card)),
         Err(e) => {
@@ -1336,7 +1430,7 @@ fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
         for (artifact, card) in touched {
             let batch = lock_recover(&s.batcher).flush_slot(&artifact, card);
             if let Some(b) = batch {
-                let _ = s.txs[b.card].send(b);
+                send_batch(&s.txs[b.card], b);
             }
         }
     }
@@ -1497,6 +1591,66 @@ mod tests {
         assert_eq!(p.backoff_for(3), Duration::from_millis(4));
         assert_eq!(p.backoff_for(4), Duration::from_millis(5), "capped");
         assert_eq!(p.backoff_for(60), Duration::from_millis(5), "shift stays bounded");
+    }
+
+    #[test]
+    fn completed_jobs_record_monotone_spans_with_consistent_energy() {
+        let e = engine();
+        let n = 1024usize;
+        for _ in 0..8 {
+            e.execute(vec![1.0; n], vec![0.0; n]).unwrap();
+        }
+        assert!(e.drain(Duration::from_secs(5)).complete);
+        let spans = e.tracer().recent(64);
+        assert_eq!(spans.len(), 8, "one span per completed job");
+        for s in &spans {
+            assert!(s.monotone(), "span {} stamps out of order", s.job_id);
+            let total =
+                s.admit_s() + s.batch_wait_s() + s.dispatch_s() + s.exec_s() + s.reply_s();
+            assert!(
+                (total - s.e2e_s()).abs() < 1e-12,
+                "stage segments must sum to the end-to-end latency"
+            );
+            assert_eq!(s.outcome, SpanOutcome::Ok);
+            assert!(!s.capped(), "uncapped fleet never marks spans capped");
+            assert_eq!(s.card, 0);
+            assert!(s.energy_j > 0.0);
+        }
+        // Energy attribution closes: span joules sum to the metrics total
+        // (occupancy-split shares recombine exactly per batch).
+        let span_j: f64 = spans.iter().map(|s| s.energy_j).sum();
+        let metrics_j = e.metrics.energy_j();
+        assert!(
+            (span_j - metrics_j).abs() <= 1e-9 * metrics_j.max(1.0),
+            "span energy {span_j} vs metrics {metrics_j}"
+        );
+        let summary = e.snapshot().trace.expect("snapshot carries the trace summary");
+        assert_eq!(summary.ok_spans, 8);
+        assert_eq!(summary.shed_spans, 0);
+        assert_eq!(summary.fleet().e2e_s.count, 8);
+        e.shutdown();
+    }
+
+    #[test]
+    fn disabled_tracing_records_no_spans() {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        let cfg = EngineConfig {
+            trace: TraceConfig {
+                enabled: false,
+                ..TraceConfig::default()
+            },
+            ..EngineConfig::default()
+        };
+        let e = Engine::start_single(rt, tesla_v100(), GovernorKind::FixedBoost, cfg).unwrap();
+        let n = 1024usize;
+        e.execute(vec![1.0; n], vec![0.0; n]).unwrap();
+        assert!(!e.tracer().enabled());
+        let summary = e.snapshot().trace.unwrap();
+        assert!(!summary.enabled);
+        assert_eq!(summary.ok_spans, 0);
+        assert_eq!(summary.ring_len, 0);
+        assert!(summary.fleet().e2e_s.is_empty());
+        e.shutdown();
     }
 
     #[test]

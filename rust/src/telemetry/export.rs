@@ -2,16 +2,23 @@
 //! `util::json` writer — no serde in the offline crate set) and
 //! Prometheus text exposition format, both rendered from the typed
 //! [`FleetSnapshot`].
+//!
+//! Schema 2 adds the request-trace rollup: span counters plus the
+//! latency/energy histograms, exported as percentile readouts in the
+//! JSON document and as proper `# TYPE ... histogram` families (with
+//! cumulative `le` buckets, `_sum` and `_count`) in the Prometheus text.
 
 use std::fmt::Write as _;
 
+use crate::telemetry::histogram::HistogramSnapshot;
 use crate::telemetry::snapshot::{CardSnapshot, FleetSnapshot};
+use crate::telemetry::trace::HistSetSnapshot;
 use crate::util::json::Json;
 
 /// The JSON document `serve --telemetry-out` writes.
 pub fn snapshot_json(s: &FleetSnapshot) -> Json {
     let mut root = Json::obj();
-    root.set("schema", 1u64.into());
+    root.set("schema", 2u64.into());
     root.set(
         "power_budget_w",
         s.power_budget_w.map(Json::Num).unwrap_or(Json::Null),
@@ -44,7 +51,51 @@ pub fn snapshot_json(s: &FleetSnapshot) -> Json {
     fleet.set("health_transitions", t.health_transitions.into());
     fleet.set("cards_quarantined", t.cards_quarantined.into());
     root.set("fleet", fleet);
+
+    if let Some(tr) = &s.trace {
+        let mut trace = Json::obj();
+        trace.set("enabled", tr.enabled.into());
+        trace.set("ok_spans", tr.ok_spans.into());
+        trace.set("shed_spans", tr.shed_spans.into());
+        trace.set("ring_len", (tr.ring_len as u64).into());
+        trace.set("ring_dropped", tr.ring_dropped.into());
+        trace.set("sink_errors", tr.sink_errors.into());
+        trace.set("fleet", hist_set_json(&tr.fleet()));
+        let mut per_card = Json::Arr(Vec::new());
+        for set in &tr.per_card {
+            per_card.push(hist_set_json(set));
+        }
+        trace.set("per_card", per_card);
+        let mut per_artifact = Json::obj();
+        for (artifact, set) in &tr.per_artifact {
+            per_artifact.set(artifact, hist_set_json(set));
+        }
+        trace.set("per_artifact", per_artifact);
+        root.set("trace", trace);
+    }
     root
+}
+
+/// Percentile readout of one histogram — what dashboards that don't
+/// ingest raw buckets consume.
+fn hist_json(h: &HistogramSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("count", h.count.into());
+    o.set("mean", h.mean().into());
+    o.set("p50", h.percentile(50.0).into());
+    o.set("p95", h.percentile(95.0).into());
+    o.set("p99", h.percentile(99.0).into());
+    o.set("p999", h.percentile(99.9).into());
+    o
+}
+
+fn hist_set_json(s: &HistSetSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("queue_wait_s", hist_json(&s.queue_wait_s));
+    o.set("exec_s", hist_json(&s.exec_s));
+    o.set("e2e_s", hist_json(&s.e2e_s));
+    o.set("energy_j", hist_json(&s.energy_j));
+    o
 }
 
 /// Numeric health code for dashboards: healthy 0, degraded 1,
@@ -113,6 +164,50 @@ fn prom_num(x: f64) -> String {
 fn gauge(out: &mut String, name: &str, help: &str) {
     let _ = writeln!(out, "# HELP {name} {help}");
     let _ = writeln!(out, "# TYPE {name} gauge");
+}
+
+fn counter(out: &mut String, name: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+}
+
+/// `le` bounds for the latency histogram families, seconds. Sparse
+/// decade/half-decade ladder: the live histograms keep ~2.2% resolution,
+/// the exposition only needs scrape-friendly bucket counts.
+const LATENCY_BOUNDS_S: [f64; 16] = [
+    1e-6, 1e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5,
+    1.0, 5.0,
+];
+
+/// `le` bounds for the energy-per-job family, joules.
+const ENERGY_BOUNDS_J: [f64; 14] = [
+    1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 100.0,
+];
+
+/// One Prometheus histogram family: HELP/TYPE header, then per series
+/// the cumulative `le` buckets (closed by `+Inf` == `_count`), `_sum`
+/// and `_count` — the exposition-format histogram contract.
+fn histogram_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: &[(String, &HistogramSnapshot)],
+    bounds: &[f64],
+) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (labels, h) in series {
+        for (&bound, &cum) in bounds.iter().zip(h.cumulative_le(bounds).iter()) {
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{labels},le=\"{}\"}} {cum}",
+                prom_num(bound)
+            );
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", prom_num(h.sum));
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count);
+    }
 }
 
 pub fn prometheus_text(s: &FleetSnapshot) -> String {
@@ -196,6 +291,70 @@ pub fn prometheus_text(s: &FleetSnapshot) -> String {
     );
     gauge(&mut out, "fftsweep_fleet_jobs_shed_total", "Jobs dropped fleet-wide with a typed error");
     let _ = writeln!(out, "fftsweep_fleet_jobs_shed_total {}", prom_num(s.fleet.jobs_shed as f64));
+
+    if let Some(tr) = &s.trace {
+        counter(&mut out, "fftsweep_trace_spans_total", "Completed request spans by outcome");
+        let _ = writeln!(out, "fftsweep_trace_spans_total{{outcome=\"ok\"}} {}", tr.ok_spans);
+        let _ = writeln!(out, "fftsweep_trace_spans_total{{outcome=\"shed\"}} {}", tr.shed_spans);
+        counter(
+            &mut out,
+            "fftsweep_trace_sink_errors_total",
+            "JSONL journal write failures (best-effort sink)",
+        );
+        let _ = writeln!(out, "fftsweep_trace_sink_errors_total {}", tr.sink_errors);
+        gauge(&mut out, "fftsweep_trace_ring_spans", "Spans currently retained in the ring");
+        let _ = writeln!(out, "fftsweep_trace_ring_spans {}", tr.ring_len);
+
+        let card_series = |get: fn(&HistSetSnapshot) -> &HistogramSnapshot| -> Vec<(String, &HistogramSnapshot)> {
+            tr.per_card
+                .iter()
+                .enumerate()
+                .map(|(i, set)| (format!("card=\"{i}\""), get(set)))
+                .collect()
+        };
+        histogram_family(
+            &mut out,
+            "fftsweep_trace_queue_wait_seconds",
+            "Submit to exec-start wait per job",
+            &card_series(|set| &set.queue_wait_s),
+            &LATENCY_BOUNDS_S,
+        );
+        histogram_family(
+            &mut out,
+            "fftsweep_trace_exec_seconds",
+            "Host wall-clock batch execution time per job",
+            &card_series(|set| &set.exec_s),
+            &LATENCY_BOUNDS_S,
+        );
+        histogram_family(
+            &mut out,
+            "fftsweep_trace_e2e_latency_seconds",
+            "Submit to reply end-to-end latency per job",
+            &card_series(|set| &set.e2e_s),
+            &LATENCY_BOUNDS_S,
+        );
+        histogram_family(
+            &mut out,
+            "fftsweep_trace_energy_per_job_joules",
+            "Simulated joules attributed per job",
+            &card_series(|set| &set.energy_j),
+            &ENERGY_BOUNDS_J,
+        );
+        let artifact_series: Vec<(String, &HistogramSnapshot)> = tr
+            .per_artifact
+            .iter()
+            .map(|(artifact, set)| {
+                (format!("artifact=\"{}\"", prom_escape(artifact)), &set.e2e_s)
+            })
+            .collect();
+        histogram_family(
+            &mut out,
+            "fftsweep_trace_artifact_e2e_latency_seconds",
+            "End-to-end latency per job by serving artifact",
+            &artifact_series,
+            &LATENCY_BOUNDS_S,
+        );
+    }
     out
 }
 
@@ -238,9 +397,45 @@ mod tests {
         FleetSnapshot::from_cards(vec![card], budget)
     }
 
+    /// A snapshot whose trace summary holds real recorded spans: five per
+    /// card, all with e2e 1250 µs and 0.25 mJ, one artifact name that
+    /// needs label escaping.
+    fn traced_snap() -> FleetSnapshot {
+        use crate::telemetry::trace::{Span, SpanOutcome, TraceConfig, Tracer};
+        use std::time::Instant;
+        let t = Tracer::new(&TraceConfig::default(), 2, Instant::now()).unwrap();
+        for i in 0..10u64 {
+            let base = 1000 * i;
+            t.record(Span {
+                job_id: i,
+                artifact: "fft \"odd\"\nname".into(),
+                n: 1024,
+                card: (i % 2) as usize,
+                enqueue_us: base,
+                admit_us: base + 10,
+                seal_us: base + 210,
+                dispatch_us: base + 215,
+                exec_start_us: base + 240,
+                exec_end_us: base + 1240,
+                complete_us: base + 1250,
+                requested_mhz: 945.0,
+                granted_mhz: 945.0,
+                batch_occupancy: 64,
+                attempts: 1,
+                energy_j: 2.5e-4,
+                sim_batch_s: 8.0e-4,
+                outcome: SpanOutcome::Ok,
+            });
+        }
+        let mut s = snap(None);
+        s.trace = Some(t.summary());
+        s
+    }
+
     #[test]
     fn json_roundtrips_key_fields() {
         let j = snapshot_json(&snap(Some(240.0))).render();
+        assert!(j.contains("\"schema\": 2"));
         assert!(j.contains("\"power_budget_w\": 240"));
         assert!(j.contains("\"avg_1s_w\": 118.5"));
         assert!(j.contains("\"power_share_w\": 120"));
@@ -266,20 +461,81 @@ mod tests {
 
     #[test]
     fn prometheus_format_is_well_formed() {
-        let text = prometheus_text(&snap(Some(240.0)));
-        for line in text.lines() {
-            assert!(
-                line.starts_with('#') || line.contains(' '),
-                "bad exposition line: {line}"
-            );
+        for text in [prometheus_text(&snap(Some(240.0))), prometheus_text(&traced_snap())] {
+            for line in text.lines() {
+                assert!(
+                    line.starts_with('#') || line.contains(' '),
+                    "bad exposition line: {line}"
+                );
+            }
+            // every family has HELP + TYPE, every TYPE is a known kind
+            let helps = text.lines().filter(|l| l.starts_with("# HELP")).count();
+            let types = text.lines().filter(|l| l.starts_with("# TYPE")).count();
+            assert_eq!(helps, types);
+            assert!(text
+                .lines()
+                .filter(|l| l.starts_with("# TYPE"))
+                .all(|l| l.ends_with("gauge") || l.ends_with("counter") || l.ends_with("histogram")));
         }
-        // every family has HELP + TYPE, every TYPE is a gauge
-        let helps = text.lines().filter(|l| l.starts_with("# HELP")).count();
-        let types = text.lines().filter(|l| l.starts_with("# TYPE")).count();
-        assert_eq!(helps, types);
-        assert!(text.lines().filter(|l| l.starts_with("# TYPE")).all(|l| l.ends_with("gauge")));
+        let text = prometheus_text(&snap(Some(240.0)));
         assert!(text.contains("fftsweep_fleet_power_budget_watts 240"));
         assert!(text.contains("fftsweep_card_power_1s_watts{card=\"0\",gpu=\"Tesla \\\"V100\\\"\",governor=\"common\"} 118.5"));
+        assert!(!text.contains("fftsweep_trace_"), "no trace series without a summary");
+    }
+
+    #[test]
+    fn trace_json_exports_counters_and_percentiles() {
+        let j = snapshot_json(&traced_snap()).render();
+        assert!(j.contains("\"ok_spans\": 10"));
+        assert!(j.contains("\"shed_spans\": 0"));
+        assert!(j.contains("\"per_artifact\""));
+        assert!(j.contains("\"p999\""));
+        // percentile readout of the constant 1.25e-3 s e2e stays within
+        // the histogram's bucket error
+        let parsed = Json::parse(&j).unwrap();
+        let p99 = parsed
+            .get("trace")
+            .and_then(|t| t.get("fleet"))
+            .and_then(|f| f.get("e2e_s"))
+            .and_then(|h| h.get("p99"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((p99 / 1.25e-3 - 1.0).abs() < 0.025, "p99 {p99}");
+        // the untraced snapshot carries no trace key at all
+        assert!(!snapshot_json(&snap(None)).render().contains("\"trace\""));
+    }
+
+    #[test]
+    fn trace_prometheus_histograms_are_cumulative_and_closed() {
+        let text = prometheus_text(&traced_snap());
+        assert!(text.contains("# TYPE fftsweep_trace_e2e_latency_seconds histogram"));
+        assert!(text.contains("fftsweep_trace_spans_total{outcome=\"ok\"} 10"));
+
+        // card 0's e2e buckets: nondecreasing, closed by +Inf == _count
+        let buckets: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("fftsweep_trace_e2e_latency_seconds_bucket{card=\"0\""))
+            .collect();
+        assert!(buckets.len() > 2, "expected a bucket ladder, got {buckets:?}");
+        let counts: Vec<u64> = buckets
+            .iter()
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "buckets must be cumulative");
+        let inf = buckets.iter().find(|l| l.contains("le=\"+Inf\"")).unwrap();
+        assert!(inf.ends_with(" 5"), "+Inf bucket covers card 0's 5 spans: {inf}");
+        assert!(text.contains("fftsweep_trace_e2e_latency_seconds_count{card=\"0\"} 5"));
+        let sum = text
+            .lines()
+            .find(|l| l.starts_with("fftsweep_trace_e2e_latency_seconds_sum{card=\"0\"}"))
+            .unwrap();
+        let sum_v: f64 = sum.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((sum_v - 5.0 * 1.25e-3).abs() < 1e-12, "{sum}");
+
+        // the artifact label is escaped per the exposition string rules
+        assert!(text.contains(
+            "fftsweep_trace_artifact_e2e_latency_seconds_count{artifact=\"fft \\\"odd\\\"\\nname\"} 10"
+        ));
     }
 
     #[test]

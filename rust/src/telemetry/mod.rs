@@ -24,21 +24,36 @@
 //!     now a renderer on top of it.
 //!   * [`export`] — JSON (`serve --telemetry-out`) and Prometheus text
 //!     exposition renderings of a snapshot.
+//!   * [`trace`] + [`histogram`] — per-job request tracing: every job
+//!     carries stage timestamps (enqueue → admit → seal → dispatch →
+//!     exec → complete) plus the governor's clock decision, batch
+//!     occupancy, retry count and attributed joules; completed
+//!     [`trace::Span`]s land in a fixed-capacity ring, in lock-free
+//!     log-bucketed [`histogram::LogHistogram`]s (queue wait / exec /
+//!     end-to-end latency / energy per job, per card and per artifact)
+//!     and optionally in a JSONL journal (`serve --trace-out`,
+//!     replayable with `fftsweep trace`).
 //!
 //! Consumers: `coordinator::Engine` (per-card recorders + the arbiter
-//! thread), `analysis::telemetry` (capped-vs-uncapped comparison table),
-//! `fftsweep serve --power-budget-w/--telemetry-out` and `fftsweep
-//! telemetry` in the CLI, and `benches/bench_serving.rs` (the `power`
-//! section of `BENCH_serving.json`).
+//! thread + the tracer), `analysis::telemetry` (capped-vs-uncapped
+//! comparison table), `analysis::trace` (span-journal replay),
+//! `fftsweep serve --power-budget-w/--telemetry-out/--trace-out`,
+//! `fftsweep telemetry` and `fftsweep trace` in the CLI, and
+//! `benches/bench_serving.rs` (the `power` and `observability` sections
+//! of `BENCH_serving.json`).
 
 pub mod budget;
 pub mod export;
+pub mod histogram;
 pub mod recorder;
 pub mod ring;
 pub mod snapshot;
+pub mod trace;
 
 pub use budget::{budget_key, clock_cap_for_budget, share_bounds_w, PowerBudget, ShareCell};
 pub use export::{prometheus_text, snapshot_json};
+pub use histogram::{HistogramSnapshot, LogHistogram};
 pub use recorder::{BatchSample, PowerRecorder, RecorderConfig};
 pub use ring::Ring;
 pub use snapshot::{CardSnapshot, FleetSnapshot, FleetTotals};
+pub use trace::{HistSetSnapshot, Span, SpanOutcome, Stamps, TraceConfig, TraceSummary, Tracer};

@@ -148,4 +148,60 @@ mod tests {
         }
         assert_eq!(r.buf.as_ptr(), ptr, "ring storage must stay in place");
     }
+
+    /// Wraparound holds its invariants across many full revolutions, not
+    /// just the first: the retained window is always the last `cap`
+    /// pushes in order, and the drop accounting matches.
+    #[test]
+    fn repeated_wraparound_keeps_window_and_accounting() {
+        let cap = 7usize;
+        let mut r = Ring::new(cap);
+        for v in 0u64..200 {
+            r.push(v);
+            let expect_len = (v as usize + 1).min(cap);
+            assert_eq!(r.len(), expect_len);
+            assert_eq!(r.newest(), Some(&v));
+            assert_eq!(r.total_pushed(), v + 1);
+            assert_eq!(r.dropped(), (v + 1).saturating_sub(cap as u64));
+            let got: Vec<u64> = r.iter().copied().collect();
+            let lo = (v as usize + 1).saturating_sub(cap) as u64;
+            let want: Vec<u64> = (lo..=v).collect();
+            assert_eq!(got, want, "window after push {v}");
+        }
+    }
+
+    /// The serving tracer's usage pattern: writers record through a
+    /// mutex while another thread snapshots concurrently. Every snapshot
+    /// must be internally consistent (a contiguous, ordered suffix of
+    /// the pushes so far) — no torn or reordered windows.
+    #[test]
+    fn concurrent_snapshot_while_recording_sees_consistent_suffixes() {
+        use std::sync::{Arc, Mutex};
+
+        let ring = Arc::new(Mutex::new(Ring::new(32)));
+        let writer = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for v in 0u64..20_000 {
+                    ring.lock().unwrap().push(v);
+                }
+            })
+        };
+        let mut last_total = 0u64;
+        for _ in 0..500 {
+            let (window, total): (Vec<u64>, u64) = {
+                let r = ring.lock().unwrap();
+                (r.iter().copied().collect(), r.total_pushed())
+            };
+            assert!(total >= last_total, "total_pushed is monotone");
+            last_total = total;
+            // the window is exactly the last min(total, cap) values
+            let want: Vec<u64> = (total.saturating_sub(window.len() as u64)..total).collect();
+            assert_eq!(window, want, "snapshot at total={total}");
+        }
+        writer.join().unwrap();
+        let r = ring.lock().unwrap();
+        assert_eq!(r.total_pushed(), 20_000);
+        assert_eq!(r.newest(), Some(&19_999));
+    }
 }

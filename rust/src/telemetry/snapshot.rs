@@ -6,6 +6,7 @@
 //! consume; the old report string is now just [`FleetSnapshot::render`]
 //! on top of it.
 
+use crate::telemetry::trace::TraceSummary;
 use crate::util::table::fnum;
 
 /// One card's full serving + power state at snapshot time.
@@ -94,6 +95,10 @@ pub struct FleetSnapshot {
     pub fleet: FleetTotals,
     /// The operator's global cap (None = uncapped serving).
     pub power_budget_w: Option<f64>,
+    /// Request-trace rollup (span counters + latency/energy histograms).
+    /// `Engine::snapshot` always fills it; `from_cards` leaves it `None`
+    /// so card-only consumers (and tests) stay unchanged.
+    pub trace: Option<TraceSummary>,
 }
 
 impl FleetSnapshot {
@@ -137,6 +142,7 @@ impl FleetSnapshot {
             cards,
             fleet: t,
             power_budget_w,
+            trace: None,
         }
     }
 

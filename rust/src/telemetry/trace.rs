@@ -1,0 +1,674 @@
+//! Per-job request tracing through the serving stack.
+//!
+//! Every job submitted to the `Engine` carries a [`Stamps`] record on its
+//! envelope; the coordinator fills the stage timestamps as the job moves
+//! enqueue → admit → batch-seal → dispatch → exec → complete, and the
+//! worker folds the finished [`Span`] — stage times plus the governor's
+//! clock decision, batch occupancy, retry count and the job's attributed
+//! joules — into the card's [`Tracer`] state:
+//!
+//!   * a fixed-capacity [`Ring`] of completed spans (overwrite-oldest,
+//!     behind a short-hold mutex — the "lock-light" part: the only lock
+//!     on the hot path, held for one push),
+//!   * lock-free [`LogHistogram`]s of queue wait / exec / end-to-end
+//!     latency and energy per job, per card and per artifact kind,
+//!   * optionally a JSONL journal (`serve --trace-out`), one span per
+//!     line, replayable by `fftsweep trace`.
+//!
+//! Stage timestamps are recorded as microseconds since the engine epoch,
+//! captured from monotonic `Instant`s, so within a span they are
+//! guaranteed monotone and the six stage segments sum exactly to the
+//! end-to-end latency.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::histogram::{HistogramSnapshot, LogHistogram};
+use super::ring::Ring;
+use crate::util::json::Json;
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Tracing knobs on `EngineConfig`. Enabled by default: the overhead
+/// budget (gated in the bench `observability` section) is <5% of
+/// closed-loop throughput, cheap enough to be always-on.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Completed spans retained in memory (overwrite-oldest).
+    pub ring_capacity: usize,
+    /// Stream completed spans to this file as JSONL, one span per line.
+    pub jsonl_out: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ring_capacity: 4096,
+            jsonl_out: None,
+        }
+    }
+}
+
+/// In-flight stage timestamps, carried on the job envelope. All four
+/// start equal at submit time; the coordinator overwrites `admit` when
+/// the router accepts the job, the batcher overwrites `seal` when the
+/// batch closes, and the dispatcher overwrites `dispatch` when the
+/// batch is handed to a worker channel.
+#[derive(Debug, Clone, Copy)]
+pub struct Stamps {
+    pub enqueue: Instant,
+    pub admit: Instant,
+    pub seal: Instant,
+    pub dispatch: Instant,
+}
+
+impl Stamps {
+    pub fn now() -> Self {
+        let t = Instant::now();
+        Self {
+            enqueue: t,
+            admit: t,
+            seal: t,
+            dispatch: t,
+        }
+    }
+}
+
+impl Default for Stamps {
+    fn default() -> Self {
+        Self::now()
+    }
+}
+
+/// How the job left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Completed with a result.
+    Ok,
+    /// Dropped with a typed error (retries exhausted, no eligible card,
+    /// or shutdown).
+    Shed,
+}
+
+impl SpanOutcome {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanOutcome::Ok => "ok",
+            SpanOutcome::Shed => "shed",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "ok" => Some(SpanOutcome::Ok),
+            "shed" => Some(SpanOutcome::Shed),
+            _ => None,
+        }
+    }
+}
+
+/// One completed request, stage-stamped in µs since the engine epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub job_id: u64,
+    /// Artifact cache key of the plan the job executed under.
+    pub artifact: String,
+    pub n: u64,
+    pub card: usize,
+    pub enqueue_us: u64,
+    pub admit_us: u64,
+    pub seal_us: u64,
+    pub dispatch_us: u64,
+    pub exec_start_us: u64,
+    pub exec_end_us: u64,
+    pub complete_us: u64,
+    /// The governor's pre-cap clock choice for the batch, MHz.
+    pub requested_mhz: f64,
+    /// The clock actually granted after budget/health caps and menu
+    /// snapping, MHz. `granted < requested` marks the span as capped.
+    pub granted_mhz: f64,
+    pub batch_occupancy: u64,
+    /// Submit attempts (1 = first try; >1 = retried after a fault).
+    pub attempts: u32,
+    /// Joules attributed to this job: batch energy / occupancy, the same
+    /// accounting `PowerRecorder` totals are built from.
+    pub energy_j: f64,
+    /// Simulated on-card batch time, s (moves with DVFS).
+    pub sim_batch_s: f64,
+    pub outcome: SpanOutcome,
+}
+
+impl Span {
+    /// Was the granted clock below the governor's request (power budget
+    /// or health derate bit)?
+    pub fn capped(&self) -> bool {
+        self.granted_mhz < self.requested_mhz - 1e-9
+    }
+
+    /// enqueue → admit: router/admission time, s.
+    pub fn admit_s(&self) -> f64 {
+        us_delta(self.enqueue_us, self.admit_us)
+    }
+
+    /// admit → seal: time waiting for the batch to fill, s.
+    pub fn batch_wait_s(&self) -> f64 {
+        us_delta(self.admit_us, self.seal_us)
+    }
+
+    /// seal → exec-start: dispatch channel plus worker queueing, s.
+    pub fn dispatch_s(&self) -> f64 {
+        us_delta(self.seal_us, self.exec_start_us)
+    }
+
+    /// Everything before execution began, s.
+    pub fn queue_wait_s(&self) -> f64 {
+        us_delta(self.enqueue_us, self.exec_start_us)
+    }
+
+    /// exec-start → exec-end: host wall-clock execution time, s.
+    pub fn exec_s(&self) -> f64 {
+        us_delta(self.exec_start_us, self.exec_end_us)
+    }
+
+    /// exec-end → complete: result fan-out and reply delivery, s.
+    pub fn reply_s(&self) -> f64 {
+        us_delta(self.exec_end_us, self.complete_us)
+    }
+
+    /// Submit → reply, s.
+    pub fn e2e_s(&self) -> f64 {
+        us_delta(self.enqueue_us, self.complete_us)
+    }
+
+    /// Stage stamps in submission order, for monotonicity checks.
+    pub fn stamps_us(&self) -> [u64; 7] {
+        [
+            self.enqueue_us,
+            self.admit_us,
+            self.seal_us,
+            self.dispatch_us,
+            self.exec_start_us,
+            self.exec_end_us,
+            self.complete_us,
+        ]
+    }
+
+    pub fn monotone(&self) -> bool {
+        self.stamps_us().windows(2).all(|w| w[0] <= w[1])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id.into());
+        j.set("artifact", self.artifact.as_str().into());
+        j.set("n", self.n.into());
+        j.set("card", (self.card as u64).into());
+        j.set("enqueue_us", self.enqueue_us.into());
+        j.set("admit_us", self.admit_us.into());
+        j.set("seal_us", self.seal_us.into());
+        j.set("dispatch_us", self.dispatch_us.into());
+        j.set("exec_start_us", self.exec_start_us.into());
+        j.set("exec_end_us", self.exec_end_us.into());
+        j.set("complete_us", self.complete_us.into());
+        j.set("requested_mhz", self.requested_mhz.into());
+        j.set("granted_mhz", self.granted_mhz.into());
+        j.set("batch_occupancy", self.batch_occupancy.into());
+        j.set("attempts", (self.attempts as u64).into());
+        j.set("energy_j", self.energy_j.into());
+        j.set("sim_batch_s", self.sim_batch_s.into());
+        j.set("outcome", self.outcome.label().into());
+        j
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl_line(&self) -> String {
+        self.to_json().render_compact()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Span> {
+        fn num(j: &Json, key: &str) -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("span field `{key}` missing or not a number"))
+        }
+        fn uint(j: &Json, key: &str) -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("span field `{key}` missing or not a u64"))
+        }
+        let outcome_label = j
+            .get("outcome")
+            .and_then(Json::as_str)
+            .context("span field `outcome` missing or not a string")?;
+        Ok(Span {
+            job_id: uint(j, "job_id")?,
+            artifact: j
+                .get("artifact")
+                .and_then(Json::as_str)
+                .context("span field `artifact` missing or not a string")?
+                .to_string(),
+            n: uint(j, "n")?,
+            card: uint(j, "card")? as usize,
+            enqueue_us: uint(j, "enqueue_us")?,
+            admit_us: uint(j, "admit_us")?,
+            seal_us: uint(j, "seal_us")?,
+            dispatch_us: uint(j, "dispatch_us")?,
+            exec_start_us: uint(j, "exec_start_us")?,
+            exec_end_us: uint(j, "exec_end_us")?,
+            complete_us: uint(j, "complete_us")?,
+            requested_mhz: num(j, "requested_mhz")?,
+            granted_mhz: num(j, "granted_mhz")?,
+            batch_occupancy: uint(j, "batch_occupancy")?,
+            attempts: uint(j, "attempts")? as u32,
+            energy_j: num(j, "energy_j")?,
+            sim_batch_s: num(j, "sim_batch_s")?,
+            outcome: SpanOutcome::from_label(outcome_label)
+                .with_context(|| format!("unknown span outcome `{outcome_label}`"))?,
+        })
+    }
+}
+
+fn us_delta(from_us: u64, to_us: u64) -> f64 {
+    to_us.saturating_sub(from_us) as f64 * 1e-6
+}
+
+/// The four distributions the tentpole tracks, as live histograms.
+#[derive(Debug, Default)]
+pub struct HistSet {
+    pub queue_wait_s: LogHistogram,
+    pub exec_s: LogHistogram,
+    pub e2e_s: LogHistogram,
+    pub energy_j: LogHistogram,
+}
+
+impl HistSet {
+    fn observe(&self, span: &Span) {
+        self.queue_wait_s.record(span.queue_wait_s());
+        self.exec_s.record(span.exec_s());
+        self.e2e_s.record(span.e2e_s());
+        self.energy_j.record(span.energy_j);
+    }
+
+    pub fn snapshot(&self) -> HistSetSnapshot {
+        HistSetSnapshot {
+            queue_wait_s: self.queue_wait_s.snapshot(),
+            exec_s: self.exec_s.snapshot(),
+            e2e_s: self.e2e_s.snapshot(),
+            energy_j: self.energy_j.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`HistSet`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSetSnapshot {
+    pub queue_wait_s: HistogramSnapshot,
+    pub exec_s: HistogramSnapshot,
+    pub e2e_s: HistogramSnapshot,
+    pub energy_j: HistogramSnapshot,
+}
+
+/// What the exporters see: counters plus per-card / per-artifact
+/// histogram snapshots, attached to `FleetSnapshot.trace`.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub enabled: bool,
+    /// Spans completed with a result.
+    pub ok_spans: u64,
+    /// Spans dropped with a typed error.
+    pub shed_spans: u64,
+    /// Spans currently held in the ring.
+    pub ring_len: usize,
+    /// Spans the ring has overwritten.
+    pub ring_dropped: u64,
+    /// JSONL write failures (the journal is best-effort; serving never
+    /// blocks on a full disk).
+    pub sink_errors: u64,
+    /// Index = card id.
+    pub per_card: Vec<HistSetSnapshot>,
+    /// Sorted by artifact key.
+    pub per_artifact: Vec<(String, HistSetSnapshot)>,
+}
+
+impl TraceSummary {
+    /// Fleet-wide rollup across cards.
+    pub fn fleet(&self) -> HistSetSnapshot {
+        let mut out = HistSetSnapshot::default();
+        for set in &self.per_card {
+            out.queue_wait_s.merge(&set.queue_wait_s);
+            out.exec_s.merge(&set.exec_s);
+            out.e2e_s.merge(&set.e2e_s);
+            out.energy_j.merge(&set.energy_j);
+        }
+        out
+    }
+}
+
+/// Fleet-shared tracing state. `record` touches one short-hold mutex
+/// (the span ring) plus lock-free histogram counters; everything else is
+/// read-side.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    epoch: Instant,
+    spans: Mutex<Ring<Span>>,
+    ok_spans: AtomicU64,
+    shed_spans: AtomicU64,
+    sink: Option<Mutex<BufWriter<File>>>,
+    sink_errors: AtomicU64,
+    per_card: Vec<HistSet>,
+    per_artifact: Mutex<BTreeMap<String, Arc<HistSet>>>,
+}
+
+impl Tracer {
+    pub fn new(cfg: &TraceConfig, n_cards: usize, epoch: Instant) -> Result<Self> {
+        let sink = match (&cfg.jsonl_out, cfg.enabled) {
+            (Some(path), true) => {
+                let f = File::create(path)
+                    .with_context(|| format!("creating trace journal {}", path.display()))?;
+                Some(Mutex::new(BufWriter::new(f)))
+            }
+            _ => None,
+        };
+        Ok(Self {
+            enabled: cfg.enabled,
+            epoch,
+            spans: Mutex::new(Ring::new(cfg.ring_capacity.max(1))),
+            ok_spans: AtomicU64::new(0),
+            shed_spans: AtomicU64::new(0),
+            sink,
+            sink_errors: AtomicU64::new(0),
+            per_card: (0..n_cards).map(|_| HistSet::default()).collect(),
+            per_artifact: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// A tracer that records nothing (used when `trace.enabled = false`).
+    pub fn disabled(n_cards: usize, epoch: Instant) -> Self {
+        Self::new(
+            &TraceConfig {
+                enabled: false,
+                ring_capacity: 1,
+                jsonl_out: None,
+            },
+            n_cards,
+            epoch,
+        )
+        .expect("disabled tracer has no sink to fail")
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the engine epoch for a monotonic instant.
+    pub fn micros(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn record(&self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        match span.outcome {
+            SpanOutcome::Ok => {
+                self.ok_spans.fetch_add(1, Ordering::Relaxed);
+                if let Some(set) = self.per_card.get(span.card) {
+                    set.observe(&span);
+                }
+                let set = {
+                    let mut map = relock(&self.per_artifact);
+                    Arc::clone(
+                        map.entry(span.artifact.clone())
+                            .or_insert_with(|| Arc::new(HistSet::default())),
+                    )
+                };
+                set.observe(&span);
+            }
+            SpanOutcome::Shed => {
+                self.shed_spans.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(sink) = &self.sink {
+            let line = span.to_jsonl_line();
+            let mut w = relock(sink);
+            if writeln!(w, "{line}").is_err() {
+                self.sink_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        relock(&self.spans).push(span);
+    }
+
+    pub fn ok_spans(&self) -> u64 {
+        self.ok_spans.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_spans(&self) -> u64 {
+        self.shed_spans.load(Ordering::Relaxed)
+    }
+
+    /// The most recent completed spans, oldest first (up to `limit`).
+    pub fn recent(&self, limit: usize) -> Vec<Span> {
+        let ring = relock(&self.spans);
+        let skip = ring.len().saturating_sub(limit);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Flush the JSONL journal (called on engine shutdown).
+    pub fn flush(&self) {
+        if let Some(sink) = &self.sink {
+            if relock(sink).flush().is_err() {
+                self.sink_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn summary(&self) -> TraceSummary {
+        let (ring_len, ring_dropped) = {
+            let ring = relock(&self.spans);
+            (ring.len(), ring.dropped())
+        };
+        TraceSummary {
+            enabled: self.enabled,
+            ok_spans: self.ok_spans.load(Ordering::Relaxed),
+            shed_spans: self.shed_spans.load(Ordering::Relaxed),
+            ring_len,
+            ring_dropped,
+            sink_errors: self.sink_errors.load(Ordering::Relaxed),
+            per_card: self.per_card.iter().map(HistSet::snapshot).collect(),
+            per_artifact: relock(&self.per_artifact)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(job_id: u64, card: usize, base_us: u64) -> Span {
+        Span {
+            job_id,
+            artifact: "fft_f32_n1024_b64".into(),
+            n: 1024,
+            card,
+            enqueue_us: base_us,
+            admit_us: base_us + 10,
+            seal_us: base_us + 210,
+            dispatch_us: base_us + 215,
+            exec_start_us: base_us + 240,
+            exec_end_us: base_us + 1240,
+            complete_us: base_us + 1250,
+            requested_mhz: 945.0,
+            granted_mhz: 772.5,
+            batch_occupancy: 64,
+            attempts: 1,
+            energy_j: 2.5e-4,
+            sim_batch_s: 8.0e-4,
+            outcome: SpanOutcome::Ok,
+        }
+    }
+
+    #[test]
+    fn segments_sum_to_end_to_end() {
+        let s = span(1, 0, 1000);
+        assert!(s.monotone());
+        let total = s.admit_s() + s.batch_wait_s() + s.dispatch_s() + s.exec_s() + s.reply_s();
+        assert!((total - s.e2e_s()).abs() < 1e-12);
+        assert!((s.queue_wait_s() - (s.admit_s() + s.batch_wait_s() + s.dispatch_s())).abs() < 1e-12);
+        assert!(s.capped(), "granted 772.5 < requested 945");
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_lossless() {
+        let s = span(7, 1, 123_456);
+        let line = s.to_jsonl_line();
+        assert!(!line.contains('\n'));
+        let back = Span::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, s);
+        let mut shed = span(8, 0, 200_000);
+        shed.outcome = SpanOutcome::Shed;
+        let back = Span::from_json(&Json::parse(&shed.to_jsonl_line()).unwrap()).unwrap();
+        assert_eq!(back.outcome, SpanOutcome::Shed);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_or_malformed_fields() {
+        let mut j = span(1, 0, 0).to_json();
+        j.set("exec_end_us", Json::Null);
+        assert!(Span::from_json(&j).is_err());
+        let mut j = span(1, 0, 0).to_json();
+        j.set("outcome", "exploded".into());
+        assert!(Span::from_json(&j).is_err());
+        assert!(Span::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn tracer_aggregates_per_card_and_artifact() {
+        let t = Tracer::new(&TraceConfig::default(), 2, Instant::now()).unwrap();
+        assert!(t.enabled());
+        for i in 0..10 {
+            t.record(span(i, (i % 2) as usize, 1000 * i));
+        }
+        let mut other = span(99, 0, 50_000);
+        other.artifact = "fft_f32_n2048_b64".into();
+        t.record(other);
+        let mut shed = span(100, 0, 60_000);
+        shed.outcome = SpanOutcome::Shed;
+        t.record(shed);
+
+        let s = t.summary();
+        assert_eq!(s.ok_spans, 11);
+        assert_eq!(s.shed_spans, 1);
+        assert_eq!(s.per_card.len(), 2);
+        assert_eq!(s.per_card[0].e2e_s.count, 6, "cards 0,2,4,6,8 + the odd artifact");
+        assert_eq!(s.per_card[1].e2e_s.count, 5);
+        assert_eq!(s.per_artifact.len(), 2);
+        let fleet = s.fleet();
+        assert_eq!(fleet.e2e_s.count, 11);
+        // every recorded span had e2e = 1250 µs; the histogram read
+        // stays within the bucket error bound
+        let p99 = fleet.e2e_s.percentile(99.0);
+        assert!((p99 / 1.25e-3 - 1.0).abs() < 0.025, "p99 {p99}");
+        // energy attribution: histogram sum equals the recorded joules
+        assert!((fleet.energy_j.sum - 11.0 * 2.5e-4).abs() < 1e-12);
+        assert_eq!(s.ring_len, 12, "shed spans land in the ring too");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled(2, Instant::now());
+        assert!(!t.enabled());
+        t.record(span(1, 0, 0));
+        let s = t.summary();
+        assert_eq!(s.ok_spans, 0);
+        assert_eq!(s.ring_len, 0);
+        assert!(s.fleet().e2e_s.is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let cfg = TraceConfig {
+            ring_capacity: 4,
+            ..TraceConfig::default()
+        };
+        let t = Tracer::new(&cfg, 1, Instant::now()).unwrap();
+        for i in 0..7 {
+            t.record(span(i, 0, 1000 * i));
+        }
+        let s = t.summary();
+        assert_eq!(s.ok_spans, 7, "counters see every span");
+        assert_eq!(s.ring_len, 4);
+        assert_eq!(s.ring_dropped, 3);
+        let ids: Vec<u64> = t.recent(10).iter().map(|s| s.job_id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 6], "oldest overwritten first");
+        assert_eq!(t.recent(2).len(), 2);
+    }
+
+    #[test]
+    fn jsonl_sink_streams_one_line_per_span() {
+        let path = std::env::temp_dir().join(format!(
+            "fftsweep_trace_test_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let cfg = TraceConfig {
+            jsonl_out: Some(path.clone()),
+            ..TraceConfig::default()
+        };
+        let t = Tracer::new(&cfg, 1, Instant::now()).unwrap();
+        for i in 0..5 {
+            t.record(span(i, 0, 1000 * i));
+        }
+        t.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spans: Vec<Span> = text
+            .lines()
+            .map(|l| Span::from_json(&Json::parse(l).unwrap()).unwrap())
+            .collect();
+        assert_eq!(spans.len(), 5);
+        assert_eq!(spans[4].job_id, 4);
+        assert_eq!(t.summary().sink_errors, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_record_and_summary_do_not_tear() {
+        let t = Arc::new(Tracer::new(&TraceConfig::default(), 4, Instant::now()).unwrap());
+        let writers: Vec<_> = (0..4)
+            .map(|c| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..2_000 {
+                        t.record(span(i, c, 100 * i));
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            let s = t.summary();
+            assert!(s.ok_spans <= 8_000);
+            assert!(s.fleet().e2e_s.count <= 8_000);
+            assert!(s.ring_len <= 4096);
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let s = t.summary();
+        assert_eq!(s.ok_spans, 8_000);
+        assert_eq!(s.fleet().e2e_s.count, 8_000);
+    }
+}

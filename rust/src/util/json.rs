@@ -1,6 +1,8 @@
-//! Minimal JSON writer (no `serde` in the offline crate set): build a
-//! [`Json`] value tree, render with proper escaping. Used for the
-//! machine-readable `report.json` next to the CSV outputs.
+//! Minimal JSON writer + reader (no `serde` in the offline crate set):
+//! build a [`Json`] value tree, render with proper escaping — pretty for
+//! `report.json`-style artifacts, compact single-line for the trace
+//! JSONL journal — and parse it back with a small recursive-descent
+//! reader (`fftsweep trace` replays recorded span journals).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -42,6 +44,101 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out, 0);
         out
+    }
+
+    /// Single-line rendering (no indentation or newlines) — one value per
+    /// line is the JSONL contract the trace journal relies on.
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write_compact(out);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            // scalars never embed newlines (strings escape them)
+            other => other.write(out, 0),
+        }
+    }
+
+    /// Object field lookup; `None` on non-objects or absent keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as u64 (must be a non-negative integer value).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 1.9e19 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse one JSON value from `text` (the whole string must be
+    /// consumed apart from trailing whitespace).
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(
+            pos == bytes.len(),
+            "trailing garbage at byte {pos} of JSON input"
+        );
+        Ok(value)
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -114,6 +211,145 @@ impl Json {
     }
 }
 
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, lit: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        bytes[*pos..].starts_with(lit.as_bytes()),
+        "expected `{lit}` at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(())
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(bytes, pos);
+    anyhow::ensure!(*pos < bytes.len(), "unexpected end of JSON input");
+    match bytes[*pos] {
+        b'n' => expect(bytes, pos, "null").map(|_| Json::Null),
+        b't' => expect(bytes, pos, "true").map(|_| Json::Bool(true)),
+        b'f' => expect(bytes, pos, "false").map(|_| Json::Bool(false)),
+        b'"' => parse_string(bytes, pos).map(Json::Str),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => anyhow::bail!("expected `,` or `]` at byte {pos}"),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, ":")?;
+                map.insert(key, parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    _ => anyhow::bail!("expected `,` or `}}` at byte {pos}"),
+                }
+            }
+        }
+        _ => parse_number(bytes, pos),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        bytes.get(*pos) == Some(&b'"'),
+        "expected string at byte {pos}"
+    );
+    *pos += 1;
+    let mut out = String::new();
+    // operate on the char level so multi-byte UTF-8 passes through intact
+    let rest = std::str::from_utf8(&bytes[*pos..])?;
+    let mut chars = rest.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => {
+                *pos += i + 1;
+                return Ok(out);
+            }
+            '\\' => {
+                let (_, esc) = chars
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("dangling escape in string"))?;
+                match esc {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    'r' => out.push('\r'),
+                    't' => out.push('\t'),
+                    'b' => out.push('\u{8}'),
+                    'f' => out.push('\u{c}'),
+                    'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let (_, h) = chars
+                                .next()
+                                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                            code = code * 16
+                                + h.to_digit(16)
+                                    .ok_or_else(|| anyhow::anyhow!("bad hex in \\u escape"))?;
+                        }
+                        // unpaired surrogates degrade to U+FFFD, not an error
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => anyhow::bail!("unsupported escape `\\{other}`"),
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    anyhow::bail!("unterminated string")
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    anyhow::ensure!(*pos > start, "expected a JSON value at byte {start}");
+    let text = std::str::from_utf8(&bytes[start..*pos])?;
+    let x: f64 = text
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad number `{text}` at byte {start}"))?;
+    Ok(Json::Num(x))
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Self {
         Json::Str(s.to_string())
@@ -180,5 +416,71 @@ mod tests {
     #[should_panic(expected = "non-object")]
     fn set_on_array_panics() {
         Json::Arr(vec![]).set("k", Json::Null);
+    }
+
+    #[test]
+    fn compact_rendering_is_single_line() {
+        let mut root = Json::obj();
+        root.set("a", 1.0.into());
+        let mut arr = Json::Arr(vec![]);
+        arr.push("x\ny".into());
+        arr.push(Json::Null);
+        root.set("list", arr);
+        let s = root.render_compact();
+        assert_eq!(s, "{\"a\":1,\"list\":[\"x\\ny\",null]}");
+        assert!(!s.contains('\n'), "JSONL lines must be newline-free");
+    }
+
+    #[test]
+    fn parse_roundtrips_compact_and_pretty() {
+        let mut root = Json::obj();
+        root.set("name", "Tesla \"V100\"".into());
+        root.set("mhz", 945.5.into());
+        root.set("count", 42u64.into());
+        root.set("flag", true.into());
+        root.set("nothing", Json::Null);
+        let mut arr = Json::Arr(vec![]);
+        arr.push(1.0.into());
+        arr.push(2.5.into());
+        root.set("xs", arr);
+        for text in [root.render(), root.render_compact()] {
+            let back = Json::parse(&text).expect("parse");
+            assert_eq!(back, root);
+        }
+    }
+
+    #[test]
+    fn accessors_read_typed_fields() {
+        let j = Json::parse(r#"{"s":"hi","n":3,"f":1.5,"b":false,"a":[1]}"#).unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("hi"));
+        assert_eq!(j.get("n").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("f").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.get("f").and_then(Json::as_u64), None, "fractional is not u64");
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("a").and_then(Json::as_array).map(<[Json]>::len), Some(1));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("s"), None);
+    }
+
+    #[test]
+    fn parse_handles_escapes_and_whitespace() {
+        let j = Json::parse(" { \"k\" : \"a\\\"b\\\\c\\nd\\u0041\" } ").unwrap();
+        assert_eq!(j.get("k").and_then(Json::as_str), Some("a\"b\\c\ndA"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in ["", "{", "[1,", "{\"k\":}", "tru", "1.2.3", "{} trailing"] {
+            assert!(Json::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_negative_and_exponent_numbers() {
+        let j = Json::parse("[-1.5e3, 0.25, -7]").unwrap();
+        let xs = j.as_array().unwrap();
+        assert_eq!(xs[0].as_f64(), Some(-1500.0));
+        assert_eq!(xs[1].as_f64(), Some(0.25));
+        assert_eq!(xs[2].as_f64(), Some(-7.0));
     }
 }

@@ -68,7 +68,12 @@ pub fn argmax(xs: &[f64]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
-/// Percentile via linear interpolation, p in [0, 100].
+/// Percentile via linear interpolation, p in [0, 100]. Exact but it
+/// copies + sorts (O(n log n)) — analysis/offline use only. Serving-path
+/// consumers (the request tracer, `analysis::telemetry`, the serving
+/// bench) read percentiles from the one shared streaming implementation,
+/// [`crate::telemetry::histogram::LogHistogram`], which keeps this exact
+/// sort as its accuracy reference in tests.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;

@@ -36,7 +36,12 @@ Fails (exit 1) when:
     resolves to a result or a typed error), or the fail-stopped card was
     never quarantined — or the faulted-fleet goodput regressed more than
     30% below the committed baseline floor, or the shed rate rose above
-    the baseline plus a small absolute allowance.
+    the baseline plus a small absolute allowance,
+  * the observability section (schema 7) breaks its internal invariant —
+    the traced serve fell more than 5% below the untraced serve of the
+    identical workload (request tracing blew its overhead budget) — or
+    traced throughput regressed more than 30% below the committed
+    baseline floor.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -65,6 +70,7 @@ REQUIRED = [
     "native",
     "large_n",
     "robustness",
+    "observability",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
@@ -99,6 +105,12 @@ REQUIRED_ROBUSTNESS = [
     "shed_rate",
     "quarantines",
 ]
+REQUIRED_OBSERVABILITY = [
+    "untraced_jobs_per_s",
+    "traced_jobs_per_s",
+    "trace_overhead_frac",
+    "hist_readout_us",
+]
 MAX_REGRESSION = 0.30
 # Internal-invariant slack: simulated quantities are deterministic, so the
 # capped run only gets rounding headroom, not a regression budget.
@@ -114,6 +126,10 @@ LARGE_N_SLACK = 0.10
 # baseline: retries make sheds rare, but a shed is a typed, accounted
 # outcome, so a tiny scheduling-dependent drift is not a gate failure.
 SHED_SLACK = 0.02
+# Per-job request tracing (span record + histogram update + ring write)
+# must stay inside this fraction of the untraced serve's throughput —
+# the observability overhead budget the bench measures directly.
+TRACE_SLACK = 0.05
 
 
 class BenchCheckError(Exception):
@@ -149,6 +165,14 @@ def load_doc(path):
         ]
     elif "robustness" in doc:
         missing += [f"robustness.{k}" for k in REQUIRED_ROBUSTNESS]
+    if isinstance(doc.get("observability"), dict):
+        missing += [
+            f"observability.{k}"
+            for k in REQUIRED_OBSERVABILITY
+            if k not in doc["observability"]
+        ]
+    elif "observability" in doc:
+        missing += [f"observability.{k}" for k in REQUIRED_OBSERVABILITY]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -353,6 +377,34 @@ def check(fresh, base):
         problems.append(
             f"robustness.shed_rate {robust['shed_rate']:.4f} above the baseline "
             f"ceiling {shed_ceiling:.4f} — the retry path is shedding too much load"
+        )
+
+    # Observability section (schema 7): internal invariant of the fresh
+    # doc first — request tracing prices every job (span record, histogram
+    # update, ring write) and that price must stay inside the 5% budget
+    # the tracing-on-by-default decision rests on.
+    obs = fresh["observability"]
+    base_obs = base["observability"]
+    info.append(
+        f"observability: traced {obs['traced_jobs_per_s']:.0f} jobs/s vs untraced "
+        f"{obs['untraced_jobs_per_s']:.0f} jobs/s "
+        f"(overhead {obs['trace_overhead_frac']:.1%}), summary readout "
+        f"{obs['hist_readout_us']:.1f} us"
+    )
+    trace_floor = obs["untraced_jobs_per_s"] * (1.0 - TRACE_SLACK)
+    if obs["traced_jobs_per_s"] < trace_floor:
+        problems.append(
+            f"observability: traced serve {obs['traced_jobs_per_s']:.0f} jobs/s fell "
+            f"below {trace_floor:.0f} ({TRACE_SLACK:.0%} under the untraced "
+            f"{obs['untraced_jobs_per_s']:.0f}) — request tracing blew its "
+            "overhead budget"
+        )
+    # … then the trajectory floor vs the committed baseline.
+    floor = base_obs["traced_jobs_per_s"] * (1.0 - MAX_REGRESSION)
+    if obs["traced_jobs_per_s"] < floor:
+        problems.append(
+            f"observability.traced_jobs_per_s {obs['traced_jobs_per_s']:.0f} "
+            f"regressed >{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
         )
 
     # Power section: internal invariants of the fresh doc first — the cap

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""CI gate for the trace journal (trace-smoke job).
+
+Usage: check_trace.py <journal.jsonl> [expected_ok_spans]
+
+Validates the structured event journal a `fftsweep serve --trace-out`
+run streams: every line must parse as JSON, carry the full span schema
+(stage stamps, clock decision, occupancy, attempts, energy), keep its
+stage stamps monotone in submission order (enqueue <= admit <= seal <=
+dispatch <= exec_start <= exec_end <= complete), attribute a positive
+energy to every executed job, and — when the expected count is given —
+the journal must hold exactly that many ok spans (one per served job:
+tracing that silently drops spans is an observability regression, not a
+perf detail).
+
+The checking logic lives in pure functions (`load_spans`, `check`) so
+`test_check_trace.py` can unit-test pass/fail cases without spawning a
+serve.
+"""
+
+import json
+import sys
+
+STAMP_KEYS = [
+    "enqueue_us",
+    "admit_us",
+    "seal_us",
+    "dispatch_us",
+    "exec_start_us",
+    "exec_end_us",
+    "complete_us",
+]
+REQUIRED_KEYS = [
+    "job_id",
+    "artifact",
+    "n",
+    "card",
+    *STAMP_KEYS,
+    "requested_mhz",
+    "granted_mhz",
+    "batch_occupancy",
+    "attempts",
+    "energy_j",
+    "outcome",
+]
+OUTCOMES = {"ok", "shed"}
+
+
+class TraceCheckError(Exception):
+    """A file-level problem (unreadable, malformed JSONL)."""
+
+
+def load_spans(path):
+    """Load every span from a JSONL journal; blank lines are skipped."""
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        raise TraceCheckError(f"{path}: unreadable ({e})")
+    spans = []
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            span = json.loads(line)
+        except ValueError as e:
+            raise TraceCheckError(f"{path}:{lineno}: malformed JSON ({e})")
+        if not isinstance(span, dict):
+            raise TraceCheckError(f"{path}:{lineno}: span is not an object")
+        spans.append((lineno, span))
+    return spans
+
+
+def check(spans, expected_ok=None):
+    """Validate loaded spans; returns (problems, info) like check_bench."""
+    problems = []
+    ok = 0
+    shed = 0
+    for lineno, span in spans:
+        missing = [k for k in REQUIRED_KEYS if k not in span]
+        if missing:
+            problems.append(f"line {lineno}: missing span fields {missing}")
+            continue
+        if span["outcome"] not in OUTCOMES:
+            problems.append(f"line {lineno}: unknown outcome {span['outcome']!r}")
+            continue
+        stamps = [span[k] for k in STAMP_KEYS]
+        if any(not isinstance(s, int) or s < 0 for s in stamps):
+            problems.append(f"line {lineno}: non-integer or negative stage stamp")
+            continue
+        if any(a > b for a, b in zip(stamps, stamps[1:])):
+            problems.append(
+                f"line {lineno}: stage stamps not monotone "
+                f"({dict(zip(STAMP_KEYS, stamps))})"
+            )
+        if span["outcome"] == "ok":
+            ok += 1
+            if not span["energy_j"] > 0:
+                problems.append(
+                    f"line {lineno}: executed span with non-positive "
+                    f"energy_j {span['energy_j']}"
+                )
+            if not span["batch_occupancy"] >= 1:
+                problems.append(
+                    f"line {lineno}: executed span with occupancy "
+                    f"{span['batch_occupancy']}"
+                )
+        else:
+            shed += 1
+    info = [f"journal: {ok} ok span(s), {shed} shed over {len(spans)} line(s)"]
+    if expected_ok is not None and ok != expected_ok:
+        problems.append(
+            f"journal holds {ok} ok span(s), expected {expected_ok} — "
+            "tracing lost or duplicated spans"
+        )
+    return problems, info
+
+
+def run(path, expected_ok=None, out=print):
+    """Full gate over one journal file; returns the list of problems."""
+    try:
+        spans = load_spans(path)
+    except TraceCheckError as e:
+        return [str(e)]
+    if not spans:
+        return [f"{path}: journal holds no spans"]
+    problems, info = check(spans, expected_ok)
+    for line in info:
+        out(line)
+    return problems
+
+
+def main(argv):
+    if len(argv) not in (2, 3):
+        sys.exit(f"usage: {argv[0]} <journal.jsonl> [expected_ok_spans]")
+    expected = int(argv[2]) if len(argv) == 3 else None
+    problems = run(argv[1], expected)
+    for p in problems:
+        print(f"FAIL: {p}")
+    if problems:
+        sys.exit(1)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -81,6 +81,14 @@ def good_doc():
             "fault_free_p99_sim_ms": 0.1,
             "faulted_p99_sim_ms": 0.2,
         },
+        "observability": {
+            "jobs": 2048,
+            "untraced_jobs_per_s": 900.0,
+            "traced_jobs_per_s": 880.0,
+            "trace_overhead_frac": 0.022,
+            "hist_readout_us": 50.0,
+            "spans_recorded": 2176,
+        },
     }
 
 
@@ -342,6 +350,64 @@ def test_shed_rate_ceiling_is_enforced():
     assert problems == []
 
 
+def test_trace_overhead_budget_is_enforced():
+    # Internal invariant of the fresh doc: the traced serve must stay
+    # within TRACE_SLACK of the untraced serve, whatever the baseline
+    # says — per-job tracing blowing its budget is a regression even if
+    # absolute throughput is fine.
+    fresh = good_doc()
+    fresh["observability"]["traced_jobs_per_s"] = (
+        fresh["observability"]["untraced_jobs_per_s"]
+        * (1.0 - check_bench.TRACE_SLACK)
+        * 0.9
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("blew its overhead budget" in p for p in problems)
+    # ... overhead within the budget passes (traced floor also cleared).
+    fresh["observability"]["traced_jobs_per_s"] = (
+        fresh["observability"]["untraced_jobs_per_s"] * 0.97
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_traced_throughput_floor_is_enforced():
+    # Trajectory gate: traced jobs/s is a floor vs the committed baseline
+    # — scale both legs down together so the overhead invariant holds and
+    # only the floor trips.
+    fresh = good_doc()
+    fresh["observability"]["untraced_jobs_per_s"] *= 0.6
+    fresh["observability"]["traced_jobs_per_s"] *= 0.6
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("observability.traced_jobs_per_s" in p for p in problems)
+    # a 20% dip on both legs stays within the 30% budget
+    fresh = good_doc()
+    fresh["observability"]["untraced_jobs_per_s"] *= 0.8
+    fresh["observability"]["traced_jobs_per_s"] *= 0.8
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_observability_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["observability"]["trace_overhead_frac"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(
+        check_bench.BenchCheckError, match="observability.trace_overhead_frac"
+    ):
+        check_bench.load_doc(path)
+
+
+def test_observability_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["observability"] = "cheap"
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(
+        check_bench.BenchCheckError, match="observability.traced_jobs_per_s"
+    ):
+        check_bench.load_doc(path)
+
+
 def test_robustness_without_required_key_is_rejected(tmp_path):
     doc = good_doc()
     del doc["robustness"]["jobs_lost"]
@@ -419,6 +485,7 @@ def test_power_as_non_object_is_rejected(tmp_path):
         "native",
         "large_n",
         "robustness",
+        "observability",
     ],
 )
 def test_missing_top_level_key_is_rejected(tmp_path, key):

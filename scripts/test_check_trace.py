@@ -1,0 +1,133 @@
+"""Unit tests for the trace-smoke CI gate (scripts/check_trace.py).
+
+Run with `python3 -m pytest -q scripts/test_check_trace.py`: the gate
+that asserts the serving stack's event journal is complete and well
+formed must itself be tested.
+"""
+
+import json
+
+import pytest
+
+import check_trace
+
+
+def good_span(job_id=0, outcome="ok"):
+    return {
+        "job_id": job_id,
+        "artifact": "fft_f32_n1024_b64",
+        "n": 1024,
+        "card": 0,
+        "enqueue_us": 100,
+        "admit_us": 105,
+        "seal_us": 400,
+        "dispatch_us": 410,
+        "exec_start_us": 450,
+        "exec_end_us": 1450,
+        "complete_us": 1460,
+        "requested_mhz": 945.0,
+        "granted_mhz": 945.0,
+        "batch_occupancy": 64,
+        "attempts": 1,
+        "energy_j": 2.5e-4,
+        "sim_batch_s": 8.0e-4,
+        "outcome": outcome,
+    }
+
+
+def write_journal(tmp_path, spans, name="trace.jsonl"):
+    p = tmp_path / name
+    p.write_text("".join(json.dumps(s) + "\n" for s in spans))
+    return str(p)
+
+
+def test_good_journal_passes(tmp_path):
+    path = write_journal(tmp_path, [good_span(i) for i in range(8)])
+    assert check_trace.run(path, expected_ok=8, out=lambda _: None) == []
+
+
+def test_expected_count_mismatch_fails(tmp_path):
+    path = write_journal(tmp_path, [good_span(i) for i in range(8)])
+    problems = check_trace.run(path, expected_ok=10, out=lambda _: None)
+    assert any("expected 10" in p for p in problems)
+
+
+def test_shed_spans_do_not_count_toward_ok(tmp_path):
+    spans = [good_span(i) for i in range(4)]
+    shed = good_span(99, outcome="shed")
+    shed["energy_j"] = 0.0
+    shed["batch_occupancy"] = 0
+    spans.append(shed)
+    path = write_journal(tmp_path, spans)
+    assert check_trace.run(path, expected_ok=4, out=lambda _: None) == []
+
+
+def test_non_monotone_stamps_fail(tmp_path):
+    bad = good_span()
+    bad["dispatch_us"] = bad["seal_us"] - 50
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, expected_ok=1, out=lambda _: None)
+    assert any("not monotone" in p for p in problems)
+
+
+def test_missing_field_names_the_line(tmp_path):
+    bad = good_span(1)
+    del bad["energy_j"]
+    path = write_journal(tmp_path, [good_span(0), bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("line 2" in p and "energy_j" in p for p in problems)
+
+
+def test_executed_span_without_energy_fails(tmp_path):
+    bad = good_span()
+    bad["energy_j"] = 0.0
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("non-positive" in p for p in problems)
+
+
+def test_unknown_outcome_fails(tmp_path):
+    bad = good_span()
+    bad["outcome"] = "maybe"
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("unknown outcome" in p for p in problems)
+
+
+def test_malformed_line_is_rejected_with_line_number(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text(json.dumps(good_span()) + "\nnot json\n")
+    with pytest.raises(check_trace.TraceCheckError, match=":2"):
+        check_trace.load_spans(str(p))
+
+
+def test_blank_lines_are_skipped(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text(json.dumps(good_span()) + "\n\n" + json.dumps(good_span(1)) + "\n")
+    assert len(check_trace.load_spans(str(p))) == 2
+
+
+def test_empty_journal_fails(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text("\n")
+    problems = check_trace.run(str(p), out=lambda _: None)
+    assert any("no spans" in p for p in problems)
+
+
+def test_missing_file_is_reported_not_raised(tmp_path):
+    problems = check_trace.run(str(tmp_path / "nope.jsonl"), out=lambda _: None)
+    assert len(problems) == 1 and "unreadable" in problems[0]
+
+
+def test_main_exits_nonzero_on_mismatch(tmp_path, capsys):
+    path = write_journal(tmp_path, [good_span(i) for i in range(3)])
+    with pytest.raises(SystemExit) as e:
+        check_trace.main(["check_trace.py", path, "5"])
+    assert e.value.code == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_main_passes_on_good_journal(tmp_path, capsys):
+    path = write_journal(tmp_path, [good_span(i) for i in range(3)])
+    check_trace.main(["check_trace.py", path, "3"])
+    assert "OK" in capsys.readouterr().out
