@@ -34,7 +34,14 @@
 //!   7. observability (schema 7): the identical open-loop serve measured
 //!      with request tracing off, then on — the tracing-overhead budget
 //!      (<5%) the CI gate pins — plus the cost of one full histogram
-//!      summary readout, in the JSON `observability` section.
+//!      summary readout, in the JSON `observability` section,
+//!   8. overload (schema 8): bursty mixed-class arrivals offered at
+//!      1x/2x/4x/8x the fleet's measured capacity through a bounded
+//!      fleet — per-leg goodput, realtime-class goodput and p99, shed
+//!      rate and the brownout peak, in the JSON `overload` section. The
+//!      QoS contract the gate pins: at 4x offered load realtime goodput
+//!      holds >= 0.95x the 1x-load throughput and every refused job is
+//!      a typed shed (zero untyped drops).
 //!
 //! All latency percentiles here come from the serving stack's one
 //! histogram implementation (`telemetry::histogram::LogHistogram`), not
@@ -53,15 +60,17 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use fftsweep::analysis::telemetry as telemetry_analysis;
+use fftsweep::analysis::trace::load_spans;
+use fftsweep::coordinator::admission::TenantClass;
 use fftsweep::coordinator::health::{HealthPolicy, HealthState};
-use fftsweep::coordinator::{CardConfig, Engine, EngineConfig, RetryPolicy};
+use fftsweep::coordinator::{CardConfig, CoordError, Engine, EngineConfig, RetryPolicy};
 use fftsweep::dsp;
 use fftsweep::dsp::planner::{self, Direction};
 use fftsweep::governor::GovernorKind;
 use fftsweep::runtime::default_backend;
-use fftsweep::sim::fault::FaultPlan;
+use fftsweep::sim::fault::{ArrivalKind, ArrivalPlan, FaultPlan};
 use fftsweep::sim::gpu::tesla_v100;
-use fftsweep::telemetry::{LogHistogram, TraceConfig};
+use fftsweep::telemetry::{LogHistogram, SpanOutcome, TraceConfig};
 use fftsweep::util::bench::black_box;
 use fftsweep::util::json::Json;
 use fftsweep::util::rng::Rng;
@@ -664,9 +673,161 @@ fn main() {
         trace_overhead_frac * 100.0
     );
 
+    // 8. Overload: bursty mixed-class arrivals (25% realtime / 50% batch
+    // / 25% scavenger, the serve CLI's `mixed` mapping) offered at
+    // 1x/2x/4x/8x the fleet's measured capacity (section 3's open-loop
+    // jobs/s) through a fresh bounded 2-card fleet per leg. Goodput is
+    // completions over the offered-load window (first to last submit;
+    // backlog completions drained after the window are credited to it —
+    // the same convention at every multiplier, so legs are comparable).
+    // Realtime latency comes from the leg's own trace journal, which
+    // also exercises the class/reason span plumbing end to end.
+    struct OverloadLeg {
+        offered: u64,
+        ok: u64,
+        shed: u64,
+        untyped: u64,
+        goodput_jobs_per_s: f64,
+        realtime_goodput_jobs_per_s: f64,
+        realtime_p99_ms: f64,
+        shed_rate: f64,
+        brownout_max_level: u8,
+    }
+    let overload_jobs = if quick { 256 } else { 1024 };
+    let is_typed_shed = |e: &anyhow::Error| {
+        matches!(
+            e.downcast_ref::<CoordError>(),
+            Some(
+                CoordError::QueueFull { .. }
+                    | CoordError::DeadlineInfeasible { .. }
+                    | CoordError::BrownoutShed { .. }
+                    | CoordError::RateLimited { .. }
+            )
+        )
+    };
+    let overload_leg = |mult: f64, rng: &mut Rng| -> OverloadLeg {
+        let backend = default_backend(Path::new("/nonexistent-artifacts")).expect("sim backend");
+        let fleet = (0..CARDS)
+            .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedClock(945.0)))
+            .collect();
+        let journal = std::env::temp_dir().join(format!(
+            "fftsweep_bench_overload_{mult}x_{}.jsonl",
+            std::process::id()
+        ));
+        let cfg = EngineConfig {
+            queue_bound: Some(32),
+            trace: TraceConfig {
+                jsonl_out: Some(journal.clone()),
+                ..TraceConfig::default()
+            },
+            ..EngineConfig::default()
+        };
+        let engine = Engine::start(backend, fleet, cfg).expect("engine");
+        // Warm the plan/module caches so the first volley is not billed
+        // plan-build latency (warmup spans are batch-class, so they do
+        // not contaminate the realtime percentiles).
+        for _ in 0..2 * DEVICE_BATCH {
+            let (re, im) = rand_planes(N, rng);
+            engine.submit(re, im).expect("overload warmup submit");
+        }
+        assert!(engine.drain(Duration::from_secs(120)).complete, "overload warmup drain");
+        let arrivals = ArrivalPlan {
+            kind: ArrivalKind::Burst { size: 32, quiet_x: 1.0 },
+            seed: 0xA11,
+        }
+        .schedule(mult * jobs_per_s, overload_jobs as u64, 1);
+        let payloads: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..overload_jobs).map(|_| rand_planes(N, rng)).collect();
+        let mut rxs = Vec::with_capacity(overload_jobs);
+        let mut shed = 0u64;
+        let t0 = Instant::now();
+        for (j, (re, im)) in payloads.into_iter().enumerate() {
+            if arrivals[j].gap_us > 0 {
+                std::thread::sleep(Duration::from_micros(arrivals[j].gap_us));
+            }
+            let class = match j % 4 {
+                0 => TenantClass::Realtime,
+                3 => TenantClass::Scavenger,
+                _ => TenantClass::Batch,
+            };
+            match engine.submit_qos(re, im, class, None) {
+                Ok(rx) => rxs.push((class, rx)),
+                Err(e) if is_typed_shed(&e) => shed += 1,
+                Err(e) => panic!("untyped submit refusal at {mult}x: {e:#}"),
+            }
+        }
+        let window_s = t0.elapsed().as_secs_f64();
+        assert!(engine.drain(Duration::from_secs(600)).complete, "overload drain timed out");
+        let mut ok = 0u64;
+        let mut rt_ok = 0u64;
+        let mut untyped = 0u64;
+        for (class, rx) in rxs {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(Ok(_)) => {
+                    ok += 1;
+                    if class == TenantClass::Realtime {
+                        rt_ok += 1;
+                    }
+                }
+                // Admitted then evicted for a higher class: still typed.
+                Ok(Err(e)) if is_typed_shed(&e) => shed += 1,
+                _ => untyped += 1,
+            }
+        }
+        let snap = engine.snapshot();
+        let brownout_max_level = snap.overload.as_ref().map_or(0, |o| o.brownout_max_level);
+        engine.shutdown();
+        let spans = load_spans(&journal).expect("overload journal");
+        let _ = std::fs::remove_file(&journal);
+        let rt_ms = LogHistogram::new();
+        for s in &spans {
+            if s.outcome == SpanOutcome::Ok && s.class == "realtime" {
+                rt_ms.record(s.e2e_s() * 1e3);
+            }
+        }
+        OverloadLeg {
+            offered: overload_jobs as u64,
+            ok,
+            shed,
+            untyped,
+            goodput_jobs_per_s: ok as f64 / window_s,
+            realtime_goodput_jobs_per_s: rt_ok as f64 / window_s,
+            realtime_p99_ms: rt_ms.snapshot().percentile(99.0),
+            shed_rate: shed as f64 / overload_jobs as f64,
+            brownout_max_level,
+        }
+    };
+    let legs: Vec<(f64, OverloadLeg)> = [1.0, 2.0, 4.0, 8.0]
+        .iter()
+        .map(|&m| (m, overload_leg(m, &mut rng)))
+        .collect();
+    let leg_at = |m: f64| &legs.iter().find(|(lm, _)| *lm == m).expect("leg ran").1;
+    let untyped_drops: u64 = legs.iter().map(|(_, l)| l.untyped).sum();
+    for (m, l) in &legs {
+        println!(
+            "overload {m}x: goodput {:.0} jobs/s (realtime {:.0} jobs/s, p99 {:.2} ms), \
+             {} ok / {} shed of {} (rate {:.3}), brownout peak L{}",
+            l.goodput_jobs_per_s,
+            l.realtime_goodput_jobs_per_s,
+            l.realtime_p99_ms,
+            l.ok,
+            l.shed,
+            l.offered,
+            l.shed_rate,
+            l.brownout_max_level
+        );
+    }
+    assert_eq!(untyped_drops, 0, "a refused job was not a typed shed");
+    assert!(
+        leg_at(4.0).realtime_goodput_jobs_per_s >= 0.95 * leg_at(1.0).goodput_jobs_per_s,
+        "realtime goodput collapsed under 4x overload: {:.0} jobs/s vs 1x-load {:.0} jobs/s",
+        leg_at(4.0).realtime_goodput_jobs_per_s,
+        leg_at(1.0).goodput_jobs_per_s
+    );
+
     let mut root = Json::obj();
     root.set("bench", "serving".into());
-    root.set("schema", 7.0.into());
+    root.set("schema", 8.0.into());
     root.set("quick", quick.into());
     root.set("n", (N as u64).into());
     root.set("device_batch", (DEVICE_BATCH as u64).into());
@@ -754,6 +915,34 @@ fn main() {
     obs_json.set("hist_readout_us", hist_readout_us.into());
     obs_json.set("spans_recorded", spans_recorded.into());
     root.set("observability", obs_json);
+    let mut overload_json = Json::obj();
+    overload_json.set("jobs_per_leg", (overload_jobs as u64).into());
+    overload_json.set("arrival", "burst,size=32".into());
+    overload_json.set("capacity_jobs_per_s", jobs_per_s.into());
+    let mut legs_json = Json::obj();
+    for (m, l) in &legs {
+        let mut leg_json = Json::obj();
+        leg_json.set("offered", l.offered.into());
+        leg_json.set("ok", l.ok.into());
+        leg_json.set("shed", l.shed.into());
+        leg_json.set("goodput_jobs_per_s", l.goodput_jobs_per_s.into());
+        leg_json.set("realtime_goodput_jobs_per_s", l.realtime_goodput_jobs_per_s.into());
+        leg_json.set("realtime_p99_ms", l.realtime_p99_ms.into());
+        leg_json.set("shed_rate", l.shed_rate.into());
+        leg_json.set("brownout_max_level", (l.brownout_max_level as u64).into());
+        legs_json.set(&format!("{m}x"), leg_json);
+    }
+    overload_json.set("legs", legs_json);
+    overload_json.set("goodput_1x_jobs_per_s", leg_at(1.0).goodput_jobs_per_s.into());
+    overload_json.set("goodput_4x_jobs_per_s", leg_at(4.0).goodput_jobs_per_s.into());
+    overload_json.set(
+        "realtime_goodput_4x_jobs_per_s",
+        leg_at(4.0).realtime_goodput_jobs_per_s.into(),
+    );
+    overload_json.set("realtime_p99_ms_4x", leg_at(4.0).realtime_p99_ms.into());
+    overload_json.set("shed_rate_4x", leg_at(4.0).shed_rate.into());
+    overload_json.set("untyped_drops", untyped_drops.into());
+    root.set("overload", overload_json);
     std::fs::write(&out_path, root.render() + "\n").expect("write BENCH_serving.json");
     println!("wrote {out_path}");
 }

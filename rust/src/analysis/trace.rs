@@ -171,6 +171,8 @@ mod tests {
             energy_j: if capped { 1.5e-4 } else { 2.5e-4 },
             sim_batch_s: 8.0e-4,
             outcome: SpanOutcome::Ok,
+            class: "batch".into(),
+            reason: String::new(),
         }
     }
 

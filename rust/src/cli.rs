@@ -7,15 +7,16 @@ use anyhow::{bail, Context, Result};
 
 use fftsweep::analysis::report::{full_report, headline_table};
 use fftsweep::analysis::{figures, govern, optima, tables};
+use fftsweep::coordinator::admission::TenantClass;
 use fftsweep::coordinator::health::HealthPolicy;
-use fftsweep::coordinator::{CardConfig, Engine, EngineConfig, RetryPolicy};
+use fftsweep::coordinator::{CardConfig, CoordError, Engine, EngineConfig, RetryPolicy};
 use fftsweep::dsp;
 use fftsweep::governor::{GovernorContext, GovernorKind};
 use fftsweep::harness::sweep::{paper_lengths, quick_lengths, sweep_gpu, SweepConfig};
 use fftsweep::harness::Protocol;
 use fftsweep::pipeline::{run_pipeline_at, table4};
 use fftsweep::runtime::{backend_by_name, compiled_backend_names, ExecBackend, Manifest, Runtime};
-use fftsweep::sim::fault::FaultPlan;
+use fftsweep::sim::fault::{Arrival, ArrivalPlan, FaultPlan};
 use fftsweep::sim::gpu::{all_gpus, gpu_by_name, GpuSpec};
 use fftsweep::telemetry::TraceConfig;
 use fftsweep::types::Precision;
@@ -41,6 +42,8 @@ USAGE:
                     [--trace-out <file.jsonl>] [--no-trace]
                     [--chaos <spec>] [--retries 3] [--retry-backoff-ms 1]
                     [--queue-bound <n>] [--quarantine-errors 3]
+                    [--tenant-class realtime|batch|scavenger|mixed]
+                    [--chaos-arrivals <spec>] [--offered-load <mult>]
   fftsweep trace    <journal.jsonl>
   fftsweep telemetry [--gpus v100,p4 | --gpu v100 --cards 2] [--jobs 256]
                     [--backend default] [--governor boost] [--power-budget-w <W>]
@@ -100,6 +103,24 @@ retry on another card with capped exponential backoff (`--retries`,
 errors are quarantined and probed back in; `--queue-bound` caps per-card
 in-flight jobs, refusing excess submits with a typed QueueFull error.
 Every accepted job terminates in a result or a typed error.
+
+QOS: `serve --tenant-class c` tags traffic with a priority class
+(realtime > batch > scavenger; `mixed` = 25% realtime / 50% batch / 25%
+scavenger round-robin). `--deadline-ms` doubles as each job's end-to-end
+deadline: admission sheds jobs whose predicted queue-wait + exec time
+already exceeds it (typed DeadlineInfeasible) instead of completing them
+late. Backpressure is class-ordered: at the `--queue-bound` a new
+higher-class job evicts a queued scavenger/batch job (typed QueueFull to
+the victim) before being refused itself. Sustained queue pressure climbs
+a brownout ladder — clocks float to boost for realtime batches, then
+scavenger and then batch admissions are shed (typed BrownoutShed) —
+with hysteresis on the way down. `--chaos-arrivals kind[,key=val...]`
+shapes WHEN jobs arrive: deterministic seeded `burst` (`size,quiet,seed`),
+`diurnal` (`period,swing,seed`) and `adversarial` (`size,seed` — bursts
+plus a scrambled length mix) generators, offered at `--offered-load`
+times the fleet's estimated capacity (default 1). Every shed is a typed
+error, a traced span with the reason, and a per-class/per-reason counter
+in the JSON/Prometheus exports.
 
 BACKENDS (the --backend values): `default` is the build's native backend
 (the bit-exact sim runtime, or PJRT-CPU when built with `--features
@@ -546,20 +567,114 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => Vec::new(),
     };
+    // QoS: class tagging (validated up front), the per-job deadline (the
+    // same --deadline-ms the governors see), and the chaos arrival
+    // schedule — materialised deterministically before the first submit.
+    let tenant_class = args.str_or("tenant-class", "batch");
+    anyhow::ensure!(
+        tenant_class == "mixed" || TenantClass::from_label(tenant_class).is_some(),
+        "--tenant-class '{tenant_class}' (realtime|batch|scavenger|mixed)"
+    );
+    let class_of = |j: usize| -> TenantClass {
+        match tenant_class {
+            // 25% realtime / 50% batch / 25% scavenger, round-robin.
+            "mixed" => match j % 4 {
+                0 => TenantClass::Realtime,
+                3 => TenantClass::Scavenger,
+                _ => TenantClass::Batch,
+            },
+            label => TenantClass::from_label(label).expect("validated above"),
+        }
+    };
+    let job_deadline = args
+        .parse_typed::<f64>("deadline-ms")?
+        .map(|ms| Duration::from_secs_f64(ms * 1e-3));
+    let arrivals: Option<Vec<Arrival>> = match args.get("chaos-arrivals") {
+        Some(spec) => {
+            let plan = ArrivalPlan::parse(spec).context("parsing --chaos-arrivals")?;
+            // Fleet capacity from the backend's own time estimator: jobs/s
+            // absorbed at boost for the first menu length, summed over
+            // cards; the offered rate is --offered-load times that.
+            let route = engine.router().route(lengths[0], "f32")?.clone();
+            let wl = fftsweep::types::FftWorkload::new(
+                route.n,
+                Precision::Fp32,
+                route.device_batch * route.n * Precision::Fp32.complex_bytes(),
+            );
+            let cap_jobs_per_s: f64 = engine
+                .cards()
+                .iter()
+                .map(|c| {
+                    route.device_batch as f64
+                        / engine.backend().estimate_time_s(&c.spec, &wl).max(1e-9)
+                })
+                .sum();
+            let mult = args.f64_or("offered-load", 1.0);
+            anyhow::ensure!(mult > 0.0, "--offered-load must be positive, got {mult}");
+            let rate = mult * cap_jobs_per_s;
+            println!(
+                "chaos arrivals: {spec} at {} jobs/s ({mult}x estimated capacity)",
+                fnum(rate, 0)
+            );
+            Some(plan.schedule(rate, jobs as u64, lengths.len()))
+        }
+        None => {
+            anyhow::ensure!(
+                !args.has("offered-load"),
+                "--offered-load needs --chaos-arrivals (closed-loop serving has no arrival rate)"
+            );
+            None
+        }
+    };
+    // Under overload, admission refusals are the system WORKING: count
+    // them instead of aborting the serve. Anything that is not a typed
+    // shed (config errors like an unroutable length) still fails loud.
+    let overload_shed = |e: &anyhow::Error| {
+        matches!(
+            e.downcast_ref::<CoordError>(),
+            Some(
+                CoordError::QueueFull { .. }
+                    | CoordError::DeadlineInfeasible { .. }
+                    | CoordError::BrownoutShed { .. }
+                    | CoordError::RateLimited { .. }
+            )
+        )
+    };
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     let mut conv_jobs = 0usize;
+    let mut shed = 0usize;
     for j in 0..jobs {
+        let arrival = arrivals.as_ref().map(|a| a[j]);
+        if let Some(a) = arrival {
+            if a.gap_us > 0 {
+                std::thread::sleep(Duration::from_micros(a.gap_us));
+            }
+        }
         if !conv_lengths.is_empty() && j % 4 == 3 {
             let n = conv_lengths[rng.below(conv_lengths.len() as u64) as usize] as usize;
             let x: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
-            rxs.push(engine.submit_conv(x, conv_taps.unwrap())?);
-            conv_jobs += 1;
+            match engine.submit_conv(x, conv_taps.unwrap()) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    conv_jobs += 1;
+                }
+                Err(e) if overload_shed(&e) => shed += 1,
+                Err(e) => return Err(e),
+            }
         } else {
-            let n = lengths[rng.below(lengths.len() as u64) as usize] as usize;
+            // Adversarial arrivals override the seeded length pick.
+            let n = match arrival.and_then(|a| a.length_idx) {
+                Some(idx) => lengths[idx] as usize,
+                None => lengths[rng.below(lengths.len() as u64) as usize] as usize,
+            };
             let re: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
             let im: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
-            rxs.push(engine.submit(re, im)?);
+            match engine.submit_qos(re, im, class_of(j), job_deadline) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) if overload_shed(&e) => shed += 1,
+                Err(e) => return Err(e),
+            }
         }
     }
     let report = engine.drain(Duration::from_secs(120));
@@ -582,7 +697,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
-    println!("served {ok}/{jobs} jobs{conv_note} in {:.3} s", dt.as_secs_f64());
+    let shed_note = if shed > 0 {
+        format!(", {shed} shed at admission")
+    } else {
+        String::new()
+    };
+    println!(
+        "served {ok}/{jobs} jobs{conv_note}{shed_note} in {:.3} s",
+        dt.as_secs_f64()
+    );
     let snapshot = engine.snapshot();
     println!("{}", snapshot.render());
     emit_telemetry(args, &snapshot)?;

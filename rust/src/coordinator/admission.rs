@@ -1,0 +1,497 @@
+//! QoS admission control and graceful brownout degradation (issue 10).
+//!
+//! The paper's energy result assumes the fleet runs *inside* its deadline
+//! and power envelopes; this module is what keeps that true when offered
+//! load exceeds capacity. Three mechanisms, all decided at enqueue time
+//! (before a job is accounted as accepted) so every drop is a typed,
+//! traced shed rather than a late completion or an unbounded queue:
+//!
+//!   * **Priority classes** — every job carries a [`TenantClass`]
+//!     (`realtime` > `batch` > `scavenger`). Backpressure is
+//!     class-ordered: a full card evicts scavenger work before batch,
+//!     and never touches realtime to make room for lower classes.
+//!   * **Token-bucket rate limits** — optional per-class arrival caps
+//!     ([`AdmissionPolicy::rate_per_s`]); a class over its sustained
+//!     rate + burst is refused with `CoordError::RateLimited`.
+//!   * **Deadline feasibility** — a job with a deadline is checked
+//!     against the backend's predicted queue-wait + exec time
+//!     (`ExecBackend::estimate_time_s`); one that cannot make it is shed
+//!     *now* (`CoordError::DeadlineInfeasible`) instead of burning a
+//!     card on a result nobody can use.
+//!
+//! Coupled to admission is the [`Brownout`] ladder — the overload
+//! analogue of `telemetry::budget`'s deadband hysteresis. Sustained
+//! queue pressure escalates the fleet one rung at a time; falling
+//! pressure de-escalates only after a longer quiet streak (hysteresis,
+//! mirroring `PowerBudget`'s deadband) so the ladder never flaps:
+//!
+//!   * level 1: clocks float up to boost for batches carrying realtime
+//!     work (spend watts to protect the deadline class);
+//!   * level 2: scavenger admissions are shed (`BrownoutShed`);
+//!   * level 3: batch admissions are shed too — realtime only.
+//!
+//! Realtime is never brownout-shed: its overload defenses are the
+//! queue bound (typed `QueueFull`) and deadline feasibility.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The QoS class a job is admitted under. Ordering is priority:
+/// `Realtime` outranks `Batch` outranks `Scavenger`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TenantClass {
+    Realtime,
+    Batch,
+    Scavenger,
+}
+
+pub const CLASSES: [TenantClass; 3] =
+    [TenantClass::Realtime, TenantClass::Batch, TenantClass::Scavenger];
+
+impl TenantClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            TenantClass::Realtime => "realtime",
+            TenantClass::Batch => "batch",
+            TenantClass::Scavenger => "scavenger",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "realtime" => Some(TenantClass::Realtime),
+            "batch" => Some(TenantClass::Batch),
+            "scavenger" => Some(TenantClass::Scavenger),
+            _ => None,
+        }
+    }
+
+    /// Dense index for per-class counter arrays (priority order).
+    pub fn index(self) -> usize {
+        match self {
+            TenantClass::Realtime => 0,
+            TenantClass::Batch => 1,
+            TenantClass::Scavenger => 2,
+        }
+    }
+
+    /// True when `self` outranks `other` (strictly higher priority).
+    pub fn outranks(self, other: TenantClass) -> bool {
+        self.index() < other.index()
+    }
+}
+
+impl Default for TenantClass {
+    fn default() -> Self {
+        TenantClass::Batch
+    }
+}
+
+/// A deterministic token bucket: `rate` tokens/s sustained, up to
+/// `burst` banked. Fed explicitly with the caller's `Instant` so tests
+/// replay it without sleeping.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_s: f64, burst: f64, now: Instant) -> Self {
+        assert!(rate_per_s > 0.0 && burst >= 1.0, "degenerate token bucket");
+        Self { rate_per_s, burst, tokens: burst, last: now }
+    }
+
+    /// Refill for elapsed time, then try to spend one token.
+    pub fn admit(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate_per_s).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-class admission policy knobs. The default is fully permissive —
+/// no rate limits, feasibility checked only for jobs that carry a
+/// deadline — so the pre-QoS serving behaviour is unchanged unless an
+/// operator opts in.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// Optional sustained admission rate per class (tokens/s), indexed
+    /// by [`TenantClass::index`]. `None` = unlimited.
+    pub rate_per_s: [Option<f64>; 3],
+    /// Token bank per rate-limited class (>= 1).
+    pub burst: [f64; 3],
+    /// Headroom multiplier on the deadline-feasibility prediction: a job
+    /// is shed when `predicted_s > deadline_s * slack`. 1.0 = exact.
+    pub feasibility_slack: f64,
+    /// Brownout ladder configuration; `None` disables the ladder (level
+    /// stays 0 forever).
+    pub brownout: Option<BrownoutPolicy>,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self {
+            rate_per_s: [None, None, None],
+            burst: [1.0, 1.0, 1.0],
+            feasibility_slack: 1.0,
+            brownout: Some(BrownoutPolicy::default()),
+        }
+    }
+}
+
+/// Brownout escalation thresholds. Pressure is the fleet's in-flight
+/// fraction of its bounded queue capacity (`inflight / (cards * bound)`)
+/// — only computable when a queue bound is set, so an unbounded engine
+/// never browns out.
+#[derive(Debug, Clone)]
+pub struct BrownoutPolicy {
+    /// Escalate one rung after this many consecutive supervisor ticks
+    /// above `hi_pressure`.
+    pub escalate_ticks: u32,
+    /// De-escalate one rung after this many consecutive ticks below
+    /// `lo_pressure` — deliberately longer than `escalate_ticks`
+    /// (hysteresis, mirroring `budget.rs`'s deadband) so recovery is
+    /// calm, not oscillating.
+    pub deescalate_ticks: u32,
+    pub hi_pressure: f64,
+    pub lo_pressure: f64,
+}
+
+impl Default for BrownoutPolicy {
+    fn default() -> Self {
+        // The supervisor ticks every ~2 ms: ~20 ms of sustained pressure
+        // escalates, ~100 ms of calm de-escalates one rung.
+        Self { escalate_ticks: 10, deescalate_ticks: 50, hi_pressure: 0.85, lo_pressure: 0.50 }
+    }
+}
+
+/// The fleet brownout ladder: an atomic level 0..=3 escalated/relaxed by
+/// the supervisor's periodic tick and read lock-free by admission and
+/// the workers' clock path.
+#[derive(Debug, Default)]
+pub struct Brownout {
+    level: AtomicU8,
+    hi_streak: AtomicU64,
+    lo_streak: AtomicU64,
+    /// Highest level ever reached (observability: did the run brown out?).
+    max_level: AtomicU8,
+    escalations: AtomicU64,
+}
+
+pub const BROWNOUT_MAX_LEVEL: u8 = 3;
+
+impl Brownout {
+    pub fn level(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    pub fn max_level_seen(&self) -> u8 {
+        self.max_level.load(Ordering::Relaxed)
+    }
+
+    pub fn escalations(&self) -> u64 {
+        self.escalations.load(Ordering::Relaxed)
+    }
+
+    /// One supervisor tick: fold the current queue pressure into the
+    /// ladder. Called from a single thread (the retry supervisor), so
+    /// the streak counters need no stronger ordering.
+    pub fn tick(&self, pressure: f64, policy: &BrownoutPolicy) {
+        if pressure > policy.hi_pressure {
+            self.lo_streak.store(0, Ordering::Relaxed);
+            let hi = self.hi_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            if hi >= policy.escalate_ticks as u64 {
+                self.hi_streak.store(0, Ordering::Relaxed);
+                let lvl = self.level.load(Ordering::Relaxed);
+                if lvl < BROWNOUT_MAX_LEVEL {
+                    self.level.store(lvl + 1, Ordering::Relaxed);
+                    self.escalations.fetch_add(1, Ordering::Relaxed);
+                    self.max_level.fetch_max(lvl + 1, Ordering::Relaxed);
+                }
+            }
+        } else if pressure < policy.lo_pressure {
+            self.hi_streak.store(0, Ordering::Relaxed);
+            let lo = self.lo_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            if lo >= policy.deescalate_ticks as u64 {
+                self.lo_streak.store(0, Ordering::Relaxed);
+                let lvl = self.level.load(Ordering::Relaxed);
+                if lvl > 0 {
+                    self.level.store(lvl - 1, Ordering::Relaxed);
+                }
+            }
+        } else {
+            // Deadband between lo and hi: both streaks reset, the ladder
+            // holds its rung — the hysteresis that keeps it from flapping.
+            self.hi_streak.store(0, Ordering::Relaxed);
+            self.lo_streak.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Is this class currently shed by the ladder? (level 2 sheds
+    /// scavenger, level 3 sheds batch too; realtime is never shed.)
+    pub fn sheds(&self, class: TenantClass) -> bool {
+        match class {
+            TenantClass::Realtime => false,
+            TenantClass::Batch => self.level() >= 3,
+            TenantClass::Scavenger => self.level() >= 2,
+        }
+    }
+
+    /// Should clocks float up to boost for a batch carrying realtime
+    /// work? (level >= 1 — step one of the ladder spends watts before it
+    /// sheds anyone.)
+    pub fn boost_realtime(&self) -> bool {
+        self.level() >= 1
+    }
+}
+
+/// Why admission refused a job — mirrors the `CoordError` variant the
+/// caller receives; kept as a small enum so counters stay cheap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    DeadlineInfeasible,
+    BrownoutShed,
+    RateLimited,
+    /// A queued lower-class job evicted to make room for a higher class.
+    Evicted,
+}
+
+impl ShedReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedReason::DeadlineInfeasible => "deadline infeasible at admission",
+            ShedReason::BrownoutShed => "brownout shed",
+            ShedReason::RateLimited => "rate limited",
+            ShedReason::Evicted => "evicted for higher-class admission",
+        }
+    }
+}
+
+/// Per-class / per-reason admission accounting, exported in the fleet
+/// snapshot. All counters are monotone.
+#[derive(Debug, Default)]
+pub struct AdmissionStats {
+    pub admitted: [AtomicU64; 3],
+    pub deadline_sheds: AtomicU64,
+    pub brownout_sheds: AtomicU64,
+    pub rate_limited: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+/// The admission controller: policy + token buckets + counters + the
+/// brownout ladder. Owned by the engine; `admit`/`tick` are the only
+/// entry points.
+pub struct AdmissionController {
+    pub policy: AdmissionPolicy,
+    buckets: Mutex<[Option<TokenBucket>; 3]>,
+    pub stats: AdmissionStats,
+    pub brownout: Brownout,
+}
+
+/// The typed outcome of an admission check, pre-`CoordError`: the engine
+/// maps these onto its error taxonomy (which lives in `coordinator`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Admit,
+    Shed(ShedReason),
+}
+
+impl AdmissionController {
+    pub fn new(policy: AdmissionPolicy) -> Self {
+        let now = Instant::now();
+        let buckets = std::array::from_fn(|i| {
+            policy.rate_per_s[i].map(|r| TokenBucket::new(r, policy.burst[i].max(1.0), now))
+        });
+        Self { policy, buckets: Mutex::new(buckets), stats: AdmissionStats::default(), brownout: Brownout::default() }
+    }
+
+    /// Class-level gates (brownout rung, token bucket). Card-level gates
+    /// — deadline feasibility and the queue bound — need the routed
+    /// card's state and stay in the engine's enqueue path, which calls
+    /// [`Self::feasible`] once it has picked a card.
+    pub fn admit_class(&self, class: TenantClass, now: Instant) -> AdmitDecision {
+        if self.brownout.sheds(class) {
+            self.stats.brownout_sheds.fetch_add(1, Ordering::Relaxed);
+            return AdmitDecision::Shed(ShedReason::BrownoutShed);
+        }
+        let mut buckets = self.buckets.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(bucket) = buckets[class.index()].as_mut() {
+            if !bucket.admit(now) {
+                self.stats.rate_limited.fetch_add(1, Ordering::Relaxed);
+                return AdmitDecision::Shed(ShedReason::RateLimited);
+            }
+        }
+        AdmitDecision::Admit
+    }
+
+    /// Deadline feasibility: `est_batch_s` is the backend's predicted
+    /// exec time for one device batch on the routed card; the job waits
+    /// behind `inflight` queued jobs packed `device_batch` per batch.
+    /// Returns the predicted completion time; the caller sheds when it
+    /// is `Some(t)` with `t > deadline * slack`.
+    pub fn predicted_s(est_batch_s: f64, inflight: u64, device_batch: u64) -> f64 {
+        let batches_ahead = inflight as f64 / device_batch.max(1) as f64;
+        est_batch_s * (batches_ahead + 1.0)
+    }
+
+    /// Apply the feasibility rule; counts the shed on refusal.
+    pub fn feasible(&self, deadline_s: f64, predicted_s: f64) -> AdmitDecision {
+        if predicted_s > deadline_s * self.policy.feasibility_slack {
+            self.stats.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+            AdmitDecision::Shed(ShedReason::DeadlineInfeasible)
+        } else {
+            AdmitDecision::Admit
+        }
+    }
+
+    pub fn record_admit(&self, class: TenantClass) {
+        self.stats.admitted[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_eviction(&self) {
+        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn class_order_is_priority_order() {
+        assert!(TenantClass::Realtime.outranks(TenantClass::Batch));
+        assert!(TenantClass::Batch.outranks(TenantClass::Scavenger));
+        assert!(!TenantClass::Scavenger.outranks(TenantClass::Scavenger));
+        for c in CLASSES {
+            assert_eq!(TenantClass::from_label(c.label()), Some(c));
+        }
+        assert_eq!(TenantClass::from_label("bogus"), None);
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 3.0, t0);
+        // The burst bank admits 3 immediately, then the bucket is dry.
+        assert!(b.admit(t0) && b.admit(t0) && b.admit(t0));
+        assert!(!b.admit(t0));
+        // 100 ms at 10/s refills exactly one token.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.admit(t1));
+        assert!(!b.admit(t1));
+        // A long idle period refills to the burst cap, never beyond.
+        let t2 = t1 + Duration::from_secs(60);
+        assert!(b.admit(t2) && b.admit(t2) && b.admit(t2));
+        assert!(!b.admit(t2));
+    }
+
+    #[test]
+    fn rate_limited_class_is_shed_with_the_typed_reason() {
+        let mut policy = AdmissionPolicy::default();
+        policy.rate_per_s[TenantClass::Scavenger.index()] = Some(1.0);
+        policy.burst[TenantClass::Scavenger.index()] = 2.0;
+        let ctl = AdmissionController::new(policy);
+        let now = Instant::now();
+        assert_eq!(ctl.admit_class(TenantClass::Scavenger, now), AdmitDecision::Admit);
+        assert_eq!(ctl.admit_class(TenantClass::Scavenger, now), AdmitDecision::Admit);
+        assert_eq!(
+            ctl.admit_class(TenantClass::Scavenger, now),
+            AdmitDecision::Shed(ShedReason::RateLimited)
+        );
+        // Other classes are not collaterally limited.
+        assert_eq!(ctl.admit_class(TenantClass::Realtime, now), AdmitDecision::Admit);
+        assert_eq!(ctl.stats.rate_limited.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn feasibility_prediction_scales_with_queue_depth() {
+        // Empty card: one batch time. 64 queued at device_batch 64: two.
+        assert!((AdmissionController::predicted_s(1e-3, 0, 64) - 1e-3).abs() < 1e-12);
+        assert!((AdmissionController::predicted_s(1e-3, 64, 64) - 2e-3).abs() < 1e-12);
+        let ctl = AdmissionController::new(AdmissionPolicy::default());
+        assert_eq!(ctl.feasible(2.5e-3, 2e-3), AdmitDecision::Admit);
+        assert_eq!(
+            ctl.feasible(1.5e-3, 2e-3),
+            AdmitDecision::Shed(ShedReason::DeadlineInfeasible)
+        );
+        assert_eq!(ctl.stats.deadline_sheds.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn brownout_ladder_escalates_and_relaxes_with_hysteresis() {
+        let policy = BrownoutPolicy {
+            escalate_ticks: 3,
+            deescalate_ticks: 6,
+            hi_pressure: 0.8,
+            lo_pressure: 0.4,
+        };
+        let b = Brownout::default();
+        // Three hot ticks: one rung. Realtime clocks float; nobody shed yet.
+        for _ in 0..3 {
+            b.tick(0.95, &policy);
+        }
+        assert_eq!(b.level(), 1);
+        assert!(b.boost_realtime());
+        assert!(!b.sheds(TenantClass::Scavenger));
+        // Three more: rung 2 sheds scavenger but not batch.
+        for _ in 0..3 {
+            b.tick(0.95, &policy);
+        }
+        assert_eq!(b.level(), 2);
+        assert!(b.sheds(TenantClass::Scavenger) && !b.sheds(TenantClass::Batch));
+        // Rung 3 sheds batch too; realtime is never shed, and the ladder
+        // saturates at 3.
+        for _ in 0..9 {
+            b.tick(0.95, &policy);
+        }
+        assert_eq!(b.level(), 3);
+        assert!(b.sheds(TenantClass::Batch) && !b.sheds(TenantClass::Realtime));
+        assert_eq!(b.max_level_seen(), 3);
+        // The deadband holds the rung: mid pressure resets both streaks.
+        for _ in 0..100 {
+            b.tick(0.6, &policy);
+        }
+        assert_eq!(b.level(), 3, "deadband must hold, not relax");
+        // De-escalation needs the longer quiet streak (hysteresis): five
+        // cool ticks are not enough, the sixth relaxes one rung.
+        for _ in 0..5 {
+            b.tick(0.1, &policy);
+        }
+        assert_eq!(b.level(), 3);
+        b.tick(0.1, &policy);
+        assert_eq!(b.level(), 2);
+        // A hot tick mid-recovery resets the quiet streak.
+        for _ in 0..5 {
+            b.tick(0.1, &policy);
+        }
+        b.tick(0.95, &policy);
+        for _ in 0..5 {
+            b.tick(0.1, &policy);
+        }
+        assert_eq!(b.level(), 2, "hot tick must reset the de-escalation streak");
+        b.tick(0.1, &policy);
+        assert_eq!(b.level(), 1);
+    }
+
+    #[test]
+    fn disabled_ladder_never_escalates() {
+        let ctl = AdmissionController::new(AdmissionPolicy { brownout: None, ..Default::default() });
+        // The engine only ticks the ladder when the policy carries one;
+        // admission must stay permissive at level 0.
+        assert_eq!(ctl.brownout.level(), 0);
+        for c in CLASSES {
+            assert_eq!(ctl.admit_class(c, Instant::now()), AdmitDecision::Admit);
+        }
+    }
+}

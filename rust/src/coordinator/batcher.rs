@@ -186,6 +186,51 @@ impl Batcher {
         keys.iter().filter_map(|k| self.take(k)).collect()
     }
 
+    /// Class-ordered backpressure: remove one queued envelope from
+    /// `card`'s partial slots that `class` strictly outranks, preferring
+    /// the lowest class present (scavenger before batch) and, within a
+    /// class, the most recently queued job (oldest lower-class work has
+    /// waited longest and is closest to sealing). Returns `None` when
+    /// nothing on the card is outranked — the caller then refuses the
+    /// new job with `QueueFull` instead of evicting a peer or better.
+    /// The victim comes back with its artifact so the caller can stamp
+    /// its shed span correctly (it may sit in a different slot than the
+    /// job being admitted).
+    pub fn evict_lower_class(
+        &mut self,
+        card: usize,
+        class: crate::coordinator::admission::TenantClass,
+    ) -> Option<(Arc<str>, Envelope)> {
+        let mut victim: Option<((Arc<str>, usize), usize, usize)> = None;
+        for (key, p) in self.pending.iter() {
+            if p.card != card {
+                continue;
+            }
+            for (i, env) in p.envelopes.iter().enumerate() {
+                if !class.outranks(env.job.class) {
+                    continue;
+                }
+                let rank = env.job.class.index();
+                let better = match &victim {
+                    None => true,
+                    // Lower class first; within a class the later index
+                    // (younger) is preferred, so >= keeps scanning.
+                    Some((_, _, best_rank)) => rank >= *best_rank,
+                };
+                if better {
+                    victim = Some((key.clone(), i, rank));
+                }
+            }
+        }
+        let (key, idx, _) = victim?;
+        let slot = self.pending.get_mut(&key)?;
+        let env = slot.envelopes.remove(idx);
+        if slot.envelopes.is_empty() {
+            self.pending.remove(&key);
+        }
+        Some((key.0, env))
+    }
+
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(|p| p.envelopes.len()).sum()
     }
@@ -407,6 +452,44 @@ mod tests {
         assert_eq!(b.pending_jobs_for_card(1), 1);
         assert_eq!(b.pending_jobs_for_card(2), 0);
         assert_eq!(b.pending_jobs(), 3);
+    }
+
+    #[test]
+    fn eviction_is_class_ordered_and_never_touches_peers() {
+        use crate::coordinator::admission::TenantClass;
+        let mut b = Batcher::new(Duration::from_secs(10), caps());
+        let a = name("a");
+        let mut push = |id: u64, card: usize, class: TenantClass| {
+            let (tx, rx) = mpsc::channel();
+            let env = Envelope::new(
+                FftJob::new(id, vec![0.0; 8], vec![0.0; 8]).with_class(class),
+                tx,
+            );
+            b.push(&a, 8, 16, card, env).unwrap();
+            rx
+        };
+        let _r1 = push(1, 0, TenantClass::Scavenger);
+        let _r2 = push(2, 0, TenantClass::Batch);
+        let _r3 = push(3, 0, TenantClass::Scavenger);
+        let _r4 = push(4, 1, TenantClass::Scavenger); // other card: untouchable
+
+        // Realtime pressure evicts scavenger before batch, youngest first.
+        let (art, v) = b.evict_lower_class(0, TenantClass::Realtime).expect("victim");
+        assert_eq!((v.job.id, v.job.class), (3, TenantClass::Scavenger));
+        assert_eq!(art.as_ref(), "a", "victim reports its own slot's artifact");
+        let (_, v) = b.evict_lower_class(0, TenantClass::Realtime).expect("victim");
+        assert_eq!((v.job.id, v.job.class), (1, TenantClass::Scavenger));
+        // Scavenger exhausted on card 0: batch is next for realtime…
+        let (_, v) = b.evict_lower_class(0, TenantClass::Realtime).expect("victim");
+        assert_eq!(v.job.id, 2);
+        // …but a batch job may never evict a batch peer, and nothing on
+        // card 0 remains below realtime either.
+        assert!(b.evict_lower_class(0, TenantClass::Batch).is_none());
+        assert!(b.evict_lower_class(0, TenantClass::Realtime).is_none());
+        // Card 1's scavenger job was never considered.
+        assert_eq!(b.pending_jobs_for_card(1), 1);
+        // Emptied slots are gone: card 0 flushes nothing.
+        assert!(b.flush_card(0).is_empty());
     }
 
     #[test]

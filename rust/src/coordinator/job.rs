@@ -1,7 +1,9 @@
 //! Job types flowing through the coordinator.
 
 use std::sync::mpsc;
+use std::time::Duration;
 
+use crate::coordinator::admission::TenantClass;
 use crate::telemetry::Stamps;
 
 /// A single C2C FFT request: one transform of length `n` (re/im planes).
@@ -17,6 +19,13 @@ pub struct FftJob {
     /// and sheds the job with [`CoordError::RetriesExhausted`] once it
     /// passes the policy cap.
     pub attempts: u32,
+    /// QoS class the job was admitted under (backpressure evicts lower
+    /// classes first; the brownout ladder sheds them first).
+    pub class: TenantClass,
+    /// Optional end-to-end deadline: admission sheds the job with a
+    /// typed `DeadlineInfeasible` when predicted queue-wait + exec time
+    /// already exceeds it.
+    pub deadline: Option<Duration>,
 }
 
 impl FftJob {
@@ -29,7 +38,21 @@ impl FftJob {
             re,
             im,
             attempts: 0,
+            class: TenantClass::default(),
+            deadline: None,
         }
+    }
+
+    /// Builder: tag the job with a QoS class.
+    pub fn with_class(mut self, class: TenantClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Builder: attach an end-to-end deadline for admission feasibility.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
     }
 }
 
@@ -80,6 +103,17 @@ mod tests {
         assert_eq!(j.n, 256);
         assert_eq!(j.dtype, "f32");
         assert_eq!(j.attempts, 0, "fresh jobs have consumed no retries");
+        assert_eq!(j.class, TenantClass::Batch, "default QoS class is batch");
+        assert!(j.deadline.is_none(), "no deadline unless asked for");
+    }
+
+    #[test]
+    fn qos_builders_tag_class_and_deadline() {
+        let j = FftJob::new(1, vec![0.0; 8], vec![0.0; 8])
+            .with_class(TenantClass::Realtime)
+            .with_deadline(Some(Duration::from_millis(20)));
+        assert_eq!(j.class, TenantClass::Realtime);
+        assert_eq!(j.deadline, Some(Duration::from_millis(20)));
     }
 
     #[test]

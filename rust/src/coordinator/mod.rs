@@ -24,6 +24,7 @@
 //! job terminates in a `JobResult` or a typed error** under any
 //! injected [`FaultPlan`] schedule.
 
+pub mod admission;
 pub mod batcher;
 pub mod health;
 pub mod job;
@@ -38,6 +39,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::admission::{
+    AdmissionController, AdmissionPolicy, AdmitDecision, ShedReason, TenantClass,
+};
 use crate::coordinator::batcher::{Batcher, PackedBatch};
 use crate::coordinator::health::{HealthMonitor, HealthPolicy, HealthTransition};
 use crate::coordinator::job::{Envelope, FftJob, JobResult};
@@ -51,9 +55,10 @@ use crate::sim::freq_table::freq_table;
 use crate::sim::GpuSpec;
 use crate::telemetry::{
     budget_key, clock_cap_for_budget, share_bounds_w, CardSnapshot, FleetSnapshot, PowerBudget,
-    PowerRecorder, RecorderConfig, ShareCell, Span, SpanOutcome, TraceConfig, Tracer,
+    PowerRecorder, RecorderConfig, ShareCell, Span, SpanOutcome, Stamps, TraceConfig, Tracer,
 };
 use crate::types::{FftWorkload, Precision};
+use crate::util::rng::Rng;
 
 /// The serving error taxonomy: every way a job can be refused admission,
 /// as a typed error callers can match on (downcastable from the
@@ -103,6 +108,49 @@ pub enum CoordError {
     /// jobs in flight (`inflight` is the least-loaded card's depth).
     #[error("queue full: card {card} has {inflight} jobs in flight (bound {bound})")]
     QueueFull { card: usize, inflight: u64, bound: u64 },
+    /// Admission shed: the predicted queue-wait + exec time on the least
+    /// loaded card already exceeds the job's deadline — completing it
+    /// would only burn joules on a result nobody can use (the SKA power
+    /// argument applied to overload).
+    #[error(
+        "job {id} (n={n}, class {class}): deadline {deadline_ms:.3} ms infeasible \
+         (predicted {predicted_ms:.3} ms)"
+    )]
+    DeadlineInfeasible {
+        id: u64,
+        n: u64,
+        class: &'static str,
+        deadline_ms: f64,
+        predicted_ms: f64,
+    },
+    /// The brownout ladder is shedding this class under sustained
+    /// overload (level 2 sheds scavenger, level 3 sheds batch; realtime
+    /// is never brownout-shed).
+    #[error("brownout level {level}: class {class} admissions are shed")]
+    BrownoutShed { class: &'static str, level: u8 },
+    /// The class is over its token-bucket admission rate.
+    #[error("class {class} is over its admission rate limit")]
+    RateLimited { class: &'static str },
+}
+
+impl CoordError {
+    /// The short reason string stamped into a shed span's `reason` field
+    /// (`scripts/check_trace.py` requires it to be non-empty on every
+    /// shed outcome).
+    pub fn shed_reason(&self) -> &'static str {
+        match self {
+            CoordError::UnsupportedLength { .. } => "unsupported length",
+            CoordError::PlanUnsupported { .. } => "plan unsupported",
+            CoordError::LengthMismatch { .. } => "length mismatch",
+            CoordError::UnsupportedKernel { .. } => "unsupported kernel",
+            CoordError::CardUnavailable { .. } => "no card available",
+            CoordError::RetriesExhausted { .. } => "retries exhausted",
+            CoordError::QueueFull { .. } => "queue full",
+            CoordError::DeadlineInfeasible { .. } => ShedReason::DeadlineInfeasible.label(),
+            CoordError::BrownoutShed { .. } => ShedReason::BrownoutShed.label(),
+            CoordError::RateLimited { .. } => ShedReason::RateLimited.label(),
+        }
+    }
 }
 
 /// Recover a mutex guard even if a previous holder panicked: the data a
@@ -121,6 +169,15 @@ pub struct RetryPolicy {
     /// Backoff before retry k is `backoff_base * 2^(k-1)`, capped below.
     pub backoff_base: Duration,
     pub backoff_cap: Duration,
+    /// Deterministic jitter: retry k actually sleeps
+    /// `backoff_for(k) * (1 + U[0, jitter_frac))`, so a cohort of jobs
+    /// that failed together de-synchronizes instead of re-spiking the
+    /// recovering card in lockstep. 0.0 disables jitter (the exact
+    /// capped-exponential schedule).
+    pub jitter_frac: f64,
+    /// Seed for the supervisor's jitter stream — fixed so every run of a
+    /// given fault schedule replays the same retry timing.
+    pub jitter_seed: u64,
 }
 
 impl Default for RetryPolicy {
@@ -129,6 +186,8 @@ impl Default for RetryPolicy {
             max_retries: 3,
             backoff_base: Duration::from_millis(1),
             backoff_cap: Duration::from_millis(50),
+            jitter_frac: 0.5,
+            jitter_seed: 0x5EED_BACC_0FF5,
         }
     }
 }
@@ -137,6 +196,17 @@ impl RetryPolicy {
     fn backoff_for(&self, attempt: u32) -> Duration {
         let exp = attempt.saturating_sub(1).min(16);
         (self.backoff_base * (1u32 << exp)).min(self.backoff_cap)
+    }
+
+    /// The capped exponential backoff with the deterministic jitter
+    /// applied: uniform in `[backoff, backoff * (1 + jitter_frac))`,
+    /// drawn from the caller's seeded stream.
+    pub fn jittered_backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let base = self.backoff_for(attempt);
+        if self.jitter_frac <= 0.0 || base.is_zero() {
+            return base;
+        }
+        base.mul_f64(1.0 + rng.f64() * self.jitter_frac)
     }
 }
 
@@ -197,6 +267,11 @@ pub struct EngineConfig {
     /// optional JSONL journal via `serve --trace-out`). On by default;
     /// the bench `observability` section gates its overhead at <5%.
     pub trace: TraceConfig,
+    /// QoS admission policy: per-class token buckets, deadline
+    /// feasibility, and the brownout ladder (DESIGN.md §4i). The default
+    /// is fully permissive, so pre-QoS behaviour is unchanged unless an
+    /// operator opts in.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -212,6 +287,7 @@ impl Default for EngineConfig {
             retry: RetryPolicy::default(),
             queue_bound: None,
             trace: TraceConfig::default(),
+            admission: AdmissionPolicy::default(),
         }
     }
 }
@@ -272,6 +348,7 @@ pub struct Engine {
     retry_tx: Option<mpsc::Sender<FailedJob>>,
     health: Arc<HealthMonitor>,
     tracer: Arc<Tracer>,
+    admission: Arc<AdmissionController>,
     power_budget_w: Option<f64>,
     queue_bound: Option<u64>,
     shutdown: Arc<AtomicBool>,
@@ -308,6 +385,7 @@ impl Engine {
         let (retry_tx, retry_rx) = mpsc::channel::<FailedJob>();
         let epoch = Instant::now();
         let tracer = Arc::new(Tracer::new(&cfg.trace, fleet.len(), epoch)?);
+        let admission = Arc::new(AdmissionController::new(cfg.admission.clone()));
 
         // Initial watt shares: an even split of the cap (clamped to each
         // card's physical bounds) BEFORE any worker starts, so a capped
@@ -359,6 +437,7 @@ impl Engine {
                 beat: beat.clone(),
                 epoch,
                 tracer: tracer.clone(),
+                admission: admission.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -468,6 +547,8 @@ impl Engine {
                 beats: cards.iter().map(|c| c.beat.clone()).collect(),
                 epoch,
                 tracer: tracer.clone(),
+                admission: admission.clone(),
+                queue_bound: cfg.queue_bound,
             };
             Some(
                 std::thread::Builder::new()
@@ -490,6 +571,7 @@ impl Engine {
             retry_tx: Some(retry_tx),
             health,
             tracer,
+            admission,
             power_budget_w: cfg.power_budget_w,
             queue_bound: cfg.queue_bound,
             shutdown,
@@ -520,12 +602,30 @@ impl Engine {
     }
 
     /// Submit one transform; returns the receiver for its result.
+    /// Equivalent to [`Engine::submit_qos`] at the default (batch) class
+    /// with no deadline.
     pub fn submit(
         &self,
         re: Vec<f32>,
         im: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<JobResult>>> {
         self.submit_routed(re, im).map(|(rx, ..)| rx)
+    }
+
+    /// Submit one transform under a QoS class with an optional end-to-end
+    /// deadline. Admission may refuse it typed: `RateLimited` and
+    /// `BrownoutShed` at the class gate, `QueueFull` from backpressure
+    /// (unless a lower-class queued job can be evicted to make room),
+    /// `DeadlineInfeasible` when the predicted queue-wait + exec time
+    /// already exceeds the deadline.
+    pub fn submit_qos(
+        &self,
+        re: Vec<f32>,
+        im: Vec<f32>,
+        class: TenantClass,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        self.submit_routed_qos(re, im, class, deadline).map(|(rx, ..)| rx)
     }
 
     /// Submit, also reporting where the job was packed and whether the
@@ -537,8 +637,19 @@ impl Engine {
         re: Vec<f32>,
         im: Vec<f32>,
     ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
+        self.submit_routed_qos(re, im, TenantClass::default(), None)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn submit_routed_qos(
+        &self,
+        re: Vec<f32>,
+        im: Vec<f32>,
+        class: TenantClass,
+        deadline: Option<Duration>,
+    ) -> Result<(mpsc::Receiver<Result<JobResult>>, Arc<str>, usize, bool)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = FftJob::new(id, re, im);
+        let job = FftJob::new(id, re, im).with_class(class).with_deadline(deadline);
         let route = self.router.route(job.n, job.dtype)?.clone();
         self.enqueue(job, route)
     }
@@ -614,10 +725,98 @@ impl Engine {
         Ok(routable)
     }
 
-    /// Route-independent tail of submission: health-aware least-loaded
-    /// dispatch, accounting, and the batcher push (shared by fft and
-    /// conv jobs). Refused typed — never queued on a dead channel —
-    /// once shutdown has begun.
+    /// One zero-width shed span for a job refused (or evicted) before it
+    /// could occupy a card: exec is pinned to "now", energy and occupancy
+    /// are zero, and the reason + class ride along — the invariants
+    /// `scripts/check_trace.py` enforces on shed outcomes. No accounting
+    /// happens here; admission refusals were never accepted.
+    #[allow(clippy::too_many_arguments)]
+    fn record_shed_span(
+        &self,
+        job_id: u64,
+        artifact: &str,
+        n: u64,
+        card: usize,
+        stamps: Option<&Stamps>,
+        attempts: u32,
+        class: TenantClass,
+        reason: ShedReason,
+    ) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        let now = Instant::now();
+        let (enq, adm, seal, disp) = match stamps {
+            Some(st) => (st.enqueue, st.admit, st.seal, st.dispatch),
+            None => (now, now, now, now),
+        };
+        self.tracer.record(Span {
+            job_id,
+            artifact: artifact.to_string(),
+            n,
+            card,
+            enqueue_us: self.tracer.micros(enq),
+            admit_us: self.tracer.micros(adm),
+            seal_us: self.tracer.micros(seal),
+            dispatch_us: self.tracer.micros(disp),
+            exec_start_us: self.tracer.micros(now),
+            exec_end_us: self.tracer.micros(now),
+            complete_us: self.tracer.micros(now),
+            requested_mhz: 0.0,
+            granted_mhz: 0.0,
+            batch_occupancy: 0,
+            attempts,
+            energy_j: 0.0,
+            sim_batch_s: 0.0,
+            outcome: SpanOutcome::Shed,
+            class: class.label().to_string(),
+            reason: reason.label().to_string(),
+        });
+    }
+
+    /// Class-ordered backpressure: a full card sheds one queued job that
+    /// `job.class` strictly outranks (scavenger before batch; realtime is
+    /// never evicted) so the higher class gets the slot. The victim gets
+    /// the full shed treatment — accounting closed, typed `QueueFull`
+    /// reply, traced span with the eviction reason. Returns true when
+    /// room was made.
+    fn evict_for(&self, job: &FftJob, card: usize) -> bool {
+        let victim = lock_recover(&self.batcher).evict_lower_class(card, job.class);
+        let Some((artifact, victim)) = victim else {
+            return false;
+        };
+        self.cards[card].inflight.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.cards[card].metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        self.cards[card].metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.admission.record_eviction();
+        self.record_shed_span(
+            victim.job.id,
+            &artifact,
+            victim.job.n,
+            card,
+            Some(&victim.stamps),
+            victim.job.attempts,
+            victim.job.class,
+            ShedReason::Evicted,
+        );
+        let _ = victim.reply.send(Err(CoordError::QueueFull {
+            card,
+            inflight: self.cards[card].inflight(),
+            bound: self.queue_bound.unwrap_or(0),
+        }
+        .into()));
+        true
+    }
+
+    /// Route-independent tail of submission: QoS admission (class gates,
+    /// class-ordered backpressure, deadline feasibility), health-aware
+    /// least-loaded dispatch, accounting, and the batcher push (shared by
+    /// fft and conv jobs). Refused typed — never queued on a dead
+    /// channel — once shutdown has begun. Every admission refusal
+    /// happens BEFORE accounting, so `jobs_submitted` only ever counts
+    /// accepted work.
     #[allow(clippy::type_complexity)]
     fn enqueue(
         &self,
@@ -630,7 +829,63 @@ impl Engine {
             }
             .into());
         }
-        let card = self.pick_card()?;
+        // Class gates first (brownout rung, token bucket): the cheapest
+        // checks, and no card state is touched yet.
+        if let AdmitDecision::Shed(reason) =
+            self.admission.admit_class(job.class, Instant::now())
+        {
+            self.record_shed_span(
+                job.id, &route.artifact, job.n, 0, None, job.attempts, job.class, reason,
+            );
+            let class = job.class.label();
+            let err = match reason {
+                ShedReason::BrownoutShed => CoordError::BrownoutShed {
+                    class,
+                    level: self.admission.brownout.level(),
+                },
+                _ => CoordError::RateLimited { class },
+            };
+            return Err(err.into());
+        }
+        // Card choice, with class-ordered backpressure: when every open
+        // card is at its bound, try to evict one queued lower-class job
+        // from the least-loaded routable card before refusing.
+        let card = match self.pick_card() {
+            Ok(c) => c,
+            Err(CoordError::QueueFull { card, .. }) if self.evict_for(&job, card) => card,
+            Err(e) => return Err(e.into()),
+        };
+        // Deadline feasibility on the routed card: predicted queue-wait +
+        // exec time from the backend's own estimator vs the deadline.
+        if let Some(deadline) = job.deadline {
+            let workload = FftWorkload::new(
+                route.n,
+                Precision::Fp32,
+                route.device_batch * route.n * Precision::Fp32.complex_bytes(),
+            );
+            let est = self.backend.estimate_time_s(&self.cards[card].spec, &workload);
+            let predicted = AdmissionController::predicted_s(
+                est,
+                self.cards[card].inflight(),
+                route.device_batch,
+            );
+            if let AdmitDecision::Shed(reason) =
+                self.admission.feasible(deadline.as_secs_f64(), predicted)
+            {
+                self.record_shed_span(
+                    job.id, &route.artifact, job.n, card, None, job.attempts, job.class, reason,
+                );
+                return Err(CoordError::DeadlineInfeasible {
+                    id: job.id,
+                    n: job.n,
+                    class: job.class.label(),
+                    deadline_ms: deadline.as_secs_f64() * 1e3,
+                    predicted_ms: predicted * 1e3,
+                }
+                .into());
+            }
+        }
+        self.admission.record_admit(job.class);
         self.cards[card].inflight.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         self.cards[card].metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
@@ -796,6 +1051,12 @@ impl Engine {
         &self.tracer
     }
 
+    /// The QoS admission controller (per-class stats, shed counters, the
+    /// brownout ladder).
+    pub fn admission(&self) -> &AdmissionController {
+        &self.admission
+    }
+
     /// Pre-warm the plan cache for an admissible length menu before
     /// accepting traffic: route each length, load (and thereby
     /// plan-compile) its artifact, and ride along any `rfft` and `conv`
@@ -867,6 +1128,17 @@ impl Engine {
             .collect();
         let mut snap = FleetSnapshot::from_cards(cards, self.power_budget_w);
         snap.trace = Some(self.tracer.summary());
+        let stats = &self.admission.stats;
+        snap.overload = Some(crate::telemetry::OverloadSnapshot {
+            brownout_level: self.admission.brownout.level(),
+            brownout_max_level: self.admission.brownout.max_level_seen(),
+            brownout_escalations: self.admission.brownout.escalations(),
+            admitted: std::array::from_fn(|i| stats.admitted[i].load(Ordering::Relaxed)),
+            deadline_sheds: stats.deadline_sheds.load(Ordering::Relaxed),
+            brownout_sheds: stats.brownout_sheds.load(Ordering::Relaxed),
+            rate_limited: stats.rate_limited.load(Ordering::Relaxed),
+            evictions: stats.evictions.load(Ordering::Relaxed),
+        });
         snap
     }
 
@@ -940,6 +1212,7 @@ struct WorkerState {
     beat: Arc<AtomicU64>,
     epoch: Instant,
     tracer: Arc<Tracer>,
+    admission: Arc<AdmissionController>,
 }
 
 /// Hand a failed batch's envelopes to the retry supervisor; if it is
@@ -1068,11 +1341,23 @@ fn worker_loop(
                 });
             requested = requested.min(cap);
         }
+        if let Some(floor) = crate::governor::brownout_floor(
+            boost_mhz,
+            w.admission.brownout.level(),
+            batch.envelopes.iter().any(|e| e.job.class == TenantClass::Realtime),
+        ) {
+            // Brownout step 1: a browned-out fleet spends watts to protect
+            // the deadline class — batches carrying realtime work float up
+            // to boost, overriding the governor and the budget cap (the
+            // ladder's explicit latency-for-watts trade).
+            requested = requested.max(floor);
+        }
         if let Some(frac) = w.health.clock_frac(w.card) {
             // Degraded card: clock-derate through the same cap machinery
             // the power budget uses — snap a ceiling at ~frac × boost so
             // a flaky card runs cooler while it proves itself. The cap is
-            // a table clock, so request stability is preserved.
+            // a table clock, so request stability is preserved. Applied
+            // after the brownout floor: a sick card is never pushed.
             requested = requested.min(table.snap_at_most(boost_mhz, frac * boost_mhz));
         }
         let clock = if requested == last_requested {
@@ -1209,6 +1494,8 @@ fn worker_loop(
                             energy_j: run.energy_j / occupancy.max(1) as f64,
                             sim_batch_s: run.timing.total_s,
                             outcome: SpanOutcome::Ok,
+                            class: env.job.class.label().to_string(),
+                            reason: String::new(),
                         });
                     }
                 }
@@ -1237,6 +1524,8 @@ struct SupervisorState {
     beats: Vec<Arc<AtomicU64>>,
     epoch: Instant,
     tracer: Arc<Tracer>,
+    admission: Arc<AdmissionController>,
+    queue_bound: Option<u64>,
 }
 
 /// One job waiting out its backoff before re-dispatch.
@@ -1281,14 +1570,25 @@ fn shed(s: &SupervisorState, f: FailedJob, err: CoordError) {
             energy_j: 0.0,
             sim_batch_s: 0.0,
             outcome: SpanOutcome::Shed,
+            class: f.env.job.class.label().to_string(),
+            reason: err.shed_reason().to_string(),
         });
     }
     let _ = f.env.reply.send(Err(err.into()));
 }
 
 /// Admit a failed job into the backoff queue — or shed it typed if its
-/// retries are spent or the engine is stopping.
-fn admit_retry(s: &SupervisorState, pending: &mut Vec<PendingRetry>, mut f: FailedJob, stopping: bool) {
+/// retries are spent or the engine is stopping. The backoff carries
+/// seeded jitter (`RetryPolicy::jittered_backoff`) so a cohort of jobs
+/// from one failed batch spreads out instead of re-spiking the
+/// recovering card in lockstep.
+fn admit_retry(
+    s: &SupervisorState,
+    pending: &mut Vec<PendingRetry>,
+    mut f: FailedJob,
+    stopping: bool,
+    rng: &mut Rng,
+) {
     if stopping {
         let reason = format!("engine is shutting down (last error: {})", f.error);
         shed(s, f, CoordError::CardUnavailable { reason });
@@ -1304,7 +1604,7 @@ fn admit_retry(s: &SupervisorState, pending: &mut Vec<PendingRetry>, mut f: Fail
         return;
     }
     f.env.job.attempts += 1;
-    let backoff = s.retry.backoff_for(f.env.job.attempts);
+    let backoff = s.retry.jittered_backoff(f.env.job.attempts, rng);
     pending.push(PendingRetry {
         due: Instant::now() + backoff,
         job: f,
@@ -1365,13 +1665,16 @@ fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
     let mut pending: Vec<PendingRetry> = Vec::new();
     let tick = Duration::from_millis(2);
     let stall_ms = (s.health.policy().stall_after.as_millis() as u64).max(1);
+    // The jitter stream: one seeded generator per supervisor, so a given
+    // fault schedule replays the exact same retry timing run after run.
+    let mut rng = Rng::new(s.retry.jitter_seed);
     loop {
         let stopping = s.stop.load(Ordering::Relaxed);
         match rx.recv_timeout(tick) {
             Ok(f) => {
-                admit_retry(&s, &mut pending, f, stopping);
+                admit_retry(&s, &mut pending, f, stopping, &mut rng);
                 while let Ok(f) = rx.try_recv() {
-                    admit_retry(&s, &mut pending, f, stopping);
+                    admit_retry(&s, &mut pending, f, stopping, &mut rng);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -1388,7 +1691,7 @@ fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
             // Shed everything and leave; workers terminally fail any
             // later batch errors themselves once the receiver drops.
             while let Ok(f) = rx.try_recv() {
-                admit_retry(&s, &mut pending, f, true);
+                admit_retry(&s, &mut pending, f, true, &mut rng);
             }
             for p in pending.drain(..) {
                 let reason = format!("engine is shutting down (last error: {})", p.job.error);
@@ -1399,6 +1702,16 @@ fn supervisor_loop(s: SupervisorState, rx: mpsc::Receiver<FailedJob>) {
 
         // Probe re-admission for quarantined cards.
         s.health.tick();
+
+        // Brownout ladder tick: fleet queue pressure is the in-flight
+        // fraction of bounded capacity. Unbounded engines never brown
+        // out — there is no capacity to be a fraction of, and their
+        // overload defense is the operator setting a bound.
+        if let (Some(bound), Some(bp)) = (s.queue_bound, s.admission.policy.brownout.as_ref()) {
+            let inflight: u64 = s.inflights.iter().map(|i| i.load(Ordering::Relaxed)).sum();
+            let capacity = (bound * s.inflights.len() as u64).max(1);
+            s.admission.brownout.tick(inflight as f64 / capacity as f64, bp);
+        }
 
         // Heartbeat stall detection: work in flight but no batch started
         // recently. Resetting the beat restarts the staleness window so
@@ -1585,12 +1898,50 @@ mod tests {
             max_retries: 10,
             backoff_base: Duration::from_millis(1),
             backoff_cap: Duration::from_millis(5),
+            ..RetryPolicy::default()
         };
         assert_eq!(p.backoff_for(1), Duration::from_millis(1));
         assert_eq!(p.backoff_for(2), Duration::from_millis(2));
         assert_eq!(p.backoff_for(3), Duration::from_millis(4));
         assert_eq!(p.backoff_for(4), Duration::from_millis(5), "capped");
         assert_eq!(p.backoff_for(60), Duration::from_millis(5), "shift stays bounded");
+    }
+
+    #[test]
+    fn retry_jitter_is_seeded_bounded_and_spread() {
+        let p = RetryPolicy {
+            max_retries: 10,
+            backoff_base: Duration::from_millis(4),
+            backoff_cap: Duration::from_millis(50),
+            jitter_frac: 0.5,
+            ..RetryPolicy::default()
+        };
+        let base = p.backoff_for(3); // 16 ms, uncapped
+        let mut rng = Rng::new(p.jitter_seed);
+        let xs: Vec<Duration> = (0..64).map(|_| p.jittered_backoff(3, &mut rng)).collect();
+        // Bounded: every draw sits in [base, base * (1 + jitter_frac)).
+        for x in &xs {
+            assert!(
+                *x >= base && *x < base.mul_f64(1.0 + p.jitter_frac),
+                "jitter out of bounds: {x:?} (base {base:?})"
+            );
+        }
+        // Spread: a cohort of 64 synchronized failures de-synchronizes —
+        // the draws are not clustered on a handful of values.
+        let distinct: std::collections::HashSet<Duration> = xs.iter().copied().collect();
+        assert!(
+            distinct.len() >= 48,
+            "expected a well-spread cohort, got {} distinct backoffs",
+            distinct.len()
+        );
+        // Deterministic: the same seed replays the same schedule.
+        let mut replay_rng = Rng::new(p.jitter_seed);
+        let replay: Vec<Duration> =
+            (0..64).map(|_| p.jittered_backoff(3, &mut replay_rng)).collect();
+        assert_eq!(xs, replay, "seeded jitter must replay exactly");
+        // Opting out restores the exact capped-exponential schedule.
+        let p0 = RetryPolicy { jitter_frac: 0.0, ..p };
+        assert_eq!(p0.jittered_backoff(3, &mut rng), base);
     }
 
     #[test]
@@ -1663,6 +2014,261 @@ mod tests {
                 .unwrap_or(false),
             "expected UnsupportedLength, got {err:#}"
         );
+        e.shutdown();
+    }
+
+    #[test]
+    fn rate_limited_class_rejects_typed_before_accounting() {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        let mut admission = AdmissionPolicy::default();
+        // 0.001 tokens/s with a 1-token burst: the first scavenger job
+        // spends the bank, and no realistic test runs the 1000 s a refill
+        // would take — the limit is deterministic under any CI jitter.
+        admission.rate_per_s[TenantClass::Scavenger.index()] = Some(1e-3);
+        admission.burst[TenantClass::Scavenger.index()] = 1.0;
+        let cfg = EngineConfig { admission, ..EngineConfig::default() };
+        let e = Engine::start_single(rt, tesla_v100(), GovernorKind::FixedBoost, cfg).unwrap();
+        let n = 1024usize;
+        let _rx = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Scavenger, None)
+            .unwrap();
+        let err = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Scavenger, None)
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CoordError>(),
+                Some(CoordError::RateLimited { class: "scavenger" })
+            ),
+            "expected RateLimited, got {err:#}"
+        );
+        // Other classes are not collaterally limited, and the refusal
+        // happened before accounting: only the two accepted jobs count.
+        let _rx2 = e.submit(vec![0.0; n], vec![0.0; n]).unwrap();
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(e.admission().stats.rate_limited.load(Ordering::Relaxed), 1);
+        let spans = e.tracer().recent(8);
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.outcome == SpanOutcome::Shed
+                    && s.reason == ShedReason::RateLimited.label()
+                    && s.class == "scavenger"),
+            "the rate-limit shed must leave a traced span with its reason"
+        );
+        assert!(e.drain(Duration::from_secs(5)).complete);
+        e.shutdown();
+    }
+
+    #[test]
+    fn impossible_deadlines_shed_typed_at_admission() {
+        let e = engine();
+        let n = 1024usize;
+        let err = e
+            .submit_qos(
+                vec![0.0; n],
+                vec![0.0; n],
+                TenantClass::Realtime,
+                Some(Duration::from_nanos(1)),
+            )
+            .unwrap_err();
+        match err.downcast_ref::<CoordError>() {
+            Some(CoordError::DeadlineInfeasible { class, deadline_ms, predicted_ms, .. }) => {
+                assert_eq!(*class, "realtime");
+                assert!(
+                    predicted_ms > deadline_ms,
+                    "the error must carry the losing prediction"
+                );
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        assert_eq!(
+            e.metrics.jobs_submitted.load(Ordering::Relaxed),
+            0,
+            "deadline sheds happen before accounting"
+        );
+        assert_eq!(e.admission().stats.deadline_sheds.load(Ordering::Relaxed), 1);
+        // A feasible deadline admits and completes.
+        let rx = e
+            .submit_qos(
+                vec![0.0; n],
+                vec![0.0; n],
+                TenantClass::Realtime,
+                Some(Duration::from_secs(30)),
+            )
+            .unwrap();
+        e.flush();
+        rx.recv().unwrap().unwrap();
+        let spans = e.tracer().recent(8);
+        let shed = spans.iter().find(|s| s.outcome == SpanOutcome::Shed).expect("shed span");
+        assert_eq!(shed.reason, ShedReason::DeadlineInfeasible.label());
+        assert_eq!(shed.exec_start_us, shed.exec_end_us, "shed spans never execute");
+        assert_eq!(shed.energy_j, 0.0);
+        let ok = spans.iter().find(|s| s.outcome == SpanOutcome::Ok).expect("ok span");
+        assert_eq!(ok.class, "realtime");
+        e.shutdown();
+    }
+
+    #[test]
+    fn backpressure_evicts_lower_classes_but_never_peers_or_better() {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        // A huge batch wait disables the flusher, so queued jobs sit in
+        // their partial slot and hold the single card at its 1-job bound.
+        let cfg = EngineConfig {
+            max_batch_wait: Duration::from_secs(3600),
+            queue_bound: Some(1),
+            ..EngineConfig::default()
+        };
+        let e = Engine::start_single(rt, tesla_v100(), GovernorKind::FixedBoost, cfg).unwrap();
+        let n = 1024usize;
+        // A queued scavenger job fills the card...
+        let rx_scav = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Scavenger, None)
+            .unwrap();
+        // ...and realtime pressure evicts it instead of bouncing off
+        // QueueFull: the higher class takes the slot.
+        let rx_rt = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Realtime, None)
+            .unwrap();
+        let evicted = rx_scav
+            .recv_timeout(Duration::from_secs(2))
+            .expect("eviction replies immediately")
+            .unwrap_err();
+        assert!(
+            evicted
+                .downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::QueueFull { .. }))
+                .unwrap_or(false),
+            "the evicted job must see the typed backpressure error, got {evicted:#}"
+        );
+        assert_eq!(e.admission().stats.evictions.load(Ordering::Relaxed), 1);
+        // A batch-class submit cannot evict the queued realtime job (and
+        // could never evict a peer): plain QueueFull, no second eviction.
+        let err = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Batch, None)
+            .unwrap_err();
+        assert!(
+            err.downcast_ref::<CoordError>()
+                .map(|c| matches!(c, CoordError::QueueFull { bound: 1, .. }))
+                .unwrap_or(false),
+            "expected QueueFull, got {err:#}"
+        );
+        assert_eq!(e.admission().stats.evictions.load(Ordering::Relaxed), 1);
+        // The realtime job completes; the eviction left a traced shed
+        // span with its reason and the victim's class.
+        e.flush();
+        rx_rt.recv().unwrap().unwrap();
+        assert!(e.drain(Duration::from_secs(5)).complete);
+        let spans = e.tracer().recent(8);
+        assert!(spans.iter().any(|s| s.outcome == SpanOutcome::Shed
+            && s.reason == ShedReason::Evicted.label()
+            && s.class == "scavenger"));
+        // Accounting closes: 2 accepted, 1 completed, 1 failed (the
+        // refused batch job was never accounted).
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(e.metrics.jobs_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(e.metrics.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(e.metrics.jobs_shed.load(Ordering::Relaxed), 1);
+        e.shutdown();
+    }
+
+    #[test]
+    fn brownout_ladder_sheds_lower_classes_typed() {
+        let e = engine();
+        let bp = e.admission().policy.brownout.clone().expect("default carries a ladder");
+        // Force the ladder to its top rung. The default engine has no
+        // queue bound, so the supervisor never ticks the ladder — the
+        // level this test sets is stable.
+        for _ in 0..(bp.escalate_ticks as u64 * 3) {
+            e.admission().brownout.tick(1.0, &bp);
+        }
+        assert_eq!(e.admission().brownout.level(), 3);
+        let n = 1024usize;
+        for class in [TenantClass::Scavenger, TenantClass::Batch] {
+            let err = e.submit_qos(vec![0.0; n], vec![0.0; n], class, None).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<CoordError>(),
+                    Some(CoordError::BrownoutShed { level: 3, .. })
+                ),
+                "class {} must be brownout-shed at level 3, got {err:#}",
+                class.label()
+            );
+        }
+        // Realtime is never brownout-shed.
+        let rx = e
+            .submit_qos(vec![0.0; n], vec![0.0; n], TenantClass::Realtime, None)
+            .unwrap();
+        e.flush();
+        rx.recv().unwrap().unwrap();
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 1);
+        assert_eq!(e.admission().stats.brownout_sheds.load(Ordering::Relaxed), 2);
+        let spans = e.tracer().recent(8);
+        let shed: Vec<_> =
+            spans.iter().filter(|s| s.outcome == SpanOutcome::Shed).collect();
+        assert_eq!(shed.len(), 2);
+        assert!(shed
+            .iter()
+            .all(|s| s.reason == ShedReason::BrownoutShed.label() && s.energy_j == 0.0));
+        e.shutdown();
+    }
+
+    #[test]
+    fn drain_readmit_race_never_leaves_quarantined_card_dispatchable() {
+        let rt = Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).unwrap());
+        let cfg = EngineConfig {
+            health: HealthPolicy {
+                // An effectively infinite probe cooldown: during the race
+                // the ONLY way card 0 could become dispatchable is the
+                // bug this test hunts — operator readmit_card() calls
+                // resurrecting a quarantined card past the health monitor.
+                probe_cooldown: Duration::from_secs(3600),
+                probe_cooldown_cap: Duration::from_secs(3600),
+                ..HealthPolicy::default()
+            },
+            ..EngineConfig::default()
+        };
+        let e = Engine::start_single(rt, tesla_v100(), GovernorKind::FixedBoost, cfg).unwrap();
+        for _ in 0..e.health().policy().errors_to_quarantine {
+            e.health().on_batch_error(0);
+        }
+        assert_eq!(e.health().state(0), health::HealthState::Quarantined);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|sc| {
+            // Operator churn: drain/readmit flip the accepting flag as
+            // fast as they can...
+            sc.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    e.drain_card(0, Duration::ZERO);
+                    e.readmit_card(0);
+                }
+            });
+            // ...racing probe re-admission ticks (the engine's own
+            // supervisor is ticking concurrently too).
+            sc.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    e.health().tick();
+                }
+            });
+            for _ in 0..1000 {
+                // The dispatch-level invariant: a quarantined card is
+                // never routable, however the interleaving falls.
+                assert!(!e.health().eligible(0), "quarantined card became eligible");
+                let err = e.submit(vec![0.0; 1024], vec![0.0; 1024]).unwrap_err();
+                assert!(
+                    err.downcast_ref::<CoordError>()
+                        .map(|c| matches!(c, CoordError::CardUnavailable { .. }))
+                        .unwrap_or(false),
+                    "submit must stay typed-refused while quarantined, got {err:#}"
+                );
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert_eq!(e.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+        // Probe re-admission is the only legal exit from quarantine, and
+        // its cooldown has not elapsed.
+        assert!(!e.health().maybe_readmit(0));
+        assert_eq!(e.health().state(0), health::HealthState::Quarantined);
         e.shutdown();
     }
 }

@@ -97,6 +97,17 @@ pub fn choose_with_budget(
     })
 }
 
+/// Brownout ladder step 1: under sustained overload (`Brownout` level
+/// ≥ 1) batches carrying realtime work float up to the boost clock —
+/// spend watts to protect the deadline class — while batch/scavenger
+/// traffic keeps the governor's energy-optimal choice. Returns the clock
+/// floor to apply, or `None` when the ladder is idle or the batch holds
+/// no realtime work. Health derates still apply *after* this floor: a
+/// sick card is never pushed to boost.
+pub fn brownout_floor(boost_mhz: f64, level: u8, has_realtime: bool) -> Option<f64> {
+    (level >= 1 && has_realtime).then_some(boost_mhz)
+}
+
 /// Outcome of one governed batch, fed back to the governor.
 #[derive(Debug, Clone)]
 pub struct BatchFeedback {
@@ -308,6 +319,14 @@ mod tests {
         let mut gov2 = GovernorKind::FixedClock(945.0).make();
         let open = gov2.choose(&g, &w, &GovernorContext::default()).unwrap();
         assert_eq!(capped, open);
+    }
+
+    #[test]
+    fn brownout_floor_boosts_only_realtime_under_overload() {
+        assert_eq!(brownout_floor(1380.0, 0, true), None, "ladder idle");
+        assert_eq!(brownout_floor(1380.0, 1, false), None, "no realtime aboard");
+        assert_eq!(brownout_floor(1380.0, 1, true), Some(1380.0));
+        assert_eq!(brownout_floor(1380.0, 3, true), Some(1380.0), "all rungs floor to boost");
     }
 
     #[test]

@@ -179,6 +179,128 @@ impl FaultState {
     }
 }
 
+/// How submit-side arrivals are shaped under `serve --chaos-arrivals` —
+/// the *load* half of chaos, next to the card faults above. Schedules
+/// are fully materialised up front from a seeded [`Rng`], so a chaos
+/// arrival trace replays identically run to run (same property the
+/// batch-sequence faults have).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Back-to-back volleys of `size` jobs separated by quiet gaps; the
+    /// mean offered rate is preserved (`quiet_x` scales the gaps).
+    Burst { size: u64, quiet_x: f64 },
+    /// Sinusoidal rate swing with `period` jobs per cycle: offered rate
+    /// oscillates in `[mean·(1−swing), mean·(1+swing)]`.
+    Diurnal { period: u64, swing: f64 },
+    /// Bursts plus a scrambled per-job FFT-length pick, the worst case
+    /// for the batcher's per-(n, artifact) slots.
+    Adversarial { size: u64 },
+}
+
+/// A parsed `--chaos-arrivals` spec: the shape plus the RNG seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPlan {
+    pub kind: ArrivalKind,
+    pub seed: u64,
+}
+
+/// One scheduled arrival: sleep `gap_us` after the previous submit,
+/// then submit (optionally overriding the FFT length index for
+/// adversarial mixes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub gap_us: u64,
+    /// `Some(i)` = submit the i-th configured length (adversarial only).
+    pub length_idx: Option<usize>,
+}
+
+impl ArrivalPlan {
+    /// Parse a `--chaos-arrivals` spec: `kind[,key=val...]`. Kinds and
+    /// keys (all optional, with defaults):
+    ///
+    /// * `burst` — `size` (32), `quiet` (gap multiplier ×100, default
+    ///   100 = mean-rate-preserving), `seed` (7)
+    /// * `diurnal` — `period` (256), `swing` (amplitude ×100, default
+    ///   80), `seed` (7)
+    /// * `adversarial` — `size` (32), `seed` (7)
+    pub fn parse(spec: &str) -> Result<ArrivalPlan> {
+        let mut parts = spec.split(',').map(str::trim);
+        let kind_s = parts.next().unwrap_or("");
+        let (mut size, mut quiet, mut period, mut swing, mut seed) = (32u64, 100u64, 256u64, 80u64, 7u64);
+        for kv in parts {
+            let (k, v) = kv.split_once('=').with_context(|| format!("'{kv}': expected key=val"))?;
+            let v: u64 = v.trim().parse().with_context(|| format!("value of '{k}'"))?;
+            match k.trim() {
+                "size" => size = v,
+                "quiet" => quiet = v,
+                "period" => period = v,
+                "swing" => swing = v,
+                "seed" => seed = v,
+                other => bail!("unknown key '{other}'"),
+            }
+        }
+        anyhow::ensure!(size > 0, "burst size must be > 0");
+        anyhow::ensure!(period > 0, "diurnal period must be > 0");
+        anyhow::ensure!(swing < 100, "diurnal swing must be < 100 (percent)");
+        let kind = match kind_s {
+            "burst" => ArrivalKind::Burst { size, quiet_x: quiet as f64 / 100.0 },
+            "diurnal" => ArrivalKind::Diurnal { period, swing: swing as f64 / 100.0 },
+            "adversarial" => ArrivalKind::Adversarial { size },
+            other => bail!("unknown arrival kind '{other}' (burst|diurnal|adversarial)"),
+        };
+        Ok(ArrivalPlan { kind, seed })
+    }
+
+    /// Materialise the whole deterministic schedule: `jobs` arrivals at
+    /// a mean offered rate of `rate_jobs_per_s`, shaped by the kind.
+    /// `n_lengths` is how many FFT lengths the submitter is configured
+    /// with (adversarial mixes pick among them; others leave the
+    /// submitter's default).
+    pub fn schedule(&self, rate_jobs_per_s: f64, jobs: u64, n_lengths: usize) -> Vec<Arrival> {
+        let mean_gap_us = if rate_jobs_per_s > 0.0 { 1e6 / rate_jobs_per_s } else { 0.0 };
+        let mut rng = crate::util::rng::Rng::new(self.seed);
+        let burst_gaps = |size: u64, quiet_x: f64, rng: &mut crate::util::rng::Rng| {
+            (0..jobs)
+                .map(|i| {
+                    if i > 0 && i % size == 0 {
+                        // The whole volley's budget lands in one quiet
+                        // gap, jittered ±50% so volleys don't phase-lock
+                        // across runs with different seeds.
+                        (size as f64 * mean_gap_us * quiet_x * rng.range_f64(0.5, 1.5)) as u64
+                    } else {
+                        0
+                    }
+                })
+                .collect::<Vec<u64>>()
+        };
+        match self.kind {
+            ArrivalKind::Burst { size, quiet_x } => burst_gaps(size, quiet_x, &mut rng)
+                .into_iter()
+                .map(|gap_us| Arrival { gap_us, length_idx: None })
+                .collect(),
+            ArrivalKind::Diurnal { period, swing } => (0..jobs)
+                .map(|i| {
+                    let phase = (i % period) as f64 / period as f64 * std::f64::consts::TAU;
+                    let rate_x = 1.0 + swing * phase.sin();
+                    Arrival {
+                        gap_us: (mean_gap_us / rate_x.max(1e-3)) as u64,
+                        length_idx: None,
+                    }
+                })
+                .collect(),
+            ArrivalKind::Adversarial { size } => {
+                let gaps = burst_gaps(size, 1.0, &mut rng);
+                gaps.into_iter()
+                    .map(|gap_us| Arrival {
+                        gap_us,
+                        length_idx: (n_lengths > 1).then(|| rng.below(n_lengths as u64) as usize),
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +381,72 @@ mod tests {
         let a = run(FaultState::for_card(&p, 0));
         let b = run(FaultState::for_card(&p, 0));
         assert_eq!(a, b, "same plan, same card, same trace");
+    }
+
+    #[test]
+    fn arrival_parse_full_grammar() {
+        let p = ArrivalPlan::parse("burst").unwrap();
+        assert_eq!(p.kind, ArrivalKind::Burst { size: 32, quiet_x: 1.0 });
+        assert_eq!(p.seed, 7);
+        let p = ArrivalPlan::parse("burst,size=8,quiet=150,seed=42").unwrap();
+        assert_eq!(p.kind, ArrivalKind::Burst { size: 8, quiet_x: 1.5 });
+        assert_eq!(p.seed, 42);
+        let p = ArrivalPlan::parse("diurnal,period=64,swing=50").unwrap();
+        assert_eq!(p.kind, ArrivalKind::Diurnal { period: 64, swing: 0.5 });
+        let p = ArrivalPlan::parse("adversarial,size=16").unwrap();
+        assert_eq!(p.kind, ArrivalKind::Adversarial { size: 16 });
+        assert!(ArrivalPlan::parse("tsunami").is_err(), "unknown kind");
+        assert!(ArrivalPlan::parse("burst,when=3").is_err(), "unknown key");
+        assert!(ArrivalPlan::parse("burst,size=0").is_err(), "zero burst");
+        assert!(ArrivalPlan::parse("diurnal,swing=100").is_err(), "swing ≥ 100%");
+    }
+
+    #[test]
+    fn burst_arrivals_preserve_mean_rate_and_replay() {
+        let p = ArrivalPlan::parse("burst,size=16,seed=3").unwrap();
+        let a = p.schedule(1000.0, 512, 1);
+        assert_eq!(a.len(), 512);
+        assert_eq!(a, p.schedule(1000.0, 512, 1), "same seed, same trace");
+        // within a volley the gap is zero; only volley boundaries wait
+        assert!(a[1].gap_us == 0 && a[15].gap_us == 0);
+        assert!(a[16].gap_us > 0, "volley boundary waits");
+        // the total offered time stays near jobs/rate (jitter is ±50%
+        // per gap, so the sum stays well inside ±30% over 31 gaps)
+        let total_us: u64 = a.iter().map(|x| x.gap_us).sum();
+        let expect_us = 512.0 * 1e3;
+        assert!(
+            (total_us as f64 / expect_us - 1.0).abs() < 0.3,
+            "total {total_us} vs {expect_us}"
+        );
+        assert!(a.iter().all(|x| x.length_idx.is_none()));
+        // a different seed reshuffles the quiet gaps
+        let b = ArrivalPlan::parse("burst,size=16,seed=4").unwrap().schedule(1000.0, 512, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn diurnal_arrivals_swing_around_the_mean() {
+        let p = ArrivalPlan::parse("diurnal,period=64,swing=80").unwrap();
+        let a = p.schedule(1000.0, 128, 1);
+        let gaps: Vec<u64> = a.iter().map(|x| x.gap_us).collect();
+        let (lo, hi) = (*gaps.iter().min().unwrap(), *gaps.iter().max().unwrap());
+        // rate swings ×1.8 / ×0.2 around the 1000 µs mean gap
+        assert!(lo < 600, "peak-rate gap compresses: {lo}");
+        assert!(hi > 3000, "trough-rate gap stretches: {hi}");
+        assert_eq!(&gaps[..64], &gaps[64..], "cycles repeat exactly");
+    }
+
+    #[test]
+    fn adversarial_arrivals_scramble_the_length_mix() {
+        let p = ArrivalPlan::parse("adversarial,size=8,seed=11").unwrap();
+        let a = p.schedule(2000.0, 256, 4);
+        assert_eq!(a, p.schedule(2000.0, 256, 4), "deterministic");
+        let mut seen = [false; 4];
+        for x in &a {
+            seen[x.length_idx.expect("adversarial picks lengths")] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all configured lengths hit");
+        // with a single configured length there is nothing to scramble
+        assert!(p.schedule(2000.0, 16, 1).iter().all(|x| x.length_idx.is_none()));
     }
 }

@@ -7,6 +7,11 @@
 //! latency/energy histograms, exported as percentile readouts in the
 //! JSON document and as proper `# TYPE ... histogram` families (with
 //! cumulative `le` buckets, `_sum` and `_count`) in the Prometheus text.
+//!
+//! Schema 3 adds the overload rollup — brownout ladder position and the
+//! per-reason admission shed counters — plus the per-QoS-class span
+//! split (`trace.per_class` in JSON,
+//! `fftsweep_trace_class_spans_total{class,outcome}` in Prometheus).
 
 use std::fmt::Write as _;
 
@@ -18,7 +23,7 @@ use crate::util::json::Json;
 /// The JSON document `serve --telemetry-out` writes.
 pub fn snapshot_json(s: &FleetSnapshot) -> Json {
     let mut root = Json::obj();
-    root.set("schema", 2u64.into());
+    root.set("schema", 3u64.into());
     root.set(
         "power_budget_w",
         s.power_budget_w.map(Json::Num).unwrap_or(Json::Null),
@@ -52,11 +57,37 @@ pub fn snapshot_json(s: &FleetSnapshot) -> Json {
     fleet.set("cards_quarantined", t.cards_quarantined.into());
     root.set("fleet", fleet);
 
+    if let Some(o) = &s.overload {
+        let mut ov = Json::obj();
+        ov.set("brownout_level", (o.brownout_level as u64).into());
+        ov.set("brownout_max_level", (o.brownout_max_level as u64).into());
+        ov.set("brownout_escalations", o.brownout_escalations.into());
+        let mut admitted = Json::obj();
+        for (c, &n) in crate::coordinator::admission::CLASSES.iter().zip(&o.admitted) {
+            admitted.set(c.label(), n.into());
+        }
+        ov.set("admitted", admitted);
+        ov.set("deadline_sheds", o.deadline_sheds.into());
+        ov.set("brownout_sheds", o.brownout_sheds.into());
+        ov.set("rate_limited", o.rate_limited.into());
+        ov.set("evictions", o.evictions.into());
+        ov.set("total_sheds", o.total_sheds().into());
+        root.set("overload", ov);
+    }
+
     if let Some(tr) = &s.trace {
         let mut trace = Json::obj();
         trace.set("enabled", tr.enabled.into());
         trace.set("ok_spans", tr.ok_spans.into());
         trace.set("shed_spans", tr.shed_spans.into());
+        let mut per_class = Json::obj();
+        for cs in &tr.per_class {
+            let mut row = Json::obj();
+            row.set("ok_spans", cs.ok_spans.into());
+            row.set("shed_spans", cs.shed_spans.into());
+            per_class.set(cs.class, row);
+        }
+        trace.set("per_class", per_class);
         trace.set("ring_len", (tr.ring_len as u64).into());
         trace.set("ring_dropped", tr.ring_dropped.into());
         trace.set("sink_errors", tr.sink_errors.into());
@@ -292,10 +323,45 @@ pub fn prometheus_text(s: &FleetSnapshot) -> String {
     gauge(&mut out, "fftsweep_fleet_jobs_shed_total", "Jobs dropped fleet-wide with a typed error");
     let _ = writeln!(out, "fftsweep_fleet_jobs_shed_total {}", prom_num(s.fleet.jobs_shed as f64));
 
+    if let Some(o) = &s.overload {
+        gauge(&mut out, "fftsweep_brownout_level", "Brownout ladder rung (0 off, 3 realtime-only)");
+        let _ = writeln!(out, "fftsweep_brownout_level {}", o.brownout_level);
+        gauge(&mut out, "fftsweep_brownout_max_level", "Highest brownout rung reached");
+        let _ = writeln!(out, "fftsweep_brownout_max_level {}", o.brownout_max_level);
+        counter(&mut out, "fftsweep_brownout_escalations_total", "Brownout ladder level-up transitions");
+        let _ = writeln!(out, "fftsweep_brownout_escalations_total {}", o.brownout_escalations);
+        counter(&mut out, "fftsweep_admission_admitted_total", "Jobs admitted by QoS class");
+        for (c, &n) in crate::coordinator::admission::CLASSES.iter().zip(&o.admitted) {
+            let _ = writeln!(out, "fftsweep_admission_admitted_total{{class=\"{}\"}} {n}", c.label());
+        }
+        counter(&mut out, "fftsweep_admission_sheds_total", "Admission-layer drops by typed reason");
+        let _ = writeln!(out, "fftsweep_admission_sheds_total{{reason=\"deadline_infeasible\"}} {}", o.deadline_sheds);
+        let _ = writeln!(out, "fftsweep_admission_sheds_total{{reason=\"brownout\"}} {}", o.brownout_sheds);
+        let _ = writeln!(out, "fftsweep_admission_sheds_total{{reason=\"rate_limited\"}} {}", o.rate_limited);
+        let _ = writeln!(out, "fftsweep_admission_sheds_total{{reason=\"evicted\"}} {}", o.evictions);
+    }
+
     if let Some(tr) = &s.trace {
         counter(&mut out, "fftsweep_trace_spans_total", "Completed request spans by outcome");
         let _ = writeln!(out, "fftsweep_trace_spans_total{{outcome=\"ok\"}} {}", tr.ok_spans);
         let _ = writeln!(out, "fftsweep_trace_spans_total{{outcome=\"shed\"}} {}", tr.shed_spans);
+        counter(
+            &mut out,
+            "fftsweep_trace_class_spans_total",
+            "Completed request spans by QoS class and outcome",
+        );
+        for cs in &tr.per_class {
+            let _ = writeln!(
+                out,
+                "fftsweep_trace_class_spans_total{{class=\"{}\",outcome=\"ok\"}} {}",
+                cs.class, cs.ok_spans
+            );
+            let _ = writeln!(
+                out,
+                "fftsweep_trace_class_spans_total{{class=\"{}\",outcome=\"shed\"}} {}",
+                cs.class, cs.shed_spans
+            );
+        }
         counter(
             &mut out,
             "fftsweep_trace_sink_errors_total",
@@ -361,7 +427,7 @@ pub fn prometheus_text(s: &FleetSnapshot) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::telemetry::snapshot::FleetSnapshot;
+    use crate::telemetry::snapshot::{FleetSnapshot, OverloadSnapshot};
 
     fn snap(budget: Option<f64>) -> FleetSnapshot {
         let card = CardSnapshot {
@@ -425,17 +491,29 @@ mod tests {
                 energy_j: 2.5e-4,
                 sim_batch_s: 8.0e-4,
                 outcome: SpanOutcome::Ok,
+                class: "realtime".into(),
+                reason: String::new(),
             });
         }
         let mut s = snap(None);
         s.trace = Some(t.summary());
+        s.overload = Some(OverloadSnapshot {
+            brownout_level: 1,
+            brownout_max_level: 2,
+            brownout_escalations: 3,
+            admitted: [10, 0, 0],
+            deadline_sheds: 2,
+            brownout_sheds: 1,
+            rate_limited: 0,
+            evictions: 1,
+        });
         s
     }
 
     #[test]
     fn json_roundtrips_key_fields() {
         let j = snapshot_json(&snap(Some(240.0))).render();
-        assert!(j.contains("\"schema\": 2"));
+        assert!(j.contains("\"schema\": 3"));
         assert!(j.contains("\"power_budget_w\": 240"));
         assert!(j.contains("\"avg_1s_w\": 118.5"));
         assert!(j.contains("\"power_share_w\": 120"));
@@ -490,6 +568,16 @@ mod tests {
         assert!(j.contains("\"shed_spans\": 0"));
         assert!(j.contains("\"per_artifact\""));
         assert!(j.contains("\"p999\""));
+        // per-class split: the fixture records every span as realtime
+        let parsed = Json::parse(&j).unwrap();
+        let rt_ok = parsed
+            .get("trace")
+            .and_then(|t| t.get("per_class"))
+            .and_then(|p| p.get("realtime"))
+            .and_then(|r| r.get("ok_spans"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert_eq!(rt_ok, 10);
         // percentile readout of the constant 1.25e-3 s e2e stays within
         // the histogram's bucket error
         let parsed = Json::parse(&j).unwrap();
@@ -536,6 +624,42 @@ mod tests {
         assert!(text.contains(
             "fftsweep_trace_artifact_e2e_latency_seconds_count{artifact=\"fft \\\"odd\\\"\\nname\"} 10"
         ));
+    }
+
+    #[test]
+    fn overload_section_exports_in_both_formats() {
+        let s = traced_snap();
+        let j = snapshot_json(&s).render();
+        assert!(j.contains("\"overload\""));
+        assert!(j.contains("\"brownout_level\": 1"));
+        assert!(j.contains("\"brownout_max_level\": 2"));
+        assert!(j.contains("\"deadline_sheds\": 2"));
+        assert!(j.contains("\"total_sheds\": 4"));
+        let parsed = Json::parse(&j).unwrap();
+        let admitted_rt = parsed
+            .get("overload")
+            .and_then(|o| o.get("admitted"))
+            .and_then(|a| a.get("realtime"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert_eq!(admitted_rt, 10);
+
+        let text = prometheus_text(&s);
+        assert!(text.contains("fftsweep_brownout_level 1"));
+        assert!(text.contains("fftsweep_brownout_max_level 2"));
+        assert!(text.contains("fftsweep_brownout_escalations_total 3"));
+        assert!(text.contains("fftsweep_admission_admitted_total{class=\"realtime\"} 10"));
+        assert!(text.contains("fftsweep_admission_admitted_total{class=\"scavenger\"} 0"));
+        assert!(text.contains("fftsweep_admission_sheds_total{reason=\"deadline_infeasible\"} 2"));
+        assert!(text.contains("fftsweep_admission_sheds_total{reason=\"evicted\"} 1"));
+        assert!(text.contains("fftsweep_trace_class_spans_total{class=\"realtime\",outcome=\"ok\"} 10"));
+        assert!(text.contains("fftsweep_trace_class_spans_total{class=\"batch\",outcome=\"shed\"} 0"));
+
+        // a snapshot without the rollup exports neither family
+        let bare = prometheus_text(&snap(None));
+        assert!(!bare.contains("fftsweep_brownout_"));
+        assert!(!bare.contains("fftsweep_admission_"));
+        assert!(!snapshot_json(&snap(None)).render().contains("\"overload\""));
     }
 
     #[test]

@@ -55,5 +55,7 @@ pub use export::{prometheus_text, snapshot_json};
 pub use histogram::{HistogramSnapshot, LogHistogram};
 pub use recorder::{BatchSample, PowerRecorder, RecorderConfig};
 pub use ring::Ring;
-pub use snapshot::{CardSnapshot, FleetSnapshot, FleetTotals};
-pub use trace::{HistSetSnapshot, Span, SpanOutcome, Stamps, TraceConfig, TraceSummary, Tracer};
+pub use snapshot::{CardSnapshot, FleetSnapshot, FleetTotals, OverloadSnapshot};
+pub use trace::{
+    ClassSpans, HistSetSnapshot, Span, SpanOutcome, Stamps, TraceConfig, TraceSummary, Tracer,
+};

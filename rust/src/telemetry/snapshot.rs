@@ -88,6 +88,37 @@ pub struct FleetTotals {
     pub cards_quarantined: u64,
 }
 
+/// Admission/overload state at snapshot time: the brownout ladder
+/// position plus the typed shed counters the admission controller keeps
+/// per class and per reason. All counters are monotone.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OverloadSnapshot {
+    /// Current brownout rung (0 = off … 3 = realtime-only).
+    pub brownout_level: u8,
+    /// Highest rung reached since the engine started.
+    pub brownout_max_level: u8,
+    /// Ladder level-up transitions so far.
+    pub brownout_escalations: u64,
+    /// Jobs admitted per QoS class, priority order
+    /// (realtime, batch, scavenger).
+    pub admitted: [u64; 3],
+    /// Sheds: deadline infeasible at admission.
+    pub deadline_sheds: u64,
+    /// Sheds: class refused by the brownout ladder.
+    pub brownout_sheds: u64,
+    /// Sheds: token-bucket rate limit.
+    pub rate_limited: u64,
+    /// Queued lower-class jobs evicted to admit higher-class work.
+    pub evictions: u64,
+}
+
+impl OverloadSnapshot {
+    /// Every admission-layer drop, across reasons.
+    pub fn total_sheds(&self) -> u64 {
+        self.deadline_sheds + self.brownout_sheds + self.rate_limited + self.evictions
+    }
+}
+
 /// The whole fleet, typed.
 #[derive(Debug, Clone)]
 pub struct FleetSnapshot {
@@ -99,6 +130,9 @@ pub struct FleetSnapshot {
     /// `Engine::snapshot` always fills it; `from_cards` leaves it `None`
     /// so card-only consumers (and tests) stay unchanged.
     pub trace: Option<TraceSummary>,
+    /// Admission/brownout rollup. Filled by `Engine::snapshot`, `None`
+    /// from `from_cards` (same contract as `trace`).
+    pub overload: Option<OverloadSnapshot>,
 }
 
 impl FleetSnapshot {
@@ -143,6 +177,7 @@ impl FleetSnapshot {
             fleet: t,
             power_budget_w,
             trace: None,
+            overload: None,
         }
     }
 
@@ -162,6 +197,26 @@ impl FleetSnapshot {
         }
         if t.cards_quarantined > 0 {
             chaos.push_str(&format!(", {} card(s) quarantined", t.cards_quarantined));
+        }
+        // Overload markers follow the same quiet-when-healthy rule: an
+        // idle ladder with zero admission sheds prints nothing.
+        if let Some(o) = &self.overload {
+            if o.brownout_max_level > 0 {
+                chaos.push_str(&format!(
+                    ", brownout L{} (peak L{}, {} escalations)",
+                    o.brownout_level, o.brownout_max_level, o.brownout_escalations
+                ));
+            }
+            if o.total_sheds() > 0 {
+                chaos.push_str(&format!(
+                    ", admission sheds {} (deadline {}, brownout {}, rate {}, evicted {})",
+                    o.total_sheds(),
+                    o.deadline_sheds,
+                    o.brownout_sheds,
+                    o.rate_limited,
+                    o.evictions
+                ));
+            }
         }
         format!(
             "jobs {}/{} ok ({} failed), batches {}, occupancy {:.1}%, exec {:.3} s, energy saving {:.1}%{}{}",
@@ -319,10 +374,36 @@ mod tests {
 
     #[test]
     fn healthy_fleet_summary_has_no_chaos_noise() {
-        let s = FleetSnapshot::from_cards(vec![card(0, 4, 1.0, 2.0, 100.0)], None);
+        let mut s = FleetSnapshot::from_cards(vec![card(0, 4, 1.0, 2.0, 100.0)], None);
+        s.overload = Some(OverloadSnapshot::default());
         assert!(!s.fleet_summary().contains("retried"));
         assert!(!s.fleet_summary().contains("quarantined"));
+        assert!(!s.fleet_summary().contains("brownout"));
+        assert!(!s.fleet_summary().contains("admission sheds"));
         assert!(!s.render().contains('<'));
+    }
+
+    #[test]
+    fn overload_markers_appear_once_the_ladder_moves() {
+        let mut s = FleetSnapshot::from_cards(vec![card(0, 4, 1.0, 2.0, 100.0)], None);
+        s.overload = Some(OverloadSnapshot {
+            brownout_level: 2,
+            brownout_max_level: 3,
+            brownout_escalations: 4,
+            admitted: [10, 20, 5],
+            deadline_sheds: 3,
+            brownout_sheds: 7,
+            rate_limited: 1,
+            evictions: 2,
+        });
+        let summary = s.fleet_summary();
+        assert!(summary.contains("brownout L2 (peak L3, 4 escalations)"), "{summary}");
+        assert!(
+            summary.contains("admission sheds 13 (deadline 3, brownout 7, rate 1, evicted 2)"),
+            "{summary}"
+        );
+        assert_eq!(s.overload.unwrap().total_sheds(), 13);
+        assert_eq!(s.render().lines().count(), 2, "markers never add lines");
     }
 
     #[test]

@@ -32,6 +32,7 @@ use anyhow::{Context, Result};
 
 use super::histogram::{HistogramSnapshot, LogHistogram};
 use super::ring::Ring;
+use crate::coordinator::admission::TenantClass;
 use crate::util::json::Json;
 
 fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -147,6 +148,13 @@ pub struct Span {
     /// Simulated on-card batch time, s (moves with DVFS).
     pub sim_batch_s: f64,
     pub outcome: SpanOutcome,
+    /// QoS class label the job ran under (`realtime`/`batch`/`scavenger`).
+    /// Empty on journals written before admission control existed.
+    pub class: String,
+    /// Why a shed span was dropped (admission/brownout/backpressure
+    /// reason, or the coordinator error's shed reason). Empty for `ok`
+    /// spans — check_trace.py enforces nonempty-iff-shed.
+    pub reason: String,
 }
 
 impl Span {
@@ -228,6 +236,8 @@ impl Span {
         j.set("energy_j", self.energy_j.into());
         j.set("sim_batch_s", self.sim_batch_s.into());
         j.set("outcome", self.outcome.label().into());
+        j.set("class", self.class.as_str().into());
+        j.set("reason", self.reason.as_str().into());
         j
     }
 
@@ -275,6 +285,18 @@ impl Span {
             sim_batch_s: num(j, "sim_batch_s")?,
             outcome: SpanOutcome::from_label(outcome_label)
                 .with_context(|| format!("unknown span outcome `{outcome_label}`"))?,
+            // Both default empty so journals written before admission
+            // control (schema ≤7) stay replayable by `fftsweep trace`.
+            class: j
+                .get("class")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            reason: j
+                .get("reason")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
         })
     }
 }
@@ -319,6 +341,14 @@ pub struct HistSetSnapshot {
     pub energy_j: HistogramSnapshot,
 }
 
+/// Per-QoS-class span counters, one row per [`TenantClass`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassSpans {
+    pub class: &'static str,
+    pub ok_spans: u64,
+    pub shed_spans: u64,
+}
+
 /// What the exporters see: counters plus per-card / per-artifact
 /// histogram snapshots, attached to `FleetSnapshot.trace`.
 #[derive(Debug, Clone)]
@@ -328,6 +358,10 @@ pub struct TraceSummary {
     pub ok_spans: u64,
     /// Spans dropped with a typed error.
     pub shed_spans: u64,
+    /// Ok/shed split per QoS class, one row per `admission::CLASSES`
+    /// entry. Spans with an unknown/empty class label (pre-QoS journals)
+    /// count only in the totals above.
+    pub per_class: Vec<ClassSpans>,
     /// Spans currently held in the ring.
     pub ring_len: usize,
     /// Spans the ring has overwritten.
@@ -365,6 +399,8 @@ pub struct Tracer {
     spans: Mutex<Ring<Span>>,
     ok_spans: AtomicU64,
     shed_spans: AtomicU64,
+    /// [class][outcome] counters: outcome 0 = ok, 1 = shed.
+    class_spans: [[AtomicU64; 2]; 3],
     sink: Option<Mutex<BufWriter<File>>>,
     sink_errors: AtomicU64,
     per_card: Vec<HistSet>,
@@ -387,6 +423,7 @@ impl Tracer {
             spans: Mutex::new(Ring::new(cfg.ring_capacity.max(1))),
             ok_spans: AtomicU64::new(0),
             shed_spans: AtomicU64::new(0),
+            class_spans: Default::default(),
             sink,
             sink_errors: AtomicU64::new(0),
             per_card: (0..n_cards).map(|_| HistSet::default()).collect(),
@@ -420,6 +457,10 @@ impl Tracer {
     pub fn record(&self, span: Span) {
         if !self.enabled {
             return;
+        }
+        if let Some(class) = TenantClass::from_label(&span.class) {
+            let slot = usize::from(span.outcome == SpanOutcome::Shed);
+            self.class_spans[class.index()][slot].fetch_add(1, Ordering::Relaxed);
         }
         match span.outcome {
             SpanOutcome::Ok => {
@@ -483,6 +524,14 @@ impl Tracer {
             enabled: self.enabled,
             ok_spans: self.ok_spans.load(Ordering::Relaxed),
             shed_spans: self.shed_spans.load(Ordering::Relaxed),
+            per_class: crate::coordinator::admission::CLASSES
+                .iter()
+                .map(|c| ClassSpans {
+                    class: c.label(),
+                    ok_spans: self.class_spans[c.index()][0].load(Ordering::Relaxed),
+                    shed_spans: self.class_spans[c.index()][1].load(Ordering::Relaxed),
+                })
+                .collect(),
             ring_len,
             ring_dropped,
             sink_errors: self.sink_errors.load(Ordering::Relaxed),
@@ -519,6 +568,8 @@ mod tests {
             energy_j: 2.5e-4,
             sim_batch_s: 8.0e-4,
             outcome: SpanOutcome::Ok,
+            class: "batch".into(),
+            reason: String::new(),
         }
     }
 
@@ -541,8 +592,32 @@ mod tests {
         assert_eq!(back, s);
         let mut shed = span(8, 0, 200_000);
         shed.outcome = SpanOutcome::Shed;
+        shed.class = "scavenger".into();
+        shed.reason = "brownout shed".into();
         let back = Span::from_json(&Json::parse(&shed.to_jsonl_line()).unwrap()).unwrap();
         assert_eq!(back.outcome, SpanOutcome::Shed);
+        assert_eq!(back.class, "scavenger");
+        assert_eq!(back.reason, "brownout shed");
+    }
+
+    #[test]
+    fn pre_qos_journals_default_class_and_reason_empty() {
+        // Journals written before schema 8 carry no class/reason keys;
+        // replay must not reject them. Exercise the missing-key path by
+        // parsing a line with the keys absent, and the null path via set.
+        let line = span(3, 0, 500).to_jsonl_line();
+        let stripped: String = line
+            .replace(",\"class\":\"batch\"", "")
+            .replace(",\"reason\":\"\"", "");
+        let back = Span::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(back.class, "");
+        assert_eq!(back.reason, "");
+        let mut j = span(3, 0, 500).to_json();
+        j.set("class", Json::Null);
+        j.set("reason", Json::Null);
+        let back = Span::from_json(&j).unwrap();
+        assert_eq!(back.class, "");
+        assert_eq!(back.reason, "");
     }
 
     #[test]
@@ -568,11 +643,20 @@ mod tests {
         t.record(other);
         let mut shed = span(100, 0, 60_000);
         shed.outcome = SpanOutcome::Shed;
+        shed.class = "scavenger".into();
+        shed.reason = "queue full".into();
         t.record(shed);
 
         let s = t.summary();
         assert_eq!(s.ok_spans, 11);
         assert_eq!(s.shed_spans, 1);
+        assert_eq!(s.per_class.len(), 3);
+        assert_eq!(s.per_class[0].class, "realtime");
+        assert_eq!((s.per_class[0].ok_spans, s.per_class[0].shed_spans), (0, 0));
+        assert_eq!(s.per_class[1].class, "batch");
+        assert_eq!((s.per_class[1].ok_spans, s.per_class[1].shed_spans), (11, 0));
+        assert_eq!(s.per_class[2].class, "scavenger");
+        assert_eq!((s.per_class[2].ok_spans, s.per_class[2].shed_spans), (0, 1));
         assert_eq!(s.per_card.len(), 2);
         assert_eq!(s.per_card[0].e2e_s.count, 6, "cards 0,2,4,6,8 + the odd artifact");
         assert_eq!(s.per_card[1].e2e_s.count, 5);

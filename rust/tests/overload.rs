@@ -1,0 +1,296 @@
+//! Overload acceptance tests: QoS admission control under 4x offered
+//! load (issue 10's end-to-end invariant).
+//!
+//! The contract under test: at 4x the fleet's measured capacity in
+//! bursty mixed-class arrivals through a bounded queue, **the realtime
+//! class rides through** (>= 95% of its offered jobs complete), every
+//! refused job carries one of the four typed shed variants (`QueueFull`
+//! / `DeadlineInfeasible` / `BrownoutShed` / `RateLimited` — never a
+//! silent drop, never a panic), queue depth stays at or under the
+//! bound, and the brownout ladder is witnessed escalating. Arrival
+//! schedules are seeded, so the overload replays identically run to
+//! run; only the wall-clock capacity measurement varies by machine.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fftsweep::coordinator::admission::{AdmissionPolicy, BrownoutPolicy, TenantClass};
+use fftsweep::coordinator::{CardConfig, CoordError, Engine, EngineConfig};
+use fftsweep::governor::GovernorKind;
+use fftsweep::runtime::Runtime;
+use fftsweep::sim::fault::{ArrivalKind, ArrivalPlan};
+use fftsweep::sim::gpu::tesla_v100;
+use fftsweep::util::rng::Rng;
+
+fn sim_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::new(Path::new("/nonexistent-artifacts")).expect("sim runtime"))
+}
+
+fn rand_planes(n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+    )
+}
+
+fn typed_shed(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<CoordError>(),
+        Some(
+            CoordError::QueueFull { .. }
+                | CoordError::DeadlineInfeasible { .. }
+                | CoordError::BrownoutShed { .. }
+                | CoordError::RateLimited { .. }
+        )
+    )
+}
+
+/// Mixed-class rotation, same shape as `serve --tenant-class mixed`:
+/// 25% realtime / 50% batch / 25% scavenger.
+fn class_of(j: usize) -> TenantClass {
+    match j % 4 {
+        0 => TenantClass::Realtime,
+        3 => TenantClass::Scavenger,
+        _ => TenantClass::Batch,
+    }
+}
+
+/// The headline overload test. Capacity is *measured* (a closed-loop
+/// warm-up leg on this machine and build profile), not taken from the
+/// backend estimator — pacing against an optimistic estimate would turn
+/// "4x" into an arbitrary multiple on a slow builder.
+#[test]
+fn four_x_burst_overload_protects_realtime_and_sheds_typed() {
+    const BOUND: u64 = 16;
+    let fleet = (0..2)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
+        .collect();
+    let cfg = EngineConfig {
+        queue_bound: Some(BOUND),
+        admission: AdmissionPolicy {
+            // Escalate after a short streak so the ladder is reliably
+            // witnessed inside a fast test; keep de-escalation far out
+            // so the final snapshot's max level is deterministic.
+            brownout: Some(BrownoutPolicy {
+                escalate_ticks: 3,
+                deescalate_ticks: 100_000,
+                ..BrownoutPolicy::default()
+            }),
+            ..AdmissionPolicy::default()
+        },
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start(sim_runtime(), fleet, cfg).expect("engine");
+    let mut rng = Rng::new(11);
+
+    // Closed-loop capacity leg on a separate UNBOUNDED twin fleet: the
+    // bounded engine would refuse flat-out submits and skew the
+    // measurement. Including this engine's plan-compile cost slightly
+    // under-reports capacity — conservative for the 4x multiplier.
+    let cap_fleet = (0..2)
+        .map(|_| CardConfig::new(tesla_v100(), GovernorKind::FixedBoost))
+        .collect();
+    let cap_engine =
+        Engine::start(sim_runtime(), cap_fleet, EngineConfig::default()).expect("engine");
+    let warm = 256usize;
+    let t0 = Instant::now();
+    let mut warm_rxs = Vec::with_capacity(warm);
+    for _ in 0..warm {
+        let (re, im) = rand_planes(1024, &mut rng);
+        warm_rxs.push(cap_engine.submit(re, im).expect("unbounded submit"));
+    }
+    assert!(cap_engine.drain(Duration::from_secs(120)).complete, "warm-up drain");
+    let capacity = warm as f64 / t0.elapsed().as_secs_f64().max(1e-6);
+    for rx in warm_rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).expect("warm reply").is_ok());
+    }
+    cap_engine.shutdown();
+
+    // 4x offered load, bursty, seeded — the arrival gaps replay exactly.
+    let jobs = 512usize;
+    let arrivals = ArrivalPlan {
+        kind: ArrivalKind::Burst { size: 32, quiet_x: 1.0 },
+        seed: 0xBEEF,
+    }
+    .schedule(4.0 * capacity, jobs as u64, 1);
+    assert_eq!(arrivals.len(), jobs);
+
+    let mut rxs = Vec::new();
+    let mut offered = [0u64; 3];
+    let mut shed_submit = 0u64;
+    for (j, a) in arrivals.iter().enumerate() {
+        if a.gap_us > 0 {
+            std::thread::sleep(Duration::from_micros(a.gap_us));
+        }
+        let class = class_of(j);
+        offered[class.index()] += 1;
+        let (re, im) = rand_planes(1024, &mut rng);
+        match engine.submit_qos(re, im, class, None) {
+            Ok(rx) => rxs.push((class, rx)),
+            Err(e) => {
+                assert!(typed_shed(&e), "refusal must be a typed shed: {e:#}");
+                shed_submit += 1;
+            }
+        }
+        // Bounded queues are the no-collapse half of the contract: the
+        // admission layer must hold every card at or under the bound.
+        if j % 64 == 0 {
+            for card in engine.snapshot().cards {
+                assert!(
+                    card.inflight <= BOUND,
+                    "card {} over its queue bound: {} > {BOUND}",
+                    card.index,
+                    card.inflight
+                );
+            }
+        }
+    }
+    assert!(engine.drain(Duration::from_secs(120)).complete, "overload drain");
+
+    // Every accepted job resolves; the only failures are eviction
+    // victims, and those carry a typed shed too.
+    let mut ok = [0u64; 3];
+    let mut evicted = 0u64;
+    for (class, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("job reply must arrive") {
+            Ok(res) => {
+                assert_eq!(res.out_re.len(), 1024);
+                ok[class.index()] += 1;
+            }
+            Err(e) => {
+                assert!(typed_shed(&e), "failed job must carry a typed shed: {e:#}");
+                assert_ne!(
+                    class,
+                    TenantClass::Realtime,
+                    "realtime is never evicted for another class"
+                );
+                evicted += 1;
+            }
+        }
+    }
+    let ok_total: u64 = ok.iter().sum();
+    assert_eq!(
+        ok_total + evicted + shed_submit,
+        jobs as u64,
+        "accounting: every offered job terminated exactly once"
+    );
+    assert!(shed_submit + evicted > 0, "4x offered load must shed something");
+
+    // The acceptance bar: realtime rides through the overload.
+    assert!(
+        ok[0] as f64 >= 0.95 * offered[0] as f64,
+        "realtime must complete >= 95% under 4x overload: {}/{} \
+         (batch {}/{}, scavenger {}/{})",
+        ok[0],
+        offered[0],
+        ok[1],
+        offered[1],
+        ok[2],
+        offered[2]
+    );
+
+    // Overload observability: the shed counters account the refusals and
+    // the ladder was witnessed escalating under sustained pressure.
+    let snap = engine.snapshot();
+    let over = snap.overload.expect("Engine::snapshot fills overload");
+    assert_eq!(over.evictions, evicted, "eviction victims must be counted");
+    assert_eq!(
+        snap.fleet.jobs_submitted,
+        ok_total + evicted,
+        "refusals happen before accounting"
+    );
+    assert!(
+        over.brownout_max_level >= 1,
+        "sustained 4x pressure must escalate the brownout ladder"
+    );
+    engine.shutdown();
+}
+
+/// A deadline the predicted queue-wait + exec time cannot meet is
+/// refused at enqueue — typed, before accounting — not discovered late.
+#[test]
+fn infeasible_deadline_is_refused_typed_at_enqueue() {
+    let engine = Engine::start_single(
+        sim_runtime(),
+        tesla_v100(),
+        GovernorKind::FixedBoost,
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    let err = engine
+        .submit_qos(
+            vec![0.0; 1024],
+            vec![0.0; 1024],
+            TenantClass::Realtime,
+            Some(Duration::from_nanos(1)),
+        )
+        .expect_err("a 1ns deadline is infeasible for any batch");
+    match err.downcast_ref::<CoordError>() {
+        Some(CoordError::DeadlineInfeasible { n, class, deadline_ms, predicted_ms, .. }) => {
+            assert_eq!(*n, 1024);
+            assert_eq!(*class, "realtime");
+            assert!(predicted_ms > deadline_ms, "the refusal must show its arithmetic");
+        }
+        other => panic!("expected DeadlineInfeasible, got {other:?}"),
+    }
+    let snap = engine.snapshot();
+    assert_eq!(snap.fleet.jobs_submitted, 0, "refused before accounting");
+    assert_eq!(snap.overload.expect("overload").deadline_sheds, 1);
+
+    // A generous deadline sails through the same check.
+    let rx = engine
+        .submit_qos(
+            vec![0.0; 1024],
+            vec![0.0; 1024],
+            TenantClass::Realtime,
+            Some(Duration::from_secs(60)),
+        )
+        .expect("a 60s deadline is feasible");
+    engine.flush();
+    assert!(rx.recv_timeout(Duration::from_secs(30)).expect("reply").is_ok());
+    engine.shutdown();
+}
+
+/// Per-class token buckets: a class over its sustained rate + burst is
+/// refused with `RateLimited`; other classes are untouched.
+#[test]
+fn scavenger_rate_limit_is_enforced_per_class() {
+    let cfg = EngineConfig {
+        admission: AdmissionPolicy {
+            // Scavenger: 1 token banked, refilling at a glacial rate —
+            // the second submit inside the same test run must be refused.
+            rate_per_s: [None, None, Some(1e-6)],
+            ..AdmissionPolicy::default()
+        },
+        ..EngineConfig::default()
+    };
+    let engine =
+        Engine::start_single(sim_runtime(), tesla_v100(), GovernorKind::FixedBoost, cfg)
+            .expect("engine");
+
+    let first = engine
+        .submit_qos(vec![0.0; 1024], vec![0.0; 1024], TenantClass::Scavenger, None)
+        .expect("burst token admits the first scavenger job");
+    let err = engine
+        .submit_qos(vec![0.0; 1024], vec![0.0; 1024], TenantClass::Scavenger, None)
+        .expect_err("the bucket is empty");
+    match err.downcast_ref::<CoordError>() {
+        Some(CoordError::RateLimited { class, .. }) => assert_eq!(*class, "scavenger"),
+        other => panic!("expected RateLimited, got {other:?}"),
+    }
+    // Batch is not rate limited: its bucket is a different class's.
+    let second = engine
+        .submit_qos(vec![0.0; 1024], vec![0.0; 1024], TenantClass::Batch, None)
+        .expect("batch rides free of the scavenger limit");
+
+    assert!(engine.drain(Duration::from_secs(30)).complete);
+    assert!(first.recv_timeout(Duration::from_secs(10)).expect("reply").is_ok());
+    assert!(second.recv_timeout(Duration::from_secs(10)).expect("reply").is_ok());
+    let over = engine.snapshot().overload.expect("overload");
+    assert_eq!(over.rate_limited, 1);
+    assert_eq!(over.admitted, [0, 1, 1]);
+    engine.shutdown();
+}

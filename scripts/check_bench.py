@@ -41,7 +41,16 @@ Fails (exit 1) when:
     the traced serve fell more than 5% below the untraced serve of the
     identical workload (request tracing blew its overhead budget) — or
     traced throughput regressed more than 30% below the committed
-    baseline floor.
+    baseline floor,
+  * the overload section (schema 8) breaks an internal invariant of the
+    fresh doc — a refused job was not a typed shed (untyped_drops != 0),
+    realtime-class goodput at 4x offered load fell below 0.95x the
+    1x-load throughput (QoS stopped protecting the realtime class), or
+    the 4x shed rate left the [0.2, 0.95] band (admission control either
+    never bit, or the fleet collapsed into shedding everything) — or
+    goodput at 1x/4x regressed more than 30% below its committed
+    baseline floor, or realtime p99 at 4x rose more than 30% above the
+    baseline ceiling.
 
 The committed baseline is intentionally conservative: throughputs are the
 floor the trajectory must never fall under and p99 the ceiling it must
@@ -71,6 +80,7 @@ REQUIRED = [
     "large_n",
     "robustness",
     "observability",
+    "overload",
 ]
 REQUIRED_FLEET = ["jobs_per_s", "p50_ms", "p99_ms", "allocs_per_job"]
 REQUIRED_RATE = ["rows_per_s"]  # for the nonpow2/bluestein/rfft objects
@@ -111,6 +121,14 @@ REQUIRED_OBSERVABILITY = [
     "trace_overhead_frac",
     "hist_readout_us",
 ]
+REQUIRED_OVERLOAD = [
+    "goodput_1x_jobs_per_s",
+    "goodput_4x_jobs_per_s",
+    "realtime_goodput_4x_jobs_per_s",
+    "realtime_p99_ms_4x",
+    "shed_rate_4x",
+    "untyped_drops",
+]
 MAX_REGRESSION = 0.30
 # Internal-invariant slack: simulated quantities are deterministic, so the
 # capped run only gets rounding headroom, not a regression budget.
@@ -130,6 +148,16 @@ SHED_SLACK = 0.02
 # must stay inside this fraction of the untraced serve's throughput —
 # the observability overhead budget the bench measures directly.
 TRACE_SLACK = 0.05
+# Overload (schema 8): realtime-class goodput at 4x offered load must
+# hold this fraction of the 1x-load throughput — the QoS contract that
+# brownout + class-ordered backpressure protect the realtime class.
+REALTIME_GOODPUT_FRAC = 0.95
+# The 4x shed rate must land in this band: below the floor means 4x
+# offered load never triggered admission control (unbounded queue growth
+# in disguise); above the ceiling means the fleet collapsed into
+# shedding nearly everything instead of serving at capacity.
+OVERLOAD_SHED_MIN = 0.2
+OVERLOAD_SHED_MAX = 0.95
 
 
 class BenchCheckError(Exception):
@@ -173,6 +201,10 @@ def load_doc(path):
         ]
     elif "observability" in doc:
         missing += [f"observability.{k}" for k in REQUIRED_OBSERVABILITY]
+    if isinstance(doc.get("overload"), dict):
+        missing += [f"overload.{k}" for k in REQUIRED_OVERLOAD if k not in doc["overload"]]
+    elif "overload" in doc:
+        missing += [f"overload.{k}" for k in REQUIRED_OVERLOAD]
     for section in ("nonpow2", "rfft", "bluestein"):
         sub = doc.get(section)
         if isinstance(sub, dict):
@@ -405,6 +437,60 @@ def check(fresh, base):
         problems.append(
             f"observability.traced_jobs_per_s {obs['traced_jobs_per_s']:.0f} "
             f"regressed >{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
+        )
+
+    # Overload section (schema 8): internal invariants of the fresh doc
+    # first. Every refused job must be a typed shed (untyped_drops == 0:
+    # the overload contract is a typed error + traced span, never a
+    # silent drop), realtime goodput at 4x offered load must hold 95% of
+    # the 1x-load throughput (the QoS ladder protects the realtime
+    # class), and the 4x shed rate must land in a sane band.
+    over = fresh["overload"]
+    base_over = base["overload"]
+    info.append(
+        f"overload: 1x goodput {over['goodput_1x_jobs_per_s']:.0f} jobs/s, 4x goodput "
+        f"{over['goodput_4x_jobs_per_s']:.0f} jobs/s (realtime "
+        f"{over['realtime_goodput_4x_jobs_per_s']:.0f} jobs/s, p99 "
+        f"{over['realtime_p99_ms_4x']:.2f} ms, shed rate {over['shed_rate_4x']:.3f}), "
+        f"{over['untyped_drops']} untyped drop(s)"
+    )
+    if over["untyped_drops"] != 0:
+        problems.append(
+            f"overload: {over['untyped_drops']} refused job(s) were not typed sheds — "
+            "every drop must be a typed error with a traced span"
+        )
+    rt_floor = over["goodput_1x_jobs_per_s"] * REALTIME_GOODPUT_FRAC
+    if over["realtime_goodput_4x_jobs_per_s"] < rt_floor:
+        problems.append(
+            f"overload: realtime goodput at 4x {over['realtime_goodput_4x_jobs_per_s']:.0f} "
+            f"jobs/s below {REALTIME_GOODPUT_FRAC:.0%} of the 1x-load throughput "
+            f"({rt_floor:.0f}) — QoS stopped protecting the realtime class"
+        )
+    if over["shed_rate_4x"] < OVERLOAD_SHED_MIN:
+        problems.append(
+            f"overload: shed rate at 4x {over['shed_rate_4x']:.3f} below "
+            f"{OVERLOAD_SHED_MIN} — 4x offered load never triggered admission control "
+            "(unbounded queue growth in disguise)"
+        )
+    if over["shed_rate_4x"] > OVERLOAD_SHED_MAX:
+        problems.append(
+            f"overload: shed rate at 4x {over['shed_rate_4x']:.3f} above "
+            f"{OVERLOAD_SHED_MAX} — the fleet collapsed into shedding instead of "
+            "serving at capacity"
+        )
+    # … then trajectory floors/ceiling vs the committed baseline.
+    for key in ("goodput_1x_jobs_per_s", "goodput_4x_jobs_per_s"):
+        floor = base_over[key] * (1.0 - MAX_REGRESSION)
+        if over[key] < floor:
+            problems.append(
+                f"overload.{key} {over[key]:.0f} jobs/s regressed "
+                f">{MAX_REGRESSION:.0%} below baseline floor {floor:.0f}"
+            )
+    ceiling = base_over["realtime_p99_ms_4x"] * (1.0 + MAX_REGRESSION)
+    if over["realtime_p99_ms_4x"] > ceiling:
+        problems.append(
+            f"overload.realtime_p99_ms_4x {over['realtime_p99_ms_4x']:.2f} ms rose "
+            f">{MAX_REGRESSION:.0%} above baseline ceiling {ceiling:.2f} ms"
         )
 
     # Power section: internal invariants of the fresh doc first — the cap

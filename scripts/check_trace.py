@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
-"""CI gate for the trace journal (trace-smoke job).
+"""CI gate for the trace journal (trace-smoke / overload-smoke jobs).
 
 Usage: check_trace.py <journal.jsonl> [expected_ok_spans]
+                      [--expect-total N] [--expect-ok-min N]
+                      [--expect-shed-min N] [--telemetry snapshot.json]
 
 Validates the structured event journal a `fftsweep serve --trace-out`
 run streams: every line must parse as JSON, carry the full span schema
@@ -12,6 +14,16 @@ energy to every executed job, and — when the expected count is given —
 the journal must hold exactly that many ok spans (one per served job:
 tracing that silently drops spans is an observability regression, not a
 perf detail).
+
+Shed spans (QoS admission refusals and brownout sheds) are validated
+too: each must carry a non-empty `reason`, must NOT have an exec window
+(exec_start_us == exec_end_us) and must attribute zero energy — a shed
+that claims to have executed is a bookkeeping bug. `--expect-total`
+pins the journal's total line count (every offered job terminates in a
+span, ok or shed), `--expect-shed-min`/`--expect-ok-min` assert the
+overload actually bit / the fleet still served, and `--telemetry` cross
+checks the journal's tallies against the snapshot JSON's
+`trace.ok_spans`/`trace.shed_spans` totals and `trace.per_class` split.
 
 The checking logic lives in pure functions (`load_spans`, `check`) so
 `test_check_trace.py` can unit-test pass/fail cases without spawning a
@@ -44,6 +56,7 @@ REQUIRED_KEYS = [
     "outcome",
 ]
 OUTCOMES = {"ok", "shed"}
+CLASSES = ["realtime", "batch", "scavenger"]
 
 
 class TraceCheckError(Exception):
@@ -71,11 +84,30 @@ def load_spans(path):
     return spans
 
 
-def check(spans, expected_ok=None):
+def load_telemetry(path):
+    """Load a `serve --telemetry-out` snapshot for cross-checking."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        raise TraceCheckError(f"{path}: unreadable ({e})")
+    except ValueError as e:
+        raise TraceCheckError(f"{path}: malformed JSON ({e})")
+
+
+def check(
+    spans,
+    expected_ok=None,
+    expect_total=None,
+    expect_ok_min=None,
+    expect_shed_min=None,
+    telemetry=None,
+):
     """Validate loaded spans; returns (problems, info) like check_bench."""
     problems = []
     ok = 0
     shed = 0
+    per_class = {c: {"ok": 0, "shed": 0} for c in CLASSES}
     for lineno, span in spans:
         missing = [k for k in REQUIRED_KEYS if k not in span]
         if missing:
@@ -93,8 +125,14 @@ def check(spans, expected_ok=None):
                 f"line {lineno}: stage stamps not monotone "
                 f"({dict(zip(STAMP_KEYS, stamps))})"
             )
+        cls = span.get("class", "")
+        if cls and cls not in CLASSES:
+            problems.append(f"line {lineno}: unknown tenant class {cls!r}")
+            cls = ""
         if span["outcome"] == "ok":
             ok += 1
+            if cls:
+                per_class[cls]["ok"] += 1
             if not span["energy_j"] > 0:
                 problems.append(
                     f"line {lineno}: executed span with non-positive "
@@ -107,34 +145,158 @@ def check(spans, expected_ok=None):
                 )
         else:
             shed += 1
+            if cls:
+                per_class[cls]["shed"] += 1
+            # A shed never executed: it must say why, must not claim an
+            # exec window, and must not attribute energy.
+            if not span.get("reason"):
+                problems.append(f"line {lineno}: shed span without a reason")
+            if span["exec_start_us"] != span["exec_end_us"]:
+                problems.append(
+                    f"line {lineno}: shed span with an exec window "
+                    f"({span['exec_start_us']}..{span['exec_end_us']})"
+                )
+            if span["energy_j"] != 0:
+                problems.append(
+                    f"line {lineno}: shed span attributing energy_j "
+                    f"{span['energy_j']}"
+                )
     info = [f"journal: {ok} ok span(s), {shed} shed over {len(spans)} line(s)"]
     if expected_ok is not None and ok != expected_ok:
         problems.append(
             f"journal holds {ok} ok span(s), expected {expected_ok} — "
             "tracing lost or duplicated spans"
         )
+    if expect_total is not None and len(spans) != expect_total:
+        problems.append(
+            f"journal holds {len(spans)} span(s), expected {expect_total} — "
+            "an offered job terminated without a span (untyped drop)"
+        )
+    if expect_ok_min is not None and ok < expect_ok_min:
+        problems.append(
+            f"journal holds {ok} ok span(s), need >= {expect_ok_min} — "
+            "the fleet stopped serving under overload"
+        )
+    if expect_shed_min is not None and shed < expect_shed_min:
+        problems.append(
+            f"journal holds {shed} shed span(s), need >= {expect_shed_min} — "
+            "overload did not trigger admission control"
+        )
+    if telemetry is not None:
+        problems += check_telemetry(telemetry, ok, shed, per_class)
     return problems, info
 
 
-def run(path, expected_ok=None, out=print):
+def check_telemetry(snapshot, ok, shed, per_class):
+    """Cross-check journal tallies against the telemetry snapshot's
+    `trace` section: the spans_total counters and the per-class split
+    must agree with what the journal actually holds."""
+    problems = []
+    tr = snapshot.get("trace")
+    if not isinstance(tr, dict):
+        return ["telemetry snapshot has no trace section"]
+    for key, want in (("ok_spans", ok), ("shed_spans", shed)):
+        got = tr.get(key)
+        if got != want:
+            problems.append(
+                f"telemetry trace.{key} = {got}, journal holds {want} — "
+                "counters and journal disagree"
+            )
+    pc = tr.get("per_class")
+    if not isinstance(pc, dict):
+        return problems + ["telemetry trace has no per_class split"]
+    for cls in CLASSES:
+        row = pc.get(cls)
+        if not isinstance(row, dict):
+            problems.append(f"telemetry trace.per_class missing class {cls!r}")
+            continue
+        for key, want in (("ok_spans", "ok"), ("shed_spans", "shed")):
+            got = row.get(key)
+            if got != per_class[cls][want]:
+                problems.append(
+                    f"telemetry trace.per_class.{cls}.{key} = {got}, "
+                    f"journal holds {per_class[cls][want]}"
+                )
+    return problems
+
+
+def run(
+    path,
+    expected_ok=None,
+    expect_total=None,
+    expect_ok_min=None,
+    expect_shed_min=None,
+    telemetry_path=None,
+    out=print,
+):
     """Full gate over one journal file; returns the list of problems."""
     try:
         spans = load_spans(path)
+        telemetry = load_telemetry(telemetry_path) if telemetry_path else None
     except TraceCheckError as e:
         return [str(e)]
     if not spans:
         return [f"{path}: journal holds no spans"]
-    problems, info = check(spans, expected_ok)
+    problems, info = check(
+        spans,
+        expected_ok=expected_ok,
+        expect_total=expect_total,
+        expect_ok_min=expect_ok_min,
+        expect_shed_min=expect_shed_min,
+        telemetry=telemetry,
+    )
     for line in info:
         out(line)
     return problems
 
 
+def parse_args(argv):
+    """Parse `<journal> [expected_ok]` plus the overload flags. Returns
+    a kwargs dict for `run`, or raises SystemExit with usage."""
+    usage = (
+        f"usage: {argv[0]} <journal.jsonl> [expected_ok_spans] "
+        "[--expect-total N] [--expect-ok-min N] [--expect-shed-min N] "
+        "[--telemetry snapshot.json]"
+    )
+    flags = {
+        "--expect-total": ("expect_total", int),
+        "--expect-ok-min": ("expect_ok_min", int),
+        "--expect-shed-min": ("expect_shed_min", int),
+        "--telemetry": ("telemetry_path", str),
+    }
+    kwargs = {}
+    positional = []
+    args = argv[1:]
+    i = 0
+    while i < len(args):
+        a = args[i]
+        if a in flags:
+            if i + 1 >= len(args):
+                sys.exit(f"{a} needs a value\n{usage}")
+            name, conv = flags[a]
+            try:
+                kwargs[name] = conv(args[i + 1])
+            except ValueError:
+                sys.exit(f"{a} {args[i + 1]!r}: not a number\n{usage}")
+            i += 2
+        elif a.startswith("--"):
+            sys.exit(f"unknown flag {a}\n{usage}")
+        else:
+            positional.append(a)
+            i += 1
+    if len(positional) not in (1, 2):
+        sys.exit(usage)
+    kwargs["path"] = positional[0]
+    if len(positional) == 2:
+        try:
+            kwargs["expected_ok"] = int(positional[1])
+        except ValueError:
+            sys.exit(f"expected_ok_spans {positional[1]!r}: not a number\n{usage}")
+    return kwargs
+
+
 def main(argv):
-    if len(argv) not in (2, 3):
-        sys.exit(f"usage: {argv[0]} <journal.jsonl> [expected_ok_spans]")
-    expected = int(argv[2]) if len(argv) == 3 else None
-    problems = run(argv[1], expected)
+    problems = run(**parse_args(argv))
     for p in problems:
         print(f"FAIL: {p}")
     if problems:

@@ -89,6 +89,17 @@ def good_doc():
             "hist_readout_us": 50.0,
             "spans_recorded": 2176,
         },
+        "overload": {
+            "jobs_per_leg": 1024,
+            "arrival": "burst,size=32",
+            "capacity_jobs_per_s": 1000.0,
+            "goodput_1x_jobs_per_s": 400.0,
+            "goodput_4x_jobs_per_s": 400.0,
+            "realtime_goodput_4x_jobs_per_s": 400.0,
+            "realtime_p99_ms_4x": 250.0,
+            "shed_rate_4x": 0.7,
+            "untyped_drops": 0,
+        },
     }
 
 
@@ -388,6 +399,104 @@ def test_traced_throughput_floor_is_enforced():
     assert problems == []
 
 
+def test_untyped_drops_fail_regardless_of_baseline():
+    # The overload contract is absolute: every refused job must be a
+    # typed shed, even if the baseline somehow recorded untyped drops.
+    fresh = good_doc()
+    fresh["overload"]["untyped_drops"] = 3
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("not typed sheds" in p for p in problems)
+
+
+def test_realtime_goodput_collapse_under_overload_fails():
+    # Internal invariant of the fresh doc: realtime goodput at 4x must
+    # hold 95% of the 1x-load throughput, whatever the baseline says.
+    fresh = good_doc()
+    fresh["overload"]["realtime_goodput_4x_jobs_per_s"] = (
+        fresh["overload"]["goodput_1x_jobs_per_s"]
+        * check_bench.REALTIME_GOODPUT_FRAC
+        * 0.8
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("stopped protecting the realtime class" in p for p in problems)
+    # ... holding exactly the fraction passes (floors vs baseline still
+    # cleared because only the realtime leg moved within budget).
+    fresh["overload"]["realtime_goodput_4x_jobs_per_s"] = (
+        fresh["overload"]["goodput_1x_jobs_per_s"] * check_bench.REALTIME_GOODPUT_FRAC
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_overload_shed_rate_band_is_enforced():
+    # Too little shedding at 4x means admission control never bit ...
+    fresh = good_doc()
+    fresh["overload"]["shed_rate_4x"] = check_bench.OVERLOAD_SHED_MIN * 0.5
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("never triggered admission control" in p for p in problems)
+    # ... too much means the fleet collapsed into shedding everything ...
+    fresh["overload"]["shed_rate_4x"] = (check_bench.OVERLOAD_SHED_MAX + 1.0) / 2
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("collapsed into shedding" in p for p in problems)
+    # ... and anywhere inside the band passes.
+    fresh["overload"]["shed_rate_4x"] = (
+        check_bench.OVERLOAD_SHED_MIN + check_bench.OVERLOAD_SHED_MAX
+    ) / 2
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+@pytest.mark.parametrize("key", ["goodput_1x_jobs_per_s", "goodput_4x_jobs_per_s"])
+def test_overload_goodput_floors_vs_baseline_enforced(key):
+    # Trajectory gates: 1x and 4x goodput are floors vs the committed
+    # baseline — scale the realtime leg with the 1x leg so the internal
+    # 95%-of-1x invariant holds and only the floor trips.
+    fresh = good_doc()
+    fresh["overload"][key] = good_doc()["overload"][key] * 0.6
+    if key == "goodput_1x_jobs_per_s":
+        fresh["overload"]["realtime_goodput_4x_jobs_per_s"] = fresh["overload"][key]
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any(f"overload.{key}" in p and "regressed" in p for p in problems)
+    # a 20% dip stays within the 30% budget
+    fresh = good_doc()
+    fresh["overload"][key] = good_doc()["overload"][key] * 0.8
+    if key == "goodput_1x_jobs_per_s":
+        fresh["overload"]["realtime_goodput_4x_jobs_per_s"] = fresh["overload"][key]
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_realtime_p99_ceiling_vs_baseline_enforced():
+    fresh = good_doc()
+    fresh["overload"]["realtime_p99_ms_4x"] = (
+        good_doc()["overload"]["realtime_p99_ms_4x"] * 1.5
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert any("overload.realtime_p99_ms_4x" in p for p in problems)
+    # a 20% rise stays inside the 30% ceiling
+    fresh["overload"]["realtime_p99_ms_4x"] = (
+        good_doc()["overload"]["realtime_p99_ms_4x"] * 1.2
+    )
+    problems, _ = check_bench.check(fresh, good_doc())
+    assert problems == []
+
+
+def test_overload_without_required_key_is_rejected(tmp_path):
+    doc = good_doc()
+    del doc["overload"]["untyped_drops"]
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="overload.untyped_drops"):
+        check_bench.load_doc(path)
+
+
+def test_overload_as_non_object_is_rejected(tmp_path):
+    doc = good_doc()
+    doc["overload"] = "sheddy"
+    path = write(tmp_path, "fresh.json", doc)
+    with pytest.raises(check_bench.BenchCheckError, match="overload.shed_rate_4x"):
+        check_bench.load_doc(path)
+
+
 def test_observability_without_required_key_is_rejected(tmp_path):
     doc = good_doc()
     del doc["observability"]["trace_overhead_frac"]
@@ -486,6 +595,7 @@ def test_power_as_non_object_is_rejected(tmp_path):
         "large_n",
         "robustness",
         "observability",
+        "overload",
     ],
 )
 def test_missing_top_level_key_is_rejected(tmp_path, key):

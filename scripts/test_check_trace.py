@@ -12,7 +12,7 @@ import pytest
 import check_trace
 
 
-def good_span(job_id=0, outcome="ok"):
+def good_span(job_id=0, outcome="ok", cls="batch"):
     return {
         "job_id": job_id,
         "artifact": "fft_f32_n1024_b64",
@@ -32,7 +32,23 @@ def good_span(job_id=0, outcome="ok"):
         "energy_j": 2.5e-4,
         "sim_batch_s": 8.0e-4,
         "outcome": outcome,
+        "class": cls,
+        "reason": "",
     }
+
+
+def shed_span(job_id=99, cls="scavenger", reason="brownout shed"):
+    """A well-formed shed: reason present, no exec window, no energy."""
+    s = good_span(job_id, outcome="shed", cls=cls)
+    s["reason"] = reason
+    s["energy_j"] = 0.0
+    s["batch_occupancy"] = 0
+    s["exec_start_us"] = s["admit_us"]
+    s["exec_end_us"] = s["admit_us"]
+    s["dispatch_us"] = s["admit_us"]
+    s["seal_us"] = s["admit_us"]
+    s["complete_us"] = s["admit_us"]
+    return s
 
 
 def write_journal(tmp_path, spans, name="trace.jsonl"):
@@ -54,12 +70,132 @@ def test_expected_count_mismatch_fails(tmp_path):
 
 def test_shed_spans_do_not_count_toward_ok(tmp_path):
     spans = [good_span(i) for i in range(4)]
-    shed = good_span(99, outcome="shed")
-    shed["energy_j"] = 0.0
-    shed["batch_occupancy"] = 0
-    spans.append(shed)
+    spans.append(shed_span(99))
     path = write_journal(tmp_path, spans)
     assert check_trace.run(path, expected_ok=4, out=lambda _: None) == []
+
+
+def test_shed_span_without_reason_fails(tmp_path):
+    bad = shed_span()
+    bad["reason"] = ""
+    path = write_journal(tmp_path, [good_span(0), bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("line 2" in p and "without a reason" in p for p in problems)
+
+
+def test_shed_span_with_exec_window_fails(tmp_path):
+    bad = shed_span()
+    bad["exec_end_us"] = bad["exec_start_us"] + 500
+    bad["complete_us"] = bad["exec_end_us"]
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("exec window" in p for p in problems)
+
+
+def test_shed_span_with_energy_fails(tmp_path):
+    bad = shed_span()
+    bad["energy_j"] = 1e-4
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("shed span attributing energy" in p for p in problems)
+
+
+def test_unknown_tenant_class_fails(tmp_path):
+    bad = good_span(0, cls="platinum")
+    path = write_journal(tmp_path, [bad])
+    problems = check_trace.run(path, out=lambda _: None)
+    assert any("unknown tenant class" in p for p in problems)
+
+
+def test_pre_qos_spans_without_class_still_pass(tmp_path):
+    old = good_span(0)
+    del old["class"]
+    del old["reason"]
+    path = write_journal(tmp_path, [old])
+    assert check_trace.run(path, expected_ok=1, out=lambda _: None) == []
+
+
+def test_expect_total_counts_sheds(tmp_path):
+    spans = [good_span(i) for i in range(3)] + [shed_span(9)]
+    path = write_journal(tmp_path, spans)
+    assert (
+        check_trace.run(path, expect_total=4, expect_ok_min=3, expect_shed_min=1, out=lambda _: None)
+        == []
+    )
+    problems = check_trace.run(path, expect_total=5, out=lambda _: None)
+    assert any("untyped drop" in p for p in problems)
+
+
+def test_expect_shed_min_detects_missing_overload(tmp_path):
+    path = write_journal(tmp_path, [good_span(i) for i in range(3)])
+    problems = check_trace.run(path, expect_shed_min=1, out=lambda _: None)
+    assert any("did not trigger admission control" in p for p in problems)
+
+
+def test_expect_ok_min_detects_collapse(tmp_path):
+    path = write_journal(tmp_path, [shed_span(i) for i in range(3)])
+    problems = check_trace.run(path, expect_ok_min=1, out=lambda _: None)
+    assert any("stopped serving" in p for p in problems)
+
+
+def telemetry_snapshot(ok=2, shed=1, per_class=None):
+    pc = per_class or {
+        "realtime": {"ok_spans": 1, "shed_spans": 0},
+        "batch": {"ok_spans": 1, "shed_spans": 0},
+        "scavenger": {"ok_spans": 0, "shed_spans": 1},
+    }
+    return {"trace": {"ok_spans": ok, "shed_spans": shed, "per_class": pc}}
+
+
+def test_telemetry_cross_check_passes_when_consistent(tmp_path):
+    spans = [good_span(0, cls="realtime"), good_span(1, cls="batch"), shed_span(2)]
+    path = write_journal(tmp_path, spans)
+    tpath = tmp_path / "telemetry.json"
+    tpath.write_text(json.dumps(telemetry_snapshot()))
+    assert check_trace.run(path, telemetry_path=str(tpath), out=lambda _: None) == []
+
+
+def test_telemetry_cross_check_catches_counter_drift(tmp_path):
+    spans = [good_span(0, cls="realtime"), good_span(1, cls="batch"), shed_span(2)]
+    path = write_journal(tmp_path, spans)
+    snap = telemetry_snapshot(ok=5)
+    snap["trace"]["per_class"]["realtime"]["ok_spans"] = 4
+    tpath = tmp_path / "telemetry.json"
+    tpath.write_text(json.dumps(snap))
+    problems = check_trace.run(path, telemetry_path=str(tpath), out=lambda _: None)
+    assert any("trace.ok_spans = 5" in p for p in problems)
+    assert any("per_class.realtime.ok_spans = 4" in p for p in problems)
+
+
+def test_telemetry_without_trace_section_fails(tmp_path):
+    path = write_journal(tmp_path, [good_span(0)])
+    tpath = tmp_path / "telemetry.json"
+    tpath.write_text(json.dumps({"schema": 3}))
+    problems = check_trace.run(path, telemetry_path=str(tpath), out=lambda _: None)
+    assert any("no trace section" in p for p in problems)
+
+
+def test_main_parses_overload_flags(tmp_path, capsys):
+    spans = [good_span(i) for i in range(2)] + [shed_span(9)]
+    path = write_journal(tmp_path, spans)
+    check_trace.main(
+        [
+            "check_trace.py",
+            path,
+            "--expect-total",
+            "3",
+            "--expect-ok-min",
+            "2",
+            "--expect-shed-min",
+            "1",
+        ]
+    )
+    assert "OK" in capsys.readouterr().out
+
+
+def test_main_rejects_unknown_flag(tmp_path):
+    with pytest.raises(SystemExit):
+        check_trace.main(["check_trace.py", "x.jsonl", "--expect-everything", "1"])
 
 
 def test_non_monotone_stamps_fail(tmp_path):
